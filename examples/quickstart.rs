@@ -1,0 +1,74 @@
+//! Quickstart: build a UB-Mesh rack, explore APR routing, verify
+//! deadlock freedom, and run a Multi-Ring AllReduce on the simulator.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ubmesh::collectives::ring::{fullmesh_rings, multiring_allreduce_dag, ring_allreduce_dag};
+use ubmesh::routing::apr::{paths_2d, to_routed, PathSet};
+use ubmesh::routing::tfc::verify_deadlock_free;
+use ubmesh::sim::{self, SimNet};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::NodeId;
+use ubmesh::util::table::{fmt, Table};
+
+fn main() {
+    // 1. Build the paper's 2D-FullMesh rack: 8 boards × 8 NPUs + 64+1
+    //    backup + the 4×18-LRS backplane (§3.3.1–3.3.2).
+    let cfg = RackConfig::default();
+    let (topo, h) = ubmesh_rack(&cfg);
+    println!(
+        "rack: {} nodes, {} links, {} NPUs (+{} backup), diameter {}",
+        topo.node_count(),
+        topo.link_count(),
+        h.npus.len(),
+        h.backup.is_some() as u32,
+        topo.npu_diameter(),
+    );
+
+    // 2. APR: enumerate all paths between two unaligned NPUs (Fig 10-b),
+    //    split traffic by bottleneck bandwidth, verify TFC 2-VL freedom.
+    let node = |x: usize, y: usize| h.npu(y, x, 8);
+    let routed: Vec<_> = paths_2d((0, 0), (3, 4), 8, 8, true)
+        .iter()
+        .map(|m| to_routed(m, node))
+        .collect();
+    verify_deadlock_free(&topo, &routed).expect("TFC: 2 VLs suffice");
+    let ps = PathSet::weighted_by_bottleneck(routed, &topo);
+    println!(
+        "\nAPR NPU(0,0)→NPU(3,4): {} paths, aggregate {} GB/s (single path {} GB/s)",
+        ps.paths.len(),
+        fmt(ps.aggregate_gb_s(&topo), 0),
+        fmt(ps.paths[0].bottleneck_gb_s(&topo), 0),
+    );
+
+    // 3. Multi-Ring AllReduce on one board (Fig 13): Walecki decomposes
+    //    the 8-NPU full-mesh into 3 edge-disjoint rings.
+    let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
+    let bytes = 360e6; // Table 1's TP transfer size
+    let net = SimNet::new(&topo);
+    let single = sim::schedule::run(&net, &ring_allreduce_dag(&topo, &board, bytes));
+    let rings = fullmesh_rings(&board, 3);
+    let multi = sim::schedule::run(
+        &net,
+        &multiring_allreduce_dag(&topo, &rings, &[1.0, 1.0, 1.0], bytes),
+    );
+    let mut t = Table::with_title(
+        "AllReduce of 360 MB over 8 NPUs (x4-lane links)",
+        vec!["algorithm", "time (µs)", "speedup"],
+    );
+    t.row(vec![
+        "single ring".to_string(),
+        fmt(single.makespan_us, 1),
+        "1.00x".to_string(),
+    ]);
+    t.row(vec![
+        "multi-ring (3 Walecki rings)".to_string(),
+        fmt(multi.makespan_us, 1),
+        format!("{:.2}x", single.makespan_us / multi.makespan_us),
+    ]);
+    t.print();
+
+    println!("\nquickstart OK");
+}

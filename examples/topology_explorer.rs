@@ -1,0 +1,108 @@
+//! Explore UB-Mesh topologies: census, cost, reliability and shortest-
+//! hop structure for configurable scales — the architectural half of the
+//! paper's evaluation in one binary.
+//!
+//! ```bash
+//! cargo run --release --example topology_explorer -- [--pods 8]
+//! ```
+
+use ubmesh::cost::capex::{capex_full_clos, capex_ubmesh};
+use ubmesh::cost::opex::opex;
+use ubmesh::reliability::afr::afr_of_capex;
+use ubmesh::reliability::availability::{availability, mtbf_hours, mttr};
+use ubmesh::topology::census::{class_name, Census};
+use ubmesh::topology::pod::{ubmesh_pod, PodConfig};
+use ubmesh::topology::superpod::SuperPodConfig;
+use ubmesh::util::cli::Args;
+use ubmesh::util::table::{fmt, pct, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let pods: usize = args.get_parse("pods", 8);
+
+    // --- Pod structure -------------------------------------------------
+    let (pod, handles) = ubmesh_pod(&PodConfig::default());
+    println!(
+        "UB-Mesh-Pod: {} NPUs in {} racks; {} nodes, {} links",
+        handles.npus().len(),
+        handles.racks.len(),
+        pod.node_count(),
+        pod.link_count()
+    );
+    let c = Census::of(&pod);
+    let mut t = Table::with_title("pod cable census", vec!["class", "cables", "share"]);
+    for (k, share) in c.class_ratios() {
+        t.row(vec![
+            class_name(k).to_string(),
+            format!("{}", c.cables.get(&k).map(|v| v.cables).unwrap_or(0)),
+            pct(share, 1),
+        ]);
+    }
+    t.print();
+
+    // --- Hop distribution (locality, §3.1) ------------------------------
+    let npus = handles.npus();
+    let mut hist = [0u64; 16];
+    for &src in npus.iter().step_by(64) {
+        let d = pod.bfs_hops(src, true);
+        for &dst in npus.iter().step_by(7) {
+            let h = d[dst.idx()] as usize;
+            if h < hist.len() {
+                hist[h] += 1;
+            }
+        }
+    }
+    let total: u64 = hist.iter().sum();
+    let mut t = Table::with_title("NPU→NPU hop distribution (sampled)", vec!["hops", "share"]);
+    for (h, &n) in hist.iter().enumerate() {
+        if n > 0 {
+            t.row(vec![format!("{h}"), pct(n as f64 / total as f64, 1)]);
+        }
+    }
+    t.print();
+
+    // --- SuperPod cost + reliability ------------------------------------
+    let mut sp = SuperPodConfig::default();
+    sp.pods = pods;
+    let ub = capex_ubmesh(&sp);
+    let clos = capex_full_clos("x64T Clos", sp.npus(), 64);
+    let mut t = Table::with_title(
+        format!("{} NPUs: UB-Mesh vs Clos", sp.npus()),
+        vec!["metric", "UB-Mesh", "Clos", "ratio"],
+    );
+    let ub_afr = afr_of_capex(&ub);
+    let clos_afr = afr_of_capex(&clos);
+    let rows: Vec<(&str, f64, f64)> = vec![
+        ("CapEx (NPU units)", ub.total(), clos.total()),
+        ("network share", ub.network_share(), clos.network_share()),
+        ("power (kW)", ub.power_kw(), clos.power_kw()),
+        ("AFR (failures/yr)", ub_afr.total(), clos_afr.total()),
+        (
+            "MTBF (h)",
+            mtbf_hours(ub_afr.total()),
+            mtbf_hours(clos_afr.total()),
+        ),
+        (
+            "availability @75min",
+            availability(mtbf_hours(ub_afr.total()), mttr::BASELINE_HOURS),
+            availability(mtbf_hours(clos_afr.total()), mttr::BASELINE_HOURS),
+        ),
+    ];
+    for (name, a, b) in rows {
+        t.row(vec![
+            name.to_string(),
+            fmt(a, 3),
+            fmt(b, 3),
+            fmt(a / b, 3),
+        ]);
+    }
+    t.print();
+    let ub_opex = opex(&ub, ub_afr.total());
+    let clos_opex = opex(&clos, clos_afr.total());
+    println!(
+        "lifetime OpEx: UB-Mesh {} vs Clos {} NPU-units",
+        fmt(ub_opex.total(), 1),
+        fmt(clos_opex.total(), 1)
+    );
+    println!("\ntopology_explorer OK");
+}

@@ -1,0 +1,80 @@
+"""AOT compile path: lower the L2 entry points to HLO **text** artifacts.
+
+Interchange format is HLO text, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Writes ``<name>.hlo.txt`` per entry point plus ``manifest.txt``
+(name, input shapes, output shape — parsed by rust/src/runtime).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact."""
+    n_s, n_l = model.APSP_SMALL, model.APSP_LARGE
+    b, t = model.COST_BATCH, model.COST_TIERS
+    p, l = model.LOAD_PATHS, model.LOAD_LINKS
+    return [
+        ("apsp64", model.apsp64, (f32(n_s, n_s),)),
+        ("apsp256", model.apsp256, (f32(n_l, n_l),)),
+        (
+            "costmodel",
+            model.cost_model_batch,
+            (f32(b, t), f32(b, t), f32(b, t), f32(t), f32(b), f32(t)),
+        ),
+        ("linkload", model.link_load_1024x512, (f32(p, l), f32(p))),
+    ]
+
+
+def shape_str(s) -> str:
+    return "f32[" + ",".join(str(d) for d in s.shape) + "]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, example in entry_points():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        ins = " ".join(shape_str(s) for s in example)
+        manifest_lines.append(f"{name} :: {ins}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

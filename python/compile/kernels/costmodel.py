@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: batched α-β cost-model evaluation (§5.2 Step ②).
+
+Row-parallel map over a batch of parallelism configurations: each grid
+cell evaluates a (bb, T) block of configs against its per-tier volumes,
+bandwidths and transfer counts. Elementwise VPU work — one block per
+grid step, fully fused in VMEM.
+
+This is the kernel behind ``artifacts/costmodel.hlo.txt``: the rust
+coordinator packs candidate configs into the fixed [B, T] layout and
+gets the whole batch's iteration times in one PJRT execution
+(`parallelism::search_with` plugs it in as the evaluator).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 64
+
+
+def _cost_kernel(vol_ref, bw_ref, tr_ref, alpha_ref, comp_ref, exp_ref, o_ref):
+    vol = vol_ref[...]  # (bb, T)
+    bw = bw_ref[...]  # (bb, T)
+    tr = tr_ref[...]  # (bb, T)
+    alpha = alpha_ref[...]  # (1, T)
+    comp = comp_ref[...]  # (bb, 1)
+    exp = exp_ref[...]  # (1, T)
+    comm = vol / (bw * 1e3) + tr * alpha
+    o_ref[...] = comp[:, 0] + jnp.sum(comm * exp, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def cost_model(
+    volumes, bandwidths, transfers, alphas, compute_us, exposure, bb: int = DEFAULT_BLOCK_B
+):
+    """[B] iteration times (µs) for B configs × T technique-tier slots.
+
+    See ``ref.cost_model`` for the formula. B % bb == 0.
+    """
+    b, t = volumes.shape
+    assert bandwidths.shape == (b, t) and transfers.shape == (b, t)
+    assert alphas.shape == (t,) and exposure.shape == (t,)
+    assert compute_us.shape == (b,)
+    assert b % bb == 0, (b, bb)
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(
+        volumes,
+        bandwidths,
+        transfers,
+        alphas[None, :],
+        compute_us[:, None],
+        exposure[None, :],
+    )

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: link-load accumulation (incidenceᵀ × demand).
+
+Given the APR traffic split as a weighted path×link incidence matrix and
+per-path demands, produce per-link loads — the quantity the Detour/
+Borrow optimizers balance (paper §4.1, Fig 10/13).
+
+Tiling: grid walks (link-tile, path-tile); each step loads a (bp, bl)
+incidence tile and a (bp,) demand slice into VMEM and accumulates
+``loads[l] += Σ_p inc[p, l]·demand[p]`` into the (bl,) output tile that
+stays resident across the path axis. This is a K-reduction mat-vec with
+f32 accumulators — the memory-bound twin of the min-plus kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_PATHS = 128
+DEFAULT_BLOCK_LINKS = 128
+
+
+def _linkload_kernel(inc_ref, d_ref, o_ref):
+    p = pl.program_id(1)
+    inc = inc_ref[...]  # (bp, bl)
+    d = d_ref[...]  # (bp, 1)
+    partial = jnp.sum(inc * d, axis=0)  # (bl,)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(p != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bl"))
+def link_load(
+    incidence,
+    demand,
+    bp: int = DEFAULT_BLOCK_PATHS,
+    bl: int = DEFAULT_BLOCK_LINKS,
+):
+    """loads[l] = Σ_p incidence[p, l] * demand[p] (f32).
+
+    ``incidence``: (P, L); ``demand``: (P,). P % bp == 0, L % bl == 0.
+    """
+    paths, links = incidence.shape
+    assert demand.shape == (paths,)
+    assert paths % bp == 0 and links % bl == 0, (incidence.shape, bp, bl)
+    d2 = demand[:, None]  # (P, 1) so BlockSpec can tile it
+    return pl.pallas_call(
+        _linkload_kernel,
+        grid=(links // bl, paths // bp),
+        in_specs=[
+            pl.BlockSpec((bp, bl), lambda l, p: (p, l)),
+            pl.BlockSpec((bp, 1), lambda l, p: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl,), lambda l, p: (l,)),
+        out_shape=jax.ShapeDtypeStruct((links,), jnp.float32),
+        interpret=True,
+    )(incidence, d2)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference twin here; pytest sweeps
+shapes/values with hypothesis and asserts allclose (the CORE correctness
+signal of the build path — see DESIGN.md §2).
+"""
+
+import jax.numpy as jnp
+
+#: Value standing in for "unreachable" in min-plus adjacency matrices.
+#: Finite (not jnp.inf) so MXU-friendly arithmetic stays NaN-free:
+#: INF + INF must not overflow f32.
+INF = 1.0e9
+
+
+def minplus_matmul(a, b):
+    """Tropical (min-plus) matrix product: C[i,j] = min_k A[i,k] + B[k,j].
+
+    With A = B = hop-annotated adjacency, squaring log2(diameter) times
+    yields all-pairs-shortest-hops — the metric APR uses to classify
+    shortest vs detour paths (paper §4.1).
+    """
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def apsp(adj, steps):
+    """All-pairs shortest path by repeated min-plus squaring."""
+    d = adj
+    for _ in range(steps):
+        d = minplus_matmul(d, d)
+    return d
+
+
+def link_load(incidence, demand):
+    """Per-link load: loads[l] = sum_p incidence[p, l] * demand[p].
+
+    ``incidence`` is the weighted path×link matrix (APR traffic split),
+    ``demand`` the per-path flow demand (GB/s).
+    """
+    return incidence.T @ demand
+
+
+def cost_model(volumes, bandwidths, transfers, alphas, compute_us, exposure):
+    """Batched α-β iteration-time model (§5.2 Step ②).
+
+    Mirrors ``rust/src/workload/step.rs::iteration_time``:
+
+      time_i = compute_us[i]
+             + Σ_t exposure[t] · (volumes[i,t] / bandwidths[i,t] / 1e3
+                                  + transfers[i,t] · alphas[t])
+
+    Args:
+      volumes:    [B, T] wire bytes per technique-tier slot.
+      bandwidths: [B, T] GB/s available to that slot.
+      transfers:  [B, T] transfer counts (α term).
+      alphas:     [T]    per-transfer launch overhead (µs).
+      compute_us: [B]    per-config compute time (µs).
+      exposure:   [T]    fraction of each slot's time not hidden by
+                         compute-communication overlap.
+    Returns: [B] total iteration time (µs).
+    """
+    comm = volumes / (bandwidths * 1e3) + transfers * alphas[None, :]
+    return compute_us + jnp.sum(comm * exposure[None, :], axis=1)

@@ -1,0 +1,63 @@
+"""L2: JAX compute graphs built on the L1 Pallas kernels.
+
+Three entry points are AOT-lowered by ``aot.py`` into the artifacts the
+rust runtime executes (python never runs on the request path):
+
+* ``apsp64`` / ``apsp256`` — all-pairs shortest hops over an adjacency
+  matrix (rack-level 64 NPUs / 4-rack group with switches). The rust
+  coordinator uses them to validate its routing tables and to classify
+  shortest vs detour paths (§4.1).
+* ``cost_model_batch`` — batched iteration-time evaluation for the
+  topology-aware parallelization search (§5.2 Step ②).
+* ``link_load_1024x512`` — APR traffic-engineering link loads
+  (§4.1, Fig 10/13).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import costmodel as k_cost
+from .kernels import linkload as k_link
+from .kernels import minplus as k_minplus
+from .kernels.ref import INF
+
+# Fixed artifact shapes (the PJRT executables are monomorphic; the rust
+# side pads to these — see rust/src/runtime/artifacts.rs).
+APSP_SMALL = 64
+APSP_LARGE = 256
+COST_BATCH = 256
+COST_TIERS = 6
+LOAD_PATHS = 1024
+LOAD_LINKS = 512
+
+
+def _normalize_adj(adj):
+    """Clamp self-distance to 0 and missing edges to INF-ish values."""
+    n = adj.shape[0]
+    eye = jnp.eye(n, dtype=adj.dtype)
+    return jnp.where(eye > 0, 0.0, jnp.minimum(adj, INF))
+
+
+def apsp64(adj):
+    """All-pairs shortest hops on a 64-node graph (diameter ≤ 4)."""
+    d = _normalize_adj(adj)
+    return (k_minplus.apsp(d, steps=2, block=32),)
+
+
+def apsp256(adj):
+    """All-pairs shortest hops on a 256-node graph (diameter ≤ 16)."""
+    d = _normalize_adj(adj)
+    return (k_minplus.apsp(d, steps=4, block=64),)
+
+
+def cost_model_batch(volumes, bandwidths, transfers, alphas, compute_us, exposure):
+    """[COST_BATCH] iteration times (µs); see kernels.ref.cost_model."""
+    return (
+        k_cost.cost_model(
+            volumes, bandwidths, transfers, alphas, compute_us, exposure
+        ),
+    )
+
+
+def link_load_1024x512(incidence, demand):
+    """[LOAD_LINKS] per-link loads from the weighted incidence matrix."""
+    return (k_link.link_load(incidence, demand),)

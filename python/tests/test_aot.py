@@ -1,0 +1,54 @@
+"""AOT path smoke tests: every entry point lowers to parseable HLO text
+with the manifest shapes (the rust loader's contract)."""
+
+import os
+import re
+
+from compile import aot, model
+
+
+def test_entry_points_cover_all_artifacts():
+    names = [e[0] for e in aot.entry_points()]
+    assert names == ["apsp64", "apsp256", "costmodel", "linkload"]
+
+
+def test_lowering_produces_hlo_text():
+    for name, fn, example in aot.entry_points():
+        import jax
+
+        lowered = jax.jit(fn).lower(*example)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+        # return_tuple=True → root is a tuple
+        assert re.search(r"ROOT.*tuple", text), f"{name}: missing tuple root"
+
+
+def test_shape_strings():
+    import jax, jax.numpy as jnp
+
+    s = jax.ShapeDtypeStruct((256, 6), jnp.float32)
+    assert aot.shape_str(s) == "f32[256,6]"
+
+
+def test_artifacts_on_disk_match_manifest_if_built():
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(out, "manifest.txt")
+    if not os.path.exists(manifest):
+        import pytest
+
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    lines = [l for l in open(manifest).read().splitlines() if l.strip()]
+    names = [l.split(" :: ")[0] for l in lines]
+    assert names == [e[0] for e in aot.entry_points()]
+    for n in names:
+        path = os.path.join(out, f"{n}.hlo.txt")
+        assert os.path.exists(path), path
+        head = open(path).read(64)
+        assert head.startswith("HloModule")
+
+
+def test_cost_batch_constant_matches_rust_side():
+    # rust/src/runtime/artifacts.rs pads batches to this constant.
+    assert model.COST_BATCH == 256
+    assert model.COST_TIERS == 6

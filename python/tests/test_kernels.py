@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps
+over shapes and values — the CORE correctness signal of the AOT path)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import costmodel, linkload, minplus, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def f32s(rng, *shape, lo=0.0, hi=10.0):
+    return rng.uniform(lo, hi, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- minplus
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    gm=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+)
+def test_minplus_matches_ref(seed, gm, block):
+    rng = np.random.default_rng(seed)
+    n = gm * block
+    a = f32s(rng, n, n)
+    b = f32s(rng, n, n)
+    got = minplus.minplus_matmul(jnp.array(a), jnp.array(b), block=block)
+    want = ref.minplus_matmul(jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+def test_minplus_with_inf_entries(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    a = f32s(rng, n, n)
+    a[rng.uniform(size=(n, n)) < 0.5] = ref.INF
+    got = minplus.minplus_matmul(jnp.array(a), jnp.array(a), block=16)
+    want = ref.minplus_matmul(jnp.array(a), jnp.array(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    assert np.all(np.isfinite(np.asarray(got))), "INF must stay finite"
+
+
+def test_minplus_rejects_misaligned():
+    a = jnp.zeros((48, 48), jnp.float32)
+    with pytest.raises(AssertionError):
+        minplus.minplus_matmul(a, a, block=32)
+
+
+def test_apsp_on_known_graph():
+    # Path graph 0-1-2-3 embedded in a 32-node INF matrix.
+    n = 32
+    adj = np.full((n, n), ref.INF, np.float32)
+    np.fill_diagonal(adj, 0.0)
+    for i in range(3):
+        adj[i, i + 1] = adj[i + 1, i] = 1.0
+    d = np.asarray(minplus.apsp(jnp.array(adj), steps=2, block=16))
+    assert d[0, 3] == 3.0
+    assert d[0, 2] == 2.0
+    assert d[3, 0] == 3.0
+    assert d[5, 5] == 0.0
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+def test_apsp_matches_ref_on_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    adj = np.full((n, n), ref.INF, np.float32)
+    np.fill_diagonal(adj, 0.0)
+    # random symmetric edges
+    for _ in range(64):
+        i, j = rng.integers(0, n, 2)
+        if i != j:
+            adj[i, j] = adj[j, i] = 1.0
+    got = np.asarray(minplus.apsp(jnp.array(adj), steps=3, block=16))
+    want = np.asarray(ref.apsp(jnp.array(adj), steps=3))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # metric properties on the reachable part
+    fin = got < ref.INF / 2
+    assert np.all(got[fin] >= 0)
+    assert np.allclose(got, got.T)  # symmetric graph → symmetric distances
+
+
+# --------------------------------------------------------------- linkload
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    gp=st.integers(1, 3),
+    gl=st.integers(1, 3),
+)
+def test_linkload_matches_ref(seed, gp, gl):
+    rng = np.random.default_rng(seed)
+    bp, bl = 32, 32
+    p, l = gp * bp, gl * bl
+    inc = f32s(rng, p, l, hi=1.0)
+    d = f32s(rng, p, hi=5.0)
+    got = linkload.link_load(jnp.array(inc), jnp.array(d), bp=bp, bl=bl)
+    want = ref.link_load(jnp.array(inc), jnp.array(d))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5)
+
+
+def test_linkload_zero_demand_zero_load():
+    inc = jnp.ones((128, 128), jnp.float32)
+    d = jnp.zeros((128,), jnp.float32)
+    got = linkload.link_load(inc, d)
+    assert np.allclose(np.asarray(got), 0.0)
+
+
+# -------------------------------------------------------------- costmodel
+@given(seed=st.integers(0, 2**32 - 1), gb=st.integers(1, 4))
+def test_costmodel_matches_ref(seed, gb):
+    rng = np.random.default_rng(seed)
+    bb, t = 32, 6
+    b = gb * bb
+    vol = f32s(rng, b, t, lo=1e5, hi=1e9)
+    bw = f32s(rng, b, t, lo=10, hi=400)
+    tr = f32s(rng, b, t, lo=1, hi=5000)
+    al = f32s(rng, t, lo=0, hi=5)
+    co = f32s(rng, b, lo=100, hi=1e6)
+    ex = f32s(rng, t, lo=0, hi=1)
+    args = tuple(map(jnp.array, (vol, bw, tr, al, co, ex)))
+    got = costmodel.cost_model(*args, bb=bb)
+    want = ref.cost_model(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_costmodel_monotone_in_volume():
+    b, t = 64, 6
+    base = dict(
+        bandwidths=jnp.full((b, t), 100.0),
+        transfers=jnp.ones((b, t)),
+        alphas=jnp.zeros((t,)),
+        compute_us=jnp.zeros((b,)),
+        exposure=jnp.ones((t,)),
+    )
+    lo = costmodel.cost_model(jnp.full((b, t), 1e6), **base)
+    hi = costmodel.cost_model(jnp.full((b, t), 2e6), **base)
+    assert np.all(np.asarray(hi) > np.asarray(lo))
+
+
+def test_costmodel_zero_exposure_is_compute_only():
+    b, t = 64, 6
+    comp = jnp.arange(b, dtype=jnp.float32)
+    got = costmodel.cost_model(
+        jnp.full((b, t), 1e9),
+        jnp.full((b, t), 10.0),
+        jnp.full((b, t), 100.0),
+        jnp.ones((t,)),
+        comp,
+        jnp.zeros((t,)),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(comp), atol=1e-6)

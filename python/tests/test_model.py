@@ -1,0 +1,72 @@
+"""L2 model entry points: shapes, semantics, and rust-parity checks."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def rack_2dfm_adjacency(n0=8, n1=8):
+    """Hop-annotated adjacency of the 8×8 2D-FullMesh rack."""
+    n = n0 * n1
+    adj = np.full((n, n), ref.INF, np.float32)
+    np.fill_diagonal(adj, 0.0)
+    for y in range(n1):
+        for x1 in range(n0):
+            for x2 in range(n0):
+                if x1 != x2:
+                    adj[y * n0 + x1, y * n0 + x2] = 1.0
+    for x in range(n0):
+        for y1 in range(n1):
+            for y2 in range(n1):
+                if y1 != y2:
+                    adj[y1 * n0 + x, y2 * n0 + x] = 1.0
+    return adj
+
+
+def test_apsp64_rack_has_diameter_2():
+    adj = rack_2dfm_adjacency()
+    (d,) = model.apsp64(jnp.array(adj))
+    d = np.asarray(d)
+    off = ~np.eye(64, dtype=bool)
+    assert d[off].min() == 1.0
+    assert d.max() == 2.0, "2D-FullMesh rack diameter must be 2 (§3.1)"
+    # exactly 14 one-hop peers per NPU (7 X + 7 Y)
+    assert np.all((d == 1.0).sum(axis=1) == 14)
+
+
+def test_apsp256_handles_disconnected_nodes():
+    n = model.APSP_LARGE
+    adj = np.full((n, n), ref.INF, np.float32)
+    np.fill_diagonal(adj, 0.0)
+    adj[0, 1] = adj[1, 0] = 1.0
+    (d,) = model.apsp256(jnp.array(adj))
+    d = np.asarray(d)
+    assert d[0, 1] == 1.0
+    assert d[0, 2] >= ref.INF / 2, "unreachable stays INF-ish"
+
+
+def test_cost_model_batch_shape_and_ordering():
+    b, t = model.COST_BATCH, model.COST_TIERS
+    rng = np.random.default_rng(1)
+    vol = rng.uniform(1e6, 1e9, (b, t)).astype(np.float32)
+    bw_fast = np.full((b, t), 400.0, np.float32)
+    bw_slow = np.full((b, t), 40.0, np.float32)
+    tr = np.ones((b, t), np.float32)
+    al = np.zeros((t,), np.float32)
+    co = np.zeros((b,), np.float32)
+    ex = np.ones((t,), np.float32)
+    (fast,) = model.cost_model_batch(*map(jnp.array, (vol, bw_fast, tr, al, co, ex)))
+    (slow,) = model.cost_model_batch(*map(jnp.array, (vol, bw_slow, tr, al, co, ex)))
+    assert fast.shape == (b,)
+    assert np.all(np.asarray(slow) > np.asarray(fast))
+
+
+def test_link_load_shapes():
+    p, l = model.LOAD_PATHS, model.LOAD_LINKS
+    inc = jnp.ones((p, l), jnp.float32) / p
+    d = jnp.ones((p,), jnp.float32)
+    (loads,) = model.link_load_1024x512(inc, d)
+    assert loads.shape == (l,)
+    np.testing.assert_allclose(np.asarray(loads), 1.0, rtol=1e-4)

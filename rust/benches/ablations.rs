@@ -1,0 +1,151 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * A1 — topology-aware vs naive parallelism placement (§5.2);
+//! * A2 — multi-ring count k ∈ {1, 2, 3} (Fig 13 / Walecki budget);
+//! * A3 — 64+1 backup vs masking the failed NPU (§3.3.2);
+//! * A4 — CCU compute-communication overlap on vs off (§7);
+//! * A5 — DCN attach Solution-(a) UB-switch vs Solution-(b) CPU-NIC
+//!   (§3.3.4).
+
+use ubmesh::collectives::ring::{fullmesh_rings, multiring_allreduce_dag, ring_allreduce_dag};
+use ubmesh::reliability::backup::{fail_npu, masked_compute_fraction, ranks_with_backup};
+use ubmesh::sim::{self, SimNet};
+use ubmesh::topology::dcn::DcnAttach;
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::NodeId;
+use ubmesh::util::table::{fmt, pct, Table};
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::placement::{Placement, TierBandwidth};
+use ubmesh::workload::step::iteration_time;
+use ubmesh::workload::traffic::table1_config;
+
+fn main() {
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let m = by_name("gpt4-2t").unwrap();
+    let p = table1_config();
+    let bw = TierBandwidth::ubmesh(16, 1.6);
+
+    // --- A1: placement --------------------------------------------------
+    let aware = iteration_time(&m, &p, &Placement::topology_aware(&p), &bw);
+    let naive = iteration_time(&m, &p, &Placement::naive(&p), &bw);
+    let mut tbl = Table::with_title(
+        "A1: parallelism placement (gpt4-2t, Table-1 config)",
+        vec!["placement", "iter (ms)", "comm (ms)", "vs aware"],
+    );
+    for (name, it) in [("topology-aware", &aware), ("naive (PP innermost)", &naive)] {
+        tbl.row(vec![
+            name.into(),
+            fmt(it.total_us / 1e3, 1),
+            fmt(it.comm_us() / 1e3, 1),
+            format!("{:.2}x", it.total_us / aware.total_us),
+        ]);
+    }
+    tbl.print();
+    assert!(naive.total_us > aware.total_us);
+
+    // --- A2: multi-ring count -------------------------------------------
+    let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
+    let net = SimNet::new(&t);
+    let bytes = 360e6;
+    let mut tbl = Table::with_title(
+        "A2: ring count (board AllReduce, 360 MB)",
+        vec!["rings", "time (µs)", "speedup"],
+    );
+    let single = sim::schedule::run(&net, &ring_allreduce_dag(&t, &board, bytes));
+    tbl.row(vec!["1".into(), fmt(single.makespan_us, 1), "1.00x".into()]);
+    let mut last = single.makespan_us;
+    for k in [2usize, 3] {
+        let rings = fullmesh_rings(&board, k);
+        let w = vec![1.0; k];
+        let r = sim::schedule::run(&net, &multiring_allreduce_dag(&t, &rings, &w, bytes));
+        tbl.row(vec![
+            format!("{k}"),
+            fmt(r.makespan_us, 1),
+            format!("{:.2}x", single.makespan_us / r.makespan_us),
+        ]);
+        assert!(r.makespan_us < last, "more rings must help");
+        last = r.makespan_us;
+    }
+    tbl.print();
+
+    // --- A3: backup vs masking -------------------------------------------
+    let failed = board[3];
+    let mut net2 = SimNet::new(&t);
+    fail_npu(&mut net2, &t, failed);
+    let backup_ring: Vec<NodeId> = board
+        .iter()
+        .map(|&n| if n == failed { h.backup.unwrap() } else { n })
+        .collect();
+    let fo = sim::schedule::run(&net2, &ring_allreduce_dag(&t, &backup_ring, bytes));
+    let _ = ranks_with_backup(&h, failed);
+    let healthy = single.makespan_us;
+    let mut tbl = Table::with_title(
+        "A3: failure handling (board AllReduce + compute capacity)",
+        vec!["strategy", "allreduce µs", "compute", "effective throughput"],
+    );
+    tbl.row(vec![
+        "healthy".into(),
+        fmt(healthy, 1),
+        "100%".into(),
+        "1.00x".into(),
+    ]);
+    let slowdown = fo.makespan_us / healthy;
+    tbl.row(vec![
+        "64+1 backup (Fig 9)".into(),
+        fmt(fo.makespan_us, 1),
+        "100%".into(),
+        format!("{:.2}x", 1.0 / slowdown.max(1.0)),
+    ]);
+    tbl.row(vec![
+        "mask NPU".into(),
+        "-".into(),
+        pct(masked_compute_fraction(), 1),
+        format!("{:.2}x", masked_compute_fraction()),
+    ]);
+    tbl.print();
+    assert!(1.0 / slowdown > masked_compute_fraction(), "backup must win");
+
+    // --- A4: CCU overlap ---------------------------------------------------
+    // Overlap is a compile-time constant; emulate "off" by scaling the
+    // exposed comm back up.
+    let exposed_on = aware.tp_us + aware.sp_us + aware.ep_us;
+    let exposed_off = exposed_on / (1.0 - ubmesh::workload::step::CCU_OVERLAP);
+    let total_off = aware.total_us - exposed_on + exposed_off;
+    let mut tbl = Table::with_title(
+        "A4: CCU compute-communication overlap (§7)",
+        vec!["CCU", "iter (ms)", "delta"],
+    );
+    tbl.row(vec![
+        "on (65% hidden)".into(),
+        fmt(aware.total_us / 1e3, 1),
+        "-".into(),
+    ]);
+    tbl.row(vec![
+        "off".into(),
+        fmt(total_off / 1e3, 1),
+        pct(total_off / aware.total_us - 1.0, 1),
+    ]);
+    tbl.print();
+    assert!(total_off > aware.total_us);
+
+    // --- A5: DCN attach ------------------------------------------------------
+    let a = DcnAttach::UbSwitch { lanes_per_rack: 8 };
+    let b = DcnAttach::CpuNic { nic_gb_s: 12.5 };
+    let mut tbl = Table::with_title(
+        "A5: DCN attach (per-NPU DP bandwidth beyond the SuperPod)",
+        vec!["solution", "GB/s per NPU", "UB lanes consumed/rack"],
+    );
+    tbl.row(vec![
+        "(a) UB switch".into(),
+        fmt(a.per_npu_gb_s(4), 2),
+        "8".into(),
+    ]);
+    tbl.row(vec![
+        "(b) CPU NICs".into(),
+        fmt(b.per_npu_gb_s(4), 2),
+        "0".into(),
+    ]);
+    tbl.print();
+
+    println!("\nablations OK");
+}

@@ -1,0 +1,80 @@
+//! Fig 17 — Performance of Different Intra-Rack Topologies: 2D-FM /
+//! 1D-FM-A / 1D-FM-B relative to the intra-rack Clos baseline, across
+//! the Table 5 models and sequence lengths 8K–10M, at the 8K SuperPod
+//! scale (inter-rack fixed to 2D-FM, as in §6.2).
+
+use ubmesh::coordinator::{Arch, Job};
+use ubmesh::util::table::{pct, Table};
+
+const SCALE: usize = 8192;
+
+fn rel(model: &str, seq: f64, arch: Arch) -> f64 {
+    Job::new(model, SCALE, seq, arch)
+        .unwrap()
+        .relative_perf(Arch::ClosIntraRack, None)
+        .unwrap()
+}
+
+fn main() {
+    let models = ["llama-70b", "gpt3-175b", "dense-1t", "gpt4-2t", "moe-10t"];
+    let seqs: [f64; 6] = [8192.0, 32768.0, 131072.0, 1048576.0, 4194304.0, 10485760.0];
+    let archs = [
+        ("2D-FM", Arch::ubmesh_default()),
+        ("1D-FM-A", Arch::Fm1dA),
+        ("1D-FM-B", Arch::Fm1dB),
+    ];
+
+    // --- (a) per-model averages over sequence lengths --------------------
+    let mut tbl = Table::with_title(
+        "Fig 17-a: training perf relative to Clos (avg over seq lengths)",
+        vec!["model", "2D-FM", "1D-FM-A", "1D-FM-B", "paper 2D-FM"],
+    );
+    let mut avg_2dfm = 0.0;
+    for model in models {
+        let mut cells = vec![model.to_string()];
+        for (_, arch) in archs {
+            let mean: f64 =
+                seqs.iter().map(|&s| rel(model, s, arch)).sum::<f64>() / seqs.len() as f64;
+            if matches!(arch, Arch::UbMesh { .. }) {
+                avg_2dfm += mean / models.len() as f64;
+                assert!(
+                    (0.88..=1.001).contains(&mean),
+                    "{model}: 2D-FM at {mean:.3} of Clos"
+                );
+            }
+            cells.push(pct(mean, 1));
+        }
+        cells.push("93.2–95.9%".into());
+        tbl.row(cells);
+    }
+    tbl.print();
+
+    // --- (b) per-seq-length averages over models --------------------------
+    let mut tbl = Table::with_title(
+        "Fig 17-b: all-model average by sequence length",
+        vec!["seq", "2D-FM", "1D-FM-A", "1D-FM-B"],
+    );
+    for &seq in &seqs {
+        let mut cells = vec![if seq >= 1048576.0 {
+            format!("{}M", seq / 1048576.0)
+        } else {
+            format!("{}K", seq / 1024.0)
+        }];
+        for (_, arch) in archs {
+            let mean: f64 = models
+                .iter()
+                .map(|m| rel(m, seq, arch))
+                .sum::<f64>()
+                / models.len() as f64;
+            cells.push(pct(mean, 1));
+        }
+        tbl.row(cells);
+    }
+    tbl.print();
+    println!(
+        "\nall-model 2D-FM average: {} (paper: 93.2–95.9% — gap within 7%) ✓",
+        pct(avg_2dfm, 1)
+    );
+    assert!(avg_2dfm > 0.9 && avg_2dfm <= 1.001);
+    println!("\nfig17_intra_rack OK");
+}

@@ -1,0 +1,86 @@
+//! Fig 21 — CapEx Comparison + the §6.4 cost-efficiency headline.
+
+use ubmesh::coordinator::{Arch, Job};
+use ubmesh::cost::capex::{capex_fm_clos, capex_full_clos, capex_ubmesh, savings};
+use ubmesh::cost::efficiency::cost_efficiency;
+use ubmesh::cost::opex::{network_opex, opex};
+use ubmesh::reliability::afr::afr_of_capex;
+use ubmesh::topology::superpod::SuperPodConfig;
+use ubmesh::util::table::{fmt, pct, ratio, Table};
+
+fn main() {
+    let ub = capex_ubmesh(&SuperPodConfig::default());
+    let rows = [
+        (ub.clone(), 1.0),
+        (capex_fm_clos("2D-FM+x16 Clos", 8192, 16, 2), 1.18),
+        (capex_fm_clos("1D-FM+x16 Clos", 8192, 16, 1), 1.26),
+        (capex_full_clos("x64T Clos", 8192, 64), 2.46),
+    ];
+    let mut t = Table::with_title(
+        "Fig 21: CapEx per architecture (8K NPUs)",
+        vec![
+            "architecture",
+            "HRS",
+            "LRS",
+            "optic-mods",
+            "net-share",
+            "CapEx vs UB",
+            "paper",
+        ],
+    );
+    let mut prev = f64::INFINITY;
+    for (r, paper) in rows.iter().rev() {
+        assert!(r.total() <= prev * 1.001, "cost ordering");
+        prev = r.total();
+        let _ = paper;
+    }
+    for (r, paper) in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{}", r.hrs),
+            format!("{}", r.lrs),
+            format!("{}", r.optical_modules),
+            pct(r.network_share(), 0),
+            ratio(r.total() / rows[0].0.total()),
+            format!("{paper}x"),
+        ]);
+    }
+    t.print();
+
+    let clos = &rows[3].0;
+    let (hrs_s, opt_s) = savings(&ub, clos);
+    println!(
+        "\nHRS saved {} (paper 98%) | optical modules saved {} (paper 93%)",
+        pct(hrs_s, 0),
+        pct(opt_s, 0)
+    );
+    println!(
+        "network share of system cost: UB-Mesh {} vs Clos {} (paper: 20% vs 67%)",
+        pct(ub.network_share(), 0),
+        pct(clos.network_share(), 0)
+    );
+
+    // --- OpEx + Eq. 1 cost-efficiency -------------------------------------
+    let ub_afr = afr_of_capex(&ub);
+    let clos_afr = afr_of_capex(clos);
+    let ub_net_opex = network_opex(&ub, ub_afr.total());
+    let clos_net_opex = network_opex(clos, clos_afr.total());
+    println!(
+        "network OpEx reduction: {} (paper ≈ 35%)",
+        pct(1.0 - ub_net_opex / clos_net_opex, 0)
+    );
+    // performance factor from the fig17-style comparison
+    let perf = Job::new("gpt3-175b", 8192, 262144.0, Arch::ubmesh_default())
+        .unwrap()
+        .relative_perf(Arch::ClosIntraRack, None)
+        .unwrap();
+    let ub_ce = cost_efficiency(perf, &ub, &opex(&ub, ub_afr.total()));
+    let clos_ce = cost_efficiency(1.0, clos, &opex(clos, clos_afr.total()));
+    println!(
+        "cost-efficiency (Eq.1): {} at {} relative perf (paper: 2.04x)",
+        ratio(ub_ce / clos_ce),
+        pct(perf, 1)
+    );
+    assert!(ub_ce / clos_ce > 1.6, "cost-efficiency gain must be large");
+    println!("\nfig21_capex OK (CapEx totals: UB {} vs Clos {})", fmt(ub.total(), 0), fmt(clos.total(), 0));
+}

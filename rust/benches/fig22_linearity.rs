@@ -1,0 +1,53 @@
+//! Fig 22 — Linearity Analysis @ Sequence 256K: per-NPU throughput vs
+//! base scale (Eq. 2), per model, 1×–64×.
+
+use ubmesh::coordinator::{linearity, Arch, Job};
+use ubmesh::util::table::{pct, Table};
+
+fn main() {
+    let seq = 262144.0;
+    // (model, base scale) per §6.5.
+    let cases = [
+        ("llama-70b", 128usize),
+        ("gpt3-175b", 512),
+        ("dense-1t", 1024),
+        ("gpt4-2t", 1024),
+    ];
+    let mults = [1usize, 2, 4, 8, 16, 32, 64];
+
+    let mut t = Table::with_title(
+        "Fig 22: linearity vs base scale (seq 256K)",
+        vec!["model", "1x", "2x", "4x", "8x", "16x", "32x", "64x"],
+    );
+    for (model, base_scale) in cases {
+        let tput = |scale: usize| {
+            Job::new(model, scale, seq, Arch::ubmesh_default())
+                .unwrap()
+                .plan(None)
+                .unwrap()
+                .tokens_per_s
+        };
+        let base = (base_scale, tput(base_scale));
+        let mut cells = vec![model.to_string()];
+        for &m in &mults {
+            let scale = base_scale * m;
+            if scale > 65536 {
+                cells.push("-".into());
+                continue;
+            }
+            let lin = linearity(base, (scale, tput(scale)));
+            cells.push(pct(lin, 1));
+            assert!(
+                lin > 0.95,
+                "{model} linearity at {m}x = {lin:.3} (paper: ≥95%)"
+            );
+        }
+        t.row(cells);
+    }
+    t.print();
+    println!(
+        "\n\"the linearity of UB-Mesh on all tasks exceeds 100% under 1x–32x \
+         scales ... still above 95%\" — ≥95% reproduced ✓"
+    );
+    println!("\nfig22_linearity OK");
+}

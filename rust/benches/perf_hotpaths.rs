@@ -1,0 +1,129 @@
+//! §Perf — hot-path microbenchmarks for the three layers (see
+//! EXPERIMENTS.md §Perf for targets and the iteration log).
+//!
+//! L3: DES event throughput, max-min allocation, routing lookups,
+//!     topology construction, APR enumeration.
+//! L2/L1 (via PJRT): artifact execution latency for the cost-model batch
+//!     and APSP kernels.
+
+use ubmesh::collectives::ring::ring_allreduce_dag;
+use ubmesh::routing::apr::paths_2d;
+use ubmesh::routing::table::{LinearTable, Segment, SegmentRoute};
+use ubmesh::routing::address::UbAddr;
+use ubmesh::sim::{self, SimNet};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::NodeId;
+use ubmesh::util::bench::{bench, black_box, section};
+
+fn main() {
+    // ---------------- L3: simulator ------------------------------------
+    section("L3: discrete-event simulator");
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
+    let net = SimNet::new(&t);
+    let dag = ring_allreduce_dag(&t, &board, 360e6);
+    let mut events_per_run = 0;
+    let r = bench("board ring-allreduce DES (14 stages × 8 flows)", || {
+        let rep = sim::schedule::run(&net, &dag);
+        events_per_run = rep.events;
+        black_box(rep.makespan_us);
+    });
+    println!(
+        "  → {:.2}M events/s",
+        events_per_run as f64 / r.mean.as_secs_f64() / 1e6
+    );
+
+    let rows: Vec<Vec<NodeId>> = (0..8)
+        .map(|b| (0..8).map(|s| h.npu(b, s, 8)).collect())
+        .collect();
+    let cols: Vec<Vec<NodeId>> = (0..8)
+        .map(|s| (0..8).map(|b| h.npu(b, s, 8)).collect())
+        .collect();
+    let hdag = ubmesh::collectives::hierarchical::hierarchical_allreduce_dag(
+        &t, &rows, &cols, 360e6,
+    );
+    let mut ev = 0;
+    let r = bench("rack hierarchical allreduce DES (~1.3k flows)", || {
+        let rep = sim::schedule::run(&net, &hdag);
+        ev = rep.events;
+        black_box(rep.makespan_us);
+    });
+    println!("  → {:.2}M flow-events/s equivalent, {} peak flows", ev as f64 / r.mean.as_secs_f64() / 1e6, {
+        let rep = sim::schedule::run(&net, &hdag);
+        rep.peak_flows
+    });
+
+    // ---------------- L3: routing ----------------------------------------
+    section("L3: routing");
+    bench("APR enumerate all paths, one rack pair", || {
+        black_box(paths_2d((0, 0), (3, 4), 8, 8, true));
+    });
+    let mut lin = LinearTable::default();
+    let local = UbAddr::new(0, 0, 0, 0, 0);
+    let (prefix, bits) = local.rack_segment();
+    lin.add(Segment {
+        prefix,
+        bits,
+        route: SegmentRoute::Linear {
+            base_shift: 8,
+            ports: (0..256).map(|i| i as u16).collect(),
+        },
+    });
+    let addr = UbAddr::new(0, 0, 3, 5, 0);
+    bench("linear table lookup (single)", || {
+        black_box(lin.lookup(addr));
+    });
+
+    // ---------------- L3: topology construction ---------------------------
+    section("L3: topology construction");
+    bench("build 64-NPU rack (+LRS planes)", || {
+        black_box(ubmesh_rack(&RackConfig::default()));
+    });
+    bench("build 1K-NPU pod", || {
+        black_box(ubmesh::topology::pod::ubmesh_pod(
+            &ubmesh::topology::pod::PodConfig::default(),
+        ));
+    });
+
+    // ---------------- L2/L1 via PJRT --------------------------------------
+    section("L2/L1: PJRT artifact execution");
+    match ubmesh::runtime::Artifacts::load(&ubmesh::runtime::Artifacts::default_dir()) {
+        Err(e) => println!("skipped (run `make artifacts`): {e:#}"),
+        Ok(a) => {
+            use ubmesh::workload::models::by_name;
+            use ubmesh::workload::placement::TierBandwidth;
+            use ubmesh::workload::traffic::table1_config;
+            let m = by_name("gpt4-2t").unwrap();
+            let bw = TierBandwidth::ubmesh(16, 1.0);
+            let cfgs = vec![table1_config(); 256];
+            bench("costmodel batch (256 configs, PJRT)", || {
+                black_box(a.evaluate_configs(&m, &cfgs, &bw).unwrap());
+            });
+            let n = 64;
+            let mut adj = vec![ubmesh::runtime::artifacts::INF; n * n];
+            for i in 0..n {
+                adj[i * n + i] = 0.0;
+            }
+            for l in &t.links {
+                let (x, y) = (l.a.idx(), l.b.idx());
+                if x < n && y < n {
+                    adj[x * n + y] = 1.0;
+                    adj[y * n + x] = 1.0;
+                }
+            }
+            bench("apsp64 (min-plus Pallas kernel, PJRT)", || {
+                black_box(a.apsp(&adj, n).unwrap());
+            });
+            // rust-side equivalent of the search evaluator for contrast:
+            use ubmesh::workload::placement::Placement;
+            use ubmesh::workload::step::iteration_time;
+            bench("costmodel batch (256 configs, pure rust)", || {
+                for c in &cfgs {
+                    black_box(iteration_time(&m, c, &Placement::topology_aware(c), &bw));
+                }
+            });
+        }
+    }
+
+    println!("\nperf_hotpaths OK");
+}

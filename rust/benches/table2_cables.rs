@@ -1,0 +1,53 @@
+//! Table 2 — Usage Estimation of Different Types of Links.
+//! Census of the constructed 8K SuperPod vs the paper's ratios.
+
+use ubmesh::topology::census::{class_name, Census};
+use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+use ubmesh::topology::CableClass;
+use ubmesh::util::bench::bench;
+use ubmesh::util::table::{pct, Table};
+
+fn main() {
+    let cfg = SuperPodConfig::default();
+    let mut built = None;
+    let b = bench("build 8K SuperPod topology", || {
+        built = Some(ubmesh_superpod(&cfg));
+    });
+    let (t, _) = built.unwrap();
+    println!(
+        "  ({} nodes, {} links, {:.1}k nodes/s)",
+        t.node_count(),
+        t.link_count(),
+        t.node_count() as f64 / b.mean.as_secs_f64() / 1e3
+    );
+    let c = Census::of(&t);
+
+    let paper = [
+        ("XY (passive electrical, ~1 m)", CableClass::PassiveElectrical, 86.7),
+        ("Z (active electrical, ~10 m)", CableClass::ActiveElectrical, 7.2),
+        ("α/βγ (optical, 100–1000 m)", CableClass::Optical, 4.8 + 1.2),
+    ];
+    let total = c.external_cables() as f64;
+    let mut tbl = Table::with_title(
+        "Table 2: external cable mix (measured vs paper)",
+        vec!["dimension / class", "cables", "measured", "paper"],
+    );
+    for (name, class, pshare) in paper {
+        tbl.row(vec![
+            name.to_string(),
+            format!("{}", c.cables_of(class)),
+            pct(c.cables_of(class) as f64 / total, 1),
+            format!("{pshare}%"),
+        ]);
+    }
+    tbl.print();
+    println!("optical modules: {}", c.optical_modules);
+    let passive_share = c.cables_of(CableClass::PassiveElectrical) as f64 / total;
+    assert!(
+        passive_share > 0.8,
+        "passive electrical must dominate (shape of Table 2)"
+    );
+    // shape: passive >> active >= optical count
+    let _ = class_name(0);
+    println!("\ntable2_cables OK");
+}

@@ -1,0 +1,141 @@
+//! Table 4 — Routing Systems Comparison: the qualitative feature matrix
+//! plus a quantitative forwarding microbench (structured linear lookup
+//! vs LPM trie — the "High-Performance Forwarding" column).
+
+use ubmesh::routing::address::UbAddr;
+use ubmesh::routing::table::{LinearTable, LpmTrie, Segment, SegmentRoute, StructuredTable};
+use ubmesh::util::bench::{bench, black_box};
+use ubmesh::util::rng::Rng;
+use ubmesh::util::table::Table;
+
+fn build_structured() -> StructuredTable {
+    let mut st = StructuredTable::new(0, 0);
+    for b in 0..8u8 {
+        for s in 0..8u8 {
+            st.set_local_route(b, s, (b as u16) * 32 + s as u16);
+        }
+    }
+    for rack in 1..16u8 {
+        st.set_rack_route(rack, 100 + rack as u16);
+    }
+    for pod in 1..8u16 {
+        st.set_pod_route(pod, 200 + pod);
+    }
+    st
+}
+
+fn build_tables() -> (LinearTable, LpmTrie) {
+    // Local rack (dense linear) + 127 remote racks + 7 remote pods.
+    let mut lin = LinearTable::default();
+    let local = UbAddr::new(0, 0, 0, 0, 0);
+    let (prefix, bits) = local.rack_segment();
+    let ports: Vec<u16> = (0..(8 << 5)).map(|i| i as u16).collect();
+    lin.add(Segment {
+        prefix,
+        bits,
+        route: SegmentRoute::Linear {
+            base_shift: 8,
+            ports,
+        },
+    });
+    let mut lpm = LpmTrie::new();
+    // host routes for the local rack
+    for b in 0..8u8 {
+        for s in 0..8u8 {
+            lpm.insert(UbAddr::new(0, 0, b, s, 0).0, 32, (b as u16) * 32 + s as u16);
+        }
+    }
+    for rack in 1..16u8 {
+        let a = UbAddr::new(0, rack, 0, 0, 0);
+        let (p, bits) = a.rack_segment();
+        lin.add(Segment {
+            prefix: p,
+            bits,
+            route: SegmentRoute::Aggregate(100 + rack as u16),
+        });
+        lpm.insert(p, bits, 100 + rack as u16);
+    }
+    for pod in 1..8u16 {
+        let a = UbAddr::new(pod, 0, 0, 0, 0);
+        let (p, bits) = a.pod_segment();
+        lin.add(Segment {
+            prefix: p,
+            bits,
+            route: SegmentRoute::Aggregate(200 + pod),
+        });
+        lpm.insert(p, bits, 200 + pod);
+    }
+    (lin, lpm)
+}
+
+fn main() {
+    // --- feature matrix (Table 4) ---------------------------------------
+    let mut t = Table::with_title(
+        "Table 4: routing systems",
+        vec![
+            "property",
+            "LPM+BGP",
+            "host-based",
+            "DOR",
+            "APR (ours)",
+        ],
+    );
+    t.row(vec!["hybrid topology", "yes", "partial", "no", "yes"]);
+    t.row(vec!["high-perf forwarding", "no", "no", "yes", "yes"]);
+    t.row(vec!["non-shortest paths", "no", "no", "no", "yes"]);
+    t.row(vec!["fault tolerance", "yes", "yes", "no", "yes"]);
+    t.print();
+
+    // --- forwarding microbench -------------------------------------------
+    let (lin, lpm) = build_tables();
+    let st = build_structured();
+    println!(
+        "\ntable sizes: structured {} entries, segment-scan {} entries, LPM trie {} nodes",
+        st.size(),
+        lin.size(),
+        lpm.size()
+    );
+    let mut rng = Rng::new(42);
+    let addrs: Vec<UbAddr> = (0..4096)
+        .map(|_| {
+            UbAddr::new(
+                rng.below(8) as u16,
+                rng.below(16) as u8,
+                rng.below(8) as u8,
+                rng.below(8) as u8,
+                0,
+            )
+        })
+        .collect();
+    // correctness parity on local rack first
+    for b in 0..8u8 {
+        for s in 0..8u8 {
+            let a = UbAddr::new(0, 0, b, s, 0);
+            assert_eq!(lin.lookup(a), lpm.lookup(a), "{a}");
+            assert_eq!(st.lookup(a), lpm.lookup(a), "{a}");
+        }
+    }
+    let rs = bench("structured indexed lookup ×4096", || {
+        for a in &addrs {
+            black_box(st.lookup(*a));
+        }
+    });
+    let rl = bench("segment-scan lookup ×4096", || {
+        for a in &addrs {
+            black_box(lin.lookup(*a));
+        }
+    });
+    let rt = bench("LPM trie lookup ×4096", || {
+        for a in &addrs {
+            black_box(lpm.lookup(*a));
+        }
+    });
+    let _ = rl;
+    let speedup = rt.mean.as_secs_f64() / rs.mean.as_secs_f64();
+    println!(
+        "\nstructured lookup is {speedup:.1}x faster than LPM \
+         (Table 4: 'High-Performance Forwarding' ✓)"
+    );
+    assert!(speedup > 1.0, "structured indexing must beat the trie");
+    println!("\ntable4_routing OK");
+}

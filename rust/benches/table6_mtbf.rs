@@ -1,0 +1,81 @@
+//! Table 6 — MTBF Estimation + the §6.6 availability numbers, from the
+//! component censuses and per-unit AFRs, plus a Monte-Carlo check.
+
+use ubmesh::cost::capex::{capex_full_clos, capex_ubmesh};
+use ubmesh::reliability::afr::afr_of_capex;
+use ubmesh::reliability::availability::{availability, mtbf_hours, mttr};
+use ubmesh::reliability::montecarlo::{run, McConfig};
+use ubmesh::topology::superpod::SuperPodConfig;
+use ubmesh::util::table::{fmt, pct, Table};
+
+fn main() {
+    let ub_capex = capex_ubmesh(&SuperPodConfig::default());
+    let clos_capex = capex_full_clos("x64T Clos", 8192, 64);
+    let ub = afr_of_capex(&ub_capex);
+    let clos = afr_of_capex(&clos_capex);
+
+    let mut t = Table::with_title(
+        "Table 6: AFR / MTBF (measured | paper)",
+        vec!["arch", "E-cables", "optical", "LRS", "HRS", "total", "MTBF (h)"],
+    );
+    t.row(vec![
+        "UB-Mesh".into(),
+        format!("{} | 5.82", fmt(ub.electrical_cables, 2)),
+        format!("{} | 1.55", fmt(ub.optical, 2)),
+        format!("{} | 81", fmt(ub.lrs, 1)),
+        format!("{} | 0.56", fmt(ub.hrs, 2)),
+        format!("{} | 88.9", fmt(ub.total(), 1)),
+        format!("{} | 98.5", fmt(mtbf_hours(ub.total()), 1)),
+    ]);
+    t.row(vec![
+        "Clos".into(),
+        format!("{} | 13.8", fmt(clos.electrical_cables, 2)),
+        format!("{} | 574", fmt(clos.optical, 1)),
+        format!("{} | 18", fmt(clos.lrs, 1)),
+        format!("{} | 27", fmt(clos.hrs, 1)),
+        format!("{} | 632.8", fmt(clos.total(), 1)),
+        format!("{} | 13.8", fmt(mtbf_hours(clos.total()), 1)),
+    ]);
+    t.print();
+
+    let ub_av = availability(mtbf_hours(ub.total()), mttr::BASELINE_HOURS);
+    let clos_av = availability(mtbf_hours(clos.total()), mttr::BASELINE_HOURS);
+    let ub_opt = availability(mtbf_hours(ub.total()), mttr::OPTIMIZED_HOURS);
+    println!(
+        "\navailability @75min MTTR: UB-Mesh {} vs Clos {} (paper: 98.8% vs 91.6%)",
+        pct(ub_av, 1),
+        pct(clos_av, 1)
+    );
+    println!(
+        "improvement: {} (paper: 7.2%)  | optimized-MTTR UB-Mesh: {} (paper: 99.78%)",
+        pct(ub_av - clos_av, 1),
+        pct(ub_opt, 2)
+    );
+    println!(
+        "MTBF ratio: {:.2}x (paper: 7.14x)",
+        mtbf_hours(ub.total()) / mtbf_hours(clos.total())
+    );
+
+    // Monte-Carlo cross-check of Eq. 3 (network failures only).
+    let mut mc_cfg = McConfig::ubmesh_8k(&ub, false);
+    mc_cfg.npu_afr = 0.0;
+    let mc = run(&mc_cfg, 64, 2024);
+    println!(
+        "\nMonte-Carlo availability (network-only): {} (Eq.3: {}) over {} failures",
+        pct(mc.availability, 2),
+        pct(ub_av, 2),
+        mc.failures
+    );
+    assert!((mc.availability - ub_av).abs() < 0.02);
+
+    // 64+1 backup benefit under NPU failures.
+    let with = run(&McConfig::ubmesh_8k(&ub, true), 64, 7);
+    let without = run(&McConfig::ubmesh_8k(&ub, false), 64, 7);
+    println!(
+        "with NPU failures: backup 64+1 {} vs no-backup {}",
+        pct(with.availability, 2),
+        pct(without.availability, 2)
+    );
+    assert!(with.availability > without.availability);
+    println!("\ntable6_mtbf OK");
+}

@@ -1,0 +1,249 @@
+//! All-to-All on the 2D full-mesh (Fig 14).
+//!
+//! * [`multipath_alltoall_dag`] — Fig 14-a: each (src, dst) element is
+//!   split into two partitions travelling the X-then-Y and Y-then-X
+//!   corner paths simultaneously, "at most one-hop forwarding".
+//! * [`hierarchical_alltoall_dag`] — Fig 14-b/c: MoE token distribution
+//!   as overlapping broadcast + reduce, saving bandwidth by forwarding
+//!   one copy per row/column instead of one per destination.
+
+use crate::sim::{FlowSpec, Stage, StageDag};
+use crate::topology::{NodeId, Topology};
+
+/// Coordinate-indexed access to a 2D group of NPUs.
+pub struct Grid<'a> {
+    pub nodes: &'a [NodeId],
+    pub n0: usize,
+    pub n1: usize,
+}
+
+impl<'a> Grid<'a> {
+    pub fn new(nodes: &'a [NodeId], n0: usize, n1: usize) -> Grid<'a> {
+        assert_eq!(nodes.len(), n0 * n1);
+        Grid { nodes, n0, n1 }
+    }
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> NodeId {
+        self.nodes[y * self.n0 + x]
+    }
+}
+
+/// General multi-path All2All: every ordered pair exchanges
+/// `bytes_per_pair`; unaligned pairs split across both corner paths.
+pub fn multipath_alltoall_dag(t: &Topology, g: &Grid, bytes_per_pair: f64) -> StageDag {
+    let mut flows = Vec::new();
+    for sy in 0..g.n1 {
+        for sx in 0..g.n0 {
+            for dy in 0..g.n1 {
+                for dx in 0..g.n0 {
+                    if (sx, sy) == (dx, dy) {
+                        continue;
+                    }
+                    let s = g.at(sx, sy);
+                    let d = g.at(dx, dy);
+                    if sx == dx || sy == dy {
+                        // aligned: direct link
+                        flows.push(FlowSpec::along(t, &[s, d], bytes_per_pair));
+                    } else {
+                        // split halves over the two corner paths (Fig 14-a)
+                        let via_x = g.at(dx, sy);
+                        let via_y = g.at(sx, dy);
+                        flows.push(FlowSpec::along(
+                            t,
+                            &[s, via_x, d],
+                            bytes_per_pair / 2.0,
+                        ));
+                        flows.push(FlowSpec::along(
+                            t,
+                            &[s, via_y, d],
+                            bytes_per_pair / 2.0,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("a2a-multipath").with_flows(flows));
+    dag
+}
+
+/// Single-path baseline (X-then-Y only) for the Fig 14 comparison.
+pub fn singlepath_alltoall_dag(t: &Topology, g: &Grid, bytes_per_pair: f64) -> StageDag {
+    let mut flows = Vec::new();
+    for sy in 0..g.n1 {
+        for sx in 0..g.n0 {
+            for dy in 0..g.n1 {
+                for dx in 0..g.n0 {
+                    if (sx, sy) == (dx, dy) {
+                        continue;
+                    }
+                    let s = g.at(sx, sy);
+                    let d = g.at(dx, dy);
+                    if sx == dx || sy == dy {
+                        flows.push(FlowSpec::along(t, &[s, d], bytes_per_pair));
+                    } else {
+                        flows.push(FlowSpec::along(t, &[s, g.at(dx, sy), d], bytes_per_pair));
+                    }
+                }
+            }
+        }
+    }
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("a2a-singlepath").with_flows(flows));
+    dag
+}
+
+/// Hierarchical Broadcast+Reduce All2All for MoE token exchange
+/// (Fig 14-b/c): "the semantics are equivalent to overlapping multiple
+/// broadcast and reduce operations", so payloads replicated to a whole
+/// row are sent *once* per peer, and expert results flowing back are
+/// *reduced in-network* instead of delivered per-source.
+///
+/// Phase 1: every source broadcasts its `bytes_per_pair` payload across
+/// its X row (same data, one copy per row link — not one per final
+/// destination).
+/// Phase 2: every node combines (reduces) what it received and sends a
+/// single combined payload down each Y column link, completing
+/// delivery. Total wire bytes: `n·(n0-1+n1-1)·bytes` vs the general
+/// A2A's `n·(n-1)·bytes` — the Fig 14-b/c bandwidth saving.
+pub fn hierarchical_alltoall_dag(
+    t: &Topology,
+    g: &Grid,
+    bytes_per_pair: f64,
+) -> StageDag {
+    let mut dag = StageDag::default();
+    // Phase 1: X-dimension broadcast (one copy per row peer).
+    let mut p1_flows = Vec::new();
+    for sy in 0..g.n1 {
+        for sx in 0..g.n0 {
+            for dx in 0..g.n0 {
+                if dx != sx {
+                    p1_flows.push(FlowSpec::along(
+                        t,
+                        &[g.at(sx, sy), g.at(dx, sy)],
+                        bytes_per_pair,
+                    ));
+                }
+            }
+        }
+    }
+    let p1 = dag.push(Stage::new("a2a-bcast-x").with_flows(p1_flows));
+    // Phase 2: Y-dimension delivery of in-network-reduced payloads (one
+    // combined message per column link).
+    let mut p2_flows = Vec::new();
+    for sx in 0..g.n0 {
+        for sy in 0..g.n1 {
+            for dy in 0..g.n1 {
+                if dy != sy {
+                    p2_flows.push(FlowSpec::along(
+                        t,
+                        &[g.at(sx, sy), g.at(sx, dy)],
+                        bytes_per_pair,
+                    ));
+                }
+            }
+        }
+    }
+    dag.push(Stage::new("a2a-reduce-y").with_flows(p2_flows).after(vec![p1]));
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{self, SimNet};
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    fn mesh_4x4() -> (Topology, Vec<NodeId>) {
+        let t = nd_fullmesh(
+            "m44",
+            &[
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        );
+        let nodes = t.npus.clone();
+        (t, nodes)
+    }
+
+    #[test]
+    fn uniform_alltoall_is_symmetric_either_way() {
+        // Under perfectly uniform load both routings saturate every link
+        // equally — multipath's win shows up for skewed traffic below.
+        let (t, nodes) = mesh_4x4();
+        let g = Grid::new(&nodes, 4, 4);
+        let net = SimNet::new(&t);
+        let multi = sim::schedule::run(&net, &multipath_alltoall_dag(&t, &g, 4e6));
+        let single = sim::schedule::run(&net, &singlepath_alltoall_dag(&t, &g, 4e6));
+        assert!(multi.makespan_us <= single.makespan_us * 1.01);
+    }
+
+    #[test]
+    fn multipath_beats_singlepath_on_skewed_traffic() {
+        // One hot unaligned pair: the half/half corner split doubles the
+        // usable bandwidth (Fig 14-a).
+        let (t, nodes) = mesh_4x4();
+        let g = Grid::new(&nodes, 4, 4);
+        let net = SimNet::new(&t);
+        let bytes = 64e6;
+        let (s, vx, vy, d) = (g.at(0, 0), g.at(3, 0), g.at(0, 3), g.at(3, 3));
+        let mut multi = StageDag::default();
+        multi.push(Stage::new("hot-multi").with_flows(vec![
+            FlowSpec::along(&t, &[s, vx, d], bytes / 2.0),
+            FlowSpec::along(&t, &[s, vy, d], bytes / 2.0),
+        ]));
+        let mut single = StageDag::default();
+        single.push(Stage::new("hot-single").with_flows(vec![FlowSpec::along(
+            &t,
+            &[s, vx, d],
+            bytes,
+        )]));
+        let rm = sim::schedule::run(&net, &multi);
+        let rs = sim::schedule::run(&net, &single);
+        assert!(
+            rm.makespan_us < rs.makespan_us * 0.6,
+            "multi {} vs single {}",
+            rm.makespan_us,
+            rs.makespan_us
+        );
+    }
+
+    #[test]
+    fn multipath_flow_count_and_bytes() {
+        let (t, nodes) = mesh_4x4();
+        let g = Grid::new(&nodes, 4, 4);
+        let dag = multipath_alltoall_dag(&t, &g, 1e6);
+        // 16×15 = 240 ordered pairs; aligned pairs (same row or col):
+        // per node 3+3 = 6 → 96 aligned (1 flow), 144 unaligned (2 flows).
+        assert_eq!(dag.stages[0].flows.len(), 96 + 2 * 144);
+        let total: f64 = dag.stages[0].flows.iter().map(|f| f.bytes).sum();
+        assert!((total - 240.0 * 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn hierarchical_moves_fewer_bytes_for_broadcast_semantics() {
+        let (t, nodes) = mesh_4x4();
+        let g = Grid::new(&nodes, 4, 4);
+        let general = multipath_alltoall_dag(&t, &g, 1e6);
+        let hier = hierarchical_alltoall_dag(&t, &g, 1e6);
+        // General unicast: 240 pair-messages (+forwarded halves).
+        // Broadcast+reduce: 16 × (3 + 3) = 96 wire messages.
+        let gb: f64 = general.total_bytes();
+        let hb: f64 = hier.total_bytes();
+        assert!((hb - 96e6).abs() < 1.0);
+        assert!(hb < gb / 2.0, "hier {hb} should be well under general {gb}");
+    }
+
+    #[test]
+    fn max_one_hop_forwarding() {
+        let (t, nodes) = mesh_4x4();
+        let g = Grid::new(&nodes, 4, 4);
+        let dag = multipath_alltoall_dag(&t, &g, 1e6);
+        assert!(dag.stages[0]
+            .flows
+            .iter()
+            .all(|f| f.channels.len() <= 2), "Fig 14-a: at most one-hop forwarding");
+    }
+}

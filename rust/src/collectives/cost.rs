@@ -1,0 +1,152 @@
+//! Closed-form α-β collective costs.
+//!
+//! These are the analytic twins of the DAG builders, used by the
+//! parallelization search (§5.2 Step ②) where simulating every candidate
+//! is too slow — the paper likewise "accurately model[s] the behavior of
+//! APR and Topology-Aware Collective Communication ... and use[s] an
+//! accurate in-house simulation infrastructure to calibrate the model".
+//! `python/compile/model.py` mirrors these formulas for the AOT-compiled
+//! batch evaluator; unit tests cross-check both against the DES.
+
+/// Time (µs) to move `bytes` at `bw` GB/s.
+#[inline]
+pub fn xfer_us(bytes: f64, bw_gb_s: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    bytes / (bw_gb_s * 1e3)
+}
+
+/// Ring AllReduce: 2(n-1)/n × bytes / bw + 2(n-1) α.
+pub fn allreduce_ring_us(bytes: f64, n: usize, bw_gb_s: f64, alpha_us: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) / nf * xfer_us(bytes, bw_gb_s) + 2.0 * (nf - 1.0) * alpha_us
+}
+
+/// Multi-ring AllReduce over `k` edge-disjoint rings: bandwidth scales
+/// by k (Fig 13).
+pub fn allreduce_multiring_us(
+    bytes: f64,
+    n: usize,
+    bw_gb_s: f64,
+    k: usize,
+    alpha_us: f64,
+) -> f64 {
+    allreduce_ring_us(bytes, n, bw_gb_s * k as f64, alpha_us)
+}
+
+/// Direct full-mesh AllGather: every rank receives (n-1) shards of
+/// `bytes / n` concurrently over its (n-1) direct links.
+pub fn allgather_fullmesh_us(bytes: f64, n: usize, link_bw_gb_s: f64, alpha_us: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    xfer_us(bytes / n as f64, link_bw_gb_s) + alpha_us
+}
+
+/// Multi-path All2All on a 2D full-mesh (Fig 14-a): every rank sends
+/// (n-1) messages; aligned ones go direct, unaligned ones consume two
+/// half-messages with one forwarding hop. Per-rank egress ≈ total bytes
+/// × (1 + forward overhead); bandwidth = per-rank aggregate link bw.
+pub fn alltoall_multipath_us(
+    bytes_per_pair: f64,
+    n0: usize,
+    n1: usize,
+    link_bw_gb_s: f64,
+    alpha_us: f64,
+) -> f64 {
+    let n = n0 * n1;
+    if n <= 1 || bytes_per_pair <= 0.0 {
+        return 0.0;
+    }
+    // Each rank's X links carry: its own row traffic + forwarded halves.
+    // Per-link load (uniform A2A, split halves): bytes × n1 / 2 … the
+    // symmetric closed form reduces to egress-bound time with a 2×
+    // forwarding factor on unaligned pairs:
+    let aligned = (n0 - 1) + (n1 - 1);
+    let unaligned = (n - 1) - aligned;
+    // wire bytes per source: direct + 2 hops × split halves
+    let wire_per_src = bytes_per_pair * (aligned as f64 + 2.0 * unaligned as f64);
+    // per-source aggregate bandwidth over both dims:
+    let agg_bw = link_bw_gb_s * ((n0 - 1) + (n1 - 1)) as f64;
+    xfer_us(wire_per_src, agg_bw) * 2.0 + alpha_us
+    // ×2: each link carries both src-egress and forwarded traffic.
+}
+
+/// P2P over k parallel APR paths of equal bandwidth.
+pub fn p2p_apr_us(bytes: f64, k_paths: usize, path_bw_gb_s: f64, alpha_us: f64) -> f64 {
+    xfer_us(bytes, path_bw_gb_s * k_paths.max(1) as f64) + alpha_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring::{fullmesh_rings, multiring_allreduce_dag, ring_allreduce_dag};
+    use crate::sim::{self, SimNet};
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::{CableClass, NodeId, Topology};
+
+    #[allow(dead_code)]
+    fn _unused() {}
+
+    fn k8() -> Topology {
+        nd_fullmesh(
+            "k8",
+            &[DimSpec::new(8, 4, CableClass::PassiveElectrical, 0.3)],
+        )
+    }
+
+    #[test]
+    fn closed_form_tracks_des_ring() {
+        let t = k8();
+        let group: Vec<NodeId> = (0..8).map(|i| NodeId(i as u32)).collect();
+        let net = SimNet::new(&t);
+        let bw = 4.0 * crate::topology::ublink::LANE_GB_S;
+        // per-stage launch latency in the DES: α + one passive-cable hop
+        let alpha = crate::topology::ublink::MESSAGE_ALPHA_US
+            + crate::topology::ublink::hop_latency_us(CableClass::PassiveElectrical);
+        for bytes in [1e6, 64e6, 360e6] {
+            let des = sim::schedule::run(&net, &ring_allreduce_dag(&t, &group, bytes));
+            let cf = allreduce_ring_us(bytes, 8, bw, alpha);
+            let err = (des.makespan_us - cf).abs() / des.makespan_us;
+            assert!(err < 0.25, "bytes={bytes}: des {} cf {cf}", des.makespan_us);
+        }
+    }
+
+    #[test]
+    fn closed_form_tracks_des_multiring() {
+        let t = k8();
+        let group: Vec<NodeId> = (0..8).map(|i| NodeId(i as u32)).collect();
+        let net = SimNet::new(&t);
+        let bw = 4.0 * crate::topology::ublink::LANE_GB_S;
+        let rings = fullmesh_rings(&group, 3);
+        let bytes = 360e6;
+        let des = sim::schedule::run(
+            &net,
+            &multiring_allreduce_dag(&t, &rings, &[1.0, 1.0, 1.0], bytes),
+        );
+        let cf = allreduce_multiring_us(bytes, 8, bw, 3, 0.0);
+        let err = (des.makespan_us - cf).abs() / des.makespan_us;
+        assert!(err < 0.25, "des {} cf {cf}", des.makespan_us);
+    }
+
+    #[test]
+    fn costs_scale_sanely() {
+        // monotone in bytes, antitone in bandwidth, sublinear in n.
+        assert!(allreduce_ring_us(2e6, 8, 25.0, 1.0) > allreduce_ring_us(1e6, 8, 25.0, 1.0));
+        assert!(allreduce_ring_us(1e6, 8, 50.0, 1.0) < allreduce_ring_us(1e6, 8, 25.0, 1.0));
+        let t8 = allreduce_ring_us(1e9, 8, 25.0, 0.0);
+        let t64 = allreduce_ring_us(1e9, 64, 25.0, 0.0);
+        assert!(t64 / t8 < 1.15, "ring time saturates with n");
+        assert_eq!(allreduce_ring_us(1e6, 1, 25.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn allgather_fullmesh_is_one_shot() {
+        let us = allgather_fullmesh_us(8e6, 8, 25.0, 0.0);
+        assert!((us - xfer_us(1e6, 25.0)).abs() < 1e-9);
+    }
+}

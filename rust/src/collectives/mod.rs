@@ -1,0 +1,19 @@
+//! Topology-aware collective communication (§5.1).
+//!
+//! * [`ring`] — ring and Multi-Ring AllReduce (Fig 13), including the
+//!   Walecki decomposition of a full-mesh into edge-disjoint Hamiltonian
+//!   cycles that gives the "borrowed idle links" their own rings.
+//! * [`alltoall`] — Multi-Path All2All (Fig 14-a) and the hierarchical
+//!   Broadcast+Reduce form for MoE token exchange (Fig 14-b/c).
+//! * [`hierarchical`] — group-wise broadcast / reduce / allgather used
+//!   to compose multi-tier collectives.
+//! * [`p2p`] — pipeline-parallel point-to-point transfers.
+//! * [`cost`] — closed-form α-β costs, cross-checked against the DES in
+//!   tests and mirrored by the L2 JAX cost model
+//!   (`python/compile/model.py::cost_model_batch`).
+
+pub mod alltoall;
+pub mod cost;
+pub mod hierarchical;
+pub mod p2p;
+pub mod ring;

@@ -1,0 +1,220 @@
+//! Ring and Multi-Ring AllReduce (Fig 13).
+//!
+//! The paper: "we integrate collective communication with path mapping
+//! using a logical multi-ring algorithm, ensuring exclusive path usage
+//! without traffic conflicts ... idle links, excluded from these paths,
+//! are leveraged via the APR mechanism to enhance bandwidth ... we
+//! optimize traffic partitioning across multiple paths".
+//!
+//! On a full-mesh group of even size `n`, the complete graph decomposes
+//! into `(n-2)/2` edge-disjoint Hamiltonian cycles (Walecki), so a
+//! 1D-FullMesh of 8 NPUs supports 3 conflict-free rings at once — the
+//! "multi-ring" of Fig 13. Traffic is split across rings proportional to
+//! each ring's bottleneck bandwidth.
+
+use crate::sim::{FlowSpec, Stage, StageDag};
+use crate::topology::{NodeId, Topology};
+
+/// Edge-disjoint Hamiltonian cycles of K_n (n even ≥ 4): returns
+/// `(n-2)/2` cycles as vertex orders (0..n). Walecki's construction:
+/// vertex n-1 is the hub; the others zig-zag around a circle, rotated by
+/// `k` for the k-th cycle.
+pub fn walecki_cycles(n: usize) -> Vec<Vec<usize>> {
+    assert!(n >= 4 && n % 2 == 0, "walecki needs even n ≥ 4");
+    let m = n - 1; // circle size
+    let cycles = (n - 2) / 2;
+    let mut out = Vec::with_capacity(cycles);
+    for k in 0..cycles {
+        let mut cyc = Vec::with_capacity(n);
+        cyc.push(n - 1); // hub
+        // zig-zag: 0, +1, -1, +2, -2, ...
+        let mut seq = Vec::with_capacity(m);
+        seq.push(0i64);
+        for step in 1..=(m / 2) {
+            seq.push(step as i64);
+            if seq.len() < m {
+                seq.push(-(step as i64));
+            }
+        }
+        for z in seq {
+            cyc.push(((z + k as i64).rem_euclid(m as i64)) as usize);
+        }
+        out.push(cyc);
+    }
+    out
+}
+
+/// Ring reduce-scatter followed by allgather = AllReduce. Produces the
+/// 2(n-1) serial stages of the classic algorithm; each stage carries
+/// `bytes / n` on every ring edge concurrently. Non-adjacent ring
+/// neighbors (e.g. a backup NPU standing in through the LRS, Fig 9) are
+/// routed over their shortest path.
+pub fn ring_allreduce_dag(t: &Topology, ring: &[NodeId], bytes: f64) -> StageDag {
+    let n = ring.len();
+    assert!(n >= 2);
+    let chunk = bytes / n as f64;
+    // Resolve each ring edge to physical path(s) once. Non-adjacent
+    // edges are sprayed across up to 4 link-disjoint paths (the UB IO
+    // controller uses all backplane planes, Fig 9).
+    let hop_paths: Vec<Vec<Vec<NodeId>>> = (0..n)
+        .map(|i| {
+            let (a, b) = (ring[i], ring[(i + 1) % n]);
+            if t.link_between(a, b).is_some() {
+                vec![vec![a, b]]
+            } else {
+                let paths = crate::routing::spf::k_disjoint_paths(t, a, b, 4, true);
+                assert!(!paths.is_empty(), "ring edge {a}→{b} unroutable");
+                paths
+            }
+        })
+        .collect();
+    let mut stages = Vec::with_capacity(2 * (n - 1));
+    for phase in 0..2 {
+        for step in 0..(n - 1) {
+            let mut flows = Vec::with_capacity(n);
+            for paths in &hop_paths {
+                let share = chunk / paths.len() as f64;
+                for path in paths {
+                    flows.push(FlowSpec::along(t, path, share));
+                }
+            }
+            stages.push(
+                Stage::new(format!(
+                    "{}-{}",
+                    if phase == 0 { "rs" } else { "ag" },
+                    step
+                ))
+                .with_flows(flows),
+            );
+        }
+    }
+    StageDag::chain(stages)
+}
+
+/// Multi-ring AllReduce: run one ring allreduce per ring concurrently,
+/// splitting `bytes` by `weights`. Ring r's stages chain internally but
+/// are independent across rings (disjoint links ⇒ no contention).
+pub fn multiring_allreduce_dag(
+    t: &Topology,
+    rings: &[Vec<NodeId>],
+    weights: &[f64],
+    bytes: f64,
+) -> StageDag {
+    assert_eq!(rings.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    let mut dag = StageDag::default();
+    for (ring, &w) in rings.iter().zip(weights) {
+        let sub = ring_allreduce_dag(t, ring, bytes * w / total);
+        let offset = dag.stages.len();
+        for (si, mut s) in sub.stages.into_iter().enumerate() {
+            s.deps = s.deps.iter().map(|d| d + offset).collect();
+            s.name = format!("r{}:{}", offset, s.name);
+            let _ = si;
+            dag.push(s);
+        }
+    }
+    dag
+}
+
+/// Closed-form ring AllReduce time (µs): 2(n-1)/n × bytes / bw + per-step α.
+pub fn ring_allreduce_us(bytes: f64, n: usize, bw_gb_s: f64, alpha_us: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    2.0 * (n as f64 - 1.0) / n as f64 * bytes / (bw_gb_s * 1e3) + steps as f64 * alpha_us
+}
+
+/// Build the node rings for a full-mesh group using Walecki cycles,
+/// taking the first `k` cycles (k ≤ (n-2)/2).
+pub fn fullmesh_rings(group: &[NodeId], k: usize) -> Vec<Vec<NodeId>> {
+    let cycles = walecki_cycles(group.len());
+    assert!(k >= 1 && k <= cycles.len());
+    cycles[..k]
+        .iter()
+        .map(|c| c.iter().map(|&i| group[i]).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{self, SimNet};
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    #[test]
+    fn walecki_cycles_are_hamiltonian_and_edge_disjoint() {
+        for n in [4usize, 6, 8, 10] {
+            let cycles = walecki_cycles(n);
+            assert_eq!(cycles.len(), (n - 2) / 2);
+            let mut used = std::collections::HashSet::new();
+            for c in &cycles {
+                assert_eq!(c.len(), n);
+                // Hamiltonian: all vertices once.
+                let mut verts: Vec<usize> = c.clone();
+                verts.sort_unstable();
+                assert_eq!(verts, (0..n).collect::<Vec<_>>());
+                // Edge-disjoint across cycles.
+                for i in 0..n {
+                    let a = c[i];
+                    let b = c[(i + 1) % n];
+                    let e = (a.min(b), a.max(b));
+                    assert!(used.insert(e), "edge {e:?} reused (n={n})");
+                }
+            }
+        }
+    }
+
+    fn k8() -> Topology {
+        nd_fullmesh(
+            "k8",
+            &[DimSpec::new(8, 4, CableClass::PassiveElectrical, 0.3)],
+        )
+    }
+
+    #[test]
+    fn ring_allreduce_matches_closed_form() {
+        let t = k8();
+        let ring: Vec<NodeId> = (0..8).map(|i| NodeId(i as u32)).collect();
+        let bytes = 360e6; // Table 1 TP transfer size
+        let dag = ring_allreduce_dag(&t, &ring, bytes);
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        let bw = 4.0 * crate::topology::ublink::LANE_GB_S;
+        let expect = ring_allreduce_us(bytes, 8, bw, 0.0);
+        // DES adds per-stage latency; allow 5%.
+        assert!(
+            (r.makespan_us - expect).abs() / expect < 0.05,
+            "sim {} vs closed-form {expect}",
+            r.makespan_us
+        );
+    }
+
+    #[test]
+    fn multiring_is_nearly_k_times_faster() {
+        let t = k8();
+        let group: Vec<NodeId> = (0..8).map(|i| NodeId(i as u32)).collect();
+        let bytes = 360e6;
+        let net = SimNet::new(&t);
+        let single = sim::schedule::run(&net, &ring_allreduce_dag(&t, &group, bytes));
+        let rings = fullmesh_rings(&group, 3);
+        let w = [1.0, 1.0, 1.0];
+        let multi = sim::schedule::run(&net, &multiring_allreduce_dag(&t, &rings, &w, bytes));
+        let speedup = single.makespan_us / multi.makespan_us;
+        assert!(
+            speedup > 2.5 && speedup < 3.3,
+            "multi-ring speedup {speedup} (expect ≈3×)"
+        );
+    }
+
+    #[test]
+    fn byte_conservation() {
+        let t = k8();
+        let ring: Vec<NodeId> = (0..8).map(|i| NodeId(i as u32)).collect();
+        let bytes = 80e6;
+        let dag = ring_allreduce_dag(&t, &ring, bytes);
+        // Each of 2(n-1)=14 stages moves n × bytes/n = bytes.
+        assert!((dag.total_bytes() - 14.0 * bytes).abs() < 1.0);
+    }
+}

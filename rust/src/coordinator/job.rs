@@ -1,0 +1,216 @@
+//! Job orchestration: one LLM-training job on one architecture.
+
+use anyhow::Result;
+
+use crate::parallelism::search::{search_with, SearchOutcome};
+use crate::parallelism::space::SearchSpace;
+use crate::runtime::Artifacts;
+use crate::workload::models::{self, ModelConfig};
+use crate::workload::placement::TierBandwidth;
+use crate::workload::step::throughput_tokens_per_s;
+use crate::workload::traffic::ParallelismConfig;
+
+/// Inter-rack routing strategy (§6.3, Fig 18/19).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Routing {
+    /// Shortest paths on the 2D rack mesh only.
+    Shortest,
+    /// + APR non-shortest detour paths.
+    Detour,
+    /// + bandwidth borrowed from the HRS uplinks.
+    Borrow,
+}
+
+impl Routing {
+    /// Effective Z/α bandwidth multiplier, derived from the APR path
+    /// census on the 4×4 rack grid: Shortest uses the direct x128
+    /// bundle; Detour adds the 2 corner relays through the other rack
+    /// of each row/col pair (sharing their bundles, ~+60% usable);
+    /// Borrow adds the x256 uplink share (+25% of provision).
+    pub fn boost(self) -> f64 {
+        match self {
+            Routing::Shortest => 1.0,
+            Routing::Detour => 1.6,
+            Routing::Borrow => 1.85,
+        }
+    }
+}
+
+/// Architectures under evaluation (Figs 16–21).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Arch {
+    /// UB-Mesh 4D-FM with given inter-rack lanes/NPU and routing.
+    UbMesh {
+        inter_rack_lanes: u32,
+        routing: Routing,
+    },
+    /// Intra-rack Clos (Fig 16-d) + 2D-FM inter-rack.
+    ClosIntraRack,
+    /// 1D-FM-A (Fig 16-b).
+    Fm1dA,
+    /// 1D-FM-B (Fig 16-c).
+    Fm1dB,
+    /// Fully symmetric Clos at x64 per NPU (cost baseline).
+    FullClos,
+}
+
+impl Arch {
+    pub fn name(&self) -> String {
+        match self {
+            Arch::UbMesh {
+                inter_rack_lanes,
+                routing,
+            } => format!("2D-FM x{inter_rack_lanes} {routing:?}"),
+            Arch::ClosIntraRack => "Clos(intra-rack)".into(),
+            Arch::Fm1dA => "1D-FM-A".into(),
+            Arch::Fm1dB => "1D-FM-B".into(),
+            Arch::FullClos => "Clos(full x64)".into(),
+        }
+    }
+
+    pub fn bandwidth(&self) -> TierBandwidth {
+        match self {
+            Arch::UbMesh {
+                inter_rack_lanes,
+                routing,
+            } => TierBandwidth::ubmesh(*inter_rack_lanes, routing.boost()),
+            Arch::ClosIntraRack => TierBandwidth::clos_intra_rack(16),
+            Arch::Fm1dA => TierBandwidth::fm1d_a(),
+            Arch::Fm1dB => TierBandwidth::fm1d_b(),
+            Arch::FullClos => TierBandwidth::clos(64),
+        }
+    }
+
+    /// The paper's default UB-Mesh configuration.
+    pub fn ubmesh_default() -> Arch {
+        Arch::UbMesh {
+            inter_rack_lanes: 16,
+            routing: Routing::Detour,
+        }
+    }
+}
+
+/// One training job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub model: ModelConfig,
+    pub scale: usize,
+    pub seq_len: f64,
+    pub arch: Arch,
+}
+
+/// Outcome of planning/simulating a job.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub arch: String,
+    pub best: ParallelismConfig,
+    pub iter_us: f64,
+    pub mfu: f64,
+    pub tokens_per_s: f64,
+    pub comm_share: f64,
+    pub evaluated: usize,
+}
+
+impl Job {
+    pub fn new(model: &str, scale: usize, seq_len: f64, arch: Arch) -> Result<Job> {
+        let model = models::by_name(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model} (see Table 5)"))?;
+        Ok(Job {
+            model,
+            scale,
+            seq_len,
+            arch,
+        })
+    }
+
+    /// Plan the job: enumerate configs, evaluate (PJRT batch evaluator
+    /// when `artifacts` is provided, pure-rust otherwise), pick the best.
+    pub fn plan(&self, artifacts: Option<&Artifacts>) -> Result<JobReport> {
+        let bw = self.arch.bandwidth();
+        let space = SearchSpace::paper_default(self.scale, self.seq_len);
+        let outcome: SearchOutcome = match artifacts {
+            Some(a) => {
+                let eval = |cfgs: &[ParallelismConfig]| -> Vec<f64> {
+                    a.evaluate_configs(&self.model, cfgs, &bw)
+                        .expect("PJRT cost-model execution failed")
+                };
+                search_with(&self.model, &space, &bw, &eval)
+            }
+            None => crate::parallelism::search::search(&self.model, &space, &bw),
+        };
+        let it = &outcome.best_iter;
+        Ok(JobReport {
+            arch: self.arch.name(),
+            best: outcome.best,
+            iter_us: it.total_us,
+            mfu: it.mfu,
+            tokens_per_s: throughput_tokens_per_s(&outcome.best, it),
+            comm_share: it.comm_us() / it.total_us,
+            evaluated: outcome.ranked.len(),
+        })
+    }
+
+    /// Performance relative to another architecture on the same job
+    /// (e.g. Fig 17's "relative to Clos"): ratio of tokens/s.
+    pub fn relative_perf(&self, baseline: Arch, artifacts: Option<&Artifacts>) -> Result<f64> {
+        let mine = self.plan(artifacts)?;
+        let base = Job {
+            arch: baseline,
+            ..self.clone()
+        }
+        .plan(artifacts)?;
+        Ok(mine.tokens_per_s / base.tokens_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_llama_on_ubmesh() {
+        let job = Job::new("llama-70b", 128, 8192.0, Arch::ubmesh_default()).unwrap();
+        let r = job.plan(None).unwrap();
+        assert!(r.iter_us > 0.0);
+        assert!(r.mfu > 0.1, "mfu {}", r.mfu);
+        assert!(r.evaluated > 3);
+        assert_eq!(r.best.npus(), 128);
+    }
+
+    #[test]
+    fn ubmesh_within_7pct_of_clos_intra_rack() {
+        // Fig 17 headline at job granularity.
+        let job = Job::new("gpt3-175b", 1024, 32768.0, Arch::ubmesh_default()).unwrap();
+        let rel = job.relative_perf(Arch::ClosIntraRack, None).unwrap();
+        assert!(
+            (0.90..=1.001).contains(&rel),
+            "2D-FM at {rel:.3} of intra-rack Clos (paper ≥ 0.932)"
+        );
+    }
+
+    #[test]
+    fn detour_beats_shortest() {
+        let mk = |routing| {
+            Job::new(
+                "gpt4-2t",
+                1024,
+                32768.0,
+                Arch::UbMesh {
+                    inter_rack_lanes: 16,
+                    routing,
+                },
+            )
+            .unwrap()
+            .plan(None)
+            .unwrap()
+            .tokens_per_s
+        };
+        assert!(mk(Routing::Detour) >= mk(Routing::Shortest));
+        assert!(mk(Routing::Borrow) >= mk(Routing::Detour));
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        assert!(Job::new("gpt5-100t", 64, 8192.0, Arch::FullClos).is_err());
+    }
+}

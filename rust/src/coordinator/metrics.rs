@@ -1,0 +1,67 @@
+//! Cluster metrics: linearity (Eq. 2) and simple counters.
+
+/// Eq. 2: `per-NPU perf at target scale / per-NPU perf at base scale`.
+/// `perf` entries are (scale, cluster_throughput).
+pub fn linearity(base: (usize, f64), target: (usize, f64)) -> f64 {
+    let per_npu_base = base.1 / base.0 as f64;
+    let per_npu_target = target.1 / target.0 as f64;
+    per_npu_target / per_npu_base
+}
+
+/// Running statistics for coordinator-side telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn record(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_scaling_is_100pct() {
+        assert!((linearity((128, 128.0), (256, 256.0)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn super_linear_possible() {
+        // Fig 22: >100% when scale unlocks better parallelism.
+        assert!(linearity((128, 128.0), (256, 260.0)) > 1.0);
+    }
+
+    #[test]
+    fn stats_track_extremes() {
+        let mut s = Stats::default();
+        for v in [3.0, 1.0, 2.0] {
+            s.record(v);
+        }
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator: glue from JobSpec to results.
+//!
+//! A [`job::Job`] picks an architecture, searches parallelism (§5.2),
+//! places ranks, computes/simulates iteration time, and reports
+//! throughput, MFU, and Clos-relative performance — the quantities Figs
+//! 17/19/20/22 plot. [`metrics`] holds the linearity math (Eq. 2).
+
+pub mod job;
+pub mod metrics;
+
+pub use job::{Arch, Job, JobReport, Routing};
+pub use metrics::linearity;

@@ -1,0 +1,203 @@
+//! CapEx accounting per architecture (Fig 21).
+//!
+//! UB-Mesh CapEx comes from the real constructed-topology census; Clos
+//! baselines use the analytic [`ClosDesign`] sizing (building the 8K ×
+//! x64 Clos graph would be pointless — only counts enter the cost).
+
+use crate::topology::census::Census;
+use crate::topology::clos::ClosDesign;
+use crate::topology::superpod::SuperPodConfig;
+use crate::topology::{CableClass, NodeKind};
+
+use super::prices;
+
+/// Component counts + price rollup for one architecture.
+#[derive(Clone, Debug, Default)]
+pub struct CapexReport {
+    pub name: String,
+    pub npus: usize,
+    pub backup_npus: usize,
+    pub cpus: usize,
+    pub lrs: usize,
+    pub hrs: usize,
+    pub passive_cables: u64,
+    pub active_cables: u64,
+    pub optical_cables: u64,
+    pub optical_modules: u64,
+}
+
+impl CapexReport {
+    pub fn compute_cost(&self) -> f64 {
+        self.npus as f64 * prices::NPU
+            + self.backup_npus as f64 * prices::BACKUP_NPU
+            + self.cpus as f64 * prices::CPU
+    }
+
+    pub fn network_cost(&self) -> f64 {
+        self.lrs as f64 * prices::LRS
+            + self.hrs as f64 * prices::HRS
+            + self.passive_cables as f64 * prices::PASSIVE_CABLE
+            + self.active_cables as f64 * prices::ACTIVE_CABLE
+            + self.optical_cables as f64 * prices::OPTICAL_CABLE
+            + self.optical_modules as f64 * prices::OPTICAL_MODULE
+    }
+
+    pub fn total(&self) -> f64 {
+        self.compute_cost() + self.network_cost()
+    }
+
+    /// "UB-Mesh successfully reduces the ratio of network infrastructure
+    /// cost in the system from 67% to 20%."
+    pub fn network_share(&self) -> f64 {
+        self.network_cost() / self.total()
+    }
+
+    /// Total power (kW) — OpEx input.
+    pub fn power_kw(&self) -> f64 {
+        self.npus as f64 * prices::NPU_KW
+            + self.backup_npus as f64 * prices::NPU_KW
+            + self.cpus as f64 * prices::CPU_KW
+            + self.lrs as f64 * prices::LRS_KW
+            + self.hrs as f64 * prices::HRS_KW
+            + self.optical_modules as f64 * prices::OPTICAL_MODULE_KW
+    }
+}
+
+/// CapEx of the UB-Mesh SuperPod from its constructed census.
+pub fn capex_ubmesh(cfg: &SuperPodConfig) -> CapexReport {
+    let (t, _) = crate::topology::superpod::ubmesh_superpod(cfg);
+    let c = Census::of(&t);
+    CapexReport {
+        name: "4D-FM+Clos (UB-Mesh)".into(),
+        npus: c.count(NodeKind::Npu),
+        backup_npus: c.count(NodeKind::BackupNpu),
+        cpus: c.count(NodeKind::Cpu),
+        lrs: c.count(NodeKind::Lrs),
+        hrs: c.count(NodeKind::Hrs),
+        passive_cables: c.cables_of(CableClass::PassiveElectrical),
+        active_cables: c.cables_of(CableClass::ActiveElectrical),
+        optical_cables: c.cables_of(CableClass::Optical),
+        optical_modules: c.optical_modules,
+    }
+}
+
+/// CapEx of a mesh-intra-rack + Clos-inter-rack hybrid ("2D-FM+x16" /
+/// "1D-FM+x16" of Fig 21): racks keep `rack_lrs` LRS and the intra-rack
+/// mesh cables; all `lanes_per_npu` inter-rack lanes go to a
+/// non-blocking HRS fabric.
+pub fn capex_fm_clos(
+    name: &str,
+    npus: usize,
+    lanes_per_npu: u32,
+    mesh_dims: u32,
+) -> CapexReport {
+    let racks = npus / 64;
+    let fabric = ClosDesign::non_blocking(npus, lanes_per_npu, 512);
+    // Intra-rack mesh cables: X always (224/rack), Y only for 2D (224).
+    let passive = match mesh_dims {
+        2 => racks as u64 * 448,
+        1 => racks as u64 * 224,
+        _ => 0,
+    };
+    // 1D/2D-FM racks keep the LRS backplane (72/rack for 2D, 32 LRS +
+    // 4 in-rack HRS for 1D-FM-A, Fig 16-b).
+    let lrs = racks * 72;
+    let rack_hrs = if mesh_dims == 1 { racks * 4 } else { 0 };
+    CapexReport {
+        name: name.into(),
+        npus,
+        backup_npus: racks,
+        cpus: racks * 4,
+        lrs,
+        hrs: fabric.total_switches() + rack_hrs,
+        passive_cables: passive + npus as u64, // NPU→leaf attach bundles
+        active_cables: 0,
+        optical_cables: fabric.optical_cables(),
+        optical_modules: fabric.optical_modules(),
+    }
+}
+
+/// CapEx of the fully symmetric Clos ("x64T Clos" when lanes = 64).
+pub fn capex_full_clos(name: &str, npus: usize, lanes_per_npu: u32) -> CapexReport {
+    let fabric = ClosDesign::non_blocking(npus, lanes_per_npu, 512);
+    let racks = npus / 64;
+    CapexReport {
+        name: name.into(),
+        npus,
+        backup_npus: 0,
+        cpus: racks * 4,
+        lrs: racks * 18, // CPU-attach LRS (the paper's Clos keeps some)
+        hrs: fabric.total_switches(),
+        passive_cables: npus as u64,
+        active_cables: 0,
+        optical_cables: fabric.optical_cables(),
+        optical_modules: fabric.optical_modules(),
+    }
+}
+
+/// Switch / optical savings vs a baseline (the 98% / 93% claims).
+pub fn savings(ub: &CapexReport, clos: &CapexReport) -> (f64, f64) {
+    let hrs_saved = 1.0 - ub.hrs as f64 / clos.hrs.max(1) as f64;
+    let optics_saved = 1.0 - ub.optical_modules as f64 / clos.optical_modules.max(1) as f64;
+    (hrs_saved, optics_saved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_superpod() -> SuperPodConfig {
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        cfg
+    }
+
+    #[test]
+    fn ubmesh_capex_is_compute_dominated() {
+        let r = capex_ubmesh(&small_superpod());
+        assert!(r.network_share() < 0.35, "network share {}", r.network_share());
+        assert!(r.npus > 0 && r.lrs > 0);
+    }
+
+    #[test]
+    fn clos_capex_is_network_heavy() {
+        let r = capex_full_clos("x64T Clos", 8192, 64);
+        assert!(
+            r.network_share() > 0.45,
+            "Clos network share {} (paper: 67%)",
+            r.network_share()
+        );
+    }
+
+    #[test]
+    fn fig21_ordering_holds() {
+        // 4D-FM < 2D-FM+x16 < 1D-FM+x16 < x64T Clos (total cost).
+        let ub = capex_ubmesh(&SuperPodConfig::default());
+        let fm2 = capex_fm_clos("2D-FM+x16", 8192, 16, 2);
+        let fm1 = capex_fm_clos("1D-FM+x16", 8192, 16, 1);
+        let clos = capex_full_clos("x64T Clos", 8192, 64);
+        assert!(ub.total() < fm2.total());
+        assert!(fm2.total() <= fm1.total() * 1.05);
+        assert!(fm1.total() < clos.total());
+        // Paper: 2.46× CapEx reduction vs x64T Clos; accept 1.8–3.2×.
+        let ratio = clos.total() / ub.total();
+        assert!((1.8..3.2).contains(&ratio), "x64T/UB CapEx ratio {ratio}");
+    }
+
+    #[test]
+    fn switch_and_optics_savings_match_headline() {
+        let ub = capex_ubmesh(&SuperPodConfig::default());
+        let clos = capex_full_clos("x64T Clos", 8192, 64);
+        let (hrs_saved, optics_saved) = savings(&ub, &clos);
+        // Paper: 98% HRS and 93% optical-module savings.
+        assert!(hrs_saved > 0.95, "HRS saved {hrs_saved}");
+        assert!(optics_saved > 0.85, "optics saved {optics_saved}");
+    }
+
+    #[test]
+    fn optical_cable_lane_bundling_consistent() {
+        assert_eq!(crate::topology::clos::OPTICAL_CABLE_LANES, 8);
+    }
+}

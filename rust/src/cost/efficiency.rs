@@ -1,0 +1,40 @@
+//! Cost-efficiency (Eq. 1): `Average Performance / (OpEx + CapEx)`.
+
+use super::capex::CapexReport;
+use super::opex::OpexReport;
+
+/// Eq. 1 with performance relative to a baseline (the paper uses
+/// training throughput relative to Clos).
+pub fn cost_efficiency(perf: f64, capex: &CapexReport, opex: &OpexReport) -> f64 {
+    perf / (capex.total() + opex.total())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::capex::{capex_full_clos, capex_ubmesh};
+    use super::super::opex::opex;
+    use super::*;
+    use crate::topology::superpod::SuperPodConfig;
+
+    #[test]
+    fn headline_cost_efficiency_near_2x() {
+        // Paper: UB-Mesh at ~95% of Clos performance with far lower TCO
+        // → 2.04× cost-efficiency.
+        let ub_capex = capex_ubmesh(&SuperPodConfig::default());
+        let clos_capex = capex_full_clos("x64T Clos", 8192, 64);
+        let ub = cost_efficiency(0.95, &ub_capex, &opex(&ub_capex, 88.9));
+        let clos = cost_efficiency(1.0, &clos_capex, &opex(&clos_capex, 632.8));
+        let ratio = ub / clos;
+        assert!(
+            (1.6..2.9).contains(&ratio),
+            "cost-efficiency ratio {ratio} (paper: 2.04×)"
+        );
+    }
+
+    #[test]
+    fn efficiency_monotone_in_perf() {
+        let c = capex_full_clos("c", 1024, 16);
+        let o = opex(&c, 10.0);
+        assert!(cost_efficiency(1.0, &c, &o) > cost_efficiency(0.5, &c, &o));
+    }
+}

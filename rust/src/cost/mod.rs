@@ -1,0 +1,10 @@
+//! System cost model (§6.4): CapEx from component censuses, OpEx from
+//! power + maintenance, and the cost-efficiency metric of Eq. 1.
+
+pub mod capex;
+pub mod efficiency;
+pub mod opex;
+pub mod prices;
+
+pub use capex::CapexReport;
+pub use efficiency::cost_efficiency;

@@ -1,0 +1,70 @@
+//! OpEx model: electricity + maintenance over the system lifetime.
+//!
+//! "UB-Mesh reduces OpEx by about 35% compared with Clos, due to its
+//! much fewer use of switches and optic modules. ... OpEx accounts for
+//! around 30% of TCO."
+
+use super::capex::CapexReport;
+use super::prices;
+
+/// Lifetime OpEx in NPU-price units.
+#[derive(Clone, Debug)]
+pub struct OpexReport {
+    pub power_cost: f64,
+    pub maintenance_cost: f64,
+}
+
+impl OpexReport {
+    pub fn total(&self) -> f64 {
+        self.power_cost + self.maintenance_cost
+    }
+}
+
+/// Compute lifetime OpEx for an architecture. `annual_failures` comes
+/// from the reliability model's AFR census.
+pub fn opex(capex: &CapexReport, annual_failures: f64) -> OpexReport {
+    let power_cost = capex.power_kw() * prices::KW_YEAR * prices::LIFETIME_YEARS;
+    let maintenance_cost =
+        annual_failures * prices::COST_PER_REPAIR * prices::LIFETIME_YEARS;
+    OpexReport {
+        power_cost,
+        maintenance_cost,
+    }
+}
+
+/// Network-only OpEx (excludes the NPUs/CPUs both architectures share) —
+/// the quantity the 35%-reduction claim compares.
+pub fn network_opex(capex: &CapexReport, annual_failures: f64) -> f64 {
+    let network_kw = capex.lrs as f64 * prices::LRS_KW
+        + capex.hrs as f64 * prices::HRS_KW
+        + capex.optical_modules as f64 * prices::OPTICAL_MODULE_KW;
+    network_kw * prices::KW_YEAR * prices::LIFETIME_YEARS
+        + annual_failures * prices::COST_PER_REPAIR * prices::LIFETIME_YEARS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::capex::{capex_full_clos, capex_ubmesh};
+    use super::*;
+    use crate::topology::superpod::SuperPodConfig;
+
+    #[test]
+    fn clos_network_opex_higher() {
+        let ub = capex_ubmesh(&SuperPodConfig::default());
+        let clos = capex_full_clos("x64T", 8192, 64);
+        // AFR numbers roughly per Table 6.
+        let ub_opex = network_opex(&ub, 88.9);
+        let clos_opex = network_opex(&clos, 632.8);
+        assert!(
+            ub_opex < clos_opex * 0.7,
+            "UB net-OpEx {ub_opex} vs Clos {clos_opex} (paper: −35%)"
+        );
+    }
+
+    #[test]
+    fn opex_components_positive() {
+        let ub = capex_ubmesh(&SuperPodConfig::default());
+        let o = opex(&ub, 88.9);
+        assert!(o.power_cost > 0.0 && o.maintenance_cost > 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Relative price book (DESIGN.md §1 substitution: the paper's in-house
+//! CapEx numbers are proprietary; we normalize to NPU = 1.0 with
+//! street-price ratios for the rest).
+//!
+//! These constants are calibration anchors — set once, used by every
+//! experiment (DESIGN.md §5). They are chosen so the Clos baseline's
+//! network share lands near the paper's "67% of system cost", which
+//! published cluster TCO analyses also support.
+
+/// Price units relative to one NPU.
+pub const NPU: f64 = 1.0;
+pub const BACKUP_NPU: f64 = 1.0;
+pub const CPU: f64 = 0.12;
+/// Low-radix switch: commodity ASIC, x72 lanes.
+pub const LRS: f64 = 0.04;
+/// High-radix switch: x512 lanes, large buffers.
+pub const HRS: f64 = 0.75;
+/// Cables, per physical cable.
+pub const PASSIVE_CABLE: f64 = 0.002;
+pub const ACTIVE_CABLE: f64 = 0.010;
+pub const OPTICAL_CABLE: f64 = 0.012;
+/// Per optical transceiver module (2 per optical cable bundle).
+pub const OPTICAL_MODULE: f64 = 0.045;
+
+/// Power draw (kW) per component — OpEx inputs.
+pub const NPU_KW: f64 = 0.75;
+pub const CPU_KW: f64 = 0.30;
+pub const LRS_KW: f64 = 0.15;
+pub const HRS_KW: f64 = 0.80;
+pub const OPTICAL_MODULE_KW: f64 = 0.015;
+
+/// Electricity + facility cost per kW-year, in NPU-price units.
+pub const KW_YEAR: f64 = 0.002;
+/// System lifetime (years) for TCO.
+pub const LIFETIME_YEARS: f64 = 5.0;
+/// Maintenance cost per failure event (truck roll + part), NPU units.
+pub const COST_PER_REPAIR: f64 = 0.02;

@@ -1,0 +1,32 @@
+//! # ubmesh — reproduction of *UB-Mesh: a Hierarchically Localized
+//! # nD-FullMesh Datacenter Network Architecture* (Huawei, cs.AR 2025)
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — topology construction, All-Path-Routing,
+//!   flow-level discrete-event simulation, topology-aware collectives,
+//!   workload/parallelism search, cost & reliability models, and the
+//!   coordinator that glues them into end-to-end LLM-training-cluster
+//!   experiments.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (APSP via
+//!   min-plus squaring, batched α-β cost model, link-load), AOT-lowered
+//!   to HLO text once at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! At run time, [`runtime`] loads `artifacts/*.hlo.txt` through the PJRT
+//! CPU client (`xla` crate); Python is never on the request path.
+//!
+//! Start with [`topology::pod::ubmesh_pod`] and
+//! [`coordinator::Job`], or see `examples/quickstart.rs`.
+
+pub mod collectives;
+pub mod coordinator;
+pub mod cost;
+pub mod parallelism;
+pub mod reliability;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,309 @@
+//! `ubmesh` — coordinator CLI for the UB-Mesh reproduction.
+//!
+//! ```text
+//! ubmesh run --model llama-70b --scale 128 --seq 8192 [--arch ubmesh|clos|1dfm-a|1dfm-b] [--no-pjrt]
+//! ubmesh census [--pods N]            cable/component census (Table 2)
+//! ubmesh capex                        CapEx comparison (Fig 21)
+//! ubmesh reliability                  AFR/MTBF/availability (Table 6)
+//! ubmesh traffic                      Table 1 traffic analysis
+//! ubmesh routing --src 0 --dst 27     APR path exploration on a rack
+//! ubmesh sweep --model gpt4-2t        seq-length sweep on all archs
+//! ```
+
+use anyhow::Result;
+use ubmesh::coordinator::{Arch, Job, Routing};
+use ubmesh::runtime::Artifacts;
+use ubmesh::util::cli::Args;
+use ubmesh::util::table::{fmt, pct, ratio, Table};
+
+fn arch_of(name: &str) -> Arch {
+    match name {
+        "ubmesh" => Arch::ubmesh_default(),
+        "ubmesh-shortest" => Arch::UbMesh {
+            inter_rack_lanes: 16,
+            routing: Routing::Shortest,
+        },
+        "ubmesh-borrow" => Arch::UbMesh {
+            inter_rack_lanes: 16,
+            routing: Routing::Borrow,
+        },
+        "clos" => Arch::ClosIntraRack,
+        "clos-full" => Arch::FullClos,
+        "1dfm-a" => Arch::Fm1dA,
+        "1dfm-b" => Arch::Fm1dB,
+        other => panic!("unknown --arch {other}"),
+    }
+}
+
+fn load_artifacts(args: &Args) -> Option<Artifacts> {
+    if args.flag("no-pjrt") {
+        return None;
+    }
+    match Artifacts::load(&Artifacts::default_dir()) {
+        Ok(a) => {
+            eprintln!(
+                "[runtime] PJRT {} ready; AOT artifacts loaded",
+                a.engine.platform()
+            );
+            Some(a)
+        }
+        Err(e) => {
+            eprintln!("[runtime] PJRT evaluator unavailable ({e:#}); using rust cost model");
+            None
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "llama-70b").to_string();
+    let scale: usize = args.get_parse("scale", 128);
+    let seq: f64 = args.get_parse("seq", 8192.0);
+    let arch = arch_of(args.get_or("arch", "ubmesh"));
+    let artifacts = load_artifacts(args);
+
+    let job = Job::new(&model, scale, seq, arch)?;
+    let r = job.plan(artifacts.as_ref())?;
+    let mut t = Table::with_title(
+        format!("{model} @ {scale} NPUs, seq {seq}"),
+        vec!["arch", "best parallelism", "iter(ms)", "MFU", "tokens/s", "comm%"],
+    );
+    t.row(vec![
+        r.arch.clone(),
+        format!(
+            "tp{} sp{} ep{} pp{} dp{} mb{}",
+            r.best.tp, r.best.sp, r.best.ep, r.best.pp, r.best.dp, r.best.microbatches
+        ),
+        fmt(r.iter_us / 1e3, 1),
+        pct(r.mfu, 1),
+        fmt(r.tokens_per_s, 0),
+        pct(r.comm_share, 1),
+    ]);
+    t.print();
+    let rel = job.relative_perf(Arch::ClosIntraRack, artifacts.as_ref())?;
+    println!("relative to intra-rack Clos baseline: {}", pct(rel, 1));
+    Ok(())
+}
+
+fn cmd_census(args: &Args) -> Result<()> {
+    use ubmesh::topology::census::{class_name, role_name, Census};
+    use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = args.get_parse("pods", 8);
+    let (t, _) = ubmesh_superpod(&cfg);
+    let c = Census::of(&t);
+    println!(
+        "SuperPod: {} NPUs, {} nodes, {} links",
+        cfg.npus(),
+        t.node_count(),
+        t.link_count()
+    );
+    let mut tbl = Table::with_title("cable census (Table 2)", vec!["class", "cables", "share"]);
+    for (k, share) in c.class_ratios() {
+        tbl.row(vec![
+            class_name(k).to_string(),
+            format!("{}", c.cables.get(&k).map(|t| t.cables).unwrap_or(0)),
+            pct(share, 1),
+        ]);
+    }
+    tbl.print();
+    let mut tbl = Table::with_title("by role", vec!["role", "cables", "lanes"]);
+    for (k, tally) in &c.by_role {
+        tbl.row(vec![
+            role_name(*k).to_string(),
+            format!("{}", tally.cables),
+            format!("{}", tally.lanes),
+        ]);
+    }
+    tbl.print();
+    println!("optical modules: {}", c.optical_modules);
+    Ok(())
+}
+
+fn cmd_capex(_args: &Args) -> Result<()> {
+    use ubmesh::cost::capex::{capex_fm_clos, capex_full_clos, capex_ubmesh, savings};
+    use ubmesh::topology::superpod::SuperPodConfig;
+    let ub = capex_ubmesh(&SuperPodConfig::default());
+    let rows = [
+        ub.clone(),
+        capex_fm_clos("2D-FM+x16 Clos", 8192, 16, 2),
+        capex_fm_clos("1D-FM+x16 Clos", 8192, 16, 1),
+        capex_full_clos("x64T Clos", 8192, 64),
+    ];
+    let mut t = Table::with_title(
+        "CapEx (Fig 21), NPU-price units",
+        vec![
+            "architecture",
+            "HRS",
+            "optic-mods",
+            "network",
+            "total",
+            "net-share",
+            "vs UB-Mesh",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{}", r.hrs),
+            format!("{}", r.optical_modules),
+            fmt(r.network_cost(), 0),
+            fmt(r.total(), 0),
+            pct(r.network_share(), 0),
+            ratio(r.total() / rows[0].total()),
+        ]);
+    }
+    t.print();
+    let (hrs_s, opt_s) = savings(&rows[0], &rows[3]);
+    println!(
+        "vs x64T Clos: HRS saved {}, optical modules saved {}",
+        pct(hrs_s, 0),
+        pct(opt_s, 0)
+    );
+    Ok(())
+}
+
+fn cmd_reliability(_args: &Args) -> Result<()> {
+    use ubmesh::cost::capex::{capex_full_clos, capex_ubmesh};
+    use ubmesh::reliability::afr::afr_of_capex;
+    use ubmesh::reliability::availability::{availability, mtbf_hours, mttr};
+    use ubmesh::topology::superpod::SuperPodConfig;
+    let mut t = Table::with_title(
+        "reliability (Table 6)",
+        vec![
+            "arch",
+            "E-cable AFR",
+            "optical AFR",
+            "LRS",
+            "HRS",
+            "total",
+            "MTBF(h)",
+            "avail@75min",
+        ],
+    );
+    for (name, capex) in [
+        ("UB-Mesh", capex_ubmesh(&SuperPodConfig::default())),
+        ("Clos", capex_full_clos("x64T", 8192, 64)),
+    ] {
+        let a = afr_of_capex(&capex);
+        let mtbf = mtbf_hours(a.total());
+        t.row(vec![
+            name.to_string(),
+            fmt(a.electrical_cables, 1),
+            fmt(a.optical, 1),
+            fmt(a.lrs, 1),
+            fmt(a.hrs, 1),
+            fmt(a.total(), 1),
+            fmt(mtbf, 1),
+            pct(availability(mtbf, mttr::BASELINE_HOURS), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_traffic(_args: &Args) -> Result<()> {
+    use ubmesh::util::table::bytes;
+    use ubmesh::workload::models::by_name;
+    use ubmesh::workload::traffic::{analyze, table1_config};
+    let m = by_name("gpt4-2t").unwrap();
+    let tbl = analyze(&m, &table1_config());
+    let mut t = Table::with_title(
+        "Table 1: MoE-2T traffic",
+        vec!["technique", "pattern", "vol/transfer", "transfers", "total", "share"],
+    );
+    for r in &tbl.rows {
+        t.row(vec![
+            r.technique.to_string(),
+            r.pattern.to_string(),
+            bytes(r.volume_per_transfer),
+            fmt(r.transfers, 0),
+            bytes(r.total),
+            pct(r.total / tbl.total(), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_routing(args: &Args) -> Result<()> {
+    use ubmesh::routing::apr::{paths_2d, to_routed, PathSet};
+    use ubmesh::routing::tfc::verify_deadlock_free;
+    use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+    let src: usize = args.get_parse("src", 0);
+    let dst: usize = args.get_parse("dst", 27);
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let node = |x: usize, y: usize| h.npu(y, x, 8);
+    let mesh = paths_2d((src % 8, src / 8), (dst % 8, dst / 8), 8, 8, true);
+    let routed: Vec<_> = mesh.iter().map(|m| to_routed(m, node)).collect();
+    let vls = verify_deadlock_free(&t, &routed).expect("TFC: deadlock-free");
+    let ps = PathSet::weighted_by_bottleneck(routed.clone(), &t);
+    let mut tbl = Table::with_title(
+        format!("APR paths NPU{src} → NPU{dst} (rack 2D-FM)"),
+        vec!["#", "kind", "hops", "bottleneck GB/s", "weight", "VLs"],
+    );
+    for (i, p) in ps.paths.iter().enumerate() {
+        tbl.row(vec![
+            format!("{i}"),
+            format!("{:?}", p.kind),
+            format!("{}", p.hops()),
+            fmt(p.bottleneck_gb_s(&t), 0),
+            fmt(ps.weights[i], 3),
+            format!("{:?}", vls[i]),
+        ]);
+    }
+    tbl.print();
+    println!(
+        "aggregate APR bandwidth: {} GB/s (vs single shortest path {} GB/s)",
+        fmt(ps.aggregate_gb_s(&t), 0),
+        fmt(ps.paths[0].bottleneck_gb_s(&t), 0)
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt4-2t").to_string();
+    let scale: usize = args.get_parse("scale", 1024);
+    let artifacts = load_artifacts(args);
+    let archs = [
+        Arch::ubmesh_default(),
+        Arch::Fm1dA,
+        Arch::Fm1dB,
+        Arch::ClosIntraRack,
+    ];
+    let seqs = [8192.0, 32768.0, 262144.0, 1048576.0];
+    let mut t = Table::with_title(
+        format!("{model} @ {scale}: relative perf vs intra-rack Clos"),
+        vec!["arch", "8K", "32K", "256K", "1M"],
+    );
+    for arch in archs {
+        let mut cells = vec![arch.name()];
+        for seq in seqs {
+            let job = Job::new(&model, scale, seq, arch)?;
+            let rel = job.relative_perf(Arch::ClosIntraRack, artifacts.as_ref())?;
+            cells.push(pct(rel, 1));
+        }
+        t.row(cells);
+    }
+    t.print();
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("census") => cmd_census(&args),
+        Some("capex") => cmd_capex(&args),
+        Some("reliability") => cmd_reliability(&args),
+        Some("traffic") => cmd_traffic(&args),
+        Some("routing") => cmd_routing(&args),
+        Some("sweep") => cmd_sweep(&args),
+        _ => {
+            eprintln!(
+                "usage: ubmesh <run|census|capex|reliability|traffic|routing|sweep> [--options]"
+            );
+            eprintln!("see module docs in rust/src/main.rs");
+            Ok(())
+        }
+    }
+}

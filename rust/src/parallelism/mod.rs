@@ -1,0 +1,8 @@
+//! Topology-aware parallelization (§5.2): search-space generation with
+//! the paper's pruning heuristic, and the iterative cost-model search.
+
+pub mod search;
+pub mod space;
+
+pub use search::{search, SearchOutcome};
+pub use space::{enumerate_configs, SearchSpace};

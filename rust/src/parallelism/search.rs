@@ -1,0 +1,108 @@
+//! Cost-model-driven parallelization search (§5.2 Steps ②③).
+//!
+//! Evaluates every enumerated configuration with the topology-aware cost
+//! model and returns the fastest. The evaluator is pluggable: the
+//! default is the pure-rust [`iteration_time`] model; the coordinator
+//! swaps in the AOT-compiled PJRT batch evaluator
+//! (`runtime::CostModel`), which computes the same α-β formulas on
+//! device — Step ② in one call for the whole batch.
+
+use crate::workload::models::ModelConfig;
+use crate::workload::placement::{Placement, TierBandwidth};
+use crate::workload::step::{iteration_time, IterBreakdown};
+use crate::workload::traffic::ParallelismConfig;
+
+use super::space::{enumerate_configs, SearchSpace};
+
+/// Search result.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub best: ParallelismConfig,
+    pub best_iter: IterBreakdown,
+    /// (config, total_us) for every evaluated candidate, sorted fastest
+    /// first — used by benches exploring the space.
+    pub ranked: Vec<(ParallelismConfig, f64)>,
+}
+
+/// Batch evaluator signature: total iteration µs per config.
+pub type Evaluator<'a> = dyn Fn(&[ParallelismConfig]) -> Vec<f64> + 'a;
+
+/// Run the search with the built-in rust evaluator.
+pub fn search(m: &ModelConfig, space: &SearchSpace, bw: &TierBandwidth) -> SearchOutcome {
+    let eval = |cfgs: &[ParallelismConfig]| -> Vec<f64> {
+        cfgs.iter()
+            .map(|c| iteration_time(m, c, &Placement::topology_aware(c), bw).total_us)
+            .collect()
+    };
+    search_with(m, space, bw, &eval)
+}
+
+/// Run the search with a custom (e.g. PJRT) batch evaluator.
+pub fn search_with(
+    m: &ModelConfig,
+    space: &SearchSpace,
+    bw: &TierBandwidth,
+    eval: &Evaluator,
+) -> SearchOutcome {
+    let cfgs = enumerate_configs(m, space);
+    assert!(
+        !cfgs.is_empty(),
+        "no feasible parallelism for {} on {} NPUs",
+        m.name,
+        space.scale
+    );
+    let times = eval(&cfgs);
+    let mut ranked: Vec<(ParallelismConfig, f64)> =
+        cfgs.into_iter().zip(times).collect();
+    ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let best = ranked[0].0;
+    let best_iter = iteration_time(m, &best, &Placement::topology_aware(&best), bw);
+    SearchOutcome {
+        best,
+        best_iter,
+        ranked,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::by_name;
+
+    #[test]
+    fn search_finds_tp_in_high_bandwidth_domain() {
+        let m = by_name("gpt3-175b").unwrap();
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let out = search(&m, &SearchSpace::paper_default(512, 8192.0), &bw);
+        // The winner should exploit the board-level mesh: TP > 1.
+        assert!(out.best.tp > 1, "best {:?}", out.best);
+        assert!(out.best_iter.total_us > 0.0);
+        // Ranking is sorted.
+        for w in out.ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn custom_evaluator_is_honored() {
+        let m = by_name("llama-70b").unwrap();
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let space = SearchSpace::paper_default(128, 8192.0);
+        // Perverse evaluator that prefers the LAST config.
+        let eval = |cfgs: &[crate::workload::ParallelismConfig]| -> Vec<f64> {
+            (0..cfgs.len()).rev().map(|i| i as f64 + 1.0).collect()
+        };
+        let out = search_with(&m, &space, &bw, &eval);
+        let all = enumerate_configs(&m, &space);
+        assert_eq!(out.best, *all.last().unwrap());
+    }
+
+    #[test]
+    fn longer_sequences_shift_towards_sp() {
+        let m = by_name("gpt3-175b").unwrap();
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let long = search(&m, &SearchSpace::paper_default(1024, 1_048_576.0), &bw);
+        // 1M-token sequences force meaningful context sharding.
+        assert!(long.best.sp >= 8, "long-seq best {:?}", long.best);
+    }
+}

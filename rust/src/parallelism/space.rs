@@ -1,0 +1,168 @@
+//! Parallelism search-space enumeration (§5.2 Step ①).
+//!
+//! "We prune the search space using a priority-based heuristic: TP and
+//! SP (or CP), which involve high communication volumes, are prioritized
+//! for high-bandwidth domains ... For MoE models requiring EP, we force
+//! SP*DP as an integer multiple of EP." Plus memory feasibility: weights
+//! + optimizer state + activations must fit HBM.
+
+use crate::workload::models::ModelConfig;
+use crate::workload::traffic::ParallelismConfig;
+
+/// Per-NPU HBM capacity (bytes).
+pub const HBM_BYTES: f64 = 64e9;
+/// Bytes per parameter held regardless of DP (bf16 weights + grads).
+pub const BYTES_PER_PARAM_LOCAL: f64 = 4.0;
+/// Optimizer-state bytes per parameter (fp32 master + Adam moments),
+/// ZeRO-sharded across the DP group.
+pub const BYTES_PER_PARAM_OPT: f64 = 14.0;
+/// Activation bytes per token per layer (with recompute discount).
+pub const ACT_BYTES_PER_TOKEN_LAYER: f64 = 8.0;
+
+/// Enumeration bounds.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub scale: usize,
+    pub seq_len: f64,
+    /// Global tokens per iteration (sets microbatch count).
+    pub global_tokens: f64,
+    pub max_tp: usize,
+    pub max_sp: usize,
+    pub max_pp: usize,
+}
+
+impl SearchSpace {
+    pub fn paper_default(scale: usize, seq_len: f64) -> SearchSpace {
+        SearchSpace {
+            scale,
+            seq_len,
+            // Weak scaling: global batch grows with the cluster, like the
+            // paper's linearity setup (Fig 22 keeps per-NPU work fixed).
+            global_tokens: scale as f64 * 8192.0,
+            max_tp: 8,
+            max_sp: 64,
+            // Dense-1T at 1K NPUs needs tp×pp ≥ ~290 to fit HBM.
+            max_pp: 64,
+        }
+    }
+}
+
+fn pow2s_upto(n: usize) -> impl Iterator<Item = usize> {
+    (0..).map(|i| 1usize << i).take_while(move |&v| v <= n)
+}
+
+/// Does the per-NPU memory footprint fit?
+pub fn memory_feasible(m: &ModelConfig, p: &ParallelismConfig) -> bool {
+    let ep = if m.is_moe() { p.ep.max(1) } else { 1 };
+    // Experts shard over EP; attention shards over TP×PP only.
+    let attn = m.attn_params_per_layer() * m.layers as f64;
+    let ffn = m.ffn_params_per_expert() * m.experts.unwrap_or(1) as f64 * m.layers as f64;
+    let params_per_npu = attn / (p.tp * p.pp) as f64 + ffn / (p.tp * p.pp * ep) as f64;
+    // ZeRO-1: optimizer state shards over DP replicas.
+    let state = params_per_npu
+        * (BYTES_PER_PARAM_LOCAL + BYTES_PER_PARAM_OPT / p.dp.max(1) as f64);
+    let act = p.tokens_per_microbatch * ACT_BYTES_PER_TOKEN_LAYER * m.layers as f64
+        / (p.pp * p.tp * p.sp) as f64
+        * 2.0; // a couple of microbatches in flight
+    state + act < HBM_BYTES * 0.9
+}
+
+/// Enumerate feasible configs for `m` on `scale` NPUs.
+pub fn enumerate_configs(m: &ModelConfig, space: &SearchSpace) -> Vec<ParallelismConfig> {
+    let mut out = Vec::new();
+    for tp in pow2s_upto(space.max_tp) {
+        for sp in pow2s_upto(space.max_sp) {
+            // SP splits the sequence; keep ≥ 512 tokens per shard.
+            if space.seq_len / (sp as f64) < 512.0 {
+                continue;
+            }
+            for pp in pow2s_upto(space.max_pp) {
+                if m.layers % pp != 0 {
+                    continue;
+                }
+                let denom = tp * sp * pp;
+                if space.scale % denom != 0 {
+                    continue;
+                }
+                let dp = space.scale / denom;
+                let eps: Vec<usize> = if m.is_moe() {
+                    let experts = m.experts.unwrap();
+                    pow2s_upto(experts)
+                        .filter(|&ep| ep > 1 && (sp * dp) % ep == 0)
+                        .collect()
+                } else {
+                    vec![1]
+                };
+                for ep in eps {
+                    let tokens_mb = space.seq_len;
+                    let microbatches = (space.global_tokens / (dp as f64 * tokens_mb))
+                        .round()
+                        .max(1.0) as usize;
+                    let cfg = ParallelismConfig {
+                        tp,
+                        sp,
+                        ep,
+                        pp,
+                        dp,
+                        microbatches,
+                        tokens_per_microbatch: tokens_mb,
+                    };
+                    if memory_feasible(m, &cfg) {
+                        out.push(cfg);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::by_name;
+
+    #[test]
+    fn enumerates_nonempty_for_paper_scales() {
+        for (name, scale) in [("llama-70b", 128), ("gpt3-175b", 512), ("gpt4-2t", 1024)] {
+            let m = by_name(name).unwrap();
+            let cfgs = enumerate_configs(&m, &SearchSpace::paper_default(scale, 8192.0));
+            assert!(!cfgs.is_empty(), "{name}@{scale}");
+            for c in &cfgs {
+                assert_eq!(c.npus(), scale, "{c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn moe_constraint_sp_dp_multiple_of_ep() {
+        let m = by_name("gpt4-2t").unwrap();
+        let cfgs = enumerate_configs(&m, &SearchSpace::paper_default(1024, 8192.0));
+        assert!(cfgs.iter().all(|c| (c.sp * c.dp) % c.ep == 0));
+        assert!(cfgs.iter().all(|c| c.ep > 1), "MoE must use EP");
+    }
+
+    #[test]
+    fn memory_excludes_undersharded_giants() {
+        let m = by_name("dense-1t").unwrap();
+        let bad = ParallelismConfig {
+            tp: 1,
+            sp: 1,
+            ep: 1,
+            pp: 1,
+            dp: 1024,
+            microbatches: 1,
+            tokens_per_microbatch: 8192.0,
+        };
+        assert!(!memory_feasible(&m, &bad), "1T on one NPU cannot fit");
+    }
+
+    #[test]
+    fn long_sequences_admit_large_sp() {
+        let m = by_name("gpt3-175b").unwrap();
+        // At 8K scale there is room for SP≥32 alongside the TP×PP shards
+        // that the 175B memory footprint requires.
+        let cfgs = enumerate_configs(&m, &SearchSpace::paper_default(8192, 1_048_576.0));
+        assert!(cfgs.iter().any(|c| c.sp >= 32), "1M seq should allow SP≥32");
+    }
+}

@@ -1,0 +1,91 @@
+//! Annualized Failure Rates (Table 6).
+//!
+//! Per-unit AFRs are the substitution for the paper's in-house fleet
+//! statistics (DESIGN.md §1); the *architecture-dependent* part — how
+//! many of each component an 8K cluster needs — comes from our own
+//! censuses, which is where UB-Mesh's advantage originates ("greatly
+//! reduced usage of switches and optical modules").
+
+use crate::cost::capex::CapexReport;
+
+/// Per-unit annualized failure rates (failures / unit / year).
+pub mod unit_afr {
+    /// Passive copper: essentially inert.
+    pub const PASSIVE_CABLE: f64 = 1.0e-4;
+    /// Active electrical cable (retimers age).
+    pub const ACTIVE_CABLE: f64 = 8.0e-4;
+    /// Optical transceiver module — the dominant failure source in
+    /// optical-heavy fabrics (lasers degrade).
+    pub const OPTICAL_MODULE: f64 = 2.2e-3;
+    /// Optical fiber itself.
+    pub const OPTICAL_CABLE: f64 = 2.0e-4;
+    /// Low-radix switch.
+    pub const LRS: f64 = 8.8e-3;
+    /// High-radix switch (big ASIC + fans + PSU).
+    pub const HRS: f64 = 1.1e-2;
+}
+
+/// AFR rollup per component class (failures / year for the cluster).
+#[derive(Clone, Debug, Default)]
+pub struct AfrBreakdown {
+    pub electrical_cables: f64,
+    pub optical: f64,
+    pub lrs: f64,
+    pub hrs: f64,
+}
+
+impl AfrBreakdown {
+    pub fn total(&self) -> f64 {
+        self.electrical_cables + self.optical + self.lrs + self.hrs
+    }
+}
+
+/// Network-component AFR for an architecture's component counts.
+pub fn afr_of_capex(c: &CapexReport) -> AfrBreakdown {
+    AfrBreakdown {
+        electrical_cables: c.passive_cables as f64 * unit_afr::PASSIVE_CABLE
+            + c.active_cables as f64 * unit_afr::ACTIVE_CABLE,
+        optical: c.optical_modules as f64 * unit_afr::OPTICAL_MODULE
+            + c.optical_cables as f64 * unit_afr::OPTICAL_CABLE,
+        lrs: c.lrs as f64 * unit_afr::LRS,
+        hrs: c.hrs as f64 * unit_afr::HRS,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::capex::{capex_full_clos, capex_ubmesh};
+    use crate::topology::superpod::SuperPodConfig;
+
+    #[test]
+    fn ubmesh_afr_far_below_clos() {
+        let ub = afr_of_capex(&capex_ubmesh(&SuperPodConfig::default()));
+        let clos = afr_of_capex(&capex_full_clos("x64T", 8192, 64));
+        // Table 6: 88.9 vs 632.8 total failures/year → ≥ 5× gap.
+        assert!(
+            clos.total() / ub.total() > 4.0,
+            "UB {} vs Clos {}",
+            ub.total(),
+            clos.total()
+        );
+    }
+
+    #[test]
+    fn clos_failures_dominated_by_optics() {
+        let clos = afr_of_capex(&capex_full_clos("x64T", 8192, 64));
+        assert!(clos.optical > clos.electrical_cables);
+        assert!(clos.optical > clos.lrs + clos.hrs);
+    }
+
+    #[test]
+    fn ubmesh_totals_in_table6_ballpark() {
+        let ub = afr_of_capex(&capex_ubmesh(&SuperPodConfig::default()));
+        // Paper: 88.9 total. Accept the right order of magnitude.
+        assert!(
+            (20.0..300.0).contains(&ub.total()),
+            "UB AFR total {}",
+            ub.total()
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! 64+1 backup-NPU failover (§3.3.2, Fig 9).
+//!
+//! "When NPU-3 has a failure, the management system activates the backup
+//! NPU to replace NPU-3. The original direct-connection links related to
+//! NPU-3 are redirected: the path 5-3 is redirected to path 5-LRS-B.
+//! Although this strategy changes the original direct-connection to
+//! one-hop routing, slightly increasing transmission latency, it is far
+//! superior to simply masking NPU-3 and running tasks on the remaining
+//! seven NPUs."
+
+use crate::sim::SimNet;
+use crate::topology::rack::RackHandles;
+use crate::topology::{NodeId, Topology};
+
+/// The post-failover rank list: `failed` replaced by the rack's backup.
+pub fn ranks_with_backup(h: &RackHandles, failed: NodeId) -> Vec<NodeId> {
+    let backup = h
+        .backup
+        .expect("rack has no backup NPU configured (64+0)");
+    h.npus
+        .iter()
+        .map(|&n| if n == failed { backup } else { n })
+        .collect()
+}
+
+/// The degraded alternative: mask the failed NPU and keep 63 ranks.
+pub fn ranks_masked(h: &RackHandles, failed: NodeId) -> Vec<NodeId> {
+    h.npus.iter().copied().filter(|&n| n != failed).collect()
+}
+
+/// Fail every link of `failed` in the simulation network (the NPU is
+/// dead; its mesh links carry nothing).
+pub fn fail_npu(net: &mut SimNet, t: &Topology, failed: NodeId) {
+    for &(_, l) in t.neighbors(failed) {
+        net.fail_link(l);
+    }
+}
+
+/// Relative compute throughput after failover: backup keeps 64/64,
+/// masking drops to 63/64 *and* breaks the symmetric parallelism —
+/// Megatron-style TP-8 groups can't use a 7-NPU board, so the whole
+/// board degrades (the paper's "running tasks on the remaining seven
+/// NPUs" contrast).
+pub fn masked_compute_fraction() -> f64 {
+    // Symmetric TP-8 groups cannot use a 7-NPU board: the broken board
+    // drops out of the mapping entirely, leaving 56 of 64 NPUs useful.
+    56.0 / 64.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring::ring_allreduce_dag;
+    use crate::sim;
+    use crate::topology::rack::{ubmesh_rack, RackConfig};
+
+    #[test]
+    fn backup_substitution_preserves_rank_count() {
+        let (_t, h) = ubmesh_rack(&RackConfig::default());
+        let failed = h.npus[3];
+        let ranks = ranks_with_backup(&h, failed);
+        assert_eq!(ranks.len(), 64);
+        assert!(!ranks.contains(&failed));
+        assert!(ranks.contains(&h.backup.unwrap()));
+        assert_eq!(ranks_masked(&h, failed).len(), 63);
+    }
+
+    #[test]
+    fn failover_allreduce_close_to_healthy() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let failed = h.npus[3];
+        let bytes = 64e6;
+
+        // Healthy: board ring over 8 NPUs of board 0.
+        let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
+        let net = SimNet::new(&t);
+        let healthy = sim::schedule::run(&net, &ring_allreduce_dag(&t, &board, bytes));
+
+        // Failover: NPU (0,3) replaced by the backup via LRS.
+        let mut net2 = SimNet::new(&t);
+        fail_npu(&mut net2, &t, failed);
+        let ring: Vec<NodeId> = board
+            .iter()
+            .map(|&n| if n == failed { h.backup.unwrap() } else { n })
+            .collect();
+        let failover = sim::schedule::run(&net2, &ring_allreduce_dag(&t, &ring, bytes));
+
+        let slowdown = failover.makespan_us / healthy.makespan_us;
+        assert!(
+            slowdown < 2.0,
+            "failover ring {}µs vs healthy {}µs ({slowdown:.2}×) — \
+             backup path should be usable",
+            failover.makespan_us,
+            healthy.makespan_us
+        );
+        assert!(slowdown >= 1.0);
+    }
+
+    #[test]
+    fn failed_npu_links_are_dead() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let failed = h.npus[0];
+        let mut net = SimNet::new(&t);
+        fail_npu(&mut net, &t, failed);
+        for &(_, l) in t.neighbors(failed) {
+            assert!(net.is_down(l));
+        }
+    }
+
+    #[test]
+    fn backup_beats_masking_throughput() {
+        // Backup keeps full compute; masking loses ≥ 1/64.
+        assert!(masked_compute_fraction() < 1.0);
+    }
+}

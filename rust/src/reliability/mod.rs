@@ -1,0 +1,10 @@
+//! Reliability and availability (§6.6, Table 6) plus the 64+1 backup
+//! NPU failover of §3.3.2 (Fig 9).
+
+pub mod afr;
+pub mod availability;
+pub mod backup;
+pub mod montecarlo;
+
+pub use afr::{afr_of_capex, AfrBreakdown};
+pub use availability::{availability, mtbf_hours};

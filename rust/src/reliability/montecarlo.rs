@@ -1,0 +1,151 @@
+//! Monte-Carlo availability simulation: sample failure arrivals from the
+//! AFR census and accumulate downtime, validating the Eq. 3 closed form
+//! and quantifying the 64+1 backup's benefit.
+
+use crate::util::rng::Rng;
+
+use super::afr::AfrBreakdown;
+
+/// Failure classes with distinct handling.
+#[derive(Clone, Copy, Debug)]
+pub enum FailureClass {
+    /// Network component: APR reroutes around it; repair is hot-swap but
+    /// the cluster pauses for fault localization + task migration.
+    Network,
+    /// NPU: without a backup this aborts the iteration and restarts from
+    /// checkpoint; with 64+1 the backup activates in minutes.
+    Npu,
+}
+
+/// Monte-Carlo availability model.
+pub struct McConfig {
+    /// Mission length in hours.
+    pub mission_hours: f64,
+    /// Network AFR total (failures/year), from [`AfrBreakdown`].
+    pub network_afr: f64,
+    /// NPU fleet AFR (failures/year).
+    pub npu_afr: f64,
+    /// Downtime per network failure (hours).
+    pub network_mttr_hours: f64,
+    /// Downtime per NPU failure without backup (hours).
+    pub npu_mttr_hours: f64,
+    /// Downtime per NPU failure with 64+1 backup (activation only).
+    pub backup_activation_hours: f64,
+    pub use_backup: bool,
+}
+
+/// Result of one Monte-Carlo run.
+#[derive(Clone, Debug)]
+pub struct McResult {
+    pub availability: f64,
+    pub failures: u64,
+    pub downtime_hours: f64,
+}
+
+/// Run the simulation with `trials` independent missions and average.
+pub fn run(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
+    let mut rng = Rng::new(seed);
+    let hours_per_year = 365.0 * 24.0;
+    let net_rate = cfg.network_afr / hours_per_year; // failures/hour
+    let npu_rate = cfg.npu_afr / hours_per_year;
+    let total_rate = net_rate + npu_rate;
+
+    let mut down_total = 0.0;
+    let mut failures = 0u64;
+    for _ in 0..trials {
+        let mut t = 0.0;
+        while t < cfg.mission_hours {
+            let dt = rng.exp(total_rate);
+            t += dt;
+            if t >= cfg.mission_hours {
+                break;
+            }
+            failures += 1;
+            let is_npu = rng.chance(npu_rate / total_rate);
+            let down = if is_npu {
+                if cfg.use_backup {
+                    cfg.backup_activation_hours
+                } else {
+                    cfg.npu_mttr_hours
+                }
+            } else {
+                cfg.network_mttr_hours
+            };
+            down_total += down;
+            t += down;
+        }
+    }
+    let mission_total = cfg.mission_hours * trials as f64;
+    McResult {
+        availability: 1.0 - down_total / mission_total,
+        failures,
+        downtime_hours: down_total,
+    }
+}
+
+impl McConfig {
+    /// The paper's 8K UB-Mesh setting (network AFR from Table 6-style
+    /// census, 75-min MTTR, 3-min backup activation).
+    pub fn ubmesh_8k(afr: &AfrBreakdown, use_backup: bool) -> McConfig {
+        McConfig {
+            mission_hours: 24.0 * 30.0,
+            network_afr: afr.total(),
+            npu_afr: 8192.0 * 0.05, // 5% NPU AFR — fleet-typical
+            network_mttr_hours: 75.0 / 60.0,
+            npu_mttr_hours: 75.0 / 60.0,
+            backup_activation_hours: 3.0 / 60.0,
+            use_backup,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn afr(total: f64) -> AfrBreakdown {
+        AfrBreakdown {
+            electrical_cables: total / 4.0,
+            optical: total / 4.0,
+            lrs: total / 4.0,
+            hrs: total / 4.0,
+        }
+    }
+
+    #[test]
+    fn matches_closed_form_availability() {
+        // Network failures only: MC should approach Eq. 3.
+        let mut cfg = McConfig::ubmesh_8k(&afr(88.9), false);
+        cfg.npu_afr = 0.0;
+        let r = run(&cfg, 64, 42);
+        let mtbf = super::super::availability::mtbf_hours(88.9);
+        let expect = super::super::availability::availability(mtbf, 75.0 / 60.0);
+        assert!(
+            (r.availability - expect).abs() < 0.01,
+            "MC {} vs Eq3 {expect}",
+            r.availability
+        );
+    }
+
+    #[test]
+    fn backup_improves_availability() {
+        let a = afr(88.9);
+        let with = run(&McConfig::ubmesh_8k(&a, true), 32, 7);
+        let without = run(&McConfig::ubmesh_8k(&a, false), 32, 7);
+        assert!(
+            with.availability > without.availability,
+            "with {} vs without {}",
+            with.availability,
+            without.availability
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = afr(100.0);
+        let r1 = run(&McConfig::ubmesh_8k(&a, true), 8, 3);
+        let r2 = run(&McConfig::ubmesh_8k(&a, true), 8, 3);
+        assert_eq!(r1.failures, r2.failures);
+        assert_eq!(r1.availability, r2.availability);
+    }
+}

@@ -1,0 +1,167 @@
+//! Structured addressing (§4.1.2).
+//!
+//! "The addressing space is divided into segments based on the physical
+//! location of network elements, such as Pods, racks, and boards. Since
+//! NPUs within a segment share the same prefix, only the short segment
+//! address needs to be stored, and NPUs can be addressed via linear
+//! offsets relative to the segment address."
+//!
+//! Layout (32 bits): `[pod:8 | rack:6 | board:5 | slot:5 | kind:8]`, with
+//! `kind` distinguishing NPU/CPU/switch endpoints inside one board
+//! segment. All regular-NPU addresses have kind 0 so the rack-local NPU
+//! space is a dense linear range — exactly what linear table lookup
+//! exploits.
+
+use crate::topology::{Location, NodeKind};
+
+/// A structured UB address.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct UbAddr(pub u32);
+
+pub const POD_BITS: u32 = 8;
+pub const RACK_BITS: u32 = 6;
+pub const BOARD_BITS: u32 = 5;
+pub const SLOT_BITS: u32 = 5;
+pub const KIND_BITS: u32 = 8;
+
+const SLOT_SHIFT: u32 = KIND_BITS;
+const BOARD_SHIFT: u32 = SLOT_SHIFT + SLOT_BITS;
+const RACK_SHIFT: u32 = BOARD_SHIFT + BOARD_BITS;
+const POD_SHIFT: u32 = RACK_SHIFT + RACK_BITS;
+
+/// Endpoint-kind code inside a board segment.
+pub fn kind_code(kind: NodeKind) -> u8 {
+    match kind {
+        NodeKind::Npu => 0,
+        NodeKind::BackupNpu => 1,
+        NodeKind::Cpu => 2,
+        NodeKind::Lrs => 3,
+        NodeKind::Hrs => 4,
+        NodeKind::DcnSwitch => 5,
+    }
+}
+
+impl UbAddr {
+    pub fn new(pod: u16, rack: u8, board: u8, slot: u8, kind: u8) -> UbAddr {
+        debug_assert!((pod as u32) < (1 << POD_BITS));
+        debug_assert!((rack as u32) < (1 << RACK_BITS));
+        debug_assert!((board as u32) < (1 << BOARD_BITS));
+        debug_assert!((slot as u32) < (1 << SLOT_BITS));
+        UbAddr(
+            ((pod as u32) << POD_SHIFT)
+                | ((rack as u32) << RACK_SHIFT)
+                | ((board as u32) << BOARD_SHIFT)
+                | ((slot as u32) << SLOT_SHIFT)
+                | kind as u32,
+        )
+    }
+
+    /// Address of a node given its physical [`Location`] (4-column pods).
+    pub fn of(loc: &Location, kind: NodeKind) -> UbAddr {
+        UbAddr::new(
+            loc.pod,
+            loc.rack(4) as u8,
+            loc.board,
+            loc.slot,
+            kind_code(kind),
+        )
+    }
+
+    pub fn pod(self) -> u16 {
+        ((self.0 >> POD_SHIFT) & ((1 << POD_BITS) - 1)) as u16
+    }
+    pub fn rack(self) -> u8 {
+        ((self.0 >> RACK_SHIFT) & ((1 << RACK_BITS) - 1)) as u8
+    }
+    pub fn board(self) -> u8 {
+        ((self.0 >> BOARD_SHIFT) & ((1 << BOARD_BITS) - 1)) as u8
+    }
+    pub fn slot(self) -> u8 {
+        ((self.0 >> SLOT_SHIFT) & ((1 << SLOT_BITS) - 1)) as u8
+    }
+    pub fn kind(self) -> u8 {
+        (self.0 & ((1 << KIND_BITS) - 1)) as u8
+    }
+
+    /// Segment prefixes at each hierarchy level (value, prefix-bits).
+    pub fn pod_segment(self) -> (u32, u32) {
+        (self.0 >> POD_SHIFT << POD_SHIFT, POD_BITS)
+    }
+    pub fn rack_segment(self) -> (u32, u32) {
+        (self.0 >> RACK_SHIFT << RACK_SHIFT, POD_BITS + RACK_BITS)
+    }
+    pub fn board_segment(self) -> (u32, u32) {
+        (
+            self.0 >> BOARD_SHIFT << BOARD_SHIFT,
+            POD_BITS + RACK_BITS + BOARD_BITS,
+        )
+    }
+
+    /// Linear offset of an NPU within its rack segment: board*slots+slot.
+    /// This is the index used by linear table lookup.
+    pub fn rack_offset(self) -> u32 {
+        ((self.board() as u32) << SLOT_BITS | self.slot() as u32) >> 0
+    }
+}
+
+impl std::fmt::Display for UbAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}.{}.{}.{}#{}",
+            self.pod(),
+            self.rack(),
+            self.board(),
+            self.slot(),
+            self.kind()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn fields_roundtrip() {
+        forall("ubaddr roundtrip", 512, |rng| {
+            let pod = rng.below(256) as u16;
+            let rack = rng.below(16) as u8;
+            let board = rng.below(32) as u8;
+            let slot = rng.below(32) as u8;
+            let kind = rng.below(6) as u8;
+            let a = UbAddr::new(pod, rack, board, slot, kind);
+            assert_eq!(a.pod(), pod);
+            assert_eq!(a.rack(), rack);
+            assert_eq!(a.board(), board);
+            assert_eq!(a.slot(), slot);
+            assert_eq!(a.kind(), kind);
+        });
+    }
+
+    #[test]
+    fn same_rack_shares_prefix() {
+        let a = UbAddr::new(3, 7, 0, 0, 0);
+        let b = UbAddr::new(3, 7, 5, 6, 0);
+        assert_eq!(a.rack_segment(), b.rack_segment());
+        assert_ne!(a.board_segment(), b.board_segment());
+    }
+
+    #[test]
+    fn rack_offsets_are_dense_per_board() {
+        // offsets enumerate (board, slot) lexicographically.
+        let a = UbAddr::new(0, 0, 2, 3, 0);
+        assert_eq!(a.rack_offset(), 2 * 32 + 3);
+    }
+
+    #[test]
+    fn from_location() {
+        let loc = Location::new(1, 2, 3, 4, 5);
+        let a = UbAddr::of(&loc, NodeKind::Npu);
+        assert_eq!(a.pod(), 1);
+        assert_eq!(a.rack(), 2 * 4 + 3);
+        assert_eq!(a.board(), 4);
+        assert_eq!(a.slot(), 5);
+    }
+}

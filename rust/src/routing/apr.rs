@@ -1,0 +1,304 @@
+//! All-Path Routing (§4.1, Fig 10): enumerate the direct, detour and
+//! switch-borrow paths between endpoints of a full-mesh dimension grid.
+//!
+//! Both UB-Mesh full-mesh tiers are instances of the same 2D grid:
+//! * intra-rack: 8 boards × 8 slots of NPUs (X/Y dimensions);
+//! * inter-rack: 4 rows × 4 columns of racks (Z/α dimensions).
+//!
+//! The generators only emit paths whose *dimension sequence* is
+//! 2-VL-schedulable under [`super::tfc`]'s escape rule (at most one
+//! restart of strictly-increasing dimension order), which is how APR and
+//! TFC compose: "the TFC algorithm ... enables deadlock-free all-path
+//! routing with only 2 VL resources".
+
+use crate::topology::{NodeId, Topology};
+
+/// How a path was derived — matches the Fig 18 routing strategies.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum PathKind {
+    /// A shortest path (the `Shortest` strategy uses only these).
+    Direct,
+    /// A non-shortest all-path detour (`Detour` strategy).
+    Detour,
+    /// A path that borrows switch bandwidth (`Borrow` strategy).
+    Borrow,
+}
+
+/// A path over grid coordinates `(d0, d1)`, including both endpoints.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct MeshPath {
+    pub coords: Vec<(usize, usize)>,
+    pub kind: PathKind,
+}
+
+impl MeshPath {
+    pub fn hops(&self) -> usize {
+        self.coords.len() - 1
+    }
+
+    /// Dimension of each hop (0 = first grid dim, 1 = second).
+    pub fn dims(&self) -> Vec<u8> {
+        self.coords
+            .windows(2)
+            .map(|w| {
+                if w[0].0 != w[1].0 {
+                    debug_assert_eq!(w[0].1, w[1].1, "diagonal hop");
+                    0
+                } else {
+                    1
+                }
+            })
+            .collect()
+    }
+}
+
+/// Enumerate APR paths on an `n0 × n1` full-mesh grid.
+///
+/// * Direct: the 1-hop link when aligned in one dim; the two 2-hop
+///   corner paths otherwise.
+/// * Detour (if `detours`): for aligned pairs, the 2-hop same-dimension
+///   relays and 3-hop other-dimension loops; for unaligned pairs, the
+///   3-hop paths through every parallel row/column. All emitted
+///   sequences satisfy the ≤1-restart rule required for 2-VL TFC.
+pub fn paths_2d(
+    src: (usize, usize),
+    dst: (usize, usize),
+    n0: usize,
+    n1: usize,
+    detours: bool,
+) -> Vec<MeshPath> {
+    assert!(src.0 < n0 && dst.0 < n0 && src.1 < n1 && dst.1 < n1);
+    let mut out = Vec::new();
+    if src == dst {
+        return out;
+    }
+    let (x1, y1) = src;
+    let (x2, y2) = dst;
+    if y1 == y2 && x1 != x2 {
+        // Aligned in dim 0: direct X hop.
+        out.push(MeshPath {
+            coords: vec![src, dst],
+            kind: PathKind::Direct,
+        });
+        if detours {
+            // 2-hop relay via every other x (dims X,X → escape VL).
+            for x3 in 0..n0 {
+                if x3 != x1 && x3 != x2 {
+                    out.push(MeshPath {
+                        coords: vec![src, (x3, y1), dst],
+                        kind: PathKind::Detour,
+                    });
+                }
+            }
+            // 3-hop loop via every other row: Y,X,Y.
+            for y3 in 0..n1 {
+                if y3 != y1 {
+                    out.push(MeshPath {
+                        coords: vec![src, (x1, y3), (x2, y3), dst],
+                        kind: PathKind::Detour,
+                    });
+                }
+            }
+        }
+    } else if x1 == x2 && y1 != y2 {
+        // Aligned in dim 1: direct Y hop.
+        out.push(MeshPath {
+            coords: vec![src, dst],
+            kind: PathKind::Direct,
+        });
+        if detours {
+            for y3 in 0..n1 {
+                if y3 != y1 && y3 != y2 {
+                    out.push(MeshPath {
+                        coords: vec![src, (x1, y3), dst],
+                        kind: PathKind::Detour,
+                    });
+                }
+            }
+            // X,Y,X loops via every other column.
+            for x3 in 0..n0 {
+                if x3 != x1 {
+                    out.push(MeshPath {
+                        coords: vec![src, (x3, y1), (x3, y2), dst],
+                        kind: PathKind::Detour,
+                    });
+                }
+            }
+        }
+    } else {
+        // Differ in both dims: two corner paths are shortest.
+        out.push(MeshPath {
+            coords: vec![src, (x2, y1), dst], // X then Y
+            kind: PathKind::Direct,
+        });
+        out.push(MeshPath {
+            coords: vec![src, (x1, y2), dst], // Y then X
+            kind: PathKind::Direct,
+        });
+        if detours {
+            // X,Y,X via every other column x3.
+            for x3 in 0..n0 {
+                if x3 != x1 && x3 != x2 {
+                    out.push(MeshPath {
+                        coords: vec![src, (x3, y1), (x3, y2), dst],
+                        kind: PathKind::Detour,
+                    });
+                }
+            }
+            // Y,X,Y via every other row y3.
+            for y3 in 0..n1 {
+                if y3 != y1 && y3 != y2 {
+                    out.push(MeshPath {
+                        coords: vec![src, (x1, y3), (x2, y3), dst],
+                        kind: PathKind::Detour,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A physical path through the topology graph.
+#[derive(Clone, Debug)]
+pub struct RoutedPath {
+    pub nodes: Vec<NodeId>,
+    pub kind: PathKind,
+    /// Per-hop routing dimension (see [`super::tfc::routing_dims`]).
+    pub dims: Vec<u8>,
+}
+
+impl RoutedPath {
+    pub fn hops(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Bottleneck (minimum) link capacity along the path, GB/s.
+    pub fn bottleneck_gb_s(&self, t: &Topology) -> f64 {
+        self.nodes
+            .windows(2)
+            .map(|w| {
+                let l = t
+                    .link_between(w[0], w[1])
+                    .unwrap_or_else(|| panic!("path hop {}-{} missing", w[0], w[1]));
+                t.link(l).capacity_gb_s()
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// A set of parallel paths plus a traffic split.
+#[derive(Clone, Debug)]
+pub struct PathSet {
+    pub paths: Vec<RoutedPath>,
+    /// Traffic fractions, sum = 1.
+    pub weights: Vec<f64>,
+}
+
+impl PathSet {
+    /// Split traffic proportional to each path's bottleneck bandwidth,
+    /// discounted by hop count (longer paths consume more total link
+    /// capacity, matching the Fig 13-b "optimize traffic partitioning"
+    /// step).
+    pub fn weighted_by_bottleneck(paths: Vec<RoutedPath>, t: &Topology) -> PathSet {
+        assert!(!paths.is_empty());
+        let raw: Vec<f64> = paths
+            .iter()
+            .map(|p| p.bottleneck_gb_s(t) / p.hops().max(1) as f64)
+            .collect();
+        let sum: f64 = raw.iter().sum();
+        let weights = raw.iter().map(|w| w / sum).collect();
+        PathSet { paths, weights }
+    }
+
+    /// Aggregate ideal bandwidth (GB/s) if every path could run at its
+    /// bottleneck concurrently — the APR upper bound of Fig 10-b.
+    pub fn aggregate_gb_s(&self, t: &Topology) -> f64 {
+        self.paths.iter().map(|p| p.bottleneck_gb_s(t)).sum()
+    }
+}
+
+/// Convert a [`MeshPath`] into a [`RoutedPath`] using a coordinate→node
+/// mapping (e.g. `RackHandles::npu` or a rack-graph index).
+pub fn to_routed<F: Fn(usize, usize) -> NodeId>(mesh: &MeshPath, f: F) -> RoutedPath {
+    RoutedPath {
+        nodes: mesh.coords.iter().map(|&(a, b)| f(a, b)).collect(),
+        kind: mesh.kind,
+        dims: mesh.dims(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn aligned_pair_paths() {
+        let ps = paths_2d((0, 0), (3, 0), 8, 8, true);
+        // 1 direct + 6 X-relays + 7 Y-loops.
+        assert_eq!(ps.len(), 1 + 6 + 7);
+        assert_eq!(ps.iter().filter(|p| p.kind == PathKind::Direct).count(), 1);
+        assert_eq!(ps[0].hops(), 1);
+    }
+
+    #[test]
+    fn unaligned_pair_paths() {
+        let ps = paths_2d((0, 0), (3, 4), 8, 8, true);
+        // 2 corners + 6 column loops + 6 row loops.
+        assert_eq!(ps.len(), 2 + 6 + 6);
+        assert!(ps.iter().take(2).all(|p| p.hops() == 2));
+        assert!(ps.iter().skip(2).all(|p| p.hops() == 3));
+    }
+
+    #[test]
+    fn shortest_only_when_detours_disabled() {
+        let ps = paths_2d((0, 0), (3, 4), 8, 8, false);
+        assert_eq!(ps.len(), 2);
+        assert!(ps.iter().all(|p| p.kind == PathKind::Direct));
+    }
+
+    #[test]
+    fn all_paths_are_valid_and_loop_free() {
+        forall("apr 2d paths valid", 256, |rng| {
+            let n0 = rng.range(2, 9);
+            let n1 = rng.range(2, 9);
+            let src = (rng.range(0, n0), rng.range(0, n1));
+            let dst = (rng.range(0, n0), rng.range(0, n1));
+            if src == dst {
+                return;
+            }
+            for p in paths_2d(src, dst, n0, n1, true) {
+                assert_eq!(*p.coords.first().unwrap(), src);
+                assert_eq!(*p.coords.last().unwrap(), dst);
+                // loop-free
+                let mut seen = std::collections::HashSet::new();
+                for c in &p.coords {
+                    assert!(seen.insert(*c), "repeated coord in {:?}", p.coords);
+                }
+                // every hop moves in exactly one dim
+                let _ = p.dims();
+                // ≤ 1 restart of increasing-dim order (2-VL schedulable)
+                let dims = p.dims();
+                let mut restarts = 0;
+                let mut last = -1i32;
+                for &d in &dims {
+                    if (d as i32) <= last {
+                        restarts += 1;
+                        last = d as i32;
+                    } else {
+                        last = d as i32;
+                    }
+                }
+                assert!(restarts <= 1, "dims {dims:?} need >2 VLs");
+            }
+        });
+    }
+
+    #[test]
+    fn path_count_scales_with_mesh_size() {
+        // Fig 10-b: APR exposes many parallel paths.
+        let ps = paths_2d((0, 0), (7, 7), 8, 8, true);
+        assert_eq!(ps.len(), 2 + 6 + 6);
+    }
+}

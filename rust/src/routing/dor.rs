@@ -1,0 +1,91 @@
+//! Dimension-Ordered Routing baseline (Table 4: "Tofu, TPU").
+//!
+//! DOR corrects coordinates in a fixed dimension order. On a full-mesh
+//! grid each correction is a single direct hop; on a torus it is a walk
+//! of ±1 steps. DOR is deadlock-free with one VL but supports neither
+//! non-shortest paths nor hybrid topologies — the Table 4 contrast.
+
+use super::apr::{MeshPath, PathKind};
+
+/// DOR on a full-mesh grid: correct dim 0 first, then dim 1.
+pub fn dor_2d(src: (usize, usize), dst: (usize, usize)) -> MeshPath {
+    let mut coords = vec![src];
+    let mut cur = src;
+    if cur.0 != dst.0 {
+        cur = (dst.0, cur.1);
+        coords.push(cur);
+    }
+    if cur.1 != dst.1 {
+        cur = (cur.0, dst.1);
+        coords.push(cur);
+    }
+    MeshPath {
+        coords,
+        kind: PathKind::Direct,
+    }
+}
+
+/// DOR on an n-dimensional torus: walk each dimension with ±1 steps
+/// (minimal direction, wrapping), lowest dimension first. Returns the
+/// coordinate sequence.
+pub fn dor_torus(dims: &[usize], src: &[usize], dst: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(src.len(), dims.len());
+    assert_eq!(dst.len(), dims.len());
+    let mut path = vec![src.to_vec()];
+    let mut cur = src.to_vec();
+    for d in 0..dims.len() {
+        let n = dims[d] as i64;
+        let mut delta = (dst[d] as i64 - cur[d] as i64).rem_euclid(n);
+        // minimal direction
+        let step = if delta <= n / 2 { 1i64 } else { -1i64 };
+        if step == -1 {
+            delta = n - delta;
+        }
+        for _ in 0..delta {
+            cur[d] = ((cur[d] as i64 + step).rem_euclid(n)) as usize;
+            path.push(cur.clone());
+        }
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn dor_2d_is_x_then_y() {
+        let p = dor_2d((1, 1), (3, 2));
+        assert_eq!(p.coords, vec![(1, 1), (3, 1), (3, 2)]);
+        assert_eq!(p.dims(), vec![0, 1]);
+    }
+
+    #[test]
+    fn dor_2d_aligned() {
+        assert_eq!(dor_2d((1, 1), (1, 3)).hops(), 1);
+        assert_eq!(dor_2d((1, 1), (3, 1)).hops(), 1);
+    }
+
+    #[test]
+    fn torus_walks_minimal_and_reaches() {
+        forall("dor torus reaches", 256, |rng| {
+            let dims = [rng.range(2, 6), rng.range(2, 6), rng.range(2, 6)];
+            let src: Vec<usize> = dims.iter().map(|&d| rng.range(0, d)).collect();
+            let dst: Vec<usize> = dims.iter().map(|&d| rng.range(0, d)).collect();
+            let path = dor_torus(&dims, &src, &dst);
+            assert_eq!(path[0], src);
+            assert_eq!(*path.last().unwrap(), dst);
+            // minimal: hops per dim ≤ dim/2
+            let hops = path.len() - 1;
+            let max: usize = dims.iter().map(|&d| d / 2).sum();
+            assert!(hops <= max, "hops {hops} > {max}");
+            // each step changes exactly one coordinate by ±1 (mod n)
+            for w in path.windows(2) {
+                let changed: Vec<usize> =
+                    (0..3).filter(|&i| w[0][i] != w[1][i]).collect();
+                assert_eq!(changed.len(), 1);
+            }
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! Fast fault recovery: hop-by-hop flooding vs topology-aware direct
+//! notification (§4.2, Fig 12).
+//!
+//! "Since each node has a deterministic set of communication targets, we
+//! can accelerate the routing convergence by directly notifying those
+//! nodes upon link failures" — the notifier knows, per link, exactly
+//! which sources route over it (pre-computed from the path set), and
+//! unicasts them instead of flooding the update through every router.
+
+use crate::topology::{LinkId, NodeId, Topology};
+
+use super::apr::RoutedPath;
+
+/// Control-plane timing model (µs).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryModel {
+    /// Local failure detection (loss-of-signal → event), µs.
+    pub detect_us: f64,
+    /// Per-router processing + re-flood cost in hop-by-hop propagation.
+    pub process_us: f64,
+    /// Wire latency per hop for control messages.
+    pub wire_us: f64,
+    /// Routing-table update at the affected source.
+    pub update_us: f64,
+}
+
+impl Default for RecoveryModel {
+    fn default() -> Self {
+        // Typical link-state protocol processing dominates wire latency.
+        RecoveryModel {
+            detect_us: 10.0,
+            process_us: 25.0,
+            wire_us: 0.3,
+            update_us: 5.0,
+        }
+    }
+}
+
+/// Sources whose installed paths traverse `failed` — the deterministic
+/// notification set of §4.2.
+pub fn affected_sources(t: &Topology, paths: &[RoutedPath], failed: LinkId) -> Vec<NodeId> {
+    let mut out = std::collections::BTreeSet::new();
+    for p in paths {
+        let uses = p.nodes.windows(2).any(|w| {
+            t.link_between(w[0], w[1]) == Some(failed)
+        });
+        if uses {
+            out.insert(p.nodes[0]);
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Convergence latency with hop-by-hop flooding: the update ripples out
+/// from both link endpoints; every router on the way adds processing
+/// latency. Convergence = all affected sources updated.
+pub fn hop_by_hop_convergence_us(
+    t: &Topology,
+    failed: LinkId,
+    affected: &[NodeId],
+    m: &RecoveryModel,
+) -> f64 {
+    if affected.is_empty() {
+        return m.detect_us;
+    }
+    let link = t.link(failed);
+    let da = t.bfs_hops(link.a, true);
+    let db = t.bfs_hops(link.b, true);
+    let worst = affected
+        .iter()
+        .map(|n| da[n.idx()].min(db[n.idx()]))
+        .max()
+        .unwrap_or(0) as f64;
+    m.detect_us + worst * (m.process_us + m.wire_us) + m.update_us
+}
+
+/// Convergence with direct notification: the detecting endpoint unicasts
+/// each affected source along existing data paths — per-hop cost is wire
+/// latency only (no per-router protocol processing), plus one processing
+/// step at the notifier and one table update at the receiver.
+pub fn direct_notification_convergence_us(
+    t: &Topology,
+    failed: LinkId,
+    affected: &[NodeId],
+    m: &RecoveryModel,
+) -> f64 {
+    if affected.is_empty() {
+        return m.detect_us;
+    }
+    let link = t.link(failed);
+    let da = t.bfs_hops(link.a, true);
+    let db = t.bfs_hops(link.b, true);
+    let worst = affected
+        .iter()
+        .map(|n| da[n.idx()].min(db[n.idx()]))
+        .max()
+        .unwrap_or(0) as f64;
+    m.detect_us + m.process_us + worst * m.wire_us + m.update_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::apr::{paths_2d, to_routed};
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    fn mesh_and_paths_opts(detours: bool) -> (Topology, Vec<RoutedPath>) {
+        let t = nd_fullmesh(
+            "m44",
+            &[
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        );
+        let node = |x: usize, y: usize| NodeId((y * 4 + x) as u32);
+        let mut paths = Vec::new();
+        for s in 0..16usize {
+            for d in 0..16usize {
+                if s != d {
+                    for mp in paths_2d((s % 4, s / 4), (d % 4, d / 4), 4, 4, detours) {
+                        paths.push(to_routed(&mp, node));
+                    }
+                }
+            }
+        }
+        (t, paths)
+    }
+
+    #[test]
+    fn affected_set_is_exact() {
+        // Shortest-only installed paths: the notification set is sparse.
+        let (t, paths) = mesh_and_paths_opts(false);
+        let failed = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let affected = affected_sources(&t, &paths, failed);
+        // Only sources whose shortest paths cross 0-1 are notified;
+        // 0 and 1 themselves route over it, plus corner-path users.
+        assert!(affected.contains(&NodeId(0)));
+        assert!(affected.contains(&NodeId(1)));
+        assert!(affected.len() < 16, "not a broadcast: {affected:?}");
+    }
+
+    #[test]
+    fn direct_beats_hop_by_hop() {
+        // With detours installed, some affected sources sit >1 hop from
+        // the failure — the regime Fig 12 targets.
+        let (t, paths) = mesh_and_paths_opts(true);
+        let m = RecoveryModel::default();
+        let failed = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let affected = affected_sources(&t, &paths, failed);
+        let slow = hop_by_hop_convergence_us(&t, failed, &affected, &m);
+        let fast = direct_notification_convergence_us(&t, failed, &affected, &m);
+        assert!(
+            fast < slow,
+            "direct {fast}µs should beat hop-by-hop {slow}µs"
+        );
+    }
+
+    #[test]
+    fn empty_affected_costs_detect_only() {
+        let (t, _) = mesh_and_paths_opts(false);
+        let m = RecoveryModel::default();
+        let failed = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        assert_eq!(hop_by_hop_convergence_us(&t, failed, &[], &m), m.detect_us);
+    }
+}

@@ -1,0 +1,33 @@
+//! Routing for UB-Mesh: All-Path-Routing (APR) and the baselines of
+//! Table 4.
+//!
+//! §4 of the paper lists five requirements — hybrid-topology support,
+//! efficient forwarding, non-shortest paths, rapid failure recovery,
+//! deadlock freedom — and meets them with three mechanisms that this
+//! module reproduces:
+//!
+//! * [`srheader`] — the 8-byte Source Routing header (Fig 11), bit-exact.
+//! * [`address`] + [`table`] — structured addressing with linear
+//!   segment-offset lookup (§4.1.2), plus an LPM trie baseline to
+//!   measure the forwarding-overhead claim of Table 4.
+//! * [`tfc`] — Topology-aware deadlock-Free flow Control: channel
+//!   dependency graph construction and a 2-virtual-lane assignment
+//!   (§4.1.3).
+//! * [`apr`] — all-path enumeration over the nD-FullMesh: direct paths,
+//!   detour paths, and switch-"Borrow" paths (§4.1, §6.3).
+//! * [`spf`] / [`dor`] — Shortest-Path-First and Dimension-Ordered
+//!   Routing baselines (Table 4).
+//! * [`failure`] — fault notification models: hop-by-hop flooding vs the
+//!   paper's topology-aware direct notification (Fig 12).
+
+pub mod address;
+pub mod apr;
+pub mod dor;
+pub mod failure;
+pub mod spf;
+pub mod srheader;
+pub mod table;
+pub mod tfc;
+
+pub use apr::{PathKind, PathSet, RoutedPath};
+pub use tfc::Vl;

@@ -1,0 +1,187 @@
+//! Shortest-Path-First baseline routing (Fig 10-a, Table 4).
+//!
+//! Enumerates equal-cost shortest paths over the BFS DAG (capped), the
+//! strategy the paper contrasts APR against: "Traditional routing
+//! strategies like Shortest-Path First routing often underutilize
+//! network bandwidth and are susceptible to link failures."
+
+use crate::topology::{NodeId, Topology};
+
+use super::apr::{PathKind, RoutedPath};
+use super::tfc::routing_dims;
+
+/// All shortest paths from `src` to `dst` (up to `cap`), NPU-routable.
+pub fn shortest_paths(
+    t: &Topology,
+    src: NodeId,
+    dst: NodeId,
+    cap: usize,
+    npu_routable: bool,
+) -> Vec<RoutedPath> {
+    if src == dst {
+        return vec![];
+    }
+    // BFS distances from src.
+    let dist = {
+        let mut dist = vec![u32::MAX; t.node_count()];
+        let mut q = std::collections::VecDeque::new();
+        dist[src.idx()] = 0;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            if u != src && !npu_routable && t.node(u).kind.is_npu() {
+                continue;
+            }
+            for &(v, _) in t.neighbors(u) {
+                if dist[v.idx()] == u32::MAX {
+                    dist[v.idx()] = dist[u.idx()] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    };
+    if dist[dst.idx()] == u32::MAX {
+        return vec![];
+    }
+    // DFS backwards over the shortest-path DAG.
+    let mut out = Vec::new();
+    let mut stack = vec![vec![dst]];
+    while let Some(partial) = stack.pop() {
+        if out.len() >= cap {
+            break;
+        }
+        let head = *partial.last().unwrap();
+        if head == src {
+            let mut nodes = partial.clone();
+            nodes.reverse();
+            let dims = routing_dims(t, &nodes);
+            out.push(RoutedPath {
+                nodes,
+                kind: PathKind::Direct,
+                dims,
+            });
+            continue;
+        }
+        for &(v, _) in t.neighbors(head) {
+            let interior_ok = v == src || npu_routable || !t.node(v).kind.is_npu();
+            if dist[v.idx()] + 1 == dist[head.idx()] && interior_ok {
+                let mut next = partial.clone();
+                next.push(v);
+                stack.push(next);
+            }
+        }
+    }
+    out
+}
+
+/// Up to `k` link-disjoint shortest paths between `a` and `b` (greedy:
+/// BFS, remove used links, repeat). Models the UB IO controller spraying
+/// a logical transfer across the backplane planes (e.g. reaching the
+/// 64+1 backup NPU at full bandwidth, Fig 9).
+pub fn k_disjoint_paths(
+    t: &Topology,
+    a: NodeId,
+    b: NodeId,
+    k: usize,
+    npu_routable: bool,
+) -> Vec<Vec<NodeId>> {
+    let mut banned: std::collections::HashSet<crate::topology::LinkId> =
+        std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for _ in 0..k {
+        // BFS avoiding banned links.
+        let mut prev = vec![NodeId(u32::MAX); t.node_count()];
+        let mut seen = vec![false; t.node_count()];
+        let mut q = std::collections::VecDeque::new();
+        seen[a.idx()] = true;
+        q.push_back(a);
+        let mut found = false;
+        'bfs: while let Some(u) = q.pop_front() {
+            if u != a && !npu_routable && t.node(u).kind.is_npu() {
+                continue;
+            }
+            for &(v, l) in t.neighbors(u) {
+                if banned.contains(&l) || seen[v.idx()] {
+                    continue;
+                }
+                seen[v.idx()] = true;
+                prev[v.idx()] = u;
+                if v == b {
+                    found = true;
+                    break 'bfs;
+                }
+                q.push_back(v);
+            }
+        }
+        if !found {
+            break;
+        }
+        let mut path = vec![b];
+        let mut cur = b;
+        while cur != a {
+            cur = prev[cur.idx()];
+            path.push(cur);
+        }
+        path.reverse();
+        for w in path.windows(2) {
+            banned.insert(t.link_between(w[0], w[1]).unwrap());
+        }
+        out.push(path);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    fn mesh() -> Topology {
+        nd_fullmesh(
+            "m44",
+            &[
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn diagonal_pair_has_two_shortest() {
+        let t = mesh();
+        // node (x,y) = y*4+x; (0,0) → (1,1)
+        let ps = shortest_paths(&t, NodeId(0), NodeId(5), 16, true);
+        assert_eq!(ps.len(), 2);
+        assert!(ps.iter().all(|p| p.hops() == 2));
+    }
+
+    #[test]
+    fn aligned_pair_has_one_shortest() {
+        let t = mesh();
+        let ps = shortest_paths(&t, NodeId(0), NodeId(3), 16, true);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].hops(), 1);
+    }
+
+    #[test]
+    fn cap_respected() {
+        let t = mesh();
+        let ps = shortest_paths(&t, NodeId(0), NodeId(5), 1, true);
+        assert_eq!(ps.len(), 1);
+    }
+
+    #[test]
+    fn disjoint_paths_share_no_links() {
+        let t = mesh();
+        let paths = k_disjoint_paths(&t, NodeId(0), NodeId(5), 4, true);
+        assert!(paths.len() >= 2);
+        let mut used = std::collections::HashSet::new();
+        for p in &paths {
+            for w in p.windows(2) {
+                let l = t.link_between(w[0], w[1]).unwrap();
+                assert!(used.insert(l), "link reused across disjoint paths");
+            }
+        }
+    }
+}

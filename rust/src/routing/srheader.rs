@@ -1,0 +1,180 @@
+//! The 8-byte Source Routing header, bit-exact to Fig 11.
+//!
+//! Word 0 (bytes 0..4, little-endian bit numbering within bytes):
+//!   * byte 0 low nibble — `ptr` (4 bits): current hop index.
+//!   * byte 0 high nibble + byte 1 — `bitmap` (12 bits): bit *i* = 1
+//!     means hop *i* is SR-forwarded, 0 means traditional (table)
+//!     forwarding.
+//!   * bytes 2, 3 — `instruction[0]`, `instruction[1]`.
+//! Word 1 (bytes 4..8) — `instruction[2..=5]`.
+//!
+//! "In case of SR forwarding, the Bitmap field is also used to locate one
+//! of the six instruction fields": the instruction index for hop *i* is
+//! the number of SR hops *before* it, i.e. `popcount(bitmap[0..i])` —
+//! only SR hops consume instruction slots, so up to 12 hops can mix
+//! table-forwarding with at most 6 SR instructions in one header.
+
+/// Max hops addressable by the 4-bit `ptr` / 12-bit bitmap.
+pub const MAX_HOPS: usize = 12;
+/// Instruction slots in the header.
+pub const MAX_INSTR: usize = 6;
+
+/// Decoded SR header.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct SrHeader {
+    /// Current hop (0..12), incremented by each router.
+    pub ptr: u8,
+    /// Per-hop SR/traditional selector bits (12 valid bits).
+    pub bitmap: u16,
+    /// Forwarding instructions (output-port selectors) for SR hops.
+    pub instr: [u8; MAX_INSTR],
+}
+
+/// Per-hop forwarding decision decoded by a router.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum HopMode {
+    /// SR-forward out of the given port selector.
+    Source(u8),
+    /// Look the destination up in the routing table.
+    Table,
+}
+
+impl SrHeader {
+    /// Build a header for a path expressed as per-hop decisions.
+    /// Panics if more than [`MAX_HOPS`] hops or [`MAX_INSTR`] SR hops.
+    pub fn for_path(hops: &[HopMode]) -> SrHeader {
+        assert!(hops.len() <= MAX_HOPS, "path too long for SR header");
+        let mut h = SrHeader::default();
+        let mut slot = 0usize;
+        for (i, hop) in hops.iter().enumerate() {
+            if let HopMode::Source(port) = hop {
+                assert!(slot < MAX_INSTR, "more than 6 SR hops");
+                h.bitmap |= 1 << i;
+                h.instr[slot] = *port;
+                slot += 1;
+            }
+        }
+        h
+    }
+
+    /// Encode to the 8-byte wire format.
+    pub fn encode(&self) -> [u8; 8] {
+        debug_assert!(self.ptr < 16);
+        debug_assert!(self.bitmap < (1 << 12));
+        let word0: u32 = (self.ptr as u32 & 0xF)
+            | ((self.bitmap as u32 & 0xFFF) << 4)
+            | ((self.instr[0] as u32) << 16)
+            | ((self.instr[1] as u32) << 24);
+        let mut out = [0u8; 8];
+        out[..4].copy_from_slice(&word0.to_le_bytes());
+        out[4..].copy_from_slice(&self.instr[2..6]);
+        out
+    }
+
+    /// Decode from the 8-byte wire format.
+    pub fn decode(bytes: &[u8; 8]) -> SrHeader {
+        let word0 = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+        let mut instr = [0u8; MAX_INSTR];
+        instr[0] = ((word0 >> 16) & 0xFF) as u8;
+        instr[1] = ((word0 >> 24) & 0xFF) as u8;
+        instr[2..6].copy_from_slice(&bytes[4..8]);
+        SrHeader {
+            ptr: (word0 & 0xF) as u8,
+            bitmap: ((word0 >> 4) & 0xFFF) as u16,
+            instr,
+        }
+    }
+
+    /// The forwarding decision at the current hop.
+    pub fn current(&self) -> HopMode {
+        let i = self.ptr as usize;
+        debug_assert!(i < MAX_HOPS);
+        if self.bitmap & (1 << i) != 0 {
+            // Instruction index = number of SR hops strictly before i.
+            let below = (self.bitmap & ((1u16 << i) - 1)).count_ones() as usize;
+            HopMode::Source(self.instr[below])
+        } else {
+            HopMode::Table
+        }
+    }
+
+    /// Router-side: consume the current hop.
+    pub fn advance(&mut self) {
+        debug_assert!((self.ptr as usize) < MAX_HOPS);
+        self.ptr += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn header_is_8_bytes() {
+        assert_eq!(std::mem::size_of::<[u8; 8]>(), 8);
+        let h = SrHeader::for_path(&[HopMode::Source(3), HopMode::Table]);
+        assert_eq!(h.encode().len(), 8);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        forall("sr roundtrip", 512, |rng| {
+            let h = SrHeader {
+                ptr: rng.below(12) as u8,
+                bitmap: rng.below(1 << 12) as u16,
+                instr: [
+                    rng.below(256) as u8,
+                    rng.below(256) as u8,
+                    rng.below(256) as u8,
+                    rng.below(256) as u8,
+                    rng.below(256) as u8,
+                    rng.below(256) as u8,
+                ],
+            };
+            assert_eq!(SrHeader::decode(&h.encode()), h);
+        });
+    }
+
+    #[test]
+    fn mixed_sr_and_table_hops_walk_correctly() {
+        let hops = [
+            HopMode::Source(7),
+            HopMode::Table,
+            HopMode::Source(2),
+            HopMode::Source(9),
+            HopMode::Table,
+        ];
+        let mut h = SrHeader::for_path(&hops);
+        for expect in hops {
+            assert_eq!(h.current(), expect);
+            h.advance();
+        }
+    }
+
+    #[test]
+    fn instruction_slots_are_compacted() {
+        // SR hops at positions 0 and 11 should use instr[0] and instr[1].
+        let mut hops = vec![HopMode::Table; 12];
+        hops[0] = HopMode::Source(42);
+        hops[11] = HopMode::Source(99);
+        let mut h = SrHeader::for_path(&hops);
+        assert_eq!(h.current(), HopMode::Source(42));
+        for _ in 0..11 {
+            h.advance();
+        }
+        assert_eq!(h.current(), HopMode::Source(99));
+    }
+
+    #[test]
+    #[should_panic(expected = "more than 6 SR hops")]
+    fn seven_sr_hops_rejected() {
+        SrHeader::for_path(&[HopMode::Source(0); 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "path too long")]
+    fn thirteen_hops_rejected() {
+        SrHeader::for_path(&[HopMode::Table; 13]);
+    }
+}

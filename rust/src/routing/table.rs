@@ -1,0 +1,328 @@
+//! Forwarding tables: the paper's Structured-Addressing + Linear-Table
+//! lookup (§4.1.2) vs a Longest-Prefix-Match trie baseline (Table 4).
+//!
+//! The linear table stores one entry per *segment* (pod / rack / board)
+//! plus a dense next-hop array indexed by the address offset within the
+//! local segment — "only the short segment address needs to be stored,
+//! and NPUs can be addressed via linear offsets relative to the segment
+//! address". Lookup is a handful of compares + one array index; the LPM
+//! trie walks up to 32 bit-levels. `benches/table4_routing.rs` measures
+//! the gap.
+
+use super::address::UbAddr;
+
+/// A next-hop handle (output-port index in the router's port array).
+pub type Port = u16;
+
+/// One route segment: all addresses sharing `prefix` (top `bits` bits).
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub prefix: u32,
+    pub bits: u32,
+    /// Dense next-hop entries for this segment, or a single port for the
+    /// whole segment (remote segments need no per-NPU resolution).
+    pub route: SegmentRoute,
+}
+
+#[derive(Clone, Debug)]
+pub enum SegmentRoute {
+    /// Whole segment exits through one port (remote pod/rack).
+    Aggregate(Port),
+    /// Local segment: per-offset next hops, indexed by
+    /// `UbAddr::rack_offset()` (dense, `O(1)`).
+    Linear { base_shift: u32, ports: Vec<Port> },
+}
+
+/// Linear segment table (§4.1.2). Segments are checked most-specific
+/// first; the expected configuration has very few segments (local board,
+/// local rack, one per remote rack/pod), so the scan is short and
+/// branch-predictable.
+#[derive(Clone, Debug, Default)]
+pub struct LinearTable {
+    /// Sorted by descending prefix length (most specific first).
+    segments: Vec<Segment>,
+}
+
+impl LinearTable {
+    pub fn add(&mut self, seg: Segment) {
+        self.segments.push(seg);
+        self.segments.sort_by(|a, b| b.bits.cmp(&a.bits));
+    }
+
+    /// Number of table entries (segments + dense slots): the paper's
+    /// "significantly reduces table space" claim is measured on this.
+    pub fn size(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match &s.route {
+                SegmentRoute::Aggregate(_) => 1,
+                SegmentRoute::Linear { ports, .. } => 1 + ports.len(),
+            })
+            .sum()
+    }
+
+    #[inline]
+    pub fn lookup(&self, addr: UbAddr) -> Option<Port> {
+        for seg in &self.segments {
+            let shift = 32 - seg.bits;
+            if addr.0 >> shift == seg.prefix >> shift {
+                return Some(match &seg.route {
+                    SegmentRoute::Aggregate(p) => *p,
+                    SegmentRoute::Linear { base_shift, ports } => {
+                        // Dense offset within the segment; bounded by
+                        // construction (offset space == ports.len()).
+                        let idx = ((addr.0 >> *base_shift) as usize) % ports.len();
+                        ports[idx]
+                    }
+                });
+            }
+        }
+        None
+    }
+}
+
+/// Fully-indexed structured table — the production form of §4.1.2.
+///
+/// The segment a destination belongs to is *computed* from its address
+/// fields (pod / rack / offset), not searched: lookup is two compares
+/// plus one array index, independent of table size. This is what makes
+/// NPU-side forwarding cheap enough for "each NPU is also a router".
+#[derive(Clone, Debug)]
+pub struct StructuredTable {
+    local_pod: u16,
+    local_rack: u8,
+    /// Exit port per remote pod.
+    pod_ports: Vec<Option<Port>>,
+    /// Exit port per remote rack within the local pod.
+    rack_ports: Vec<Option<Port>>,
+    /// Dense per-endpoint ports within the local rack, indexed by
+    /// `UbAddr::rack_offset()`.
+    local_ports: Vec<Port>,
+}
+
+impl StructuredTable {
+    pub fn new(local_pod: u16, local_rack: u8) -> StructuredTable {
+        StructuredTable {
+            local_pod,
+            local_rack,
+            pod_ports: vec![None; 1 << super::address::POD_BITS],
+            rack_ports: vec![None; 1 << super::address::RACK_BITS],
+            local_ports: vec![0; 1 << (super::address::BOARD_BITS + super::address::SLOT_BITS)],
+        }
+    }
+
+    pub fn set_pod_route(&mut self, pod: u16, port: Port) {
+        self.pod_ports[pod as usize] = Some(port);
+    }
+
+    pub fn set_rack_route(&mut self, rack: u8, port: Port) {
+        self.rack_ports[rack as usize] = Some(port);
+    }
+
+    pub fn set_local_route(&mut self, board: u8, slot: u8, port: Port) {
+        let off = ((board as usize) << super::address::SLOT_BITS) | slot as usize;
+        self.local_ports[off] = port;
+    }
+
+    /// Entry count (the "significantly reduces table space" metric): one
+    /// aggregate per pod/rack plus the dense local block.
+    pub fn size(&self) -> usize {
+        self.pod_ports.iter().flatten().count()
+            + self.rack_ports.iter().flatten().count()
+            + self.local_ports.len()
+    }
+
+    #[inline]
+    pub fn lookup(&self, addr: UbAddr) -> Option<Port> {
+        if addr.pod() != self.local_pod {
+            return self.pod_ports[addr.pod() as usize];
+        }
+        if addr.rack() != self.local_rack {
+            return self.rack_ports[addr.rack() as usize];
+        }
+        Some(self.local_ports[addr.rack_offset() as usize])
+    }
+}
+
+/// Longest-prefix-match binary trie (the "LPM with BGP" baseline row of
+/// Table 4).
+#[derive(Clone, Debug, Default)]
+pub struct LpmTrie {
+    nodes: Vec<TrieNode>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct TrieNode {
+    children: [u32; 2], // 0 = none
+    port: Option<Port>,
+}
+
+impl LpmTrie {
+    pub fn new() -> LpmTrie {
+        LpmTrie {
+            nodes: vec![TrieNode::default()],
+        }
+    }
+
+    pub fn insert(&mut self, prefix: u32, bits: u32, port: Port) {
+        let mut cur = 0usize;
+        for i in 0..bits {
+            let b = ((prefix >> (31 - i)) & 1) as usize;
+            if self.nodes[cur].children[b] == 0 {
+                self.nodes.push(TrieNode::default());
+                let idx = (self.nodes.len() - 1) as u32;
+                self.nodes[cur].children[b] = idx;
+            }
+            cur = self.nodes[cur].children[b] as usize;
+        }
+        self.nodes[cur].port = Some(port);
+    }
+
+    pub fn size(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn lookup(&self, addr: UbAddr) -> Option<Port> {
+        let mut cur = 0usize;
+        let mut best = self.nodes[0].port;
+        for i in 0..32 {
+            let b = ((addr.0 >> (31 - i)) & 1) as usize;
+            let next = self.nodes[cur].children[b];
+            if next == 0 {
+                break;
+            }
+            cur = next as usize;
+            if let Some(p) = self.nodes[cur].port {
+                best = Some(p);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn local_rack_table() -> LinearTable {
+        // Local rack segment 0.0.*: dense per-(board,slot) ports; remote
+        // rack 0.1.* aggregated to port 100.
+        let mut t = LinearTable::default();
+        let local = UbAddr::new(0, 0, 0, 0, 0);
+        let (prefix, bits) = local.rack_segment();
+        // offsets: (board<<5|slot) — dense 8×32 table.
+        let mut ports = vec![0u16; 8 * 32];
+        for b in 0..8u32 {
+            for s in 0..32u32 {
+                ports[(b * 32 + s) as usize] = (b * 32 + s) as u16;
+            }
+        }
+        t.add(Segment {
+            prefix,
+            bits,
+            route: SegmentRoute::Linear {
+                base_shift: super::super::address::KIND_BITS,
+                ports,
+            },
+        });
+        let remote = UbAddr::new(0, 1, 0, 0, 0);
+        let (rp, rb) = remote.rack_segment();
+        t.add(Segment {
+            prefix: rp,
+            bits: rb,
+            route: SegmentRoute::Aggregate(100),
+        });
+        t
+    }
+
+    #[test]
+    fn linear_lookup_resolves_local_and_remote() {
+        let t = local_rack_table();
+        let a = UbAddr::new(0, 0, 3, 7, 0);
+        assert_eq!(t.lookup(a), Some((3 * 32 + 7) as u16));
+        let r = UbAddr::new(0, 1, 5, 5, 0);
+        assert_eq!(t.lookup(r), Some(100));
+        let miss = UbAddr::new(2, 0, 0, 0, 0);
+        assert_eq!(t.lookup(miss), None);
+    }
+
+    #[test]
+    fn linear_and_lpm_agree() {
+        let lin = local_rack_table();
+        let mut lpm = LpmTrie::new();
+        // Mirror the same routes into the trie: per-NPU host routes for
+        // the local rack + one aggregate.
+        for b in 0..8u8 {
+            for s in 0..32u8 {
+                let a = UbAddr::new(0, 0, b, s, 0);
+                let (p, bits) = a.board_segment();
+                let _ = (p, bits);
+                lpm.insert(a.0, 32, (b as u16) * 32 + s as u16);
+            }
+        }
+        let remote = UbAddr::new(0, 1, 0, 0, 0);
+        let (rp, rb) = remote.rack_segment();
+        lpm.insert(rp, rb, 100);
+
+        forall("linear == lpm", 512, |rng| {
+            let b = rng.below(8) as u8;
+            let s = rng.below(32) as u8;
+            let a = UbAddr::new(0, 0, b, s, 0);
+            assert_eq!(lin.lookup(a), lpm.lookup(a));
+            let r = UbAddr::new(0, 1, b, s, 0);
+            assert_eq!(lin.lookup(r), lpm.lookup(r));
+        });
+    }
+
+    #[test]
+    fn structured_table_is_o1_and_agrees_with_lpm() {
+        let mut st = StructuredTable::new(0, 0);
+        for b in 0..8u8 {
+            for s in 0..32u8 {
+                st.set_local_route(b, s, (b as u16) * 32 + s as u16);
+            }
+        }
+        st.set_rack_route(1, 100);
+        st.set_pod_route(2, 200);
+        let mut lpm = LpmTrie::new();
+        for b in 0..8u8 {
+            for s in 0..32u8 {
+                lpm.insert(UbAddr::new(0, 0, b, s, 0).0, 32, (b as u16) * 32 + s as u16);
+            }
+        }
+        let r = UbAddr::new(0, 1, 0, 0, 0);
+        lpm.insert(r.rack_segment().0, r.rack_segment().1, 100);
+        let p = UbAddr::new(2, 0, 0, 0, 0);
+        lpm.insert(p.pod_segment().0, p.pod_segment().1, 200);
+
+        forall("structured == lpm", 512, |rng| {
+            let b = rng.below(8) as u8;
+            let s = rng.below(32) as u8;
+            for a in [
+                UbAddr::new(0, 0, b, s, 0),
+                UbAddr::new(0, 1, b, s, 0),
+                UbAddr::new(2, 0, b, s, 0),
+            ] {
+                assert_eq!(st.lookup(a), lpm.lookup(a), "{a}");
+            }
+        });
+        // Unrouted destinations miss cleanly.
+        assert_eq!(st.lookup(UbAddr::new(5, 0, 0, 0, 0)), None);
+    }
+
+    #[test]
+    fn linear_table_much_smaller_than_host_routes() {
+        let lin = local_rack_table();
+        let mut lpm = LpmTrie::new();
+        for b in 0..8u8 {
+            for s in 0..32u8 {
+                lpm.insert(UbAddr::new(0, 0, b, s, 0).0, 32, 1);
+            }
+        }
+        // Trie needs hundreds of internal nodes; linear table ~ dense
+        // array + 2 segment headers.
+        assert!(lpm.size() > lin.size(), "lpm {} lin {}", lpm.size(), lin.size());
+    }
+}

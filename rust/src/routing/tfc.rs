@@ -1,0 +1,317 @@
+//! TFC — Topology-aware deadlock-Free flow Control (§4.1.3).
+//!
+//! "The TFC algorithm models deadlocks using the Channel Dependency
+//! Graph (CDG) ... enabling deadlock-free all-path routing with only 2
+//! VL resources."
+//!
+//! Mechanism reproduced here:
+//!
+//! 1. Every hop of a path gets a *routing dimension*: mesh hops use
+//!    their nD-FullMesh dimension (X=0, Y=1, Z=2, α=3); switch-fabric
+//!    hops are numbered so that a tree traversal is ascending
+//!    (up-to-LRS=4, across/up-to-HRS=5, down-to-LRS=6, down-to-NPU=7).
+//! 2. [`assign_vls`] walks the hop dimensions: VL0 while the sequence is
+//!    strictly increasing (pure dimension-ordered), and switches
+//!    permanently to VL1 at the first violation — the *escape* lane.
+//!    Within VL1 the remaining hops must again be strictly increasing;
+//!    paths that would need a second restart are rejected (the APR
+//!    generators never emit them).
+//! 3. [`Cdg`] builds the channel-dependency graph over (channel, VL)
+//!    pairs and [`Cdg::is_acyclic`] verifies deadlock freedom. Both VL
+//!    classes are acyclic because strict dimension order induces a
+//!    topological order on channels, and VL transitions only go 0 → 1.
+
+use std::collections::HashMap;
+
+use crate::topology::{Channel, NodeId, NodeKind, Topology};
+
+use super::apr::RoutedPath;
+
+/// Virtual lane id (the paper needs only 2).
+pub type Vl = u8;
+
+/// Escape-VL assignment. Returns one VL per hop, or `None` if the hop
+/// dimension sequence needs more than 2 VLs.
+pub fn assign_vls(dims: &[u8]) -> Option<Vec<Vl>> {
+    let mut vls = Vec::with_capacity(dims.len());
+    let mut vl: Vl = 0;
+    let mut last: i32 = -1;
+    for &d in dims {
+        if (d as i32) <= last {
+            if vl == 1 {
+                return None; // second restart: >2 VLs required
+            }
+            vl = 1;
+        }
+        last = d as i32;
+        vls.push(vl);
+    }
+    Some(vls)
+}
+
+/// Rank used to orient switch-fabric hops (NPU < LRS < HRS).
+fn rank(kind: NodeKind) -> u8 {
+    match kind {
+        NodeKind::Npu | NodeKind::BackupNpu | NodeKind::Cpu => 0,
+        NodeKind::Lrs => 1,
+        NodeKind::Hrs | NodeKind::DcnSwitch => 2,
+    }
+}
+
+/// Compute per-hop routing dimensions for a physical node path.
+///
+/// Mesh (NPU↔NPU) hops take their link-role dimension (X=0 … α=3).
+/// Every hop that touches a switch belongs to the *fabric segment* and
+/// gets a strictly ascending dimension (4, 5, 6, …): up/down traversals
+/// of the LRS/HRS fabric follow a tree-like canonical order (board-LRS →
+/// inter-rack-LRS → Z/α bundle → peer LRS → NPU), so monotone numbering
+/// encodes "no packet re-enters an earlier fabric stage" — the
+/// topology-steering rule TFC's subgraph decomposition relies on. Any
+/// violation of that order in an actual path set would surface as a CDG
+/// cycle in [`verify_deadlock_free`], which tests run over all generated
+/// path families.
+pub fn routing_dims(t: &Topology, nodes: &[NodeId]) -> Vec<u8> {
+    let mut fabric_step: u8 = 4;
+    nodes
+        .windows(2)
+        .map(|w| {
+            let (a, b) = (t.node(w[0]).kind, t.node(w[1]).kind);
+            let (ra, rb) = (rank(a), rank(b));
+            if ra == 0 && rb == 0 {
+                // NPU↔NPU mesh hop: use the link's dimension.
+                let l = t.link_between(w[0], w[1]).expect("mesh hop not adjacent");
+                t.link(l).role.dim().min(3)
+            } else {
+                let d = fabric_step;
+                fabric_step = fabric_step.saturating_add(1);
+                d
+            }
+        })
+        .collect()
+}
+
+/// Channel-dependency graph over (channel, VL) vertices.
+#[derive(Default, Debug)]
+pub struct Cdg {
+    /// vertex -> outgoing dependency edges.
+    edges: HashMap<(Channel, Vl), Vec<(Channel, Vl)>>,
+}
+
+impl Cdg {
+    /// Add one path's dependencies: consecutive hop channels depend on
+    /// each other (holding hop i's buffer while requesting hop i+1's).
+    pub fn add_path(&mut self, t: &Topology, nodes: &[NodeId], vls: &[Vl]) {
+        let mut chans = Vec::with_capacity(nodes.len() - 1);
+        for w in nodes.windows(2) {
+            let l = t
+                .link_between(w[0], w[1])
+                .unwrap_or_else(|| panic!("hop {}-{} not adjacent", w[0], w[1]));
+            let rev = t.link(l).a != w[0];
+            chans.push(Channel { link: l, rev });
+        }
+        for i in 0..chans.len().saturating_sub(1) {
+            self.edges
+                .entry((chans[i], vls[i]))
+                .or_default()
+                .push((chans[i + 1], vls[i + 1]));
+        }
+        // Ensure sinks exist as vertices too.
+        if let Some(&last) = chans.last() {
+            self.edges.entry((last, vls[chans.len() - 1])).or_default();
+        }
+    }
+
+    pub fn vertex_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Cycle detection (iterative DFS, 3-color).
+    pub fn is_acyclic(&self) -> bool {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Color {
+            White,
+            Gray,
+            Black,
+        }
+        let keys: Vec<_> = self.edges.keys().copied().collect();
+        let mut color: HashMap<(Channel, Vl), Color> =
+            keys.iter().map(|&k| (k, Color::White)).collect();
+        for &start in &keys {
+            if color[&start] != Color::White {
+                continue;
+            }
+            // stack of (vertex, next-child-index)
+            let mut stack = vec![(start, 0usize)];
+            color.insert(start, Color::Gray);
+            while let Some(&(v, ci)) = stack.last() {
+                let children = &self.edges[&v];
+                if ci < children.len() {
+                    stack.last_mut().unwrap().1 += 1;
+                    let c = children[ci];
+                    match color.get(&c).copied().unwrap_or(Color::White) {
+                        Color::Gray => return false,
+                        Color::White => {
+                            color.insert(c, Color::Gray);
+                            stack.push((c, 0));
+                        }
+                        Color::Black => {}
+                    }
+                } else {
+                    color.insert(v, Color::Black);
+                    stack.pop();
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Full TFC check for a set of routed paths: assign VLs per path and
+/// verify the joint CDG is acyclic. Returns the per-path VL assignments.
+pub fn verify_deadlock_free(
+    t: &Topology,
+    paths: &[RoutedPath],
+) -> Result<Vec<Vec<Vl>>, String> {
+    let mut cdg = Cdg::default();
+    let mut all = Vec::with_capacity(paths.len());
+    for p in paths {
+        let dims = if p.dims.len() == p.nodes.len() - 1 {
+            p.dims.clone()
+        } else {
+            routing_dims(t, &p.nodes)
+        };
+        let vls = assign_vls(&dims)
+            .ok_or_else(|| format!("path {:?} dims {dims:?} needs >2 VLs", p.nodes))?;
+        if vls.iter().any(|&v| v > 1) {
+            return Err("VL out of range".into());
+        }
+        cdg.add_path(t, &p.nodes, &vls);
+        all.push(vls);
+    }
+    if cdg.is_acyclic() {
+        Ok(all)
+    } else {
+        Err("channel dependency graph has a cycle".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::apr::{paths_2d, to_routed};
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn vl_assignment_examples() {
+        assert_eq!(assign_vls(&[0, 1]), Some(vec![0, 0])); // X,Y pure DOR
+        assert_eq!(assign_vls(&[1, 0]), Some(vec![0, 1])); // Y,X escape
+        assert_eq!(assign_vls(&[0, 1, 0]), Some(vec![0, 0, 1])); // X,Y,X
+        assert_eq!(assign_vls(&[0, 0]), Some(vec![0, 1])); // X relay
+        assert_eq!(assign_vls(&[1, 0, 1]), Some(vec![0, 1, 1])); // Y,X,Y
+        assert_eq!(assign_vls(&[1, 0, 0]), None); // would need 3 VLs
+    }
+
+    fn mesh_8x8() -> Topology {
+        nd_fullmesh(
+            "m88",
+            &[
+                DimSpec::new(8, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(8, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn all_pairs_apr_on_rack_mesh_is_deadlock_free_with_2_vls() {
+        let t = mesh_8x8();
+        let node = |x: usize, y: usize| crate::topology::NodeId((y * 8 + x) as u32);
+        let mut paths = Vec::new();
+        for s in 0..64usize {
+            for d in 0..64usize {
+                if s == d {
+                    continue;
+                }
+                let (sx, sy) = (s % 8, s / 8);
+                let (dx, dy) = (d % 8, d / 8);
+                for mp in paths_2d((sx, sy), (dx, dy), 8, 8, true) {
+                    paths.push(to_routed(&mp, node));
+                }
+            }
+        }
+        assert!(paths.len() > 40_000, "APR should expose many paths");
+        let vls = verify_deadlock_free(&t, &paths).expect("deadlock-free");
+        assert!(vls.iter().flatten().all(|&v| v <= 1));
+    }
+
+    #[test]
+    fn single_vl_all_path_routing_deadlocks() {
+        // Sanity: the escape VL is *necessary* — forcing everything onto
+        // VL0 creates a CDG cycle for the 2-hop relay paths.
+        let t = mesh_8x8();
+        let node = |x: usize, y: usize| crate::topology::NodeId((y * 8 + x) as u32);
+        let mut cdg = Cdg::default();
+        for (s, d) in [(0usize, 2usize), (2, 4), (4, 0)] {
+            // same-row relays: 0→1→2, 2→3→4, 4→5→0 style chains
+            let mid = (s + 1) % 8;
+            let nodes = vec![node(s, 0), node(mid, 0), node(d, 0)];
+            cdg.add_path(&t, &nodes, &[0, 0]);
+        }
+        // These particular relays don't collide; build a genuine 3-cycle:
+        let mut cdg2 = Cdg::default();
+        cdg2.add_path(&t, &[node(0, 0), node(1, 0), node(2, 0)], &[0, 0]);
+        cdg2.add_path(&t, &[node(1, 0), node(2, 0), node(0, 0)], &[0, 0]);
+        cdg2.add_path(&t, &[node(2, 0), node(0, 0), node(1, 0)], &[0, 0]);
+        assert!(!cdg2.is_acyclic(), "single-VL relay ring must deadlock");
+        // With escape VLs the same paths are fine.
+        let paths: Vec<RoutedPath> = [
+            vec![node(0, 0), node(1, 0), node(2, 0)],
+            vec![node(1, 0), node(2, 0), node(0, 0)],
+            vec![node(2, 0), node(0, 0), node(1, 0)],
+        ]
+        .into_iter()
+        .map(|nodes| RoutedPath {
+            nodes,
+            kind: crate::routing::PathKind::Detour,
+            dims: vec![0, 0],
+        })
+        .collect();
+        verify_deadlock_free(&t, &paths).expect("2 VLs break the ring");
+    }
+
+    #[test]
+    fn random_path_subsets_stay_deadlock_free() {
+        let t = mesh_8x8();
+        let node = |x: usize, y: usize| crate::topology::NodeId((y * 8 + x) as u32);
+        forall("random APR subsets deadlock-free", 32, |rng| {
+            let mut paths = Vec::new();
+            for _ in 0..rng.range(10, 200) {
+                let s = (rng.range(0, 8), rng.range(0, 8));
+                let d = (rng.range(0, 8), rng.range(0, 8));
+                if s == d {
+                    continue;
+                }
+                let all = paths_2d(s, d, 8, 8, true);
+                let pick = rng.range(0, all.len());
+                paths.push(to_routed(&all[pick], node));
+            }
+            if !paths.is_empty() {
+                verify_deadlock_free(&t, &paths).unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn switch_hops_get_tree_dims() {
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        // NPU → board LRS → (mesh) → backup LRS → backup NPU
+        let src = h.npus[0];
+        let backup = h.backup.unwrap();
+        let path = t.shortest_path(src, backup, true).unwrap();
+        let dims = routing_dims(&t, &path);
+        // Ascending through the fabric, so VL0 end-to-end or one escape.
+        assert!(assign_vls(&dims).is_some(), "dims {dims:?}");
+    }
+}

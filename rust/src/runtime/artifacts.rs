@@ -1,0 +1,300 @@
+//! Typed wrappers over the AOT artifacts and the PJRT-backed batch cost
+//! evaluator used by the parallelization search.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::workload::models::ModelConfig;
+use crate::workload::placement::{Placement, TierBandwidth, NTIERS};
+use crate::workload::step::{CCU_OVERLAP, COMPUTE_EFFICIENCY, DP_OVERLAP, NPU_PEAK_TFLOPS};
+use crate::workload::traffic::{analyze, ParallelismConfig};
+use crate::topology::ublink::MESSAGE_ALPHA_US;
+
+use super::client::{Engine, Exe};
+
+/// Fixed artifact shapes — must match `python/compile/model.py`.
+pub const APSP_SMALL: usize = 64;
+pub const APSP_LARGE: usize = 256;
+pub const COST_BATCH: usize = 256;
+pub const COST_TIERS: usize = 6;
+pub const LOAD_PATHS: usize = 1024;
+pub const LOAD_LINKS: usize = 512;
+
+/// INF sentinel shared with `python/compile/kernels/ref.py`.
+pub const INF: f32 = 1.0e9;
+
+/// All compiled entry points.
+pub struct Artifacts {
+    pub engine: Engine,
+    apsp64: Exe,
+    apsp256: Exe,
+    costmodel: Exe,
+    linkload: Exe,
+}
+
+impl Artifacts {
+    /// Load from `dir` (usually `<repo>/artifacts`). Fails with a clear
+    /// message when `make artifacts` hasn't been run.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        if !dir.join("manifest.txt").exists() {
+            bail!(
+                "{} has no manifest.txt — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let engine = Engine::cpu()?;
+        let load = |name: &str| -> Result<Exe> {
+            engine.load_hlo_text(&dir.join(format!("{name}.hlo.txt")))
+        };
+        Ok(Artifacts {
+            apsp64: load("apsp64")?,
+            apsp256: load("apsp256")?,
+            costmodel: load("costmodel")?,
+            linkload: load("linkload")?,
+            engine,
+        })
+    }
+
+    /// Default artifact directory (crate root / artifacts).
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// All-pairs shortest hops of an n-node adjacency (n ≤ 256; padded
+    /// with INF to the artifact shape). `adj[i*n + j]` = hop cost, INF
+    /// when unconnected; diagonal forced to 0 by the model.
+    pub fn apsp(&self, adj: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (exe, m) = if n <= APSP_SMALL {
+            (&self.apsp64, APSP_SMALL)
+        } else if n <= APSP_LARGE {
+            (&self.apsp256, APSP_LARGE)
+        } else {
+            bail!("apsp artifact supports ≤ {APSP_LARGE} nodes, got {n}");
+        };
+        assert_eq!(adj.len(), n * n);
+        let mut padded = vec![INF; m * m];
+        for i in 0..n {
+            padded[i * m..i * m + n].copy_from_slice(&adj[i * n..(i + 1) * n]);
+        }
+        let out = exe.run_f32(&[(&padded, &[m, m])])?;
+        // un-pad
+        let mut result = vec![0.0f32; n * n];
+        for i in 0..n {
+            result[i * n..(i + 1) * n].copy_from_slice(&out[i * m..i * m + n]);
+        }
+        Ok(result)
+    }
+
+    /// Raw batched cost model: all arrays in the fixed [B, T] layout.
+    pub fn cost_model_raw(&self, b: &CostBatch) -> Result<Vec<f32>> {
+        self.costmodel.run_f32(&[
+            (&b.volumes, &[COST_BATCH, COST_TIERS]),
+            (&b.bandwidths, &[COST_BATCH, COST_TIERS]),
+            (&b.transfers, &[COST_BATCH, COST_TIERS]),
+            (&b.alphas, &[COST_TIERS]),
+            (&b.compute_us, &[COST_BATCH]),
+            (&b.exposure, &[COST_TIERS]),
+        ])
+    }
+
+    /// Per-link loads from a weighted path×link incidence (padded).
+    pub fn link_load(&self, incidence: &[f32], demand: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(incidence.len(), LOAD_PATHS * LOAD_LINKS);
+        assert_eq!(demand.len(), LOAD_PATHS);
+        self.linkload.run_f32(&[
+            (incidence, &[LOAD_PATHS, LOAD_LINKS]),
+            (demand, &[LOAD_PATHS]),
+        ])
+    }
+
+    /// Evaluate a batch of parallelism configs on device — the PJRT
+    /// incarnation of `workload::step::iteration_time` (§5.2 Step ②).
+    /// Returns total iteration µs per config.
+    pub fn evaluate_configs(
+        &self,
+        m: &ModelConfig,
+        cfgs: &[ParallelismConfig],
+        bw: &TierBandwidth,
+    ) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(cfgs.len());
+        for chunk in cfgs.chunks(COST_BATCH) {
+            let batch = CostBatch::pack(m, chunk, bw);
+            let times = self.cost_model_raw(&batch)?;
+            out.extend(times[..chunk.len()].iter().map(|&t| t as f64));
+        }
+        Ok(out)
+    }
+}
+
+/// Packed [B, T] arrays for one costmodel execution. Slot layout:
+/// `[TP, SP, EP, PP, DP, bubble-as-compute-scale]` — the first five are
+/// technique slots at their placement tier's bandwidth; the sixth is
+/// unused (zero volume) and reserved.
+pub struct CostBatch {
+    pub volumes: Vec<f32>,
+    pub bandwidths: Vec<f32>,
+    pub transfers: Vec<f32>,
+    pub alphas: Vec<f32>,
+    pub compute_us: Vec<f32>,
+    pub exposure: Vec<f32>,
+}
+
+impl CostBatch {
+    /// Pack ≤ 256 configs; unused rows get benign values (bw = 1).
+    pub fn pack(m: &ModelConfig, cfgs: &[ParallelismConfig], bw: &TierBandwidth) -> CostBatch {
+        assert!(cfgs.len() <= COST_BATCH);
+        let exposed = (1.0 - CCU_OVERLAP) as f32;
+        let mut volumes = vec![0.0f32; COST_BATCH * COST_TIERS];
+        let mut bandwidths = vec![1.0f32; COST_BATCH * COST_TIERS];
+        let mut transfers = vec![0.0f32; COST_BATCH * COST_TIERS];
+        let alphas = vec![MESSAGE_ALPHA_US as f32; COST_TIERS];
+        let mut compute_us = vec![0.0f32; COST_BATCH];
+        let exposure = vec![
+            exposed,
+            exposed,
+            exposed,
+            1.0,
+            (1.0 - DP_OVERLAP) as f32,
+            0.0,
+        ];
+
+        for (i, p) in cfgs.iter().enumerate() {
+            let place = Placement::topology_aware(p);
+            let traffic = analyze(m, p);
+            let row = i * COST_TIERS;
+            let mut put = |slot: usize, tech: &str, tier: usize, slice: f64| {
+                if let Some(r) = traffic.row(tech) {
+                    volumes[row + slot] = (r.total / slice) as f32;
+                    transfers[row + slot] = (r.transfers / slice) as f32;
+                    bandwidths[row + slot] = bw.gb_s[tier] as f32;
+                }
+            };
+            let pp_slice = p.pp as f64;
+            put(0, "TP", place.tp_tier as usize, pp_slice);
+            put(1, "SP", place.sp_tier as usize, pp_slice);
+            put(2, "EP", place.ep_tier as usize, pp_slice);
+            put(3, "PP", place.pp_tier as usize, 1.0);
+            put(4, "DP", place.dp_tier as usize, 1.0);
+
+            let tokens = p.tokens_per_microbatch * p.microbatches as f64;
+            let flops = m.flops_per_token() * tokens / (p.tp * p.sp * p.pp) as f64;
+            let compute = flops / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+            // Fold the pipeline bubble into the compute term (same
+            // formula as iteration_time's `busy × (pp-1)/mb`, applied to
+            // compute only — the comm part of the bubble is second-order).
+            let bubble = compute * (p.pp as f64 - 1.0) / p.microbatches as f64;
+            compute_us[i] = (compute + bubble) as f32;
+        }
+        let _ = NTIERS;
+        CostBatch {
+            volumes,
+            bandwidths,
+            transfers,
+            alphas,
+            compute_us,
+            exposure,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::by_name;
+    use crate::workload::step::iteration_time;
+    use crate::workload::traffic::table1_config;
+
+    fn artifacts() -> Option<Artifacts> {
+        let dir = Artifacts::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(Artifacts::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn pjrt_cost_model_matches_rust_model() {
+        let Some(a) = artifacts() else { return };
+        let m = by_name("gpt4-2t").unwrap();
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let cfgs = vec![table1_config()];
+        let pjrt = a.evaluate_configs(&m, &cfgs, &bw).unwrap();
+        let rust = iteration_time(
+            &m,
+            &cfgs[0],
+            &Placement::topology_aware(&cfgs[0]),
+            &bw,
+        );
+        let rel = (pjrt[0] - rust.total_us).abs() / rust.total_us;
+        // The PJRT path folds the bubble into compute-only, so allow a
+        // few percent of divergence — ranking is what the search needs.
+        assert!(
+            rel < 0.05,
+            "pjrt {} vs rust {} (rel {rel})",
+            pjrt[0],
+            rust.total_us
+        );
+    }
+
+    #[test]
+    fn pjrt_apsp_matches_graph_bfs() {
+        let Some(a) = artifacts() else { return };
+        use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+        use crate::topology::CableClass;
+        let t = nd_fullmesh(
+            "m88",
+            &[
+                DimSpec::new(8, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(8, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        );
+        let n = 64;
+        let mut adj = vec![INF; n * n];
+        for i in 0..n {
+            adj[i * n + i] = 0.0;
+        }
+        for l in &t.links {
+            adj[l.a.idx() * n + l.b.idx()] = 1.0;
+            adj[l.b.idx() * n + l.a.idx()] = 1.0;
+        }
+        let d = a.apsp(&adj, n).unwrap();
+        for src in [0usize, 17, 63] {
+            let bfs = t.bfs_hops(crate::topology::NodeId(src as u32), true);
+            for dst in 0..n {
+                assert_eq!(
+                    d[src * n + dst] as u32,
+                    bfs[dst],
+                    "apsp({src},{dst})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_linkload_uniform() {
+        let Some(a) = artifacts() else { return };
+        let inc = vec![1.0f32 / LOAD_PATHS as f32; LOAD_PATHS * LOAD_LINKS];
+        let demand = vec![1.0f32; LOAD_PATHS];
+        let loads = a.link_load(&inc, &demand).unwrap();
+        assert_eq!(loads.len(), LOAD_LINKS);
+        for &l in &loads {
+            assert!((l - 1.0).abs() < 1e-3, "{l}");
+        }
+    }
+
+    #[test]
+    fn batch_packing_layout() {
+        let m = by_name("gpt4-2t").unwrap();
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let b = CostBatch::pack(&m, &[table1_config()], &bw);
+        assert_eq!(b.volumes.len(), COST_BATCH * COST_TIERS);
+        // TP slot populated, reserved slot empty.
+        assert!(b.volumes[0] > 0.0);
+        assert_eq!(b.volumes[5], 0.0);
+        assert!(b.compute_us[0] > 0.0);
+        assert_eq!(b.compute_us[1], 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs: HLO **text** →
+//! `HloModuleProto::from_text_file` → compile → execute. Text is the
+//! interchange format because xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit instruction-id protos; the text parser reassigns ids.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// One compiled entry point.
+pub struct Exe {
+    inner: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Exe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Exe {
+            inner: exe,
+            name: path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("exe")
+                .to_string(),
+        })
+    }
+}
+
+impl Exe {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 elements of the (single-output) tuple result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .inner
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn loads_and_runs_apsp64_artifact() {
+        let dir = artifacts_dir();
+        if !dir.join("apsp64.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let e = Engine::cpu().unwrap();
+        let exe = e.load_hlo_text(&dir.join("apsp64.hlo.txt")).unwrap();
+        // Path graph 0-1-2 in a 64-node INF matrix.
+        let inf = 1.0e9f32;
+        let n = 64usize;
+        let mut adj = vec![inf; n * n];
+        for i in 0..n {
+            adj[i * n + i] = 0.0;
+        }
+        adj[1] = 1.0; // (0,1)
+        adj[n] = 1.0; // (1,0)
+        adj[n + 2] = 1.0; // (1,2)
+        adj[2 * n + 1] = 1.0; // (2,1)
+        let out = exe.run_f32(&[(&adj, &[n, n])]).unwrap();
+        assert_eq!(out.len(), n * n);
+        assert_eq!(out[2], 2.0, "d(0,2) via node 1");
+        assert_eq!(out[1], 1.0);
+        assert!(out[3] > 1e8, "d(0,3) unreachable");
+    }
+}

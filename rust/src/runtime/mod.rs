@@ -1,0 +1,10 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and execute them from the rust
+//! hot path. Python is never on the request path — the HLO text is the
+//! entire L1/L2 handoff.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{Artifacts, CostBatch};
+pub use client::Engine;

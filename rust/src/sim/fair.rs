@@ -1,0 +1,206 @@
+//! Max-min fair rate allocation (progressive filling / water-filling).
+//!
+//! Given active flows and per-channel capacities, all flows' rates grow
+//! uniformly until some channel saturates; flows crossing it freeze at
+//! the current level, and filling continues for the rest. This is the
+//! standard fluid-model allocation used by flow-level DC simulators.
+
+use crate::topology::Channel;
+
+use super::network::SimNet;
+
+/// Compute max-min fair rates (GB/s) for `flows`, where each flow is the
+/// list of channels it crosses. Flows crossing a zero-capacity (failed)
+/// channel get rate 0.
+pub fn max_min_rates(net: &SimNet, flows: &[&[Channel]]) -> Vec<f64> {
+    let n = flows.len();
+    let mut rate = vec![0.0f64; n];
+    if n == 0 {
+        return rate;
+    }
+    let nch = net.channel_count();
+    // Channel load bookkeeping. Only channels actually used matter.
+    let mut unfrozen_cnt = vec![0u32; nch];
+    let mut committed = vec![0.0f64; nch];
+    let mut frozen = vec![false; n];
+
+    // Flows over failed channels are stuck at 0.
+    for (i, f) in flows.iter().enumerate() {
+        if f.iter().any(|&c| net.capacity(c) <= 0.0) {
+            frozen[i] = true;
+        }
+    }
+    for (i, f) in flows.iter().enumerate() {
+        if !frozen[i] {
+            for c in *f {
+                unfrozen_cnt[c.idx()] += 1;
+            }
+        }
+    }
+
+    let mut remaining = frozen.iter().filter(|&&f| !f).count();
+    let mut fill = 0.0f64; // current uniform fill level
+    while remaining > 0 {
+        // Find the binding channel: min residual headroom per unfrozen flow.
+        let mut delta = f64::INFINITY;
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            for c in *f {
+                let ci = c.idx();
+                let head =
+                    (net.capacity(*c) - committed[ci]) / unfrozen_cnt[ci] as f64;
+                if head < delta {
+                    delta = head;
+                }
+            }
+        }
+        if !delta.is_finite() || delta < 0.0 {
+            delta = 0.0;
+        }
+        fill += delta;
+        // Commit the increment.
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            rate[i] = fill;
+            for c in *f {
+                committed[c.idx()] += delta;
+            }
+        }
+        // Freeze flows on (near-)saturated channels.
+        let mut froze_any = false;
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            let saturated = f.iter().any(|&c| {
+                let ci = c.idx();
+                net.capacity(c) - committed[ci]
+                    <= 1e-9 * net.capacity(c).max(1.0)
+            });
+            if saturated {
+                frozen[i] = true;
+                froze_any = true;
+                remaining -= 1;
+                for c in *f {
+                    unfrozen_cnt[c.idx()] -= 1;
+                }
+            }
+        }
+        if !froze_any {
+            // Numerical safety: freeze everything at the current level.
+            for (i, _) in flows.iter().enumerate() {
+                if !frozen[i] {
+                    frozen[i] = true;
+                    remaining -= 1;
+                }
+            }
+        }
+    }
+    rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::{CableClass, LinkId, Topology};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn k4() -> Topology {
+        nd_fullmesh(
+            "k4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        )
+    }
+
+    #[test]
+    fn single_flow_gets_bottleneck() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let chans = [Channel::forward(LinkId(0))];
+        let rates = max_min_rates(&net, &[&chans]);
+        assert!((rates[0] - 50.0).abs() < 1e-6); // x8 × 6.25
+    }
+
+    #[test]
+    fn two_flows_share_equally() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let chans = [Channel::forward(LinkId(0))];
+        let rates = max_min_rates(&net, &[&chans, &chans]);
+        assert!((rates[0] - 25.0).abs() < 1e-6);
+        assert!((rates[1] - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bottlenecked_flow_frees_capacity_elsewhere() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        // f0 crosses links 0 and 1; f1 crosses link 0; f2 crosses link 1.
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let f0 = [c0, c1];
+        let f1 = [c0];
+        let f2 = [c1];
+        let r = max_min_rates(&net, &[&f0, &f1, &f2]);
+        // Max-min: all equal at 25 (both links split 50/50).
+        assert!((r[0] - 25.0).abs() < 1e-6, "{r:?}");
+        // Now remove f2: f0 still bottlenecked by link0 share, f1 gets 25.
+        let r2 = max_min_rates(&net, &[&f0, &f1]);
+        assert!((r2[0] - 25.0).abs() < 1e-6);
+        assert!((r2[1] - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn failed_channel_zeroes_flows() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.fail_link(LinkId(0));
+        let chans = [Channel::forward(LinkId(0))];
+        let r = max_min_rates(&net, &[&chans]);
+        assert_eq!(r[0], 0.0);
+    }
+
+    #[test]
+    fn rates_never_exceed_capacity() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        forall("max-min respects capacity", 64, |rng: &mut Rng| {
+            let nflows = rng.range(1, 20);
+            let flows: Vec<Vec<Channel>> = (0..nflows)
+                .map(|_| {
+                    let nhops = rng.range(1, 4);
+                    (0..nhops)
+                        .map(|_| Channel {
+                            link: LinkId(rng.range(0, t.link_count()) as u32),
+                            rev: rng.chance(0.5),
+                        })
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+            let rates = max_min_rates(&net, &refs);
+            // Per-channel sum ≤ capacity.
+            let mut load = vec![0.0; net.channel_count()];
+            for (i, f) in flows.iter().enumerate() {
+                // a flow crossing the same channel twice counts twice
+                for c in f {
+                    load[c.idx()] += rates[i];
+                }
+            }
+            for (ci, &l) in load.iter().enumerate() {
+                let cap = net.cap_by_idx(ci);
+                assert!(l <= cap * (1.0 + 1e-6) + 1e-9, "ch {ci}: {l} > {cap}");
+            }
+            // Work conservation: every flow with all-live channels gets > 0.
+            for (i, _f) in flows.iter().enumerate() {
+                assert!(rates[i] > 0.0);
+            }
+        });
+    }
+}

@@ -1,0 +1,103 @@
+//! Flow descriptions handed to the simulator.
+
+use crate::topology::{Channel, NodeId, Topology};
+
+/// One unidirectional data transfer along a fixed path.
+#[derive(Clone, Debug)]
+pub struct FlowSpec {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Payload bytes.
+    pub bytes: f64,
+    /// Directed channels from src to dst.
+    pub channels: Vec<Channel>,
+    /// Path latency (µs) charged before bytes start draining: per-hop
+    /// wire + switch latency + the α message overhead.
+    pub latency_us: f64,
+}
+
+impl FlowSpec {
+    /// Build a flow along a node path, deriving channels and latency
+    /// from the topology.
+    pub fn along(t: &Topology, path: &[NodeId], bytes: f64) -> FlowSpec {
+        assert!(path.len() >= 2, "flow needs at least one hop");
+        let mut channels = Vec::with_capacity(path.len() - 1);
+        let mut latency = crate::topology::ublink::MESSAGE_ALPHA_US;
+        for w in path.windows(2) {
+            let l = t
+                .link_between(w[0], w[1])
+                .unwrap_or_else(|| panic!("flow hop {}-{} not adjacent", w[0], w[1]));
+            let link = t.link(l);
+            channels.push(Channel {
+                link: l,
+                rev: link.a != w[0],
+            });
+            latency += link.latency_us();
+            if t.node(w[1]).kind.is_switch() {
+                latency += crate::topology::ublink::SWITCH_LATENCY_US;
+            }
+        }
+        FlowSpec {
+            src: path[0],
+            dst: *path.last().unwrap(),
+            bytes,
+            channels,
+            latency_us: latency,
+        }
+    }
+
+    /// Split this flow across several node paths with the given weights
+    /// (APR multi-path transmission).
+    pub fn split(
+        t: &Topology,
+        paths: &[Vec<NodeId>],
+        weights: &[f64],
+        bytes: f64,
+    ) -> Vec<FlowSpec> {
+        assert_eq!(paths.len(), weights.len());
+        let total: f64 = weights.iter().sum();
+        paths
+            .iter()
+            .zip(weights)
+            .filter(|&(_, &w)| w > 0.0)
+            .map(|(p, &w)| FlowSpec::along(t, p, bytes * w / total))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    fn mesh() -> Topology {
+        nd_fullmesh(
+            "m44",
+            &[
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn along_derives_channels_and_latency() {
+        let t = mesh();
+        let f = FlowSpec::along(&t, &[NodeId(0), NodeId(1), NodeId(5)], 1e6);
+        assert_eq!(f.channels.len(), 2);
+        assert!(f.latency_us > 0.0);
+    }
+
+    #[test]
+    fn split_conserves_bytes() {
+        let t = mesh();
+        let paths = vec![
+            vec![NodeId(0), NodeId(1), NodeId(5)],
+            vec![NodeId(0), NodeId(4), NodeId(5)],
+        ];
+        let flows = FlowSpec::split(&t, &paths, &[0.5, 0.5], 1e6);
+        let total: f64 = flows.iter().map(|f| f.bytes).sum();
+        assert!((total - 1e6).abs() < 1e-6);
+    }
+}

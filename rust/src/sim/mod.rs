@@ -1,0 +1,24 @@
+//! Flow-level discrete-event network simulator.
+//!
+//! This is the substrate substitution for the paper's unreleased
+//! "in-house simulation infrastructure ... aligned with the real PoC
+//! hardware" (§6.1). It is a *fluid* model: flows traverse directed
+//! channels, share link capacity max-min fairly ([`fair`]), and complete
+//! when their bytes drain. Collectives and training steps are expressed
+//! as stage DAGs ([`schedule`]) whose stages release flows when their
+//! dependencies finish.
+//!
+//! Fidelity notes (DESIGN.md §1): the paper reports architecture
+//! *ratios* (e.g. 2D-FM at 93–96% of Clos), which a fluid model
+//! preserves; packet-level effects (credit stalls, VL arbitration) are
+//! abstracted — deadlock freedom is verified structurally by
+//! [`crate::routing::tfc`] instead.
+
+pub mod fair;
+pub mod flow;
+pub mod network;
+pub mod schedule;
+
+pub use flow::FlowSpec;
+pub use network::SimNet;
+pub use schedule::{SimReport, Stage, StageDag};

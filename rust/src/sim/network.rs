@@ -1,0 +1,92 @@
+//! Per-channel capacity state, including failures.
+
+use crate::topology::{Channel, LinkId, Topology};
+
+/// Directed-channel capacity view over a topology, with link up/down
+/// state for failure-injection experiments.
+pub struct SimNet<'a> {
+    pub topo: &'a Topology,
+    /// Capacity per channel index (GB/s). 2 channels per link.
+    cap: Vec<f64>,
+    down: Vec<bool>,
+}
+
+impl<'a> SimNet<'a> {
+    pub fn new(topo: &'a Topology) -> SimNet<'a> {
+        let mut cap = Vec::with_capacity(topo.link_count() * 2);
+        for l in &topo.links {
+            let c = l.capacity_gb_s();
+            cap.push(c);
+            cap.push(c);
+        }
+        SimNet {
+            topo,
+            cap,
+            down: vec![false; topo.link_count()],
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self, ch: Channel) -> f64 {
+        if self.down[ch.link.idx()] {
+            0.0
+        } else {
+            self.cap[ch.idx()]
+        }
+    }
+
+    pub fn channel_count(&self) -> usize {
+        self.cap.len()
+    }
+
+    /// Capacity by raw channel index (see [`Channel::idx`]).
+    #[inline]
+    pub fn cap_by_idx(&self, idx: usize) -> f64 {
+        if self.down[idx / 2] {
+            0.0
+        } else {
+            self.cap[idx]
+        }
+    }
+
+    pub fn fail_link(&mut self, l: LinkId) {
+        self.down[l.idx()] = true;
+    }
+
+    pub fn restore_link(&mut self, l: LinkId) {
+        self.down[l.idx()] = false;
+    }
+
+    pub fn is_down(&self, l: LinkId) -> bool {
+        self.down[l.idx()]
+    }
+
+    /// Scale a single link's capacity (e.g. backup NPU attach with fewer
+    /// lanes, degraded links).
+    pub fn set_link_capacity(&mut self, l: LinkId, gb_s: f64) {
+        self.cap[l.idx() * 2] = gb_s;
+        self.cap[l.idx() * 2 + 1] = gb_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    #[test]
+    fn capacity_and_failures() {
+        let t = nd_fullmesh(
+            "m4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        );
+        let mut net = SimNet::new(&t);
+        let ch = Channel::forward(LinkId(0));
+        assert!(net.capacity(ch) > 0.0);
+        net.fail_link(LinkId(0));
+        assert_eq!(net.capacity(ch), 0.0);
+        net.restore_link(LinkId(0));
+        assert!(net.capacity(ch) > 0.0);
+    }
+}

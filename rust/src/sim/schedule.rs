@@ -1,0 +1,399 @@
+//! Stage-DAG execution over the fluid-flow simulator.
+//!
+//! A [`StageDag`] models a collective or a whole training iteration:
+//! each [`Stage`] holds flows plus an optional local compute duration,
+//! and starts when all its dependencies complete. The runner advances a
+//! fluid simulation: rates are max-min fair; the next event is the
+//! earliest flow/compute completion; state is settled and rates are
+//! recomputed at every event.
+
+use crate::topology::Channel;
+
+use super::fair::max_min_rates;
+use super::flow::FlowSpec;
+use super::network::SimNet;
+
+/// Flows are considered drained below this remnant (bytes). Sub-byte
+/// remnants otherwise produce completion deltas that underflow f64 time
+/// resolution once `now` is large, starving the event loop.
+const REMNANT_BYTES: f64 = 0.5;
+
+/// One DAG stage.
+#[derive(Clone, Debug, Default)]
+pub struct Stage {
+    pub name: String,
+    pub flows: Vec<FlowSpec>,
+    /// Local computation overlapped with nothing else in this stage; the
+    /// stage ends when flows *and* compute are done.
+    pub compute_us: f64,
+    /// Indices of stages that must finish first.
+    pub deps: Vec<usize>,
+}
+
+impl Stage {
+    pub fn new(name: impl Into<String>) -> Stage {
+        Stage {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+    pub fn with_flows(mut self, flows: Vec<FlowSpec>) -> Stage {
+        self.flows = flows;
+        self
+    }
+    pub fn with_compute(mut self, us: f64) -> Stage {
+        self.compute_us = us;
+        self
+    }
+    pub fn after(mut self, deps: Vec<usize>) -> Stage {
+        self.deps = deps;
+        self
+    }
+}
+
+/// A collective / iteration schedule.
+#[derive(Clone, Debug, Default)]
+pub struct StageDag {
+    pub stages: Vec<Stage>,
+}
+
+impl StageDag {
+    pub fn push(&mut self, stage: Stage) -> usize {
+        self.stages.push(stage);
+        self.stages.len() - 1
+    }
+
+    /// Serially chain a list of stages (each depends on the previous).
+    pub fn chain(stages: Vec<Stage>) -> StageDag {
+        let mut dag = StageDag::default();
+        let mut prev: Option<usize> = None;
+        for mut s in stages {
+            if let Some(p) = prev {
+                s.deps.push(p);
+            }
+            prev = Some(dag.push(s));
+        }
+        dag
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.stages
+            .iter()
+            .flat_map(|s| &s.flows)
+            .map(|f| f.bytes)
+            .sum()
+    }
+}
+
+/// Result of executing a DAG.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Wall-clock makespan, µs.
+    pub makespan_us: f64,
+    /// Completion time of each stage, µs.
+    pub stage_done_us: Vec<f64>,
+    /// Total bytes × distance actually carried (byte-hops).
+    pub byte_hops: f64,
+    /// Events processed (completions + stage starts) — perf metric.
+    pub events: u64,
+    /// Peak concurrently-active flows.
+    pub peak_flows: usize,
+}
+
+struct ActiveFlow {
+    stage: usize,
+    channels: Vec<Channel>,
+    /// Remaining payload (GB to keep rate units consistent: capacity is
+    /// GB/s and time is µs, so we track bytes and convert).
+    remaining_bytes: f64,
+    /// Start gate: latency delay before bytes drain.
+    gate_us: f64,
+    rate_gb_s: f64,
+}
+
+/// Execute the DAG on the network. Panics on cyclic dependencies.
+pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
+    let n = dag.stages.len();
+    let mut dep_left: Vec<usize> = dag.stages.iter().map(|s| s.deps.len()).collect();
+    let mut dependants: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, s) in dag.stages.iter().enumerate() {
+        for &d in &s.deps {
+            assert!(d < n, "dep out of range");
+            dependants[d].push(i);
+        }
+    }
+
+    let mut stage_done = vec![f64::NAN; n];
+    let mut flows_left: Vec<usize> = dag.stages.iter().map(|s| s.flows.len()).collect();
+    let mut compute_done_at: Vec<f64> = vec![f64::NAN; n];
+    let mut active: Vec<ActiveFlow> = Vec::new();
+    let mut now = 0.0f64;
+    let mut events = 0u64;
+    let mut byte_hops = 0.0f64;
+    let mut peak = 0usize;
+    let mut started = vec![false; n];
+    let mut done_count = 0usize;
+
+    // Start all ready stages.
+    let mut ready: Vec<usize> = (0..n).filter(|&i| dep_left[i] == 0).collect();
+
+    let start_stage = |i: usize,
+                           now: f64,
+                           active: &mut Vec<ActiveFlow>,
+                           compute_done_at: &mut Vec<f64>,
+                           started: &mut Vec<bool>| {
+        debug_assert!(!started[i]);
+        started[i] = true;
+        for f in &dag.stages[i].flows {
+            active.push(ActiveFlow {
+                stage: i,
+                channels: f.channels.clone(),
+                remaining_bytes: f.bytes,
+                gate_us: now + f.latency_us,
+                rate_gb_s: 0.0,
+            });
+        }
+        compute_done_at[i] = now + dag.stages[i].compute_us;
+    };
+
+    for i in ready.drain(..) {
+        start_stage(i, now, &mut active, &mut compute_done_at, &mut started);
+        events += 1;
+    }
+
+    loop {
+        // Settle stage completions at the current instant (fixpoint:
+        // zero-duration stages may cascade).
+        loop {
+            let mut changed = false;
+            for i in 0..n {
+                if started[i]
+                    && stage_done[i].is_nan()
+                    && flows_left[i] == 0
+                    && compute_done_at[i] <= now + 1e-9
+                {
+                    stage_done[i] = now;
+                    done_count += 1;
+                    events += 1;
+                    changed = true;
+                    for &d in &dependants[i] {
+                        dep_left[d] -= 1;
+                        if dep_left[d] == 0 {
+                            start_stage(
+                                d,
+                                now,
+                                &mut active,
+                                &mut compute_done_at,
+                                &mut started,
+                            );
+                        }
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        if done_count == n {
+            break;
+        }
+
+        peak = peak.max(active.len());
+        // Recompute rates for gate-open flows.
+        let open: Vec<usize> = (0..active.len())
+            .filter(|&i| active[i].gate_us <= now + 1e-12 && active[i].remaining_bytes > 0.0)
+            .collect();
+        let chan_refs: Vec<&[Channel]> =
+            open.iter().map(|&i| active[i].channels.as_slice()).collect();
+        let rates = max_min_rates(net, &chan_refs);
+        for (k, &i) in open.iter().enumerate() {
+            active[i].rate_gb_s = rates[k];
+        }
+
+        // Next event: earliest of flow completion, gate opening, or
+        // pending compute completion.
+        let mut next = f64::INFINITY;
+        for f in &active {
+            if f.remaining_bytes <= REMNANT_BYTES {
+                continue;
+            }
+            if f.gate_us > now + 1e-12 {
+                next = next.min(f.gate_us);
+            } else if f.rate_gb_s > 0.0 {
+                // rate GB/s -> bytes per microsecond = rate * 1e3.
+                let t = f.remaining_bytes / (f.rate_gb_s * 1e3);
+                next = next.min(now + t);
+            }
+        }
+        for i in 0..n {
+            if started[i] && stage_done[i].is_nan() && compute_done_at[i] > now + 1e-9 {
+                next = next.min(compute_done_at[i]);
+            }
+        }
+
+        if !next.is_finite() {
+            break; // stalled (failed links) or nothing left
+        }
+        // Guarantee monotone progress even if fp rounding collapses the
+        // next event onto `now`.
+        if next <= now {
+            next = now + 1e-6;
+        }
+
+        // Drain bytes until `next`.
+        let dt = next - now;
+        for f in active.iter_mut() {
+            if f.remaining_bytes > 0.0 && f.gate_us <= now + 1e-12 && f.rate_gb_s > 0.0 {
+                let drained = (f.rate_gb_s * 1e3 * dt).min(f.remaining_bytes);
+                f.remaining_bytes -= drained;
+                byte_hops += drained * f.channels.len() as f64;
+            }
+        }
+        now = next;
+        events += 1;
+
+        // Settle flow completions.
+        let mut completed_stage_flows: Vec<usize> = Vec::new();
+        active.retain(|f| {
+            if f.remaining_bytes <= REMNANT_BYTES {
+                completed_stage_flows.push(f.stage);
+                false
+            } else {
+                true
+            }
+        });
+        for s in completed_stage_flows {
+            flows_left[s] -= 1;
+        }
+    }
+
+    assert!(
+        done_count == n,
+        "DAG stalled: {}/{} stages done at t={now}µs (failed links or cyclic deps?)",
+        done_count,
+        n
+    );
+    SimReport {
+        makespan_us: now,
+        stage_done_us: stage_done,
+        byte_hops,
+        events,
+        peak_flows: peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::{CableClass, NodeId, Topology};
+
+    fn k4() -> Topology {
+        // K4 full-mesh, x8 lanes = 50 GB/s per link direction.
+        nd_fullmesh(
+            "k4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        )
+    }
+
+    #[test]
+    fn single_flow_time_matches_closed_form() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let bytes = 500e6; // 500 MB over 50 GB/s = 10_000 µs
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1)],
+            bytes,
+        )]));
+        let r = run(&net, &dag);
+        let expect = bytes / (50.0 * 1e3);
+        assert!(
+            (r.makespan_us - expect).abs() / expect < 0.01,
+            "{} vs {expect}",
+            r.makespan_us
+        );
+    }
+
+    #[test]
+    fn two_flows_on_one_link_take_twice_as_long() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let f = |_| FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 500e6);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![f(0), f(1)]));
+        let r = run(&net, &dag);
+        let expect = 2.0 * 500e6 / (50.0 * 1e3);
+        assert!((r.makespan_us - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn dependencies_serialize() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mk = || FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 500e6);
+        let mut dag = StageDag::default();
+        let a = dag.push(Stage::new("a").with_flows(vec![mk()]));
+        dag.push(Stage::new("b").with_flows(vec![mk()]).after(vec![a]));
+        let r = run(&net, &dag);
+        let expect = 2.0 * 500e6 / (50.0 * 1e3);
+        assert!((r.makespan_us - expect).abs() / expect < 0.01);
+        assert!(r.stage_done_us[0] < r.stage_done_us[1]);
+    }
+
+    #[test]
+    fn compute_only_stage() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("gemm").with_compute(123.0));
+        let r = run(&net, &dag);
+        assert!((r.makespan_us - 123.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compute_overlaps_communication() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        dag.push(
+            Stage::new("overlap")
+                .with_flows(vec![FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 500e6)])
+                .with_compute(20_000.0),
+        );
+        let r = run(&net, &dag);
+        // max(10_000 comm, 20_000 compute) ≈ 20_000.
+        assert!((r.makespan_us - 20_000.0).abs() < 50.0, "{}", r.makespan_us);
+    }
+
+    #[test]
+    fn parallel_disjoint_flows_dont_serialize() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("par").with_flows(vec![
+            FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 500e6),
+            FlowSpec::along(&t, &[NodeId(2), NodeId(3)], 500e6),
+        ]));
+        let r = run(&net, &dag);
+        let expect = 500e6 / (50.0 * 1e3);
+        assert!((r.makespan_us - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "DAG stalled")]
+    fn failed_link_stalls_and_reports() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        let l = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        net.fail_link(l);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("x").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1)],
+            1e6,
+        )]));
+        run(&net, &dag);
+    }
+}

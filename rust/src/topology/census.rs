@@ -1,0 +1,217 @@
+//! Cable / switch / optical-module census (Table 2, Fig 21 inputs,
+//! Table 6 inputs).
+//!
+//! Walks a constructed [`Topology`] and tallies physical components by
+//! class and role. The reliability model (AFR per component) and the
+//! cost model (price per component) both consume a [`Census`], so every
+//! headline ratio in the paper traces back to the same component counts.
+
+use std::collections::BTreeMap;
+
+use super::clos::OPTICAL_CABLE_LANES;
+use super::graph::Topology;
+use super::link::{CableClass, LinkRole};
+use super::node::NodeKind;
+
+/// Component tallies for one topology.
+#[derive(Clone, Debug, Default)]
+pub struct Census {
+    /// Cables by class: (count, total lanes, total metres).
+    pub cables: BTreeMap<CableClassKey, CableTally>,
+    /// Nodes by kind.
+    pub nodes: BTreeMap<NodeKindKey, usize>,
+    /// Optical transceiver modules (2 per optical cable bundle).
+    pub optical_modules: u64,
+    /// Cables by nD dimension / role (Table 2 rows).
+    pub by_role: BTreeMap<RoleKey, CableTally>,
+}
+
+/// BTreeMap-able wrappers (enums lack Ord derives upstream by design;
+/// keys order deterministically for stable report output).
+pub type CableClassKey = u8;
+pub type NodeKindKey = u8;
+pub type RoleKey = u8;
+
+pub fn class_key(c: CableClass) -> CableClassKey {
+    match c {
+        CableClass::PassiveElectrical => 0,
+        CableClass::ActiveElectrical => 1,
+        CableClass::Optical => 2,
+        CableClass::Backplane => 3,
+    }
+}
+
+pub fn class_name(k: CableClassKey) -> &'static str {
+    ["passive-electrical", "active-electrical", "optical", "backplane"][k as usize]
+}
+
+pub fn kind_key(k: NodeKind) -> NodeKindKey {
+    match k {
+        NodeKind::Npu => 0,
+        NodeKind::BackupNpu => 1,
+        NodeKind::Cpu => 2,
+        NodeKind::Lrs => 3,
+        NodeKind::Hrs => 4,
+        NodeKind::DcnSwitch => 5,
+    }
+}
+
+pub fn kind_name(k: NodeKindKey) -> &'static str {
+    ["NPU", "BackupNPU", "CPU", "LRS", "HRS", "DCN"][k as usize]
+}
+
+fn role_key(r: LinkRole) -> RoleKey {
+    match r {
+        LinkRole::BoardX => 0,
+        LinkRole::RackY => 1,
+        LinkRole::RowZ => 2,
+        LinkRole::ColAlpha => 3,
+        LinkRole::PodUplink => 4,
+        LinkRole::Backplane => 5,
+        LinkRole::LrsMesh => 6,
+        LinkRole::NpuSwitch => 7,
+        LinkRole::Spine => 8,
+        LinkRole::Dcn => 9,
+        LinkRole::Dim(_) => 10,
+    }
+}
+
+pub fn role_name(k: RoleKey) -> &'static str {
+    [
+        "X (board)",
+        "Y (rack)",
+        "Z (row)",
+        "alpha (col)",
+        "beta/gamma (uplink)",
+        "backplane",
+        "lrs-mesh",
+        "npu-switch",
+        "spine",
+        "dcn",
+        "dim",
+    ][k as usize]
+}
+
+/// Per-bucket cable tally.
+#[derive(Clone, Debug, Default)]
+pub struct CableTally {
+    pub cables: u64,
+    pub lanes: u64,
+    pub metres: f64,
+}
+
+impl Census {
+    /// Tally a topology. Backplane traces are counted as cables too but
+    /// excluded from [`Census::external_cables`] (they are PCB traces, not
+    /// field-replaceable cables — Table 2 counts external cables only).
+    pub fn of(t: &Topology) -> Census {
+        let mut c = Census::default();
+        for link in &t.links {
+            let entry = c.cables.entry(class_key(link.class)).or_default();
+            entry.cables += 1;
+            entry.lanes += link.lanes as u64;
+            entry.metres += link.length_m;
+            let by_role = c.by_role.entry(role_key(link.role)).or_default();
+            by_role.cables += 1;
+            by_role.lanes += link.lanes as u64;
+            by_role.metres += link.length_m;
+            if link.class == CableClass::Optical {
+                c.optical_modules +=
+                    2 * (link.lanes as u64).div_ceil(OPTICAL_CABLE_LANES as u64);
+            }
+        }
+        for node in &t.nodes {
+            *c.nodes.entry(kind_key(node.kind)).or_default() += 1;
+        }
+        c
+    }
+
+    pub fn count(&self, kind: NodeKind) -> usize {
+        self.nodes.get(&kind_key(kind)).copied().unwrap_or(0)
+    }
+
+    pub fn cables_of(&self, class: CableClass) -> u64 {
+        self.cables
+            .get(&class_key(class))
+            .map(|t| t.cables)
+            .unwrap_or(0)
+    }
+
+    pub fn lanes_of(&self, class: CableClass) -> u64 {
+        self.cables
+            .get(&class_key(class))
+            .map(|t| t.lanes)
+            .unwrap_or(0)
+    }
+
+    /// External (field) cables: everything but backplane traces.
+    pub fn external_cables(&self) -> u64 {
+        self.cables_of(CableClass::PassiveElectrical)
+            + self.cables_of(CableClass::ActiveElectrical)
+            + self.cables_of(CableClass::Optical)
+    }
+
+    /// Table 2: share of each external cable class by count.
+    pub fn class_ratios(&self) -> Vec<(CableClassKey, f64)> {
+        let total = self.external_cables() as f64;
+        [
+            CableClass::PassiveElectrical,
+            CableClass::ActiveElectrical,
+            CableClass::Optical,
+        ]
+        .iter()
+        .map(|&c| (class_key(c), self.cables_of(c) as f64 / total))
+        .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pod::{ubmesh_pod, PodConfig};
+    use crate::topology::rack::{ubmesh_rack, RackConfig};
+
+    #[test]
+    fn rack_census_counts() {
+        let (t, _) = ubmesh_rack(&RackConfig::default());
+        let c = Census::of(&t);
+        assert_eq!(c.count(NodeKind::Npu), 64);
+        assert_eq!(c.count(NodeKind::BackupNpu), 1);
+        assert_eq!(c.count(NodeKind::Lrs), 72);
+        // 448 passive X/Y cables.
+        assert_eq!(c.cables_of(CableClass::PassiveElectrical), 448);
+        assert_eq!(c.optical_modules, 0);
+    }
+
+    #[test]
+    fn pod_census_passive_dominates() {
+        let (t, _) = ubmesh_pod(&PodConfig::default());
+        let c = Census::of(&t);
+        let ratios = c.class_ratios();
+        let passive = ratios[0].1;
+        let active = ratios[1].1;
+        let optical = ratios[2].1;
+        // Table 2 shape: passive ≫ active ≥ optical.
+        assert!(passive > 0.8, "passive share {passive}");
+        assert!(active < 0.2 && optical < 0.1);
+        assert!((passive + active + optical - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handshake_lemma() {
+        // Sum of node degrees = 2 × link count.
+        let (t, _) = ubmesh_rack(&RackConfig::default());
+        let degsum: usize = (0..t.node_count())
+            .map(|i| t.neighbors(crate::topology::NodeId(i as u32)).len())
+            .sum();
+        assert_eq!(degsum, 2 * t.link_count());
+    }
+
+    #[test]
+    fn optical_modules_follow_lanes() {
+        let (t, _) = ubmesh_pod(&PodConfig::default());
+        let c = Census::of(&t);
+        // α links: 96 cables × x32 → each needs ceil(32/8)*2 = 8 modules.
+        assert_eq!(c.optical_modules, 96 * 8);
+    }
+}

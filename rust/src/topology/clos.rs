@@ -1,0 +1,175 @@
+//! Cluster-scale symmetric Clos baselines (Fig 1-a, Fig 3, §6.4).
+//!
+//! Two forms:
+//!
+//! * [`ClosDesign`] — analytic non-blocking fat-tree sizing (switch and
+//!   cable counts per tier) valid at any scale. Feeds the CapEx (Fig 21)
+//!   and reliability (Table 6) comparisons, where the paper also reasons
+//!   about counts rather than wiring.
+//! * [`clos_cluster`] — a concrete 2-tier graph for scales where the
+//!   spine fan-out permits ≥1 lane per leaf-spine pair (≤ ~1K NPUs at
+//!   x16). Used as a simulation baseline.
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+
+/// Lanes bundled into one physical optical cable (e.g. a 400G-class
+/// transceiver pair). Granularity for cable/module counting.
+pub const OPTICAL_CABLE_LANES: u32 = 8;
+
+/// Analytic non-blocking folded-Clos design.
+#[derive(Clone, Debug)]
+pub struct ClosDesign {
+    pub npus: usize,
+    pub lanes_per_npu: u32,
+    pub radix: u32,
+    pub tiers: u32,
+    /// High-radix switches per tier (leaf, agg, core).
+    pub switches_per_tier: Vec<usize>,
+    /// Endpoint-to-leaf lanes (electrical, short reach).
+    pub endpoint_lanes: u64,
+    /// Inter-switch lanes (optical).
+    pub fabric_lanes: u64,
+}
+
+impl ClosDesign {
+    /// Size a non-blocking fabric for `npus` endpoints of
+    /// `lanes_per_npu` each, with `radix`-lane switches.
+    pub fn non_blocking(npus: usize, lanes_per_npu: u32, radix: u32) -> ClosDesign {
+        let e = npus as u64 * lanes_per_npu as u64;
+        let half = (radix / 2) as u64;
+        let leaves = e.div_ceil(half) as usize;
+        // 2-tier works when every leaf can give ≥1 lane to every spine.
+        let spines2 = e.div_ceil(radix as u64) as usize;
+        if spines2 <= half as usize {
+            ClosDesign {
+                npus,
+                lanes_per_npu,
+                radix,
+                tiers: 2,
+                switches_per_tier: vec![leaves, spines2],
+                endpoint_lanes: e,
+                fabric_lanes: e, // leaf→spine
+            }
+        } else {
+            // 3-tier folded Clos: leaf 2E/R, agg 2E/R, core E/R.
+            let agg = (2 * e).div_ceil(radix as u64) as usize;
+            let core = e.div_ceil(radix as u64) as usize;
+            ClosDesign {
+                npus,
+                lanes_per_npu,
+                radix,
+                tiers: 3,
+                switches_per_tier: vec![leaves, agg, core],
+                endpoint_lanes: e,
+                fabric_lanes: 2 * e, // leaf→agg + agg→core
+            }
+        }
+    }
+
+    pub fn total_switches(&self) -> usize {
+        self.switches_per_tier.iter().sum()
+    }
+
+    /// Optical cables (fabric links are long-reach optical).
+    pub fn optical_cables(&self) -> u64 {
+        self.fabric_lanes / OPTICAL_CABLE_LANES as u64
+    }
+
+    /// Optical transceiver modules = 2 per cable.
+    pub fn optical_modules(&self) -> u64 {
+        2 * self.optical_cables()
+    }
+}
+
+/// Concrete 2-tier Clos graph. `lanes_per_npu` must divide into the leaf
+/// layer so that each leaf-spine pair carries ≥ 1 lane.
+pub fn clos_cluster(name: &str, npus: usize, lanes_per_npu: u32, radix: u32) -> (Topology, Vec<NodeId>) {
+    let design = ClosDesign::non_blocking(npus, lanes_per_npu, radix);
+    assert_eq!(
+        design.tiers, 2,
+        "clos_cluster builds 2-tier graphs only (requested scale needs {} tiers; \
+         use ClosDesign for analytic counts)",
+        design.tiers
+    );
+    let leaves_n = design.switches_per_tier[0];
+    let spines_n = design.switches_per_tier[1];
+    let mut t = Topology::new(name);
+    let npu_ids: Vec<NodeId> = (0..npus)
+        .map(|i| {
+            t.add_node(
+                NodeKind::Npu,
+                Location::new(0, 0, 0, (i / 8) as u8, (i % 8) as u8),
+            )
+        })
+        .collect();
+    let leaves: Vec<NodeId> = (0..leaves_n)
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    let spines: Vec<NodeId> = (0..spines_n)
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    // Endpoints spread across leaves.
+    let per_leaf = npus.div_ceil(leaves_n);
+    for (i, &n) in npu_ids.iter().enumerate() {
+        t.add_link(
+            n,
+            leaves[i / per_leaf],
+            lanes_per_npu,
+            CableClass::PassiveElectrical,
+            LinkRole::NpuSwitch,
+            2.0,
+        );
+    }
+    // Leaf→spine: split each leaf's uplink evenly.
+    let up_per_leaf = (radix / 2).max(1);
+    let lanes_per_pair = (up_per_leaf / spines_n as u32).max(1);
+    for &l in &leaves {
+        for &s in &spines {
+            t.add_link(l, s, lanes_per_pair, CableClass::Optical, LinkRole::Spine, 100.0);
+        }
+    }
+    (t, npu_ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_clos_is_3_tier_and_large() {
+        // 8K NPUs at x64 (the "x64T Clos" baseline of Fig 21).
+        let d = ClosDesign::non_blocking(8192, 64, 512);
+        assert_eq!(d.tiers, 3);
+        // leaf 2E/R = 2048, agg 2048, core 1024.
+        assert_eq!(d.switches_per_tier, vec![2048, 2048, 1024]);
+        assert_eq!(d.total_switches(), 5120);
+        assert_eq!(d.fabric_lanes, 2 * 8192 * 64);
+        assert!(d.optical_modules() > 200_000);
+    }
+
+    #[test]
+    fn small_scale_is_2_tier() {
+        let d = ClosDesign::non_blocking(64, 64, 512);
+        assert_eq!(d.tiers, 2);
+        assert_eq!(d.switches_per_tier[0], 16);
+    }
+
+    #[test]
+    fn concrete_2tier_graph_connects() {
+        let (t, npus) = clos_cluster("clos-64", 64, 16, 512);
+        assert!(t.npus_connected());
+        let p = t.shortest_path(npus[0], npus[63], false).unwrap();
+        assert!(p.len() <= 5); // npu-leaf-(spine)-leaf-npu
+    }
+
+    #[test]
+    fn nonblocking_bisection() {
+        // Leaf up-capacity equals down-capacity.
+        let d = ClosDesign::non_blocking(1024, 16, 512);
+        let down_per_leaf = d.endpoint_lanes as f64 / d.switches_per_tier[0] as f64;
+        assert!(down_per_leaf <= (d.radix / 2) as f64 + 1e-9);
+    }
+}

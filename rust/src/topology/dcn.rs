@@ -1,0 +1,141 @@
+//! DCN attachment beyond the SuperPod (§3.3.4, Fig 7-c).
+//!
+//! "Racks in SuperPods are also connected to the large-scale DCN either
+//! via UB switches (*Solution-(a)*) or via the NICs located on CPU
+//! boards (*Solution-(b)*). The DCN domain usually supports large-scale
+//! Data Parallelism training ... and can scale to 100K NPUs or more."
+//!
+//! Both solutions are modeled: (a) adds DCN switches hanging off each
+//! rack's uplink LRS; (b) routes DCN traffic through the CPUs' NICs
+//! (lower bandwidth, frees UB lanes). The DP tier of
+//! [`crate::workload::placement::TierBandwidth`] reflects the choice.
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+use super::rack::RackHandles;
+use super::ublink::LANE_GB_S;
+
+/// How the SuperPod reaches the DCN.
+#[derive(Copy, Clone, PartialEq, Debug)]
+pub enum DcnAttach {
+    /// Solution-(a): UB switches — x8 UB lanes per rack to DCN switches.
+    UbSwitch { lanes_per_rack: u32 },
+    /// Solution-(b): NICs on CPU boards — `gb_s` per NIC, one per CPU.
+    CpuNic { nic_gb_s: f64 },
+}
+
+impl DcnAttach {
+    /// Per-NPU DCN bandwidth (GB/s) for the DP tier.
+    pub fn per_npu_gb_s(&self, cpus_per_rack: usize) -> f64 {
+        match self {
+            DcnAttach::UbSwitch { lanes_per_rack } => {
+                *lanes_per_rack as f64 * LANE_GB_S / 64.0
+            }
+            DcnAttach::CpuNic { nic_gb_s } => nic_gb_s * cpus_per_rack as f64 / 64.0,
+        }
+    }
+}
+
+/// Wire a rack to `dcn` switches per Solution-(a) (UB switch attach).
+pub fn attach_dcn_ub(
+    t: &mut Topology,
+    rack: &RackHandles,
+    dcn: &[NodeId],
+    lanes_per_rack: u32,
+) {
+    assert!(!dcn.is_empty());
+    // The DCN lanes come out of the uplink LRS (plane 0, slot 7).
+    let lrs = rack.ir_lrs[0][7];
+    let per = (lanes_per_rack / dcn.len() as u32).max(1);
+    for &d in dcn {
+        t.add_link(lrs, d, per, CableClass::Optical, LinkRole::Dcn, 2000.0);
+    }
+}
+
+/// Wire a rack's CPUs to `dcn` switches per Solution-(b) (NIC attach).
+pub fn attach_dcn_nic(t: &mut Topology, rack: &RackHandles, dcn: &[NodeId], nic_lanes: u32) {
+    assert!(!dcn.is_empty());
+    for (i, &cpu) in rack.cpus.iter().enumerate() {
+        t.add_link(
+            cpu,
+            dcn[i % dcn.len()],
+            nic_lanes,
+            CableClass::Optical,
+            LinkRole::Dcn,
+            2000.0,
+        );
+    }
+}
+
+/// Add a DCN switch layer and attach every rack of a built pod/superpod.
+pub fn add_dcn_layer(
+    t: &mut Topology,
+    racks: &[RackHandles],
+    switches: usize,
+    attach: DcnAttach,
+) -> Vec<NodeId> {
+    let dcn: Vec<NodeId> = (0..switches)
+        .map(|_| t.add_node(NodeKind::DcnSwitch, Location::default()))
+        .collect();
+    for r in racks {
+        match attach {
+            DcnAttach::UbSwitch { lanes_per_rack } => {
+                attach_dcn_ub(t, r, &dcn, lanes_per_rack)
+            }
+            DcnAttach::CpuNic { .. } => attach_dcn_nic(t, r, &dcn, 4),
+        }
+    }
+    dcn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pod::{build_pod, PodConfig};
+
+    fn pod_with_dcn(attach: DcnAttach) -> (Topology, Vec<NodeId>) {
+        let mut t = Topology::new("pod+dcn");
+        let mut cfg = PodConfig::default();
+        cfg.rows = 2;
+        cfg.cols = 2;
+        let h = build_pod(&mut t, &cfg, 0);
+        let dcn = add_dcn_layer(&mut t, &h.racks, 2, attach);
+        (t, dcn)
+    }
+
+    #[test]
+    fn ub_switch_attach_connects_all_racks() {
+        let (t, dcn) = pod_with_dcn(DcnAttach::UbSwitch { lanes_per_rack: 8 });
+        for &d in &dcn {
+            assert!(!t.neighbors(d).is_empty());
+        }
+        // Any NPU can reach the DCN.
+        let npu = t.npus[0];
+        let path = t.shortest_path(npu, dcn[0], true).unwrap();
+        assert!(path.len() <= 5);
+        t.check_lane_budgets().unwrap();
+    }
+
+    #[test]
+    fn nic_attach_goes_through_cpus() {
+        let (t, dcn) = pod_with_dcn(DcnAttach::CpuNic { nic_gb_s: 12.5 });
+        let path = t.shortest_path(t.npus[0], dcn[0], true).unwrap();
+        // NPU → LRS → CPU → DCN (through the CPU pool).
+        assert!(path
+            .iter()
+            .any(|&n| t.node(n).kind == crate::topology::NodeKind::Cpu));
+    }
+
+    #[test]
+    fn per_npu_bandwidths_reflect_solution() {
+        let a = DcnAttach::UbSwitch { lanes_per_rack: 8 };
+        let b = DcnAttach::CpuNic { nic_gb_s: 12.5 };
+        // (a): 8 × 6.25 / 64 ≈ 0.78 GB/s per NPU of pure DCN bandwidth;
+        // (b): 4 NICs × 12.5 / 64 ≈ 0.78 — comparable by design, but (a)
+        // consumes UB lanes while (b) rides the CPU boards.
+        assert!(a.per_npu_gb_s(4) > 0.0);
+        assert!(b.per_npu_gb_s(4) > 0.0);
+    }
+}

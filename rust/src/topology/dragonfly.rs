@@ -1,0 +1,93 @@
+//! Dragonfly baseline (Kim et al., ISCA'08; §2.3 Fig 3).
+//!
+//! Groups of `a` switches, each with `p` endpoints and `h` global links;
+//! switches within a group form a full-mesh; groups are connected by
+//! global optical links. Included for the §2.3 comparison benches —
+//! "DF is cheaper than Clos but still costly due to full NPU-switch
+//! bandwidth requirements".
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+
+/// Canonical balanced dragonfly: `a = 2p = 2h`, groups `g = a*h + 1`.
+pub fn dragonfly(name: &str, p: usize, lanes: u32) -> (Topology, Vec<NodeId>) {
+    let a = 2 * p;
+    let h = p;
+    let g = a * h + 1;
+    let mut t = Topology::new(name);
+    let mut routers = Vec::with_capacity(g * a);
+    let mut npus = Vec::new();
+    for gi in 0..g {
+        for ai in 0..a {
+            let r = t.add_node(NodeKind::Hrs, Location::new(gi as u16, 0, 0, ai as u8, 0));
+            routers.push(r);
+            for s in 0..p {
+                let n = t.add_node(
+                    NodeKind::Npu,
+                    Location::new(gi as u16, 0, 0, ai as u8, s as u8),
+                );
+                t.add_link(n, r, lanes, CableClass::PassiveElectrical, LinkRole::NpuSwitch, 2.0);
+                npus.push(n);
+            }
+        }
+    }
+    // Intra-group full mesh (electrical).
+    for gi in 0..g {
+        for i in 0..a {
+            for j in (i + 1)..a {
+                t.add_link(
+                    routers[gi * a + i],
+                    routers[gi * a + j],
+                    lanes,
+                    CableClass::ActiveElectrical,
+                    LinkRole::Dim(0),
+                    5.0,
+                );
+            }
+        }
+    }
+    // Global links: router `ai` of group `gi` owns `h` consecutive global
+    // ports; connect group pairs (gi < gj) through the canonical port
+    // assignment: pair index k = gj-1 maps to (router, port) = (k / h, k % h).
+    for gi in 0..g {
+        for gj in (gi + 1)..g {
+            let k_i = gj - 1; // peer index as seen from gi
+            let k_j = gi; // peer index as seen from gj (gi < gj so no -1)
+            let r_i = routers[gi * a + (k_i / h) % a];
+            let r_j = routers[gj * a + (k_j / h) % a];
+            t.add_link(r_i, r_j, lanes, CableClass::Optical, LinkRole::Dim(1), 200.0);
+        }
+    }
+    (t, npus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_df_shape() {
+        let p = 2;
+        let (t, npus) = dragonfly("df2", p, 4);
+        let a = 2 * p;
+        let g = a * p + 1; // 9 groups
+        assert_eq!(npus.len(), g * a * p);
+        assert!(t.npus_connected());
+        // Every group pair has exactly one global link.
+        let globals = t
+            .links
+            .iter()
+            .filter(|l| l.role == LinkRole::Dim(1))
+            .count();
+        assert_eq!(globals, g * (g - 1) / 2);
+    }
+
+    #[test]
+    fn df_diameter_small() {
+        let (t, _) = dragonfly("df2", 2, 4);
+        // NPU-router-(local)-global-(local)-router-NPU ≤ 7 hops.
+        assert!(t.npu_diameter() <= 7);
+    }
+}

@@ -1,0 +1,320 @@
+//! The topology graph: nodes + undirected links + adjacency, with the
+//! query operations every other layer builds on.
+
+use std::collections::HashMap;
+
+use super::ids::{LinkId, NodeId};
+use super::link::{CableClass, Link, LinkRole};
+use super::node::{Location, Node, NodeKind};
+
+/// A cluster topology. Construct via the builders in [`super`] or
+/// incrementally with [`Topology::add_node`] / [`Topology::add_link`].
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    /// adjacency[n] = (neighbor, link) pairs.
+    adj: Vec<Vec<(NodeId, LinkId)>>,
+    /// Regular NPUs in rank order (excludes backups).
+    pub npus: Vec<NodeId>,
+    /// Backup NPUs (the "+1" of 64+1).
+    pub backups: Vec<NodeId>,
+    /// Pair → link index for O(1) "are these adjacent" queries.
+    pair_index: HashMap<(NodeId, NodeId), LinkId>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>) -> Self {
+        Topology {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind, loc: Location) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node::new(kind, loc));
+        self.adj.push(Vec::new());
+        match kind {
+            NodeKind::Npu => self.npus.push(id),
+            NodeKind::BackupNpu => self.backups.push(id),
+            _ => {}
+        }
+        id
+    }
+
+    pub fn add_link(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        lanes: u32,
+        class: CableClass,
+        role: LinkRole,
+        length_m: f64,
+    ) -> LinkId {
+        assert_ne!(a, b, "self-link");
+        assert!(lanes > 0, "zero-lane link");
+        let id = LinkId(self.links.len() as u32);
+        self.links.push(Link {
+            a,
+            b,
+            lanes,
+            class,
+            role,
+            length_m,
+        });
+        self.adj[a.idx()].push((b, id));
+        self.adj[b.idx()].push((a, id));
+        let key = if a < b { (a, b) } else { (b, a) };
+        let prev = self.pair_index.insert(key, id);
+        assert!(prev.is_none(), "duplicate link {a}-{b}");
+        id
+    }
+
+    #[inline]
+    pub fn node(&self, n: NodeId) -> &Node {
+        &self.nodes[n.idx()]
+    }
+
+    #[inline]
+    pub fn link(&self, l: LinkId) -> &Link {
+        &self.links[l.idx()]
+    }
+
+    #[inline]
+    pub fn neighbors(&self, n: NodeId) -> &[(NodeId, LinkId)] {
+        &self.adj[n.idx()]
+    }
+
+    /// The link between `a` and `b`, if directly connected.
+    pub fn link_between(&self, a: NodeId, b: NodeId) -> Option<LinkId> {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.pair_index.get(&key).copied()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Nodes of a given kind.
+    pub fn nodes_of_kind(&self, kind: NodeKind) -> Vec<NodeId> {
+        (0..self.nodes.len() as u32)
+            .map(NodeId)
+            .filter(|n| self.node(*n).kind == kind)
+            .collect()
+    }
+
+    /// Sum of UB lanes consumed at node `n` across its links. Used to
+    /// assert IO budgets (e.g. NPU ≤ x72) during construction.
+    pub fn lanes_used(&self, n: NodeId) -> u32 {
+        self.neighbors(n)
+            .iter()
+            .map(|&(_, l)| self.link(l).lanes)
+            .sum()
+    }
+
+    /// Assert that no node exceeds its Table 3 lane budget.
+    /// Returns the worst offender for diagnostics.
+    pub fn check_lane_budgets(&self) -> Result<(), String> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            let n = NodeId(i as u32);
+            let used = self.lanes_used(n);
+            let cap = node.kind.ub_lanes();
+            if used > cap {
+                return Err(format!(
+                    "{n} ({:?} at {:?}) uses {used} lanes > budget {cap}",
+                    node.kind, node.loc
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// BFS hop distance from `src` to every node (u32::MAX if unreachable).
+    /// `npu_routable` controls whether NPUs may forward traffic (they can
+    /// in UB-Mesh: the UB IO controller routes, §3.3.1).
+    pub fn bfs_hops(&self, src: NodeId, npu_routable: bool) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.nodes.len()];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src.idx()] = 0;
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u.idx()];
+            // A node that may not forward still *receives*; it just can't
+            // be an interior hop. We expand it only if routable or source.
+            if u != src && !npu_routable && self.node(u).kind.is_npu() {
+                continue;
+            }
+            for &(v, _) in self.neighbors(u) {
+                if dist[v.idx()] == u32::MAX {
+                    dist[v.idx()] = du + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// One shortest path (node sequence) from src to dst, BFS. NPUs are
+    /// allowed as interior hops iff `npu_routable`.
+    pub fn shortest_path(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+        npu_routable: bool,
+    ) -> Option<Vec<NodeId>> {
+        if src == dst {
+            return Some(vec![src]);
+        }
+        let mut prev = vec![NodeId(u32::MAX); self.nodes.len()];
+        let mut seen = vec![false; self.nodes.len()];
+        let mut queue = std::collections::VecDeque::new();
+        seen[src.idx()] = true;
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            if u != src && !npu_routable && self.node(u).kind.is_npu() {
+                continue;
+            }
+            for &(v, _) in self.neighbors(u) {
+                if !seen[v.idx()] {
+                    seen[v.idx()] = true;
+                    prev[v.idx()] = u;
+                    if v == dst {
+                        let mut path = vec![dst];
+                        let mut cur = dst;
+                        while cur != src {
+                            cur = prev[cur.idx()];
+                            path.push(cur);
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    queue.push_back(v);
+                }
+            }
+        }
+        None
+    }
+
+    /// Convert a node-sequence path to its link sequence.
+    /// Panics if consecutive nodes are not adjacent.
+    pub fn path_links(&self, path: &[NodeId]) -> Vec<LinkId> {
+        path.windows(2)
+            .map(|w| {
+                self.link_between(w[0], w[1])
+                    .unwrap_or_else(|| panic!("no link {}-{} in path", w[0], w[1]))
+            })
+            .collect()
+    }
+
+    /// Validate a node path: consecutive adjacency + no repeated node.
+    pub fn validate_path(&self, path: &[NodeId]) -> Result<(), String> {
+        if path.is_empty() {
+            return Err("empty path".into());
+        }
+        let mut seen = std::collections::HashSet::new();
+        for n in path {
+            if !seen.insert(*n) {
+                return Err(format!("node {n} repeated (loop)"));
+            }
+        }
+        for w in path.windows(2) {
+            if self.link_between(w[0], w[1]).is_none() {
+                return Err(format!("{} and {} not adjacent", w[0], w[1]));
+            }
+        }
+        Ok(())
+    }
+
+    /// Graph diameter restricted to NPU endpoints (hops, NPU-routable).
+    pub fn npu_diameter(&self) -> u32 {
+        let mut max = 0;
+        for &src in &self.npus {
+            let d = self.bfs_hops(src, true);
+            for &dst in &self.npus {
+                if d[dst.idx()] != u32::MAX {
+                    max = max.max(d[dst.idx()]);
+                }
+            }
+        }
+        max
+    }
+
+    /// True if every NPU can reach every other NPU.
+    pub fn npus_connected(&self) -> bool {
+        if self.npus.is_empty() {
+            return true;
+        }
+        let d = self.bfs_hops(self.npus[0], true);
+        self.npus.iter().all(|n| d[n.idx()] != u32::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri() -> (Topology, NodeId, NodeId, NodeId) {
+        let mut t = Topology::new("tri");
+        let a = t.add_node(NodeKind::Npu, Location::default());
+        let b = t.add_node(NodeKind::Npu, Location::default());
+        let c = t.add_node(NodeKind::Npu, Location::default());
+        t.add_link(a, b, 4, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+        t.add_link(b, c, 4, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+        (t, a, b, c)
+    }
+
+    #[test]
+    fn adjacency_and_pair_index() {
+        let (t, a, b, c) = tri();
+        assert_eq!(t.neighbors(b).len(), 2);
+        assert!(t.link_between(a, b).is_some());
+        assert!(t.link_between(b, a).is_some());
+        assert!(t.link_between(a, c).is_none());
+    }
+
+    #[test]
+    fn bfs_and_shortest_path() {
+        let (t, a, _b, c) = tri();
+        let d = t.bfs_hops(a, true);
+        assert_eq!(d[c.idx()], 2);
+        let p = t.shortest_path(a, c, true).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(t.path_links(&p).len(), 2);
+        t.validate_path(&p).unwrap();
+    }
+
+    #[test]
+    fn npu_forwarding_can_be_disabled() {
+        let (t, a, _b, c) = tri();
+        // With NPU forwarding off, a cannot reach c through b.
+        assert!(t.shortest_path(a, c, false).is_none());
+    }
+
+    #[test]
+    fn lane_budget_enforced() {
+        let mut t = Topology::new("over");
+        let a = t.add_node(NodeKind::Cpu, Location::default()); // x32 budget
+        let b = t.add_node(NodeKind::Hrs, Location::default());
+        t.add_link(a, b, 40, CableClass::Backplane, LinkRole::Backplane, 0.1);
+        assert!(t.check_lane_budgets().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate link")]
+    fn duplicate_links_rejected() {
+        let (mut t, a, b, _c) = tri();
+        t.add_link(a, b, 1, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+    }
+
+    #[test]
+    fn validate_path_rejects_loops() {
+        let (t, a, b, _c) = tri();
+        assert!(t.validate_path(&[a, b, a]).is_err());
+    }
+}

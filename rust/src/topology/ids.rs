@@ -1,0 +1,58 @@
+//! Strongly-typed node/link identifiers.
+
+/// Index of a node in [`super::Topology::nodes`].
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct NodeId(pub u32);
+
+/// Index of a link in [`super::Topology::links`].
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct LinkId(pub u32);
+
+impl NodeId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl LinkId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+impl std::fmt::Display for LinkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "l{}", self.0)
+    }
+}
+
+/// A directed view of a link: `(link, direction)`. Direction `false`
+/// means a→b, `true` means b→a. Flow simulation and channel-dependency
+/// analysis operate on directed channels.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct Channel {
+    pub link: LinkId,
+    pub rev: bool,
+}
+
+impl Channel {
+    pub fn forward(link: LinkId) -> Self {
+        Channel { link, rev: false }
+    }
+    pub fn backward(link: LinkId) -> Self {
+        Channel { link, rev: true }
+    }
+    /// Dense index: 2*link + rev. Used to index per-channel state arrays.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.link.idx() * 2 + self.rev as usize
+    }
+}

@@ -1,0 +1,148 @@
+//! Links: UB cables between nodes, classified per Table 2.
+
+use super::ids::NodeId;
+use super::ublink;
+
+/// Physical cable class (Table 2). Determines reach, cost, AFR and
+/// per-hop latency.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum CableClass {
+    /// ~1 m copper, XY dimensions (intra-rack). 86.7% of cables.
+    PassiveElectrical,
+    /// ~10 m copper with retimers, Z dimension (rack row). 7.2%.
+    ActiveElectrical,
+    /// 100–1000 m fiber with optical modules at both ends (α, β, γ).
+    Optical,
+    /// In-chassis backplane trace (NPU↔LRS within a rack).
+    Backplane,
+}
+
+impl CableClass {
+    /// Optical modules consumed by one cable of this class.
+    pub fn optical_modules(self) -> u32 {
+        match self {
+            CableClass::Optical => 2,
+            _ => 0,
+        }
+    }
+}
+
+/// What the link is *for* — the dimension of the nD-FullMesh it belongs
+/// to, or the switch attachment it implements. Used by routing (dimension
+/// ordering), census (Table 2 rows) and bandwidth accounting.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum LinkRole {
+    /// X dimension: NPU↔NPU on the same board (1D-FullMesh).
+    BoardX,
+    /// Y dimension: NPU↔NPU across boards in a rack (2D-FullMesh).
+    RackY,
+    /// Z dimension: rack↔rack within a row (LRS↔LRS, active electrical).
+    RowZ,
+    /// α dimension: rack↔rack across rows (LRS↔LRS, optical).
+    ColAlpha,
+    /// NPU/CPU/backup ↔ LRS backplane attach.
+    Backplane,
+    /// LRS↔LRS within a rack's switch plane.
+    LrsMesh,
+    /// Rack (LRS) ↔ HRS pod-level Clos uplink (β/γ, optical).
+    PodUplink,
+    /// HRS↔HRS spine links (Clos baselines, multi-tier).
+    Spine,
+    /// NPU ↔ switch in Clos / 1D-FM-A/B baselines.
+    NpuSwitch,
+    /// Switch ↔ DCN.
+    Dcn,
+    /// Direct NPU↔NPU link of a generic nD mesh dimension `d` ≥ 2
+    /// (used by the generic builder / torus / dragonfly).
+    Dim(u8),
+}
+
+impl LinkRole {
+    /// The nD-FullMesh dimension index used by dimension-ordered routing
+    /// and TFC VL assignment. Switch attaches count as the highest
+    /// "escape" dimension.
+    pub fn dim(self) -> u8 {
+        match self {
+            LinkRole::BoardX => 0,
+            LinkRole::RackY => 1,
+            LinkRole::RowZ => 2,
+            LinkRole::ColAlpha => 3,
+            LinkRole::Dim(d) => d,
+            LinkRole::Backplane | LinkRole::LrsMesh | LinkRole::NpuSwitch => 4,
+            LinkRole::PodUplink | LinkRole::Spine | LinkRole::Dcn => 5,
+        }
+    }
+}
+
+/// An undirected physical cable carrying `lanes` UB lanes in each
+/// direction (full duplex). Flow simulation treats each direction as an
+/// independent channel of `lanes × LANE_GB_S` capacity.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub lanes: u32,
+    pub class: CableClass,
+    pub role: LinkRole,
+    /// Physical length in metres (Table 2 distance column).
+    pub length_m: f64,
+}
+
+impl Link {
+    /// Unidirectional capacity in GB/s.
+    #[inline]
+    pub fn capacity_gb_s(&self) -> f64 {
+        ublink::lanes_gb_s(self.lanes)
+    }
+
+    /// One-way per-hop latency in µs.
+    #[inline]
+    pub fn latency_us(&self) -> f64 {
+        ublink::hop_latency_us(self.class)
+    }
+
+    /// The endpoint that isn't `n` (panics if `n` is not an endpoint).
+    #[inline]
+    pub fn other(&self, n: NodeId) -> NodeId {
+        if self.a == n {
+            self.b
+        } else {
+            debug_assert_eq!(self.b, n, "node {n} not on link {self:?}");
+            self.a
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optical_modules_only_on_optical() {
+        assert_eq!(CableClass::Optical.optical_modules(), 2);
+        assert_eq!(CableClass::PassiveElectrical.optical_modules(), 0);
+        assert_eq!(CableClass::Backplane.optical_modules(), 0);
+    }
+
+    #[test]
+    fn dims_are_ordered_x_to_escape() {
+        assert!(LinkRole::BoardX.dim() < LinkRole::RackY.dim());
+        assert!(LinkRole::RackY.dim() < LinkRole::RowZ.dim());
+        assert!(LinkRole::RowZ.dim() < LinkRole::ColAlpha.dim());
+        assert!(LinkRole::ColAlpha.dim() < LinkRole::Backplane.dim());
+        assert!(LinkRole::Backplane.dim() < LinkRole::PodUplink.dim());
+    }
+
+    #[test]
+    fn capacity_scales_with_lanes() {
+        let l = Link {
+            a: NodeId(0),
+            b: NodeId(1),
+            lanes: 16,
+            class: CableClass::PassiveElectrical,
+            role: LinkRole::BoardX,
+            length_m: 1.0,
+        };
+        assert!((l.capacity_gb_s() - 16.0 * ublink::LANE_GB_S).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,37 @@
+//! Topology model and builders for UB-Mesh and baseline architectures.
+//!
+//! The paper's §3 describes the nD-FullMesh topology and its concrete
+//! 4D-FullMesh realization (UB-Mesh-Pod / SuperPod). This module provides
+//! the graph substrate plus builders for:
+//!
+//! * [`rack::ubmesh_rack`] — 2D-FullMesh rack: 8 boards × 8 NPUs, the
+//!   64+1 backup NPU, the 18-LRS backplane (Fig 7-b, Fig 8).
+//! * [`pod::ubmesh_pod`] — 4×4 racks in a 2D-FullMesh = the 4D-FullMesh
+//!   UB-Mesh-Pod (Fig 7-a/c).
+//! * [`superpod::ubmesh_superpod`] — pods joined by HRS Clos (§3.3.4).
+//! * [`variants`] — 1D-FM-A / 1D-FM-B intra-rack baselines (Fig 16).
+//! * [`clos::clos_cluster`] — symmetric Clos baselines.
+//! * [`torus`] / [`dragonfly`] — §2.3 comparison topologies.
+//! * [`ndmesh::nd_fullmesh`] — the generic recursive builder (§3.1).
+//! * [`census`] — cable/switch/optic censuses feeding Table 2 & Fig 21.
+
+pub mod census;
+pub mod clos;
+pub mod dcn;
+pub mod dragonfly;
+pub mod graph;
+pub mod ids;
+pub mod link;
+pub mod ndmesh;
+pub mod node;
+pub mod pod;
+pub mod rack;
+pub mod superpod;
+pub mod torus;
+pub mod ublink;
+pub mod variants;
+
+pub use graph::Topology;
+pub use ids::{Channel, LinkId, NodeId};
+pub use link::{CableClass, Link, LinkRole};
+pub use node::{Location, Node, NodeKind};

@@ -1,0 +1,164 @@
+//! Generic recursive nD-FullMesh builder (§3.1, Fig 4).
+//!
+//! `dims = [d0, d1, ..., dn-1]` produces `∏ di` NPUs at coordinates
+//! `(c0, ..., cn-1)`. Two nodes are linked iff their coordinates differ
+//! in exactly **one** position — i.e. each "row" of every dimension forms
+//! a full-mesh, which is exactly the paper's recursive construction:
+//! 1-D full-meshes between adjacent nodes, 2-D full-meshes between
+//! adjacent 1-D meshes, and so on.
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+
+/// Per-dimension link parameters.
+#[derive(Clone, Debug)]
+pub struct DimSpec {
+    /// Group size of this dimension.
+    pub size: usize,
+    /// UB lanes per direct link in this dimension.
+    pub lanes: u32,
+    /// Cable class for links of this dimension.
+    pub class: CableClass,
+    /// Physical length (m).
+    pub length_m: f64,
+}
+
+impl DimSpec {
+    pub fn new(size: usize, lanes: u32, class: CableClass, length_m: f64) -> Self {
+        DimSpec {
+            size,
+            lanes,
+            class,
+            length_m,
+        }
+    }
+}
+
+/// Decode flat index -> coordinate vector (row-major, dim 0 fastest).
+pub fn coords_of(mut idx: usize, dims: &[usize]) -> Vec<usize> {
+    let mut c = Vec::with_capacity(dims.len());
+    for &d in dims {
+        c.push(idx % d);
+        idx /= d;
+    }
+    c
+}
+
+/// Encode coordinate vector -> flat index.
+pub fn index_of(coords: &[usize], dims: &[usize]) -> usize {
+    let mut idx = 0;
+    let mut stride = 1;
+    for (c, d) in coords.iter().zip(dims) {
+        debug_assert!(c < d);
+        idx += c * stride;
+        stride *= d;
+    }
+    idx
+}
+
+/// Build an nD-FullMesh of NPUs. Node `i`'s coordinates are
+/// `coords_of(i, sizes)`; the [`Location`] field packs the first four
+/// dims as (slot, board, rack_row, rack_col) when present.
+pub fn nd_fullmesh(name: &str, specs: &[DimSpec]) -> Topology {
+    let sizes: Vec<usize> = specs.iter().map(|s| s.size).collect();
+    let n: usize = sizes.iter().product();
+    let mut t = Topology::new(name);
+    for i in 0..n {
+        let c = coords_of(i, &sizes);
+        let loc = Location {
+            slot: *c.first().unwrap_or(&0) as u8,
+            board: *c.get(1).unwrap_or(&0) as u8,
+            rack_row: *c.get(2).unwrap_or(&0) as u8,
+            rack_col: *c.get(3).unwrap_or(&0) as u8,
+            pod: *c.get(4).unwrap_or(&0) as u16,
+        };
+        t.add_node(NodeKind::Npu, loc);
+    }
+    // Full-mesh within each dimension row.
+    for i in 0..n {
+        let ci = coords_of(i, &sizes);
+        for (d, spec) in specs.iter().enumerate() {
+            // Partner j > i differing only in dimension d.
+            for v in (ci[d] + 1)..spec.size {
+                let mut cj = ci.clone();
+                cj[d] = v;
+                let j = index_of(&cj, &sizes);
+                t.add_link(
+                    NodeId(i as u32),
+                    NodeId(j as u32),
+                    spec.lanes,
+                    spec.class,
+                    LinkRole::Dim(d as u8),
+                    spec.length_m,
+                );
+            }
+        }
+    }
+    t
+}
+
+/// Number of links the nD-FullMesh construction should produce:
+/// `N/di * C(di,2)` per dimension.
+pub fn expected_links(sizes: &[usize]) -> usize {
+    let n: usize = sizes.iter().product();
+    sizes
+        .iter()
+        .map(|&d| (n / d) * (d * (d - 1) / 2))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(sizes: &[usize]) -> Vec<DimSpec> {
+        sizes
+            .iter()
+            .map(|&s| DimSpec::new(s, 2, CableClass::PassiveElectrical, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let dims = [3, 4, 5];
+        for i in 0..60 {
+            assert_eq!(index_of(&coords_of(i, &dims), &dims), i);
+        }
+    }
+
+    #[test]
+    fn d1_fullmesh_is_complete_graph() {
+        let t = nd_fullmesh("k8", &spec(&[8]));
+        assert_eq!(t.node_count(), 8);
+        assert_eq!(t.link_count(), 28);
+        assert_eq!(t.npu_diameter(), 1);
+    }
+
+    #[test]
+    fn d2_fullmesh_diameter_2() {
+        let t = nd_fullmesh("8x8", &spec(&[8, 8]));
+        assert_eq!(t.node_count(), 64);
+        assert_eq!(t.link_count(), expected_links(&[8, 8]));
+        assert_eq!(t.link_count(), 2 * 8 * 28); // 448, §3.3.1
+        assert_eq!(t.npu_diameter(), 2);
+        assert!(t.npus_connected());
+    }
+
+    #[test]
+    fn d4_fullmesh_diameter_4() {
+        let t = nd_fullmesh("2x2x2x2", &spec(&[2, 2, 2, 2]));
+        assert_eq!(t.node_count(), 16);
+        assert_eq!(t.link_count(), expected_links(&[2, 2, 2, 2]));
+        assert_eq!(t.npu_diameter(), 4);
+    }
+
+    #[test]
+    fn per_node_degree_is_sum_of_dim_minus_1() {
+        let t = nd_fullmesh("4x3", &spec(&[4, 3]));
+        for &npu in &t.npus {
+            assert_eq!(t.neighbors(npu).len(), (4 - 1) + (3 - 1));
+        }
+    }
+}

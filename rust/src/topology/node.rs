@@ -1,0 +1,124 @@
+//! Node kinds and physical locations.
+
+/// What a node *is* (Table 3 hardware modules + DCN).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum NodeKind {
+    /// Regular AI compute unit; UB x72 IO, UB controller can route (§3.3.1).
+    Npu,
+    /// The "+1" backup NPU of the 64+1 high-availability design (§3.3.2).
+    BackupNpu,
+    /// Host CPU, UB x32 IO; pooled behind LRS (§3.2.1).
+    Cpu,
+    /// Low-Radix Switch, UB x72 (Table 3).
+    Lrs,
+    /// High-Radix Switch, UB x512 (Table 3).
+    Hrs,
+    /// Data-center-network switch beyond the SuperPod (§3.3.4).
+    DcnSwitch,
+}
+
+impl NodeKind {
+    /// Total UB lane capacity per Table 3.
+    pub fn ub_lanes(self) -> u32 {
+        match self {
+            NodeKind::Npu | NodeKind::BackupNpu => 72,
+            NodeKind::Cpu => 32,
+            NodeKind::Lrs => 72,
+            NodeKind::Hrs => 512,
+            NodeKind::DcnSwitch => 512,
+        }
+    }
+
+    pub fn is_switch(self) -> bool {
+        matches!(self, NodeKind::Lrs | NodeKind::Hrs | NodeKind::DcnSwitch)
+    }
+
+    pub fn is_npu(self) -> bool {
+        matches!(self, NodeKind::Npu | NodeKind::BackupNpu)
+    }
+}
+
+/// Physical coordinates in the UB-Mesh hierarchy. Drives structured
+/// addressing (§4.1.2), cable-length classes (Table 2) and placement.
+///
+/// Dimension naming follows Fig 5: X = intra-board, Y = cross-board in
+/// rack, Z = rack row within pod, α (alpha) = rack column within pod,
+/// β/γ = pod level and beyond.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug, Default)]
+pub struct Location {
+    /// Pod index within the SuperPod.
+    pub pod: u16,
+    /// Rack row within the pod (Z dimension), 0..4 for UB-Mesh-Pod.
+    pub rack_row: u8,
+    /// Rack column within the pod (α dimension), 0..4 for UB-Mesh-Pod.
+    pub rack_col: u8,
+    /// Board within the rack (Y dimension), 0..8.
+    pub board: u8,
+    /// NPU slot on the board (X dimension), 0..8.
+    pub slot: u8,
+}
+
+impl Location {
+    pub fn new(pod: u16, rack_row: u8, rack_col: u8, board: u8, slot: u8) -> Self {
+        Location {
+            pod,
+            rack_row,
+            rack_col,
+            board,
+            slot,
+        }
+    }
+
+    /// Rack index within the pod (row-major over the 4×4 grid).
+    pub fn rack(&self, cols: u8) -> u16 {
+        self.rack_row as u16 * cols as u16 + self.rack_col as u16
+    }
+
+    /// True if both locations are in the same rack of the same pod.
+    pub fn same_rack(&self, o: &Location) -> bool {
+        self.pod == o.pod && self.rack_row == o.rack_row && self.rack_col == o.rack_col
+    }
+
+    /// True if same rack and same board.
+    pub fn same_board(&self, o: &Location) -> bool {
+        self.same_rack(o) && self.board == o.board
+    }
+}
+
+/// A node in the topology graph.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub loc: Location,
+}
+
+impl Node {
+    pub fn new(kind: NodeKind, loc: Location) -> Self {
+        Node { kind, loc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_capacities_match_table3() {
+        assert_eq!(NodeKind::Npu.ub_lanes(), 72);
+        assert_eq!(NodeKind::Cpu.ub_lanes(), 32);
+        assert_eq!(NodeKind::Lrs.ub_lanes(), 72);
+        assert_eq!(NodeKind::Hrs.ub_lanes(), 512);
+    }
+
+    #[test]
+    fn location_relations() {
+        let a = Location::new(0, 1, 2, 3, 4);
+        let b = Location::new(0, 1, 2, 3, 5);
+        let c = Location::new(0, 1, 2, 4, 4);
+        let d = Location::new(1, 1, 2, 3, 4);
+        assert!(a.same_board(&b));
+        assert!(a.same_rack(&c) && !a.same_board(&c));
+        assert!(!a.same_rack(&d));
+        assert_eq!(a.rack(4), 6);
+    }
+}

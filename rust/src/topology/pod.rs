@@ -1,0 +1,324 @@
+//! The 4D-FullMesh UB-Mesh-Pod (§3.3.3, Fig 7-a/c).
+//!
+//! 16 racks in a 4×4 grid. Racks in the same row form a 1D full-mesh in
+//! the Z dimension (active electrical, ~10 m); racks in the same column
+//! form a 1D full-mesh in the α dimension (optical, ~100 m). Each
+//! rack-to-rack bundle is UB x128 (Fig 8-d): one x32 cable per backplane
+//! plane. Per plane, inter-rack LRS 0–2 serve the row neighbors, 3–5 the
+//! column neighbors, and 6–7 the pod-level HRS uplink (x256 aggregate per
+//! rack, §3.3.4).
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+use super::rack::{build_rack, RackConfig, RackHandles};
+
+/// Pod construction parameters. `Default` reproduces the paper's pod.
+#[derive(Clone, Debug)]
+pub struct PodConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub rack: RackConfig,
+    /// Lanes per plane of a row (Z) rack-to-rack bundle (x32 × 4 = x128).
+    pub row_lanes_per_plane: u32,
+    /// Lanes per plane of a column (α) bundle.
+    pub col_lanes_per_plane: u32,
+    /// Pod-level HRS for cross-pod/Borrow traffic; 0 = no uplink layer
+    /// (the SuperPod builder wires its own HRS tier instead).
+    pub uplink_hrs: usize,
+}
+
+impl Default for PodConfig {
+    fn default() -> Self {
+        PodConfig {
+            rows: 4,
+            cols: 4,
+            rack: RackConfig::default(),
+            row_lanes_per_plane: 32,
+            col_lanes_per_plane: 32,
+            uplink_hrs: 0,
+        }
+    }
+}
+
+impl PodConfig {
+    pub fn racks(&self) -> usize {
+        self.rows * self.cols
+    }
+    pub fn npus(&self) -> usize {
+        self.racks() * self.rack.npus()
+    }
+}
+
+/// Handles into a constructed pod.
+#[derive(Clone, Debug)]
+pub struct PodHandles {
+    /// Racks in row-major order.
+    pub racks: Vec<RackHandles>,
+    /// Pod-level HRS (empty unless `uplink_hrs > 0`).
+    pub hrs: Vec<NodeId>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PodHandles {
+    pub fn rack(&self, row: usize, col: usize) -> &RackHandles {
+        &self.racks[row * self.cols + col]
+    }
+
+    /// All regular NPUs in rank order (rack-major).
+    pub fn npus(&self) -> Vec<NodeId> {
+        self.racks.iter().flat_map(|r| r.npus.clone()).collect()
+    }
+}
+
+/// Index of neighbor `b` among the sorted peers of `a` in a group of
+/// `size` (used to pick which inter-rack LRS carries which bundle).
+fn neighbor_slot(a: usize, b: usize) -> usize {
+    debug_assert_ne!(a, b);
+    if b < a {
+        b
+    } else {
+        b - 1
+    }
+}
+
+/// Build a pod into `t`. Exposed for the SuperPod builder.
+pub fn build_pod(t: &mut Topology, cfg: &PodConfig, pod: u16) -> PodHandles {
+    let mut racks = Vec::with_capacity(cfg.racks());
+    for r in 0..cfg.rows {
+        for c in 0..cfg.cols {
+            racks.push(build_rack(t, &cfg.rack, pod, r as u8, c as u8));
+        }
+    }
+    let planes = cfg.rack.planes;
+    let rack_at = |r: usize, c: usize| -> &RackHandles { &racks[r * cfg.cols + c] };
+
+    // Z dimension: row full-mesh (active electrical, ~10 m).
+    for r in 0..cfg.rows {
+        for c1 in 0..cfg.cols {
+            for c2 in (c1 + 1)..cfg.cols {
+                let s1 = neighbor_slot(c1, c2); // 0..cols-1 ≤ 2
+                let s2 = neighbor_slot(c2, c1);
+                for p in 0..planes {
+                    let a = rack_at(r, c1).ir_lrs[p][s1];
+                    let b = rack_at(r, c2).ir_lrs[p][s2];
+                    t.add_link(
+                        a,
+                        b,
+                        cfg.row_lanes_per_plane,
+                        CableClass::ActiveElectrical,
+                        LinkRole::RowZ,
+                        10.0,
+                    );
+                }
+            }
+        }
+    }
+
+    // α dimension: column full-mesh (optical, ~100 m). LRS offset 3.
+    for c in 0..cfg.cols {
+        for r1 in 0..cfg.rows {
+            for r2 in (r1 + 1)..cfg.rows {
+                let s1 = 3 + neighbor_slot(r1, r2);
+                let s2 = 3 + neighbor_slot(r2, r1);
+                for p in 0..planes {
+                    let a = rack_at(r1, c).ir_lrs[p][s1];
+                    let b = rack_at(r2, c).ir_lrs[p][s2];
+                    t.add_link(
+                        a,
+                        b,
+                        cfg.col_lanes_per_plane,
+                        CableClass::Optical,
+                        LinkRole::ColAlpha,
+                        100.0,
+                    );
+                }
+            }
+        }
+    }
+
+    // Optional pod-local HRS uplink tier (for Borrow routing / cross-pod).
+    let mut hrs = Vec::new();
+    if cfg.uplink_hrs > 0 {
+        let loc = Location::new(pod, 0, 0, 0, 0);
+        for _ in 0..cfg.uplink_hrs {
+            hrs.push(t.add_node(NodeKind::Hrs, loc));
+        }
+        wire_uplinks(t, &racks, &hrs, planes);
+    }
+
+    PodHandles {
+        racks,
+        hrs,
+        rows: cfg.rows,
+        cols: cfg.cols,
+    }
+}
+
+/// Wire each rack's uplink LRS (slots 6,7 per plane, x32 each = x256 per
+/// rack) across `hrs` switches, round-robin so each uplink LRS spreads
+/// evenly. Total per rack = planes × 2 × 32 lanes.
+pub fn wire_uplinks(
+    t: &mut Topology,
+    racks: &[RackHandles],
+    hrs: &[NodeId],
+    planes: usize,
+) {
+    assert!(!hrs.is_empty());
+    for rh in racks {
+        // Collect the 2·planes uplink LRS of the rack.
+        let ups: Vec<NodeId> = (0..planes)
+            .flat_map(|p| [rh.ir_lrs[p][6], rh.ir_lrs[p][7]])
+            .collect();
+        // Each uplink LRS has x32 outward; split it over a set of HRS.
+        let per_lrs_targets = (hrs.len() / ups.len()).max(1);
+        let lanes_per_link = 32 / per_lrs_targets.min(32) as u32;
+        let mut h = 0usize;
+        for &u in &ups {
+            for _ in 0..per_lrs_targets {
+                t.add_link(
+                    u,
+                    hrs[h % hrs.len()],
+                    lanes_per_link.max(1),
+                    CableClass::Optical,
+                    LinkRole::PodUplink,
+                    1000.0,
+                );
+                h += 1;
+            }
+        }
+    }
+}
+
+/// A standalone UB-Mesh-Pod (1024 NPUs with default config).
+pub fn ubmesh_pod(cfg: &PodConfig) -> (Topology, PodHandles) {
+    let mut t = Topology::new("ubmesh-pod-4dfm");
+    let h = build_pod(&mut t, cfg, 0);
+    debug_assert!(t.check_lane_budgets().is_ok());
+    (t, h)
+}
+
+/// Baseline: same racks but **no** direct rack-to-rack links; all
+/// inter-rack lanes go to a non-blocking HRS tier (Fig 18-b).
+pub fn pod_clos(rack_cfg: &RackConfig, racks_n: usize) -> (Topology, PodHandles) {
+    let mut t = Topology::new("pod-clos");
+    let mut racks = Vec::new();
+    for i in 0..racks_n {
+        racks.push(build_rack(
+            &mut t,
+            rack_cfg,
+            0,
+            (i / 4) as u8,
+            (i % 4) as u8,
+        ));
+    }
+    // All 8 IR-LRS per plane face the HRS tier: racks_n × planes × 8 × x32.
+    let total_lanes = racks_n as u32 * rack_cfg.planes as u32 * 8 * rack_cfg.ir_lrs_out_lanes;
+    let hrs_n = (total_lanes as usize).div_ceil(512);
+    let hrs: Vec<NodeId> = (0..hrs_n)
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    for rh in &racks {
+        let irs = rh.all_ir_lrs();
+        // Spread each IR-LRS's x32 across the HRS tier.
+        for (i, &lrs) in irs.iter().enumerate() {
+            let targets = hrs_n.min(8);
+            let lanes = rack_cfg.ir_lrs_out_lanes / targets as u32;
+            for k in 0..targets {
+                let h = (i * targets + k) % hrs_n;
+                t.add_link(
+                    lrs,
+                    hrs[h],
+                    lanes.max(1),
+                    CableClass::Optical,
+                    LinkRole::NpuSwitch,
+                    100.0,
+                );
+            }
+        }
+    }
+    let h = PodHandles {
+        racks,
+        hrs,
+        rows: racks_n.div_ceil(4),
+        cols: 4,
+    };
+    (t, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pod_shape_matches_paper() {
+        let cfg = PodConfig::default();
+        let (t, h) = ubmesh_pod(&cfg);
+        assert_eq!(h.npus().len(), 1024, "4D-FullMesh pod = 1024 NPUs");
+        // Row (Z) bundles: 4 rows × C(4,2) pairs × 4 planes.
+        let z = t.links.iter().filter(|l| l.role == LinkRole::RowZ).count();
+        assert_eq!(z, 4 * 6 * 4);
+        let a = t
+            .links
+            .iter()
+            .filter(|l| l.role == LinkRole::ColAlpha)
+            .count();
+        assert_eq!(a, 4 * 6 * 4);
+        t.check_lane_budgets().unwrap();
+    }
+
+    #[test]
+    fn rack_to_rack_bundle_is_x128() {
+        let cfg = PodConfig::default();
+        let (t, _h) = ubmesh_pod(&cfg);
+        // Sum lanes of one row-pair bundle: racks (0,0)-(0,1), 4 planes x32.
+        let lanes: u32 = t
+            .links
+            .iter()
+            .filter(|l| l.role == LinkRole::RowZ)
+            .take(4)
+            .map(|l| l.lanes)
+            .sum();
+        assert_eq!(lanes, 128);
+    }
+
+    #[test]
+    fn cross_rack_npus_reachable_and_short() {
+        let cfg = PodConfig::default();
+        let (t, h) = ubmesh_pod(&cfg);
+        assert!(t.npus_connected());
+        // NPU in rack (0,0) to NPU in rack (0,3): npu -> board LRS ->
+        // ir LRS -> peer ir LRS -> board LRS -> npu ≤ 6 hops.
+        let a = h.rack(0, 0).npus[0];
+        let b = h.rack(0, 3).npus[63];
+        let p = t.shortest_path(a, b, true).unwrap();
+        assert!(p.len() - 1 <= 6, "path too long: {} hops", p.len() - 1);
+    }
+
+    #[test]
+    fn uplink_tier_optional() {
+        let mut cfg = PodConfig::default();
+        cfg.uplink_hrs = 8;
+        let (t, h) = ubmesh_pod(&cfg);
+        assert_eq!(h.hrs.len(), 8);
+        t.check_lane_budgets().unwrap();
+        let up = t
+            .links
+            .iter()
+            .filter(|l| l.role == LinkRole::PodUplink)
+            .count();
+        assert!(up > 0);
+    }
+
+    #[test]
+    fn pod_clos_fully_switched() {
+        let (t, h) = pod_clos(&RackConfig::default(), 16);
+        // 16 racks × 1024 lanes = 16384 → 32 HRS.
+        assert_eq!(h.hrs.len(), 32);
+        let z = t.links.iter().filter(|l| l.role == LinkRole::RowZ).count();
+        assert_eq!(z, 0);
+        t.check_lane_budgets().unwrap();
+    }
+}

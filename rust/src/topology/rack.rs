@@ -1,0 +1,336 @@
+//! The UB-Mesh 2D-FullMesh rack (§3.3.1, §3.3.2, Fig 7-b, Fig 8).
+//!
+//! A rack holds 8 NPU boards × 8 NPUs. On each board the 8 NPUs form an
+//! X-dimension 1D-FullMesh (passive electrical, x4 per neighbor); across
+//! boards, same-slot NPUs form the Y-dimension full-mesh (passive
+//! electrical, x4). The remaining x16 of each NPU's x72 budget attaches
+//! to the backplane switch planes.
+//!
+//! The backplane comprises **4 planes × 18 LRS** ("the rack features
+//! multiple back-plane switches ... 18 LRSes are fully-connected to form
+//! one switch plane"): per plane, 8 LRS attach NPU boards, 8 LRS carry
+//! inter-rack links, 1 LRS serves CPUs and 1 the backup NPU — matching
+//! the paper's "two LRSes are used for CPUs and backup NPUs, eight for
+//! regular NPUs and eight for inter-rack connection". Aggregate
+//! inter-rack IO is 4 planes × 8 LRS × x32 = **four UB x256 IO** (Fig
+//! 7-b), i.e. x16 per NPU (Fig 20 default).
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+use super::ublink::{X_LANES_PER_NEIGHBOR, Y_LANES_PER_NEIGHBOR};
+
+/// Rack construction parameters. `Default` reproduces the paper's rack.
+#[derive(Clone, Debug)]
+pub struct RackConfig {
+    pub boards: usize,
+    pub slots: usize,
+    /// Lanes per X-dimension (intra-board) direct link.
+    pub x_lanes: u32,
+    /// Lanes per Y-dimension (cross-board) direct link.
+    pub y_lanes: u32,
+    /// Backplane switch planes.
+    pub planes: usize,
+    /// Lanes from each NPU to its board LRS, per plane.
+    pub npu_plane_lanes: u32,
+    /// Lanes between LRS pairs inside one plane's full-mesh.
+    pub lrs_mesh_lanes: u32,
+    /// Out-facing lanes per inter-rack LRS (consumed by pod wiring).
+    pub ir_lrs_out_lanes: u32,
+    /// Host CPUs in the rack.
+    pub cpus: usize,
+    /// Whether to include the 64+1 backup NPU.
+    pub backup: bool,
+}
+
+impl Default for RackConfig {
+    fn default() -> Self {
+        RackConfig {
+            boards: 8,
+            slots: 8,
+            x_lanes: X_LANES_PER_NEIGHBOR,
+            y_lanes: Y_LANES_PER_NEIGHBOR,
+            planes: 4,
+            npu_plane_lanes: 4,
+            lrs_mesh_lanes: 2,
+            ir_lrs_out_lanes: 32,
+            cpus: 4,
+            backup: true,
+        }
+    }
+}
+
+impl RackConfig {
+    pub fn npus(&self) -> usize {
+        self.boards * self.slots
+    }
+
+    /// Aggregate inter-rack lanes the rack exposes (paper: 4 × x256).
+    pub fn inter_rack_lanes(&self) -> u32 {
+        (self.planes as u32) * 8 * self.ir_lrs_out_lanes
+    }
+}
+
+/// Handles into a constructed rack, used by pod wiring and placement.
+#[derive(Clone, Debug)]
+pub struct RackHandles {
+    /// NPUs in rank order (board-major: board*slots + slot).
+    pub npus: Vec<NodeId>,
+    /// The backup NPU, if configured.
+    pub backup: Option<NodeId>,
+    pub cpus: Vec<NodeId>,
+    /// Per plane: the 8 board-attach LRS.
+    pub npu_lrs: Vec<Vec<NodeId>>,
+    /// Per plane: the 8 inter-rack LRS (out ports wired by the pod).
+    pub ir_lrs: Vec<Vec<NodeId>>,
+    /// Per plane: CPU LRS and backup LRS.
+    pub cpu_lrs: Vec<NodeId>,
+    pub bk_lrs: Vec<NodeId>,
+}
+
+impl RackHandles {
+    /// NPU at (board, slot).
+    pub fn npu(&self, board: usize, slot: usize, slots: usize) -> NodeId {
+        self.npus[board * slots + slot]
+    }
+
+    /// All inter-rack LRS across planes, flattened.
+    pub fn all_ir_lrs(&self) -> Vec<NodeId> {
+        self.ir_lrs.iter().flatten().copied().collect()
+    }
+}
+
+/// Build one UB-Mesh rack into `t` at pod/row/col coordinates.
+pub fn build_rack(
+    t: &mut Topology,
+    cfg: &RackConfig,
+    pod: u16,
+    rack_row: u8,
+    rack_col: u8,
+) -> RackHandles {
+    let at = |board: u8, slot: u8| Location::new(pod, rack_row, rack_col, board, slot);
+
+    // --- NPUs -----------------------------------------------------------
+    let mut npus = Vec::with_capacity(cfg.npus());
+    for b in 0..cfg.boards {
+        for s in 0..cfg.slots {
+            npus.push(t.add_node(NodeKind::Npu, at(b as u8, s as u8)));
+        }
+    }
+
+    // X full-mesh per board (Fig 8-a).
+    for b in 0..cfg.boards {
+        for s1 in 0..cfg.slots {
+            for s2 in (s1 + 1)..cfg.slots {
+                t.add_link(
+                    npus[b * cfg.slots + s1],
+                    npus[b * cfg.slots + s2],
+                    cfg.x_lanes,
+                    CableClass::PassiveElectrical,
+                    LinkRole::BoardX,
+                    0.3,
+                );
+            }
+        }
+    }
+    // Y full-mesh per slot column across boards.
+    for s in 0..cfg.slots {
+        for b1 in 0..cfg.boards {
+            for b2 in (b1 + 1)..cfg.boards {
+                t.add_link(
+                    npus[b1 * cfg.slots + s],
+                    npus[b2 * cfg.slots + s],
+                    cfg.y_lanes,
+                    CableClass::PassiveElectrical,
+                    LinkRole::RackY,
+                    1.0,
+                );
+            }
+        }
+    }
+
+    // --- Backplane LRS planes (Fig 7-b) ----------------------------------
+    let mut npu_lrs = Vec::new();
+    let mut ir_lrs = Vec::new();
+    let mut cpu_lrs = Vec::new();
+    let mut bk_lrs = Vec::new();
+    for _p in 0..cfg.planes {
+        let board_lrs: Vec<NodeId> = (0..cfg.boards)
+            .map(|b| t.add_node(NodeKind::Lrs, at(b as u8, 0)))
+            .collect();
+        let inter_lrs: Vec<NodeId> = (0..8)
+            .map(|_| t.add_node(NodeKind::Lrs, at(0, 0)))
+            .collect();
+        let c_lrs = t.add_node(NodeKind::Lrs, at(0, 0));
+        let b_lrs = t.add_node(NodeKind::Lrs, at(0, 0));
+
+        // Full LRS mesh within the plane ("18 LRSes are fully-connected").
+        let plane: Vec<NodeId> = board_lrs
+            .iter()
+            .chain(inter_lrs.iter())
+            .chain([&c_lrs, &b_lrs])
+            .copied()
+            .collect();
+        for i in 0..plane.len() {
+            for j in (i + 1)..plane.len() {
+                t.add_link(
+                    plane[i],
+                    plane[j],
+                    cfg.lrs_mesh_lanes,
+                    CableClass::Backplane,
+                    LinkRole::LrsMesh,
+                    0.5,
+                );
+            }
+        }
+
+        // NPU board attach: board b's NPUs to board_lrs[b].
+        for b in 0..cfg.boards {
+            for s in 0..cfg.slots {
+                t.add_link(
+                    npus[b * cfg.slots + s],
+                    board_lrs[b],
+                    cfg.npu_plane_lanes,
+                    CableClass::Backplane,
+                    LinkRole::Backplane,
+                    0.5,
+                );
+            }
+        }
+
+        npu_lrs.push(board_lrs);
+        ir_lrs.push(inter_lrs);
+        cpu_lrs.push(c_lrs);
+        bk_lrs.push(b_lrs);
+    }
+
+    // --- CPUs (pooled behind LRS, §3.3.1) --------------------------------
+    let mut cpus = Vec::new();
+    let cpu_plane_lanes = (NodeKind::Cpu.ub_lanes() / cfg.planes as u32).max(1);
+    for _ in 0..cfg.cpus {
+        let c = t.add_node(NodeKind::Cpu, at(0, 0));
+        for p in 0..cfg.planes {
+            t.add_link(
+                c,
+                cpu_lrs[p],
+                cpu_plane_lanes,
+                CableClass::Backplane,
+                LinkRole::Backplane,
+                0.5,
+            );
+        }
+        cpus.push(c);
+    }
+
+    // --- 64+1 backup NPU (§3.3.2, Fig 8-b) --------------------------------
+    let backup = if cfg.backup {
+        let b = t.add_node(NodeKind::BackupNpu, at(0, 0));
+        for p in 0..cfg.planes {
+            t.add_link(
+                b,
+                bk_lrs[p],
+                16,
+                CableClass::Backplane,
+                LinkRole::Backplane,
+                0.5,
+            );
+        }
+        Some(b)
+    } else {
+        None
+    };
+
+    RackHandles {
+        npus,
+        backup,
+        cpus,
+        npu_lrs,
+        ir_lrs,
+        cpu_lrs,
+        bk_lrs,
+    }
+}
+
+/// A standalone single rack (used by intra-rack experiments, Fig 16-a).
+pub fn ubmesh_rack(cfg: &RackConfig) -> (Topology, RackHandles) {
+    let mut t = Topology::new("ubmesh-rack-2dfm");
+    let h = build_rack(&mut t, cfg, 0, 0, 0);
+    debug_assert!(t.check_lane_budgets().is_ok());
+    (t, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rack_shape_matches_paper() {
+        let cfg = RackConfig::default();
+        let (t, h) = ubmesh_rack(&cfg);
+        assert_eq!(h.npus.len(), 64);
+        assert!(h.backup.is_some());
+        // 448 X+Y direct links (8 boards × C(8,2) + 8 slots × C(8,2)).
+        let xy = t
+            .links
+            .iter()
+            .filter(|l| matches!(l.role, LinkRole::BoardX | LinkRole::RackY))
+            .count();
+        assert_eq!(xy, 448);
+        // 4 planes × 18 LRS.
+        assert_eq!(t.nodes_of_kind(NodeKind::Lrs).len(), 72);
+        // Aggregate inter-rack IO = 4 × x256 = x1024 = x16 per NPU.
+        assert_eq!(cfg.inter_rack_lanes(), 1024);
+    }
+
+    #[test]
+    fn lane_budgets_respected() {
+        let (t, _) = ubmesh_rack(&RackConfig::default());
+        t.check_lane_budgets().unwrap();
+    }
+
+    #[test]
+    fn npu_lane_budget_fully_used() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        // Every regular NPU consumes exactly its x72: 7×4 X + 7×4 Y + 4×4 planes.
+        for &n in &h.npus {
+            assert_eq!(t.lanes_used(n), 72);
+        }
+    }
+
+    #[test]
+    fn same_board_pairs_are_1_hop() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let a = h.npu(2, 1, 8);
+        let b = h.npu(2, 6, 8);
+        assert!(t.link_between(a, b).is_some());
+    }
+
+    #[test]
+    fn cross_board_cross_slot_is_2_hops_direct() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let a = h.npu(0, 1, 8);
+        let b = h.npu(3, 5, 8);
+        assert!(t.link_between(a, b).is_none());
+        let p = t.shortest_path(a, b, true).unwrap();
+        assert_eq!(p.len(), 3); // 2 hops
+    }
+
+    #[test]
+    fn backup_reaches_all_npus_via_lrs_in_2_hops(){
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let d = t.bfs_hops(h.backup.unwrap(), true);
+        for &n in &h.npus {
+            // backup -> bk_lrs -> (mesh) -> board lrs -> npu ≤ 3 hops
+            assert!(d[n.idx()] <= 3, "backup too far from {n}");
+        }
+    }
+
+    #[test]
+    fn connected_including_cpus() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        assert!(t.npus_connected());
+        let d = t.bfs_hops(h.cpus[0], true);
+        assert!(h.npus.iter().all(|n| d[n.idx()] != u32::MAX));
+    }
+}

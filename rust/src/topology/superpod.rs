@@ -1,0 +1,137 @@
+//! UB-Mesh-SuperPod: multiple pods joined by a symmetric HRS Clos tier
+//! (§3.3.4). "We choose to adopt the symmetrical Clos topology in the
+//! Pod-level interconnection ... use high-radix Pod-switches (HRS) to
+//! connect each rack in the SuperPod, scaling up to 8K NPUs."
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::node::{Location, NodeKind};
+use super::pod::{build_pod, wire_uplinks, PodConfig, PodHandles};
+
+/// SuperPod parameters. Default: 8 pods × 1024 NPUs = 8K.
+#[derive(Clone, Debug)]
+pub struct SuperPodConfig {
+    pub pods: usize,
+    pub pod: PodConfig,
+}
+
+impl Default for SuperPodConfig {
+    fn default() -> Self {
+        SuperPodConfig {
+            pods: 8,
+            pod: PodConfig::default(),
+        }
+    }
+}
+
+impl SuperPodConfig {
+    pub fn npus(&self) -> usize {
+        self.pods * self.pod.npus()
+    }
+    pub fn racks(&self) -> usize {
+        self.pods * self.pod.racks()
+    }
+    /// Single-tier HRS count: every rack exposes x256 uplink; each HRS is
+    /// x512. 128 racks × 256 / 512 = 64 for the default 8K SuperPod.
+    pub fn hrs_count(&self) -> usize {
+        let uplink_per_rack = self.pod.rack.planes as u32 * 2 * self.pod.rack.ir_lrs_out_lanes;
+        (self.racks() * uplink_per_rack as usize).div_ceil(512)
+    }
+}
+
+/// Handles into a constructed SuperPod.
+#[derive(Clone, Debug)]
+pub struct SuperPodHandles {
+    pub pods: Vec<PodHandles>,
+    /// The pod-level HRS Clos tier.
+    pub hrs: Vec<NodeId>,
+}
+
+impl SuperPodHandles {
+    /// All regular NPUs in rank order (pod-major, then rack-major).
+    pub fn npus(&self) -> Vec<NodeId> {
+        self.pods.iter().flat_map(|p| p.npus()).collect()
+    }
+}
+
+/// Build the SuperPod: pods with intra-pod 4D-FullMesh, plus a single
+/// HRS tier every rack uplinks into (x256 per rack).
+pub fn ubmesh_superpod(cfg: &SuperPodConfig) -> (Topology, SuperPodHandles) {
+    assert_eq!(
+        cfg.pod.uplink_hrs, 0,
+        "SuperPod wires its own HRS tier; set pod.uplink_hrs = 0"
+    );
+    let mut t = Topology::new("ubmesh-superpod");
+    let mut pods = Vec::with_capacity(cfg.pods);
+    for p in 0..cfg.pods {
+        pods.push(build_pod(&mut t, &cfg.pod, p as u16));
+    }
+    let hrs: Vec<NodeId> = (0..cfg.hrs_count())
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    let all_racks: Vec<_> = pods.iter().flat_map(|p| p.racks.clone()).collect();
+    wire_uplinks(&mut t, &all_racks, &hrs, cfg.pod.rack.planes);
+    debug_assert!(t.check_lane_budgets().is_ok());
+    (t, SuperPodHandles { pods, hrs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::link::LinkRole;
+
+    fn small() -> SuperPodConfig {
+        // 2 pods × 2×2 racks to keep unit tests fast; full scale is
+        // exercised by the census/benches.
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        cfg
+    }
+
+    #[test]
+    fn default_is_8k() {
+        let cfg = SuperPodConfig::default();
+        assert_eq!(cfg.npus(), 8192);
+        assert_eq!(cfg.racks(), 128);
+        assert_eq!(cfg.hrs_count(), 64);
+    }
+
+    #[test]
+    fn small_superpod_connected() {
+        let (t, h) = ubmesh_superpod(&small());
+        assert_eq!(h.npus().len(), 2 * 4 * 64);
+        assert!(t.npus_connected());
+        t.check_lane_budgets().unwrap();
+    }
+
+    #[test]
+    fn cross_pod_traffic_goes_through_hrs() {
+        let (t, h) = ubmesh_superpod(&small());
+        let a = h.pods[0].racks[0].npus[0];
+        let b = h.pods[1].racks[0].npus[0];
+        let p = t.shortest_path(a, b, true).unwrap();
+        assert!(
+            p.iter().any(|n| t.node(*n).kind == NodeKind::Hrs),
+            "cross-pod path must traverse the HRS tier"
+        );
+    }
+
+    #[test]
+    fn uplink_lanes_per_rack_are_x256() {
+        let (t, h) = ubmesh_superpod(&small());
+        let rack0 = &h.pods[0].racks[0];
+        let ups: u32 = t
+            .links
+            .iter()
+            .filter(|l| l.role == LinkRole::PodUplink)
+            .filter(|l| {
+                let lrs: Vec<_> = (0..4).flat_map(|p| [rack0.ir_lrs[p][6], rack0.ir_lrs[p][7]]).collect();
+                lrs.contains(&l.a) || lrs.contains(&l.b)
+            })
+            .map(|l| l.lanes)
+            .sum();
+        assert_eq!(ups, 256);
+    }
+}

@@ -1,0 +1,85 @@
+//! 3D-Torus baseline (§2.3, Fig 3). Each node links to ±1 neighbors in
+//! each dimension with wraparound — low cost, but low NPU-to-NPU
+//! bandwidth and poor All-to-All support, which is exactly the contrast
+//! the paper draws against the nD-FullMesh.
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::ndmesh::{coords_of, index_of};
+use super::node::{Location, NodeKind};
+
+/// Build a torus over `dims` (each ≥ 2) with `lanes` per link.
+pub fn torus(name: &str, dims: &[usize], lanes: u32) -> (Topology, Vec<NodeId>) {
+    assert!(dims.iter().all(|&d| d >= 2));
+    let n: usize = dims.iter().product();
+    let mut t = Topology::new(name);
+    let ids: Vec<NodeId> = (0..n)
+        .map(|i| {
+            let c = coords_of(i, dims);
+            t.add_node(
+                NodeKind::Npu,
+                Location {
+                    slot: *c.first().unwrap_or(&0) as u8,
+                    board: *c.get(1).unwrap_or(&0) as u8,
+                    rack_row: *c.get(2).unwrap_or(&0) as u8,
+                    rack_col: 0,
+                    pod: 0,
+                },
+            )
+        })
+        .collect();
+    for i in 0..n {
+        let ci = coords_of(i, dims);
+        for (d, &size) in dims.iter().enumerate() {
+            // +1 neighbor with wraparound; dims of size 2 would create a
+            // duplicate (0→1 and 1→0 wrap) so only add the wrap link once.
+            let mut cj = ci.clone();
+            cj[d] = (ci[d] + 1) % size;
+            let j = index_of(&cj, dims);
+            if i < j || (ci[d] + 1 == size && size > 2) {
+                t.add_link(
+                    ids[i],
+                    ids[j],
+                    lanes,
+                    CableClass::ActiveElectrical,
+                    LinkRole::Dim(d as u8),
+                    5.0,
+                );
+            }
+        }
+    }
+    (t, ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torus_4x4x4_shape() {
+        let (t, ids) = torus("t444", &[4, 4, 4], 8);
+        assert_eq!(ids.len(), 64);
+        // 3 links per node (each link shared by 2): 64*3 = 192.
+        assert_eq!(t.link_count(), 192);
+        for &n in &ids {
+            assert_eq!(t.neighbors(n).len(), 6);
+        }
+        assert!(t.npus_connected());
+    }
+
+    #[test]
+    fn torus_diameter_is_sum_of_half_dims() {
+        let (t, _) = torus("t44", &[4, 4], 8);
+        assert_eq!(t.npu_diameter(), 4); // 2 + 2
+    }
+
+    #[test]
+    fn dim2_has_no_duplicate_links() {
+        let (t, ids) = torus("t22", &[2, 2], 8);
+        assert_eq!(t.link_count(), 4);
+        for &n in &ids {
+            assert_eq!(t.neighbors(n).len(), 2);
+        }
+    }
+}

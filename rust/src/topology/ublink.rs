@@ -1,0 +1,75 @@
+//! Unified Bus (UB) lane bandwidth/latency model (§3.2.2).
+//!
+//! All component interconnects in UB-Mesh are UB lanes; bandwidth is
+//! allocated per dimension by assigning lane counts (Fig 5-b). These
+//! constants are the calibration anchors referenced by DESIGN.md §5 —
+//! they are set once and every experiment derives from them.
+
+use super::link::CableClass;
+
+/// Unidirectional bandwidth per UB lane, GB/s.
+///
+/// Chosen so an NPU's x72 total IO ≈ 3.6 Tbps, satisfying the paper's R2
+/// ("interconnect bandwidth exceeding 3.2 Tbps per node").
+pub const LANE_GB_S: f64 = 6.25;
+
+/// Default lane allocation for a UB-Mesh NPU's x72 IO (Fig 5-b + §3.3):
+/// 7 X-neighbors × x4 + 7 Y-neighbors × x4 + x16 to the LRS backplane
+/// (inter-rack, CPU, backup) = 72.
+pub const X_LANES_PER_NEIGHBOR: u32 = 4;
+pub const Y_LANES_PER_NEIGHBOR: u32 = 4;
+pub const NPU_BACKPLANE_LANES: u32 = 16;
+
+/// Per-cable-class propagation + serialization-overhead latency, µs.
+/// Electrical short-reach links are fastest; optical adds transceiver
+/// latency. Values are per-hop one-way.
+pub fn hop_latency_us(class: CableClass) -> f64 {
+    match class {
+        CableClass::PassiveElectrical => 0.15,
+        CableClass::ActiveElectrical => 0.25,
+        CableClass::Optical => 0.60,
+        CableClass::Backplane => 0.10,
+    }
+}
+
+/// Switch traversal latency, µs (applies when the hop's endpoint is a
+/// switch that forwards the packet).
+pub const SWITCH_LATENCY_US: f64 = 0.35;
+
+/// Per-message software/protocol overhead at the source (α in the α-β
+/// model), µs. UB's unified protocol avoids PCIe/NIC protocol conversion
+/// (§3.2.2), so this is small.
+pub const MESSAGE_ALPHA_US: f64 = 2.0;
+
+/// Bandwidth of `lanes` UB lanes, GB/s unidirectional.
+#[inline]
+pub fn lanes_gb_s(lanes: u32) -> f64 {
+    lanes as f64 * LANE_GB_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_io_exceeds_3_2_tbps() {
+        // R2: x72 lanes ≥ 3.2 Tbps = 400 GB/s.
+        assert!(lanes_gb_s(72) >= 400.0);
+    }
+
+    #[test]
+    fn default_lane_budget_sums_to_72() {
+        assert_eq!(
+            7 * X_LANES_PER_NEIGHBOR + 7 * Y_LANES_PER_NEIGHBOR + NPU_BACKPLANE_LANES,
+            72
+        );
+    }
+
+    #[test]
+    fn optical_slower_than_electrical() {
+        assert!(
+            hop_latency_us(CableClass::Optical)
+                > hop_latency_us(CableClass::PassiveElectrical)
+        );
+    }
+}

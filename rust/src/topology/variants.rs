@@ -1,0 +1,230 @@
+//! Intra-rack baseline architectures of Fig 16 (b)–(d), used by the Fig
+//! 17 exploration and the CapEx comparison (Fig 21).
+//!
+//! * **1D-FM-A** — keeps the on-board X full-mesh; cross-board traffic
+//!   goes through 32 LRS (x16 per NPU); inter-rack through 4 HRS (x16
+//!   per NPU).
+//! * **1D-FM-B** — replaces the cross-board LRS with 8 HRS which also
+//!   carry inter-rack traffic (x32 per NPU inter-rack).
+//! * **Clos** — no direct NPU-NPU links at all: 16 HRS in a symmetric
+//!   single-stage fabric ("4×4 HRS"), x4 from every NPU to every HRS,
+//!   with x256 per HRS left for inter-rack (x64 per NPU aggregate).
+
+use super::graph::Topology;
+use super::ids::NodeId;
+use super::link::{CableClass, LinkRole};
+use super::node::{Location, NodeKind};
+use super::ublink::X_LANES_PER_NEIGHBOR;
+
+/// Handles into a variant rack.
+#[derive(Clone, Debug)]
+pub struct VariantHandles {
+    /// NPUs in rank order (board-major).
+    pub npus: Vec<NodeId>,
+    /// Low-radix switches.
+    pub lrs: Vec<NodeId>,
+    /// High-radix switches.
+    pub hrs: Vec<NodeId>,
+}
+
+fn add_npus(t: &mut Topology, boards: usize, slots: usize) -> Vec<NodeId> {
+    let mut npus = Vec::with_capacity(boards * slots);
+    for b in 0..boards {
+        for s in 0..slots {
+            npus.push(t.add_node(NodeKind::Npu, Location::new(0, 0, 0, b as u8, s as u8)));
+        }
+    }
+    npus
+}
+
+fn board_x_mesh(t: &mut Topology, npus: &[NodeId], boards: usize, slots: usize, lanes: u32) {
+    for b in 0..boards {
+        for s1 in 0..slots {
+            for s2 in (s1 + 1)..slots {
+                t.add_link(
+                    npus[b * slots + s1],
+                    npus[b * slots + s2],
+                    lanes,
+                    CableClass::PassiveElectrical,
+                    LinkRole::BoardX,
+                    0.3,
+                );
+            }
+        }
+    }
+}
+
+/// Fig 16-(b): 1D-FM-A. X-mesh on board + 32 cross-board LRS + 4
+/// inter-rack HRS.
+pub fn rack_1dfm_a() -> (Topology, VariantHandles) {
+    let (boards, slots) = (8, 8);
+    let mut t = Topology::new("rack-1dfm-a");
+    let npus = add_npus(&mut t, boards, slots);
+    board_x_mesh(&mut t, &npus, boards, slots, X_LANES_PER_NEIGHBOR);
+
+    // 32 LRS for cross-board communication; each NPU has x16 to its LRS
+    // (2 NPUs per LRS → 32 down-lanes per LRS).
+    let lrs: Vec<NodeId> = (0..32)
+        .map(|_| t.add_node(NodeKind::Lrs, Location::default()))
+        .collect();
+    for (i, &n) in npus.iter().enumerate() {
+        t.add_link(
+            n,
+            lrs[i / 2],
+            16,
+            CableClass::Backplane,
+            LinkRole::NpuSwitch,
+            0.5,
+        );
+    }
+    // LRS full-mesh so any cross-board pair is LRS-routable (x1 links:
+    // 31 mesh + 32 down = 63 ≤ x72 budget).
+    for i in 0..lrs.len() {
+        for j in (i + 1)..lrs.len() {
+            t.add_link(
+                lrs[i],
+                lrs[j],
+                1,
+                CableClass::Backplane,
+                LinkRole::LrsMesh,
+                0.5,
+            );
+        }
+    }
+
+    // 4 HRS for inter-rack: x16 per NPU, x4 to each HRS.
+    let hrs: Vec<NodeId> = (0..4)
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    for &n in &npus {
+        for &h in &hrs {
+            t.add_link(n, h, 4, CableClass::Backplane, LinkRole::NpuSwitch, 0.5);
+        }
+    }
+    debug_assert!(t.check_lane_budgets().is_ok());
+    (
+        t,
+        VariantHandles {
+            npus,
+            lrs,
+            hrs,
+        },
+    )
+}
+
+/// Fig 16-(c): 1D-FM-B. X-mesh on board + 8 HRS for cross-board AND
+/// inter-rack (x32 per NPU inter-rack), 4 LRS for CPU attach.
+pub fn rack_1dfm_b() -> (Topology, VariantHandles) {
+    let (boards, slots) = (8, 8);
+    let mut t = Topology::new("rack-1dfm-b");
+    let npus = add_npus(&mut t, boards, slots);
+    board_x_mesh(&mut t, &npus, boards, slots, X_LANES_PER_NEIGHBOR);
+
+    // 8 HRS: each NPU x4 to each (32 lanes); HRS has 256 down + 256 up.
+    let hrs: Vec<NodeId> = (0..8)
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    for &n in &npus {
+        for &h in &hrs {
+            t.add_link(n, h, 4, CableClass::Backplane, LinkRole::NpuSwitch, 0.5);
+        }
+    }
+    // 4 LRS for NPU-CPU communication (x1 per NPU; CPUs omitted here —
+    // the CPU pool attaches identically to the 2D-FM rack's).
+    let lrs: Vec<NodeId> = (0..4)
+        .map(|_| t.add_node(NodeKind::Lrs, Location::default()))
+        .collect();
+    for (i, &n) in npus.iter().enumerate() {
+        t.add_link(
+            n,
+            lrs[i % 4],
+            1,
+            CableClass::Backplane,
+            LinkRole::Backplane,
+            0.5,
+        );
+    }
+    debug_assert!(t.check_lane_budgets().is_ok());
+    (
+        t,
+        VariantHandles {
+            npus,
+            lrs,
+            hrs,
+        },
+    )
+}
+
+/// Fig 16-(d): intra-rack Clos. No direct NPU-NPU links; 16 HRS, x4 from
+/// every NPU to every HRS (x64 per NPU), x256 per HRS for inter-rack.
+pub fn rack_clos() -> (Topology, VariantHandles) {
+    let (boards, slots) = (8, 8);
+    let mut t = Topology::new("rack-clos");
+    let npus = add_npus(&mut t, boards, slots);
+    let hrs: Vec<NodeId> = (0..16)
+        .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
+        .collect();
+    for &n in &npus {
+        for &h in &hrs {
+            t.add_link(n, h, 4, CableClass::Backplane, LinkRole::NpuSwitch, 0.5);
+        }
+    }
+    debug_assert!(t.check_lane_budgets().is_ok());
+    (
+        t,
+        VariantHandles {
+            npus,
+            lrs: vec![],
+            hrs,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_has_board_mesh_and_switches() {
+        let (t, h) = rack_1dfm_a();
+        assert_eq!(h.npus.len(), 64);
+        assert_eq!(h.lrs.len(), 32);
+        assert_eq!(h.hrs.len(), 4);
+        // same-board pair: direct; cross-board: via LRS (2 switch hops max)
+        let p = t.shortest_path(h.npus[0], h.npus[9], true).unwrap();
+        assert!(p.len() - 1 <= 3);
+        t.check_lane_budgets().unwrap();
+    }
+
+    #[test]
+    fn b_routes_cross_board_via_hrs() {
+        let (t, h) = rack_1dfm_b();
+        let p = t.shortest_path(h.npus[0], h.npus[8], false).unwrap();
+        // npu -> HRS -> npu.
+        assert_eq!(p.len(), 3);
+        assert_eq!(t.node(p[1]).kind, NodeKind::Hrs);
+    }
+
+    #[test]
+    fn clos_is_single_switch_hop_everywhere() {
+        let (t, h) = rack_clos();
+        for &b in &[h.npus[1], h.npus[13], h.npus[63]] {
+            let p = t.shortest_path(h.npus[0], b, false).unwrap();
+            assert_eq!(p.len(), 3, "one HRS hop");
+        }
+        // No NPU-NPU links at all.
+        assert!(t
+            .links
+            .iter()
+            .all(|l| !(t.node(l.a).kind.is_npu() && t.node(l.b).kind.is_npu())));
+    }
+
+    #[test]
+    fn npu_lane_budgets() {
+        for (t, h) in [rack_1dfm_a(), rack_1dfm_b(), rack_clos()] {
+            for &n in &h.npus {
+                assert!(t.lanes_used(n) <= 72);
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! In-repo micro/macro bench harness (criterion is unavailable offline).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that call
+//! [`bench`] for timed sections and print paper-reproduction tables via
+//! [`super::table`]. The harness does warmup, adaptive iteration counts
+//! and reports mean / p50 / p99 wall-clock.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed section.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub total: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<42} {:>10} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99
+        )
+    }
+}
+
+/// Time `f`, running enough iterations to fill ~`budget` (default 1s via
+/// [`bench`]). Returns timing statistics. A `black_box`-style sink is the
+/// caller's responsibility (return values from `f` are dropped).
+pub fn bench_with_budget<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: one call, also estimates per-iter cost.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().max(Duration::from_nanos(50));
+
+    let target_iters = (budget.as_secs_f64() / first.as_secs_f64()).clamp(1.0, 100_000.0) as u64;
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    let total_start = Instant::now();
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    let total = total_start.elapsed();
+    samples.sort_unstable();
+    let mean = total / target_iters as u32;
+    let p50 = samples[samples.len() / 2];
+    let p99_idx = ((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1);
+    let p99 = samples[p99_idx];
+    BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean,
+        p50,
+        p99,
+        total,
+    }
+}
+
+/// Time `f` with a ~0.5s budget and print the result line.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench_with_budget(name, Duration::from_millis(500), f);
+    println!("{r}");
+    r
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// stabilized recently; thin wrapper for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard bench-binary preamble: prints a section header.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let r = bench_with_budget("noop", Duration::from_millis(20), || {
+            n += 1;
+            black_box(n);
+        });
+        assert_eq!(r.iters + 1, n); // +1 warmup
+        assert!(r.mean <= r.p99 * 2 + Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,69 @@
+//! Minimal property-based testing driver (proptest is unavailable in the
+//! offline environment — see DESIGN.md §1).
+//!
+//! A property is a closure over an [`Rng`]; the driver runs it `cases`
+//! times with derived seeds and reports the failing seed so the case can
+//! be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use ubmesh::util::prop::forall;
+//! forall("addition commutes", 256, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; override with `UBMESH_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("UBMESH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x0B5E_u64 ^ 0x5EED_0001)
+}
+
+/// Run `f` `cases` times with per-case deterministic seeds; on panic,
+/// re-raise with the case index + seed embedded in the message.
+pub fn forall<F: Fn(&mut Rng)>(name: &str, cases: u32, f: F) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base ^ ((i as u64) << 32) ^ i as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}, \
+                 replay with UBMESH_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("tautology", 64, |rng| {
+            let x = rng.below(10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_reports_seed() {
+        forall("falsum", 64, |rng| {
+            assert!(rng.below(4) != 2, "hit the bad value");
+        });
+    }
+}

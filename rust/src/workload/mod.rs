@@ -1,0 +1,12 @@
+//! LLM training workloads: model zoo (Table 5), parallelism configs,
+//! traffic derivation (Table 1), rank placement and the training-step
+//! stage DAG.
+
+pub mod models;
+pub mod placement;
+pub mod step;
+pub mod traffic;
+
+pub use models::{ModelConfig, MODELS};
+pub use placement::{Placement, Tier, NTIERS};
+pub use traffic::{ParallelismConfig, TrafficTable};

@@ -1,0 +1,152 @@
+//! Benchmarking models (Table 5) plus the in-house MoE-2T used for the
+//! Table 1 traffic analysis (we approximate it with the GPT4-2T config,
+//! which shares layers/heads/hidden).
+
+/// Transformer model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_size: usize,
+    pub hidden: usize,
+    /// MoE expert count (None = dense).
+    pub experts: Option<usize>,
+    /// Experts activated per token (top-k), MoE only.
+    pub active_experts: usize,
+}
+
+impl ModelConfig {
+    pub fn dense(
+        name: &'static str,
+        layers: usize,
+        heads: usize,
+        head_size: usize,
+        hidden: usize,
+    ) -> ModelConfig {
+        ModelConfig {
+            name,
+            layers,
+            heads,
+            head_size,
+            hidden,
+            experts: None,
+            active_experts: 0,
+        }
+    }
+
+    pub fn moe(
+        name: &'static str,
+        layers: usize,
+        heads: usize,
+        head_size: usize,
+        hidden: usize,
+        experts: usize,
+    ) -> ModelConfig {
+        ModelConfig {
+            name,
+            layers,
+            heads,
+            head_size,
+            hidden,
+            experts: Some(experts),
+            active_experts: 2,
+        }
+    }
+
+    /// Attention parameters per layer: 4 H² (QKV + output projections).
+    pub fn attn_params_per_layer(&self) -> f64 {
+        4.0 * (self.hidden as f64) * (self.hidden as f64)
+    }
+
+    /// FFN parameters per layer per expert: 8 H² (up+down, 4× expansion).
+    pub fn ffn_params_per_expert(&self) -> f64 {
+        8.0 * (self.hidden as f64) * (self.hidden as f64)
+    }
+
+    /// Total parameters.
+    pub fn params(&self) -> f64 {
+        let l = self.layers as f64;
+        let e = self.experts.unwrap_or(1) as f64;
+        l * (self.attn_params_per_layer() + e * self.ffn_params_per_expert())
+    }
+
+    /// Parameters touched per token (dense params + top-k experts).
+    pub fn active_params(&self) -> f64 {
+        let l = self.layers as f64;
+        let e = self.experts.map(|_| self.active_experts as f64).unwrap_or(1.0);
+        l * (self.attn_params_per_layer() + e * self.ffn_params_per_expert())
+    }
+
+    /// Training FLOPs per token ≈ 6 × active params (fwd+bwd).
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.active_params()
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.experts.is_some()
+    }
+}
+
+/// Table 5 model zoo. `MODELS[3]` (GPT4-2T) doubles as the MoE-2T proxy
+/// for Table 1.
+pub const MODELS: &[&str] = &[
+    "llama-70b",
+    "gpt3-175b",
+    "dense-1t",
+    "gpt4-2t",
+    "moe-10t",
+];
+
+/// Look up a Table 5 model by name.
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    match name {
+        "llama-70b" => Some(ModelConfig::dense("llama-70b", 80, 64, 128, 8192)),
+        "gpt3-175b" => Some(ModelConfig::dense("gpt3-175b", 96, 96, 128, 12288)),
+        "dense-1t" => Some(ModelConfig::dense("dense-1t", 128, 128, 192, 24576)),
+        "gpt4-2t" => Some(ModelConfig::moe("gpt4-2t", 96, 96, 128, 12288, 16)),
+        "moe-10t" => Some(ModelConfig::moe("moe-10t", 128, 144, 128, 18432, 32)),
+        _ => None,
+    }
+}
+
+/// All Table 5 models.
+pub fn all() -> Vec<ModelConfig> {
+    MODELS.iter().map(|m| by_name(m).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_table5_names() {
+        let close = |v: f64, target: f64, tol: f64| (v - target).abs() / target < tol;
+        assert!(close(by_name("llama-70b").unwrap().params(), 70e9, 0.15));
+        assert!(close(by_name("gpt3-175b").unwrap().params(), 175e9, 0.05));
+        assert!(close(by_name("dense-1t").unwrap().params(), 1e12, 0.1));
+        assert!(close(by_name("gpt4-2t").unwrap().params(), 2e12, 0.1));
+        assert!(close(by_name("moe-10t").unwrap().params(), 10e12, 0.15));
+    }
+
+    #[test]
+    fn moe_active_params_much_smaller() {
+        let m = by_name("moe-10t").unwrap();
+        assert!(m.active_params() < m.params() / 8.0);
+        assert!(m.is_moe());
+    }
+
+    #[test]
+    fn hidden_consistency() {
+        for m in all() {
+            assert_eq!(m.heads * m.head_size, m.hidden, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn flops_positive_and_scale() {
+        let small = by_name("llama-70b").unwrap().flops_per_token();
+        let big = by_name("dense-1t").unwrap().flops_per_token();
+        assert!(big > small * 5.0);
+    }
+}

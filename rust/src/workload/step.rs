@@ -1,0 +1,258 @@
+//! Training-iteration model: analytic iteration time (the calibrated
+//! cost model of §5.2) and a DES stage-DAG builder used to validate it
+//! at rack scale.
+
+use crate::sim::{Stage, StageDag};
+use crate::topology::rack::RackHandles;
+use crate::topology::ublink::MESSAGE_ALPHA_US;
+use crate::topology::{NodeId, Topology};
+
+use super::models::ModelConfig;
+use super::placement::{Placement, TierBandwidth};
+use super::traffic::{analyze, ParallelismConfig};
+
+/// NPU peak bf16 throughput (TFLOP/s) — CCU-assisted (§7), Ascend-class.
+pub const NPU_PEAK_TFLOPS: f64 = 256.0;
+/// Achievable kernel efficiency on dense layers (fraction of peak).
+pub const COMPUTE_EFFICIENCY: f64 = 0.55;
+/// Fraction of DP gradient AllReduce hidden under backward compute.
+pub const DP_OVERLAP: f64 = 0.7;
+/// Fraction of TP/SP/EP collective time hidden under compute by the
+/// CCU's compute-communication overlap (§7: the Collective Communication
+/// Unit "can seamlessly co-operate with compute cores to achieve
+/// efficient compute-communication overlap"). The paper's baseline Clos
+/// enjoys the same overlap, so this narrows *absolute* comm exposure for
+/// both — which is how 2D-FM lands within 7% of Clos (Fig 17).
+pub const CCU_OVERLAP: f64 = 0.65;
+
+/// Iteration-time breakdown (µs).
+#[derive(Clone, Debug)]
+pub struct IterBreakdown {
+    pub compute_us: f64,
+    pub tp_us: f64,
+    pub sp_us: f64,
+    pub ep_us: f64,
+    pub pp_us: f64,
+    pub dp_us: f64,
+    pub bubble_us: f64,
+    pub total_us: f64,
+    /// Model FLOPs utilization.
+    pub mfu: f64,
+}
+
+impl IterBreakdown {
+    pub fn comm_us(&self) -> f64 {
+        self.tp_us + self.sp_us + self.ep_us + self.pp_us + self.dp_us
+    }
+}
+
+/// Analytic iteration time for a (model, parallelism, placement,
+/// bandwidth) tuple. Volumes come from the Table 1 derivation; each
+/// technique's wire bytes drain at the bandwidth of the tier its group
+/// spans. This is the model the AOT-compiled L2 evaluator
+/// (`artifacts/costmodel.hlo.txt`) computes in batch.
+pub fn iteration_time(
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    place: &Placement,
+    bw: &TierBandwidth,
+) -> IterBreakdown {
+    let traffic = analyze(m, p);
+    // Table 1 volumes are whole-model totals; a rank participates only
+    // in its own pipeline slice, so layer-local techniques (TP/SP/EP)
+    // divide by pp. DP grads and PP boundaries are already per-rank.
+    let t_of = |tech: &str, tier: super::placement::Tier, slice: f64| -> f64 {
+        traffic
+            .row(tech)
+            .map(|r| {
+                let b = bw.gb_s[tier as usize];
+                (r.total / (b * 1e3) + r.transfers * MESSAGE_ALPHA_US) / slice
+            })
+            .unwrap_or(0.0)
+    };
+    let pp_slice = p.pp as f64;
+    let exposed = 1.0 - CCU_OVERLAP;
+    let tp_us = t_of("TP", place.tp_tier, pp_slice) * exposed;
+    let sp_us = t_of("SP", place.sp_tier, pp_slice) * exposed;
+    let ep_us = t_of("EP", place.ep_tier, pp_slice) * exposed;
+    let pp_us = t_of("PP", place.pp_tier, 1.0);
+    let dp_us = t_of("DP", place.dp_tier, 1.0) * (1.0 - DP_OVERLAP);
+
+    // Per-NPU compute across the iteration.
+    let tokens_per_replica = p.tokens_per_microbatch * p.microbatches as f64;
+    let flops_per_npu =
+        m.flops_per_token() * tokens_per_replica / (p.tp * p.sp * p.pp) as f64;
+    let compute_us = flops_per_npu / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+
+    // Pipeline bubble: (pp-1)/mb of the busy time.
+    let busy = compute_us + tp_us + sp_us + ep_us;
+    let bubble_us = busy * (p.pp as f64 - 1.0) / p.microbatches as f64;
+
+    let total_us = busy + bubble_us + pp_us + dp_us;
+    let mfu = (flops_per_npu / (NPU_PEAK_TFLOPS * 1e12)) / (total_us / 1e6);
+    IterBreakdown {
+        compute_us,
+        tp_us,
+        sp_us,
+        ep_us,
+        pp_us,
+        dp_us,
+        bubble_us,
+        total_us,
+        mfu,
+    }
+}
+
+/// Tokens/second for the whole cluster under this breakdown.
+pub fn throughput_tokens_per_s(p: &ParallelismConfig, iter: &IterBreakdown) -> f64 {
+    p.tokens_per_iter() / (iter.total_us / 1e6)
+}
+
+/// Build a DES stage DAG for a scaled-down iteration on one rack
+/// (TP=8 on boards, SP=8 across boards), used to validate the analytic
+/// model. `layers` counts transformer layers to simulate (keep small).
+pub fn rack_iteration_dag(
+    t: &Topology,
+    h: &RackHandles,
+    m: &ModelConfig,
+    tokens_per_microbatch: f64,
+    layers: usize,
+) -> StageDag {
+    let act = tokens_per_microbatch * m.hidden as f64 * super::traffic::BYTES_PER_ACT;
+    let mut stages: Vec<Stage> = Vec::new();
+    let boards: Vec<Vec<NodeId>> = (0..8)
+        .map(|b| (0..8).map(|s| h.npu(b, s, 8)).collect())
+        .collect();
+    let cols: Vec<Vec<NodeId>> = (0..8)
+        .map(|s| (0..8).map(|b| h.npu(b, s, 8)).collect())
+        .collect();
+    let flops_per_layer =
+        6.0 * m.active_params() / m.layers as f64 * tokens_per_microbatch / 64.0;
+    let compute_us = flops_per_layer / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+
+    for l in 0..layers {
+        // TP AllReduce on every board (direct full-mesh reduce-scatter +
+        // allgather), SP-sharded activation.
+        let shard = act / 8.0;
+        let mut tp_flows = Vec::new();
+        for b in &boards {
+            let rs = crate::collectives::hierarchical::fullmesh_reduce_scatter_stage(
+                t, b, shard,
+            );
+            tp_flows.extend(rs.flows);
+            let ag =
+                crate::collectives::hierarchical::fullmesh_allgather_stage(t, b, shard);
+            tp_flows.extend(ag.flows);
+        }
+        stages.push(
+            Stage::new(format!("L{l}-tp"))
+                .with_flows(tp_flows)
+                .with_compute(compute_us),
+        );
+        // SP AllGather across columns.
+        let mut sp_flows = Vec::new();
+        for c in &cols {
+            let ag =
+                crate::collectives::hierarchical::fullmesh_allgather_stage(t, c, act);
+            sp_flows.extend(ag.flows);
+        }
+        stages.push(Stage::new(format!("L{l}-sp")).with_flows(sp_flows));
+    }
+    StageDag::chain(stages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{self, SimNet};
+    use crate::topology::rack::{ubmesh_rack, RackConfig};
+    use crate::workload::models::by_name;
+    use crate::workload::traffic::table1_config;
+
+    #[test]
+    fn iteration_breakdown_sane() {
+        let m = by_name("gpt4-2t").unwrap();
+        let p = table1_config();
+        let place = Placement::topology_aware(&p);
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let it = iteration_time(&m, &p, &place, &bw);
+        assert!(it.total_us > 0.0);
+        assert!(it.mfu > 0.05 && it.mfu < 0.6, "mfu {}", it.mfu);
+        assert!(it.compute_us > 0.0 && it.comm_us() > 0.0);
+    }
+
+    #[test]
+    fn clos_is_upper_bound_and_gap_small() {
+        // Fig 17's headline: 2D-FM within 7% of Clos.
+        let m = by_name("gpt3-175b").unwrap();
+        let p = table1_config();
+        let place = Placement::topology_aware(&p);
+        let ub = iteration_time(&m, &p, &place, &TierBandwidth::ubmesh(16, 1.0));
+        let clos = iteration_time(&m, &p, &place, &TierBandwidth::clos_intra_rack(16));
+        assert!(clos.total_us <= ub.total_us);
+        let rel = clos.total_us / ub.total_us;
+        assert!(
+            (0.85..1.0).contains(&rel),
+            "2D-FM at {:.3} of Clos (paper: 0.932–0.959)",
+            rel
+        );
+    }
+
+    #[test]
+    fn topology_aware_beats_naive_placement() {
+        let m = by_name("gpt4-2t").unwrap();
+        let p = table1_config();
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let aware = iteration_time(&m, &p, &Placement::topology_aware(&p), &bw);
+        let naive = iteration_time(&m, &p, &Placement::naive(&p), &bw);
+        assert!(naive.total_us > aware.total_us);
+        assert!(
+            naive.comm_us() > aware.comm_us() * 1.5,
+            "aware comm {} naive comm {}",
+            aware.comm_us(),
+            naive.comm_us()
+        );
+    }
+
+    #[test]
+    fn rack_des_within_2x_of_analytic() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let m = by_name("llama-70b").unwrap();
+        let dag = rack_iteration_dag(&t, &h, &m, 8192.0, 2);
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        // Analytic equivalent: 2 layers of TP (board tier) + SP (rack).
+        let act = 8192.0 * m.hidden as f64 * 2.0;
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let tp = 2.0 * (2.0 * 7.0 / 8.0 * act / 8.0) / (bw.gb_s[0] * 1e3);
+        let sp = 2.0 * (7.0 / 8.0 * act) / (bw.gb_s[1] * 1e3) * 8.0 / 7.0;
+        let flops = 6.0 * m.active_params() / m.layers as f64 * 8192.0 / 64.0 * 2.0;
+        let comp = flops / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+        let analytic = tp.max(comp) + sp;
+        let ratio = r.makespan_us / analytic;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "DES {} vs analytic {analytic} (ratio {ratio})",
+            r.makespan_us
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_dp() {
+        let m = by_name("gpt3-175b").unwrap();
+        let mut p = table1_config();
+        let place = Placement::topology_aware(&p);
+        let bw = TierBandwidth::ubmesh(16, 1.0);
+        let t1 = throughput_tokens_per_s(&p, &iteration_time(&m, &p, &place, &bw));
+        p.dp *= 4;
+        let place2 = Placement::topology_aware(&p);
+        let t4 = throughput_tokens_per_s(&p, &iteration_time(&m, &p, &place2, &bw));
+        assert!(t4 > 3.0 * t1, "dp 4x should give ~4x tokens/s");
+    }
+
+    #[test]
+    fn ccost_module_linked() {
+        // collective closed forms feed the same units
+        assert!(crate::collectives::cost::xfer_us(1e6, 1.0) > 0.0);
+    }
+}

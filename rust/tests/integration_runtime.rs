@@ -1,0 +1,106 @@
+//! Integration: PJRT runtime ↔ coordinator — the AOT artifacts drive the
+//! same decisions as the pure-rust model. Skips (with a notice) when
+//! `make artifacts` hasn't run.
+
+use ubmesh::coordinator::{Arch, Job};
+use ubmesh::parallelism::space::{enumerate_configs, SearchSpace};
+use ubmesh::runtime::Artifacts;
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::placement::{Placement, TierBandwidth};
+use ubmesh::workload::step::iteration_time;
+
+fn artifacts() -> Option<Artifacts> {
+    let dir = Artifacts::default_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(Artifacts::load(&dir).expect("artifacts load"))
+    } else {
+        eprintln!("skipping runtime integration: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pjrt_and_rust_evaluators_agree_on_ranking() {
+    let Some(a) = artifacts() else { return };
+    let m = by_name("gpt3-175b").unwrap();
+    let bw = TierBandwidth::ubmesh(16, 1.0);
+    let cfgs = enumerate_configs(&m, &SearchSpace::paper_default(512, 32768.0));
+    assert!(cfgs.len() > 4);
+    let pjrt = a.evaluate_configs(&m, &cfgs, &bw).unwrap();
+    let rust: Vec<f64> = cfgs
+        .iter()
+        .map(|c| iteration_time(&m, c, &Placement::topology_aware(c), &bw).total_us)
+        .collect();
+    // Same argmin and strong rank agreement.
+    let argmin = |v: &[f64]| {
+        v.iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0
+    };
+    assert_eq!(argmin(&pjrt), argmin(&rust), "evaluators disagree on best");
+    for (p, r) in pjrt.iter().zip(&rust) {
+        assert!((p - r).abs() / r < 0.06, "pjrt {p} rust {r}");
+    }
+}
+
+#[test]
+fn job_plans_identically_with_and_without_pjrt() {
+    let Some(a) = artifacts() else { return };
+    let job = Job::new("llama-70b", 128, 8192.0, Arch::ubmesh_default()).unwrap();
+    let with = job.plan(Some(&a)).unwrap();
+    let without = job.plan(None).unwrap();
+    assert_eq!(with.best.tp, without.best.tp);
+    assert_eq!(with.best.pp, without.best.pp);
+    assert_eq!(with.evaluated, without.evaluated);
+}
+
+#[test]
+fn apsp_artifact_agrees_with_bfs_on_pod_rack_graph() {
+    let Some(a) = artifacts() else { return };
+    use ubmesh::runtime::artifacts::INF;
+    use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    // NPU+LRS subgraph (board 0 plane 0) ≤ 256 nodes: take the 64 NPUs
+    // plus plane-0 LRS (18) = 82 nodes.
+    let mut nodes = h.npus.clone();
+    nodes.extend(h.npu_lrs[0].iter().copied());
+    nodes.extend(h.ir_lrs[0].iter().copied());
+    nodes.push(h.cpu_lrs[0]);
+    nodes.push(h.bk_lrs[0]);
+    let n = nodes.len();
+    let mut adj = vec![INF; n * n];
+    for i in 0..n {
+        adj[i * n + i] = 0.0;
+        for j in 0..n {
+            if i != j && t.link_between(nodes[i], nodes[j]).is_some() {
+                adj[i * n + j] = 1.0;
+            }
+        }
+    }
+    let d = a.apsp(&adj, n).unwrap();
+    // d(npu0, npu63) = 2 through the mesh; d(npu, its board LRS) = 1.
+    assert_eq!(d[0 * n + 63], 2.0);
+    let lrs0 = 64; // first plane-0 LRS (board 0)
+    assert_eq!(d[0 * n + lrs0], 1.0);
+}
+
+#[test]
+fn linkload_artifact_balances_apr_split() {
+    let Some(a) = artifacts() else { return };
+    use ubmesh::runtime::artifacts::{LOAD_LINKS, LOAD_PATHS};
+    // Two disjoint 2-link paths with 50/50 split: equal loads.
+    let mut inc = vec![0.0f32; LOAD_PATHS * LOAD_LINKS];
+    let mut demand = vec![0.0f32; LOAD_PATHS];
+    inc[0 * LOAD_LINKS + 0] = 1.0;
+    inc[0 * LOAD_LINKS + 1] = 1.0;
+    inc[1 * LOAD_LINKS + 2] = 1.0;
+    inc[1 * LOAD_LINKS + 3] = 1.0;
+    demand[0] = 0.5;
+    demand[1] = 0.5;
+    let loads = a.link_load(&inc, &demand).unwrap();
+    assert!((loads[0] - 0.5).abs() < 1e-6);
+    assert!((loads[2] - 0.5).abs() < 1e-6);
+    assert!(loads[4].abs() < 1e-6);
+}

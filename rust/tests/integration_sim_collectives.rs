@@ -1,0 +1,121 @@
+//! Integration: collectives executed on the DES over real UB-Mesh
+//! topologies, cross-checked against closed forms.
+
+use ubmesh::collectives::alltoall::{multipath_alltoall_dag, Grid};
+use ubmesh::collectives::cost::{allreduce_multiring_us, allreduce_ring_us};
+use ubmesh::collectives::hierarchical::hierarchical_allreduce_dag;
+use ubmesh::collectives::ring::{fullmesh_rings, multiring_allreduce_dag, ring_allreduce_dag};
+use ubmesh::sim::{self, SimNet};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::ublink::LANE_GB_S;
+use ubmesh::topology::NodeId;
+
+fn rack() -> (ubmesh::topology::Topology, ubmesh::topology::rack::RackHandles) {
+    ubmesh_rack(&RackConfig::default())
+}
+
+#[test]
+fn board_multiring_reaches_3x_on_real_rack() {
+    let (t, h) = rack();
+    let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
+    let bytes = 360e6;
+    let net = SimNet::new(&t);
+    let single = sim::schedule::run(&net, &ring_allreduce_dag(&t, &board, bytes));
+    let rings = fullmesh_rings(&board, 3);
+    let multi = sim::schedule::run(
+        &net,
+        &multiring_allreduce_dag(&t, &rings, &[1.0; 3], bytes),
+    );
+    let speedup = single.makespan_us / multi.makespan_us;
+    assert!((2.5..3.3).contains(&speedup), "speedup {speedup}");
+    // closed forms agree
+    let bw = 4.0 * LANE_GB_S;
+    assert!(allreduce_multiring_us(bytes, 8, bw, 3, 0.0) < allreduce_ring_us(bytes, 8, bw, 0.0));
+}
+
+#[test]
+fn rack_hierarchical_allreduce_uses_both_dims() {
+    let (t, h) = rack();
+    let rows: Vec<Vec<NodeId>> = (0..8)
+        .map(|b| (0..8).map(|s| h.npu(b, s, 8)).collect())
+        .collect();
+    let cols: Vec<Vec<NodeId>> = (0..8)
+        .map(|s| (0..8).map(|b| h.npu(b, s, 8)).collect())
+        .collect();
+    let bytes = 360e6;
+    let net = SimNet::new(&t);
+    let dag = hierarchical_allreduce_dag(&t, &rows, &cols, bytes);
+    let r = sim::schedule::run(&net, &dag);
+    // Single global snake ring for contrast.
+    let mut snake = Vec::new();
+    for b in 0..8 {
+        if b % 2 == 0 {
+            for s in 0..8 {
+                snake.push(h.npu(b, s, 8));
+            }
+        } else {
+            for s in (0..8).rev() {
+                snake.push(h.npu(b, s, 8));
+            }
+        }
+    }
+    let flat = sim::schedule::run(&net, &ring_allreduce_dag(&t, &snake, bytes));
+    assert!(
+        r.makespan_us < flat.makespan_us,
+        "hierarchical {} flat {}",
+        r.makespan_us,
+        flat.makespan_us
+    );
+}
+
+#[test]
+fn rack_alltoall_completes_with_one_hop_forwarding() {
+    let (t, h) = rack();
+    let g = Grid::new(&h.npus, 8, 8);
+    let dag = multipath_alltoall_dag(&t, &g, 10.5e6 / 63.0); // Table 1 EP volume
+    assert!(dag.stages[0].flows.iter().all(|f| f.channels.len() <= 2));
+    let net = SimNet::new(&t);
+    let r = sim::schedule::run(&net, &dag);
+    assert!(r.makespan_us > 0.0);
+    assert!(r.peak_flows > 4000, "64×63 pairs in flight");
+}
+
+#[test]
+fn failed_link_degrades_but_multipath_survives() {
+    use ubmesh::routing::apr::{paths_2d, to_routed, PathSet};
+    use ubmesh::sim::{FlowSpec, Stage, StageDag};
+    let (t, h) = rack();
+    let node = |x: usize, y: usize| h.npu(y, x, 8);
+    let routed: Vec<_> = paths_2d((0, 0), (3, 4), 8, 8, true)
+        .iter()
+        .map(|m| to_routed(m, node))
+        .collect();
+    let ps = PathSet::weighted_by_bottleneck(routed, &t);
+    let bytes = 64e6;
+    let paths: Vec<Vec<NodeId>> = ps.paths.iter().map(|p| p.nodes.clone()).collect();
+
+    // Fail the direct corner link used by the first shortest path.
+    let mut net = SimNet::new(&t);
+    let l = t.link_between(paths[0][0], paths[0][1]).unwrap();
+    net.fail_link(l);
+
+    // Drop flows crossing the failed link (APR reroutes around it).
+    let surviving: Vec<(Vec<NodeId>, f64)> = paths
+        .iter()
+        .zip(&ps.weights)
+        .filter(|(p, _)| {
+            p.windows(2)
+                .all(|w| t.link_between(w[0], w[1]) != Some(l))
+        })
+        .map(|(p, &w)| (p.clone(), w))
+        .collect();
+    assert!(surviving.len() >= ps.paths.len() - 4, "most paths survive");
+    let flows: Vec<FlowSpec> = surviving
+        .iter()
+        .map(|(p, w)| FlowSpec::along(&t, p, bytes * w))
+        .collect();
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("apr-after-failure").with_flows(flows));
+    let r = sim::schedule::run(&net, &dag);
+    assert!(r.makespan_us > 0.0, "transfer completes despite failure");
+}

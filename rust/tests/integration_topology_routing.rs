@@ -1,0 +1,100 @@
+//! Integration: topology construction ↔ routing (APR, TFC, addressing)
+//! across the real UB-Mesh structures, not synthetic meshes.
+
+use ubmesh::routing::address::UbAddr;
+use ubmesh::routing::apr::{paths_2d, to_routed, PathKind, PathSet};
+use ubmesh::routing::spf::shortest_paths;
+use ubmesh::routing::srheader::{HopMode, SrHeader};
+use ubmesh::routing::tfc::{routing_dims, verify_deadlock_free};
+use ubmesh::topology::pod::{ubmesh_pod, PodConfig};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::NodeKind;
+
+#[test]
+fn rack_apr_paths_are_physical_and_deadlock_free() {
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let node = |x: usize, y: usize| h.npu(y, x, 8);
+    let mut all = Vec::new();
+    for (s, d) in [(0usize, 27usize), (5, 62), (8, 9), (0, 7), (1, 57)] {
+        let mesh = paths_2d((s % 8, s / 8), (d % 8, d / 8), 8, 8, true);
+        for mp in &mesh {
+            let r = to_routed(mp, node);
+            t.validate_path(&r.nodes).unwrap();
+            all.push(r);
+        }
+    }
+    let vls = verify_deadlock_free(&t, &all).unwrap();
+    assert!(vls.iter().flatten().all(|&v| v <= 1), "2 VLs max");
+}
+
+#[test]
+fn apr_aggregate_bandwidth_exceeds_spf() {
+    // Fig 10: APR exposes far more bandwidth than shortest-path-first.
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let node = |x: usize, y: usize| h.npu(y, x, 8);
+    let src = node(0, 0);
+    let dst = node(3, 4);
+    let spf = shortest_paths(&t, src, dst, 64, true);
+    let spf_bw: f64 = spf.iter().map(|p| p.bottleneck_gb_s(&t)).sum();
+    let apr: Vec<_> = paths_2d((0, 0), (4, 3), 8, 8, true)
+        .iter()
+        .map(|m| to_routed(m, |x, y| h.npu(y, x, 8)))
+        .collect();
+    let ps = PathSet::weighted_by_bottleneck(apr, &t);
+    assert!(
+        ps.aggregate_gb_s(&t) > spf_bw,
+        "APR {} vs SPF {} GB/s",
+        ps.aggregate_gb_s(&t),
+        spf_bw
+    );
+}
+
+#[test]
+fn sr_header_covers_pod_scale_paths() {
+    // Any intra-pod path fits the 12-hop / 6-SR-instruction budget.
+    let cfg = PodConfig::default();
+    let (t, h) = ubmesh_pod(&cfg);
+    let a = h.rack(0, 0).npus[0];
+    let b = h.rack(3, 3).npus[63];
+    let path = t.shortest_path(a, b, true).unwrap();
+    assert!(path.len() - 1 <= 12, "pod path {} hops", path.len() - 1);
+    let hops: Vec<HopMode> = (0..path.len() - 1).map(|i| HopMode::Source(i as u8)).collect();
+    let hdr = SrHeader::for_path(&hops[..hops.len().min(6)]);
+    let bytes = hdr.encode();
+    assert_eq!(SrHeader::decode(&bytes), hdr);
+}
+
+#[test]
+fn pod_paths_have_valid_tfc_dims() {
+    let cfg = PodConfig::default();
+    let (t, h) = ubmesh_pod(&cfg);
+    // Cross-rack path: NPU → LRS fabric → peer rack NPU.
+    let a = h.rack(0, 0).npus[7];
+    let b = h.rack(0, 2).npus[40];
+    let p = t.shortest_path(a, b, true).unwrap();
+    let dims = routing_dims(&t, &p);
+    assert!(
+        ubmesh::routing::tfc::assign_vls(&dims).is_some(),
+        "cross-rack path dims {dims:?} must be ≤2-VL schedulable"
+    );
+}
+
+#[test]
+fn structured_addresses_match_topology() {
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    for (i, &n) in h.npus.iter().enumerate() {
+        let loc = t.node(n).loc;
+        let addr = UbAddr::of(&loc, NodeKind::Npu);
+        assert_eq!(addr.board() as usize, i / 8);
+        assert_eq!(addr.slot() as usize, i % 8);
+        assert_eq!(addr.kind(), 0);
+    }
+}
+
+#[test]
+fn detour_paths_only_when_requested() {
+    let ps = paths_2d((0, 0), (3, 3), 8, 8, false);
+    assert!(ps.iter().all(|p| p.kind == PathKind::Direct));
+    let ps = paths_2d((0, 0), (3, 3), 8, 8, true);
+    assert!(ps.iter().any(|p| p.kind == PathKind::Detour));
+}

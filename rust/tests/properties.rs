@@ -1,0 +1,204 @@
+//! Cross-module property tests (see DESIGN.md §6): randomized invariants
+//! over topology construction, routing, flow simulation and cost models.
+
+use ubmesh::routing::apr::{paths_2d, to_routed};
+use ubmesh::routing::tfc::verify_deadlock_free;
+use ubmesh::sim::fair::max_min_rates;
+use ubmesh::sim::{self, FlowSpec, SimNet, Stage, StageDag};
+use ubmesh::topology::ndmesh::{expected_links, nd_fullmesh, DimSpec};
+use ubmesh::topology::{CableClass, Channel, NodeId};
+use ubmesh::util::prop::forall;
+use ubmesh::util::rng::Rng;
+
+fn random_mesh(rng: &mut Rng) -> (ubmesh::topology::Topology, usize, usize) {
+    let n0 = rng.range(2, 9);
+    let n1 = rng.range(2, 9);
+    let t = nd_fullmesh(
+        "rand",
+        &[
+            DimSpec::new(n0, rng.range(1, 8) as u32, CableClass::PassiveElectrical, 0.3),
+            DimSpec::new(n1, rng.range(1, 8) as u32, CableClass::PassiveElectrical, 1.0),
+        ],
+    );
+    (t, n0, n1)
+}
+
+#[test]
+fn ndmesh_structure_invariants() {
+    forall("nd-fullmesh structure", 64, |rng| {
+        let dims: Vec<usize> = (0..rng.range(1, 4)).map(|_| rng.range(2, 6)).collect();
+        let specs: Vec<DimSpec> = dims
+            .iter()
+            .map(|&d| DimSpec::new(d, 2, CableClass::PassiveElectrical, 1.0))
+            .collect();
+        let t = nd_fullmesh("p", &specs);
+        assert_eq!(t.link_count(), expected_links(&dims));
+        assert!(t.npus_connected());
+        // diameter = number of dims (one hop per dimension)
+        assert_eq!(t.npu_diameter() as usize, dims.len());
+        // handshake lemma
+        let degsum: usize = (0..t.node_count())
+            .map(|i| t.neighbors(NodeId(i as u32)).len())
+            .sum();
+        assert_eq!(degsum, 2 * t.link_count());
+    });
+}
+
+#[test]
+fn apr_path_sets_always_deadlock_free() {
+    forall("APR + TFC on random meshes", 24, |rng| {
+        let (t, n0, n1) = random_mesh(rng);
+        let node = |x: usize, y: usize| NodeId((y * n0 + x) as u32);
+        let mut paths = Vec::new();
+        for _ in 0..rng.range(5, 60) {
+            let s = (rng.range(0, n0), rng.range(0, n1));
+            let d = (rng.range(0, n0), rng.range(0, n1));
+            if s == d {
+                continue;
+            }
+            for mp in paths_2d(s, d, n0, n1, true) {
+                if rng.chance(0.4) {
+                    paths.push(to_routed(&mp, node));
+                }
+            }
+        }
+        if !paths.is_empty() {
+            verify_deadlock_free(&t, &paths).unwrap();
+        }
+    });
+}
+
+#[test]
+fn max_min_never_oversubscribes_and_is_work_conserving() {
+    forall("max-min feasibility", 48, |rng| {
+        let (t, _, _) = random_mesh(rng);
+        let net = SimNet::new(&t);
+        let nflows = rng.range(1, 40);
+        let flows: Vec<Vec<Channel>> = (0..nflows)
+            .map(|_| {
+                (0..rng.range(1, 4))
+                    .map(|_| Channel {
+                        link: ubmesh::topology::LinkId(rng.range(0, t.link_count()) as u32),
+                        rev: rng.chance(0.5),
+                    })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+        let rates = max_min_rates(&net, &refs);
+        let mut load = vec![0.0f64; net.channel_count()];
+        for (i, f) in flows.iter().enumerate() {
+            assert!(rates[i] > 0.0, "work conservation");
+            for c in f {
+                load[c.idx()] += rates[i];
+            }
+        }
+        for (ci, &l) in load.iter().enumerate() {
+            assert!(l <= net.cap_by_idx(ci) * (1.0 + 1e-6) + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn des_makespan_monotone_in_bytes_and_bandwidth() {
+    forall("DES monotonicity", 24, |rng| {
+        let (t, n0, n1) = random_mesh(rng);
+        let node = |x: usize, y: usize| NodeId((y * n0 + x) as u32);
+        let src = node(0, 0);
+        let dst = node(n0 - 1, n1 - 1);
+        let path = t.shortest_path(src, dst, true).unwrap();
+        let bytes = 1e6 + rng.f64() * 1e8;
+        let run = |b: f64| {
+            let net = SimNet::new(&t);
+            let mut dag = StageDag::default();
+            dag.push(Stage::new("x").with_flows(vec![FlowSpec::along(&t, &path, b)]));
+            sim::schedule::run(&net, &dag).makespan_us
+        };
+        assert!(run(2.0 * bytes) > run(bytes));
+    });
+}
+
+#[test]
+fn des_conserves_byte_hops() {
+    forall("byte-hop conservation", 16, |rng| {
+        let (t, n0, n1) = random_mesh(rng);
+        let node = |x: usize, y: usize| NodeId((y * n0 + x) as u32);
+        let mut dag = StageDag::default();
+        let mut expect = 0.0;
+        let mut flows = Vec::new();
+        for _ in 0..rng.range(1, 10) {
+            let s = (rng.range(0, n0), rng.range(0, n1));
+            let d = (rng.range(0, n0), rng.range(0, n1));
+            if s == d {
+                continue;
+            }
+            let path = t
+                .shortest_path(node(s.0, s.1), node(d.0, d.1), true)
+                .unwrap();
+            let bytes = 1e6 * (1.0 + rng.f64() * 9.0);
+            expect += bytes * (path.len() - 1) as f64;
+            flows.push(FlowSpec::along(&t, &path, bytes));
+        }
+        if flows.is_empty() {
+            return;
+        }
+        dag.push(Stage::new("x").with_flows(flows));
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        assert!(
+            (r.byte_hops - expect).abs() / expect < 1e-6,
+            "byte-hops {} vs {}",
+            r.byte_hops,
+            expect
+        );
+    });
+}
+
+#[test]
+fn cost_models_are_scale_homogeneous() {
+    // Doubling every price doubles CapEx but leaves ratios unchanged —
+    // guards the Fig 21 ratios against price-book drift.
+    use ubmesh::cost::capex::{capex_full_clos, capex_ubmesh};
+    use ubmesh::topology::superpod::SuperPodConfig;
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = 2;
+    cfg.pod.rows = 2;
+    cfg.pod.cols = 2;
+    let ub = capex_ubmesh(&cfg);
+    let clos = capex_full_clos("c", cfg.npus(), 64);
+    let r1 = clos.total() / ub.total();
+    assert!(r1 > 1.0, "Clos must cost more ({r1})");
+    // network share bounded
+    assert!(ub.network_share() < clos.network_share());
+}
+
+#[test]
+fn traffic_analysis_totals_are_consistent() {
+    use ubmesh::workload::models;
+    use ubmesh::workload::traffic::{analyze, ParallelismConfig};
+    forall("traffic consistency", 48, |rng| {
+        let m = models::by_name(models::MODELS[rng.range(0, 5)]).unwrap();
+        let p = ParallelismConfig {
+            tp: 1 << rng.range(0, 4),
+            sp: 1 << rng.range(0, 4),
+            ep: if m.is_moe() { 1 << rng.range(1, 5) } else { 1 },
+            pp: 1 << rng.range(0, 4),
+            dp: 1 << rng.range(0, 4),
+            microbatches: rng.range(1, 32),
+            tokens_per_microbatch: 4096.0 * (1 + rng.range(0, 8)) as f64,
+        };
+        let t = analyze(&m, &p);
+        let sum: f64 = t.rows.iter().map(|r| r.total).sum();
+        assert!((sum - t.total()).abs() < 1.0);
+        for r in &t.rows {
+            assert!(r.total >= 0.0 && r.volume_per_transfer >= 0.0);
+            assert!(
+                (r.total - r.volume_per_transfer * r.transfers).abs()
+                    <= 1e-6 * r.total.max(1.0) + 1.0
+                    || r.technique == "SP", // SP adds the RS term
+                "{:?}",
+                r
+            );
+        }
+    });
+}
