@@ -28,7 +28,7 @@ use ubmesh::util::table::{fmt, pct, Table};
 use ubmesh::workload::models::by_name;
 use ubmesh::workload::step::rack_iteration_dag;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ubmesh::util::error::Result<()> {
     println!("=== UB-Mesh end-to-end training driver ===\n");
 
     // ---- L1/L2: PJRT artifacts -----------------------------------------

@@ -15,35 +15,52 @@ use ubmesh::routing::failure::{
     affected_sources, direct_notification_convergence_us, hop_by_hop_convergence_us,
     RecoveryModel,
 };
+use ubmesh::sim::sweep::sweep_default;
 use ubmesh::sim::{self, SimNet};
 use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
 use ubmesh::topology::NodeId;
 use ubmesh::util::table::{fmt, Table};
+
+/// The three worlds compared on the DES (Fig 9).
+#[derive(Copy, Clone)]
+enum World {
+    Healthy,
+    BackupViaLrs,
+    MaskedNpu,
+}
 
 fn main() {
     let (topo, h) = ubmesh_rack(&RackConfig::default());
     let bytes = 360e6;
     let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
     let failed = board[3];
-
-    // Healthy baseline.
-    let net = SimNet::new(&topo);
-    let healthy = sim::schedule::run(&net, &ring_allreduce_dag(&topo, &board, bytes));
-
-    // Fig 9: backup activation — ring edge 5-3 becomes 5-LRS-B.
-    let mut net2 = SimNet::new(&topo);
-    fail_npu(&mut net2, &topo, failed);
     let ring = ranks_with_backup(&h, failed);
-    let ring_board: Vec<NodeId> = board
-        .iter()
-        .map(|&n| if n == failed { h.backup.unwrap() } else { n })
-        .collect();
     let _ = ring;
-    let failover = sim::schedule::run(&net2, &ring_allreduce_dag(&topo, &ring_board, bytes));
 
-    // Masking: 7-NPU ring + lost compute.
-    let masked_ring: Vec<NodeId> = board.iter().copied().filter(|&n| n != failed).collect();
-    let masked = sim::schedule::run(&net2, &ring_allreduce_dag(&topo, &masked_ring, bytes));
+    // Each world is an independent scenario: build its own SimNet + ring
+    // DAG and simulate, fanned out across threads by the sweep.
+    let worlds = [World::Healthy, World::BackupViaLrs, World::MaskedNpu];
+    let reports = sweep_default(&worlds, |_i, &w, _rng| {
+        let mut net = SimNet::new(&topo);
+        let ring: Vec<NodeId> = match w {
+            World::Healthy => board.clone(),
+            World::BackupViaLrs => {
+                // Fig 9: backup activation — ring edge 5-3 becomes 5-LRS-B.
+                fail_npu(&mut net, &topo, failed);
+                board
+                    .iter()
+                    .map(|&n| if n == failed { h.backup.unwrap() } else { n })
+                    .collect()
+            }
+            World::MaskedNpu => {
+                // Masking: 7-NPU ring + lost compute.
+                fail_npu(&mut net, &topo, failed);
+                board.iter().copied().filter(|&n| n != failed).collect()
+            }
+        };
+        sim::schedule::run(&net, &ring_allreduce_dag(&topo, &ring, bytes))
+    });
+    let (healthy, failover, masked) = (&reports[0], &reports[1], &reports[2]);
 
     let mut t = Table::with_title(
         "board AllReduce (360 MB) after NPU-3 failure",

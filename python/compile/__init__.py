@@ -1,0 +1,2 @@
+"""L2 compile package: JAX compute graphs (model.py), AOT lowering to
+HLO text (aot.py) and the Pallas L1 kernels (kernels/)."""

@@ -1,0 +1,8 @@
+"""Pytest path setup: make `compile.*` importable when the suite runs
+from the repo root (`python -m pytest python/tests`), matching the CI
+invocation in .github/workflows/ci.yml."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

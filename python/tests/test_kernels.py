@@ -4,7 +4,11 @@ over shapes and values — the CORE correctness signal of the AOT path)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # prefer real hypothesis; fall back to the deterministic shim
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: jax yes, hypothesis no
+    from _propshim import given, settings, strategies as st
 
 from compile.kernels import costmodel, linkload, minplus, ref
 

@@ -1,22 +1,30 @@
 //! Fig 12 — From Hop-by-hop to Direct Notification: routing-convergence
 //! latency after a link failure, swept over topology scale.
+//!
+//! Each mesh size is an independent scenario; the sweep fans them out
+//! across threads (`sim::sweep`) and returns rows in declaration order.
 
 use ubmesh::routing::apr::{paths_2d, to_routed};
 use ubmesh::routing::failure::{
     affected_sources, direct_notification_convergence_us, hop_by_hop_convergence_us,
     RecoveryModel,
 };
+use ubmesh::sim::sweep::sweep_default;
 use ubmesh::topology::ndmesh::{nd_fullmesh, DimSpec};
 use ubmesh::topology::{CableClass, NodeId};
 use ubmesh::util::table::{fmt, Table};
 
+struct Row {
+    n: usize,
+    affected: usize,
+    slow: f64,
+    fast: f64,
+}
+
 fn main() {
     let m = RecoveryModel::default();
-    let mut tbl = Table::with_title(
-        "Fig 12: convergence after a link failure (µs)",
-        vec!["mesh", "affected", "hop-by-hop", "direct", "speedup"],
-    );
-    for n in [4usize, 8, 16] {
+    let sizes = [4usize, 8, 16];
+    let rows: Vec<Row> = sweep_default(&sizes, |_i, &n, _rng| {
         let t = nd_fullmesh(
             "g",
             &[
@@ -39,14 +47,27 @@ fn main() {
         let affected = affected_sources(&t, &paths, failed);
         let slow = hop_by_hop_convergence_us(&t, failed, &affected, &m);
         let fast = direct_notification_convergence_us(&t, failed, &affected, &m);
+        Row {
+            n,
+            affected: affected.len(),
+            slow,
+            fast,
+        }
+    });
+
+    let mut tbl = Table::with_title(
+        "Fig 12: convergence after a link failure (µs)",
+        vec!["mesh", "affected", "hop-by-hop", "direct", "speedup"],
+    );
+    for r in &rows {
         tbl.row(vec![
-            format!("{n}x{n} 2D-FM"),
-            format!("{}", affected.len()),
-            fmt(slow, 1),
-            fmt(fast, 1),
-            format!("{:.2}x", slow / fast),
+            format!("{}x{} 2D-FM", r.n, r.n),
+            format!("{}", r.affected),
+            fmt(r.slow, 1),
+            fmt(r.fast, 1),
+            format!("{:.2}x", r.slow / r.fast),
         ]);
-        assert!(fast < slow);
+        assert!(r.fast < r.slow);
     }
     tbl.print();
     println!(

@@ -1,7 +1,12 @@
 //! Fig 22 — Linearity Analysis @ Sequence 256K: per-NPU throughput vs
 //! base scale (Eq. 2), per model, 1×–64×.
+//!
+//! Every (model, scale) plan is an independent parallelization search,
+//! so the whole grid fans out across threads via `sim::sweep` and the
+//! table is assembled from the ordered results.
 
 use ubmesh::coordinator::{linearity, Arch, Job};
+use ubmesh::sim::sweep::sweep_default;
 use ubmesh::util::table::{pct, Table};
 
 fn main() {
@@ -15,19 +20,38 @@ fn main() {
     ];
     let mults = [1usize, 2, 4, 8, 16, 32, 64];
 
+    // Flatten the grid into scenarios: every (model, scale) pair that
+    // fits the 64K-NPU cap, base scales included via the 1× multiple.
+    let mut scenarios: Vec<(&str, usize)> = Vec::new();
+    for (model, base_scale) in cases {
+        for &m in &mults {
+            let scale = base_scale * m;
+            if scale <= 65536 {
+                scenarios.push((model, scale));
+            }
+        }
+    }
+    let tputs: Vec<f64> = sweep_default(&scenarios, |_i, &(model, scale), _rng| {
+        Job::new(model, scale, seq, Arch::ubmesh_default())
+            .unwrap()
+            .plan(None)
+            .unwrap()
+            .tokens_per_s
+    });
+    let tput = |model: &str, scale: usize| -> f64 {
+        let k = scenarios
+            .iter()
+            .position(|&(mo, sc)| mo == model && sc == scale)
+            .expect("scenario grid covers all (model, scale)");
+        tputs[k]
+    };
+
     let mut t = Table::with_title(
         "Fig 22: linearity vs base scale (seq 256K)",
         vec!["model", "1x", "2x", "4x", "8x", "16x", "32x", "64x"],
     );
     for (model, base_scale) in cases {
-        let tput = |scale: usize| {
-            Job::new(model, scale, seq, Arch::ubmesh_default())
-                .unwrap()
-                .plan(None)
-                .unwrap()
-                .tokens_per_s
-        };
-        let base = (base_scale, tput(base_scale));
+        let base = (base_scale, tput(model, base_scale));
         let mut cells = vec![model.to_string()];
         for &m in &mults {
             let scale = base_scale * m;
@@ -35,7 +59,7 @@ fn main() {
                 cells.push("-".into());
                 continue;
             }
-            let lin = linearity(base, (scale, tput(scale)));
+            let lin = linearity(base, (scale, tput(model, scale)));
             cells.push(pct(lin, 1));
             assert!(
                 lin > 0.95,

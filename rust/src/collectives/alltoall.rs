@@ -149,6 +149,53 @@ pub fn hierarchical_alltoall_dag(
     dag
 }
 
+/// Dimension-wise All2All exercise on an nD-FullMesh (the Fig 14-b/c
+/// hierarchical pattern generalized to n dimensions): phase `d`
+/// exchanges one constant `bytes_per_peer` payload between every node
+/// and each of its `size_d − 1` dimension-`d` neighbours over their
+/// direct link, phases chained. This is the *uniform-payload* form —
+/// it saturates every dimension's links in sequence and lower-bounds
+/// the full decomposition (whose phase-`d` payloads grow with the
+/// forwarded slab size); use it to exercise per-dimension bandwidth,
+/// not to price an exact MoE exchange.
+/// Total wire bytes: `N · Σ_d (size_d − 1) · bytes` vs the flat
+/// `N · (N − 1) · bytes` of a direct all-to-all.
+///
+/// This is the Pod-scale workload the incremental solver is sized for:
+/// at 8×8×8×8 = 4096 NPUs it releases 28 672 single-hop flows per phase.
+pub fn dimwise_alltoall_dag(t: &Topology, dims: &[usize], bytes_per_peer: f64) -> StageDag {
+    use crate::topology::ndmesh::{coords_of, index_of};
+    let n: usize = dims.iter().product();
+    assert_eq!(t.npus.len(), n, "dims {dims:?} must cover every NPU");
+    let mut dag = StageDag::default();
+    let mut prev: Option<usize> = None;
+    for (d, &size) in dims.iter().enumerate() {
+        let mut flows = Vec::with_capacity(n * (size - 1));
+        for i in 0..n {
+            let ci = coords_of(i, dims);
+            for v in 0..size {
+                if v == ci[d] {
+                    continue;
+                }
+                let mut cj = ci.clone();
+                cj[d] = v;
+                let j = index_of(&cj, dims);
+                flows.push(FlowSpec::along(
+                    t,
+                    &[t.npus[i], t.npus[j]],
+                    bytes_per_peer,
+                ));
+            }
+        }
+        let mut s = Stage::new(format!("a2a-dim{d}")).with_flows(flows);
+        if let Some(p) = prev {
+            s = s.after(vec![p]);
+        }
+        prev = Some(dag.push(s));
+    }
+    dag
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +281,33 @@ mod tests {
         let hb: f64 = hier.total_bytes();
         assert!((hb - 96e6).abs() < 1.0);
         assert!(hb < gb / 2.0, "hier {hb} should be well under general {gb}");
+    }
+
+    #[test]
+    fn dimwise_alltoall_structure_and_makespan() {
+        // 4×4 2D mesh: 2 chained phases of 16×3 single-hop flows; every
+        // directed dim-link carries exactly one flow per phase, so the
+        // phase time is the closed-form single-flow time.
+        let (t, nodes) = mesh_4x4();
+        let _ = nodes;
+        let bytes = 40e6;
+        let dag = dimwise_alltoall_dag(&t, &[4, 4], bytes);
+        assert_eq!(dag.stages.len(), 2);
+        for s in &dag.stages {
+            assert_eq!(s.flows.len(), 16 * 3);
+            assert!(s.flows.iter().all(|f| f.channels.len() == 1));
+        }
+        assert!((dag.total_bytes() - 2.0 * 48.0 * bytes).abs() < 1.0);
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        let bw = 4.0 * crate::topology::ublink::LANE_GB_S; // x4 lanes
+        let phase = bytes / (bw * 1e3);
+        assert!(
+            (r.makespan_us - 2.0 * phase).abs() / (2.0 * phase) < 0.01,
+            "sim {} vs closed-form {}",
+            r.makespan_us,
+            2.0 * phase
+        );
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Job orchestration: one LLM-training job on one architecture.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::parallelism::search::{search_with, SearchOutcome};
 use crate::parallelism::space::SearchSpace;
@@ -114,7 +114,7 @@ pub struct JobReport {
 impl Job {
     pub fn new(model: &str, scale: usize, seq_len: f64, arch: Arch) -> Result<Job> {
         let model = models::by_name(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {model} (see Table 5)"))?;
+            .ok_or_else(|| crate::anyhow!("unknown model {model} (see Table 5)"))?;
         Ok(Job {
             model,
             scale,

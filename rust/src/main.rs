@@ -10,7 +10,7 @@
 //! ubmesh sweep --model gpt4-2t        seq-length sweep on all archs
 //! ```
 
-use anyhow::Result;
+use ubmesh::util::error::Result;
 use ubmesh::coordinator::{Arch, Job, Routing};
 use ubmesh::runtime::Artifacts;
 use ubmesh::util::cli::Args;

@@ -42,9 +42,9 @@ pub struct McResult {
     pub downtime_hours: f64,
 }
 
-/// Run the simulation with `trials` independent missions and average.
-pub fn run(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
-    let mut rng = Rng::new(seed);
+/// Core loop: `trials` independent missions drawn from `rng`. Returns
+/// (total downtime hours, failure count).
+fn run_trials(cfg: &McConfig, trials: u32, rng: &mut Rng) -> (f64, u64) {
     let hours_per_year = 365.0 * 24.0;
     let net_rate = cfg.network_afr / hours_per_year; // failures/hour
     let npu_rate = cfg.npu_afr / hours_per_year;
@@ -75,6 +75,40 @@ pub fn run(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
             t += down;
         }
     }
+    (down_total, failures)
+}
+
+/// Run the simulation with `trials` independent missions and average.
+pub fn run(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
+    let mut rng = Rng::new(seed);
+    let (down_total, failures) = run_trials(cfg, trials, &mut rng);
+    let mission_total = cfg.mission_hours * trials as f64;
+    McResult {
+        availability: 1.0 - down_total / mission_total,
+        failures,
+        downtime_hours: down_total,
+    }
+}
+
+/// Parallel Monte-Carlo over [`crate::sim::sweep`]: trials are split
+/// into a *fixed* number of chunks (independent of thread count), each
+/// chunk drawing from its own
+/// [`scenario_seed`](crate::sim::sweep::scenario_seed)-derived stream, so the
+/// result is deterministic for a given `(trials, seed)` no matter how
+/// many threads run it. Numerically it is a different (equally valid)
+/// sample than [`run`] with the same seed — the streams differ.
+pub fn run_par(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
+    use crate::sim::sweep::{sweep, SweepConfig};
+    const CHUNKS: u32 = 32;
+    let chunks = CHUNKS.min(trials.max(1));
+    let sizes: Vec<u32> = (0..chunks)
+        .map(|i| trials / chunks + u32::from(i < trials % chunks))
+        .collect();
+    let cfg_sweep = SweepConfig::default().with_seed(seed);
+    let parts = sweep(&cfg_sweep, &sizes, |_i, &n, rng| run_trials(cfg, n, rng));
+    let (down_total, failures) = parts
+        .iter()
+        .fold((0.0, 0u64), |(d, f), &(dd, ff)| (d + dd, f + ff));
     let mission_total = cfg.mission_hours * trials as f64;
     McResult {
         availability: 1.0 - down_total / mission_total,
@@ -147,5 +181,37 @@ mod tests {
         let r2 = run(&McConfig::ubmesh_8k(&a, true), 8, 3);
         assert_eq!(r1.failures, r2.failures);
         assert_eq!(r1.availability, r2.availability);
+    }
+
+    #[test]
+    fn parallel_run_is_deterministic_and_consistent() {
+        let a = afr(88.9);
+        let cfg = McConfig::ubmesh_8k(&a, false);
+        let p1 = run_par(&cfg, 96, 11);
+        let p2 = run_par(&cfg, 96, 11);
+        assert_eq!(p1.failures, p2.failures);
+        assert_eq!(p1.availability, p2.availability);
+        // Statistically compatible with the serial estimator.
+        let s = run(&cfg, 96, 11);
+        assert!(
+            (p1.availability - s.availability).abs() < 0.01,
+            "par {} vs serial {}",
+            p1.availability,
+            s.availability
+        );
+    }
+
+    #[test]
+    fn parallel_matches_closed_form_availability() {
+        let mut cfg = McConfig::ubmesh_8k(&afr(88.9), false);
+        cfg.npu_afr = 0.0;
+        let r = run_par(&cfg, 128, 42);
+        let mtbf = super::super::availability::mtbf_hours(88.9);
+        let expect = super::super::availability::availability(mtbf, 75.0 / 60.0);
+        assert!(
+            (r.availability - expect).abs() < 0.01,
+            "MC-par {} vs Eq3 {expect}",
+            r.availability
+        );
     }
 }

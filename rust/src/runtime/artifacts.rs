@@ -3,7 +3,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 use crate::workload::models::ModelConfig;
 use crate::workload::placement::{Placement, TierBandwidth, NTIERS};

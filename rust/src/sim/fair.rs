@@ -4,6 +4,33 @@
 //! uniformly until some channel saturates; flows crossing it freeze at
 //! the current level, and filling continues for the rest. This is the
 //! standard fluid-model allocation used by flow-level DC simulators.
+//!
+//! Two implementations live here:
+//!
+//! * [`naive_max_min_rates`] — the original O(rounds × flows × hops)
+//!   scan, retained verbatim as the differential-test oracle.
+//! * [`Rates`] — the scalable solver. It keeps a channel→flow inverted
+//!   index and drives each filling round from a **saturation heap**: for
+//!   a channel `c` with unfrozen multiplicity `k_c` and frozen load
+//!   `F_c`, the uniform fill level at which it binds is
+//!   `(cap_c − F_c) / k_c`; the heap pops the next binding channel
+//!   directly, so a round costs O(hops of the frozen flows × log C)
+//!   instead of O(all flows × hops). Heap entries are invalidated lazily
+//!   (per-channel version stamps) rather than removed.
+//!
+//! [`Rates`] is also **incremental**: [`Rates::add_flows`] and
+//! [`Rates::remove_flows`] re-solve only the connected component(s) of
+//! the flow/channel bipartite graph that the change touches. Flows in
+//! other components share no channel with the changed flows — max-min
+//! allocations factor across components, so their rates are provably
+//! unaffected (the invariant the property tests in
+//! `rust/tests/properties.rs` pin down: any add/remove sequence yields
+//! the same rates as a from-scratch solve of the surviving flow set).
+//!
+//! [`max_min_rates`] keeps the original one-shot API as a thin wrapper
+//! over [`Rates`].
+
+use std::collections::BinaryHeap;
 
 use crate::topology::Channel;
 
@@ -13,6 +40,16 @@ use super::network::SimNet;
 /// list of channels it crosses. Flows crossing a zero-capacity (failed)
 /// channel get rate 0.
 pub fn max_min_rates(net: &SimNet, flows: &[&[Channel]]) -> Vec<f64> {
+    let mut r = Rates::new();
+    let ids = r.add_flows(net, flows);
+    ids.iter().map(|&id| r.rate(id)).collect()
+}
+
+/// Original from-scratch progressive-filling solver. Quadratic in the
+/// worst case; kept as the oracle for the differential tests
+/// (`rust/tests/differential_fair.rs`) and for spot-checking the
+/// incremental solver from benches.
+pub fn naive_max_min_rates(net: &SimNet, flows: &[&[Channel]]) -> Vec<f64> {
     let n = flows.len();
     let mut rate = vec![0.0f64; n];
     if n == 0 {
@@ -101,6 +138,311 @@ pub fn max_min_rates(net: &SimNet, flows: &[&[Channel]]) -> Vec<f64> {
         }
     }
     rate
+}
+
+/// Handle of a flow registered in a [`Rates`] solver.
+pub type FlowId = usize;
+
+#[derive(Clone, Debug, Default)]
+struct FlowState {
+    channels: Vec<Channel>,
+    rate: f64,
+    alive: bool,
+    /// Generation stamps (== the solver's current `gen`) marking
+    /// membership in the component being re-solved / frozen-ness within
+    /// that solve. Stamps avoid O(all flows) clears per solve.
+    in_component: u64,
+    frozen_at: u64,
+}
+
+/// Saturation-heap entry: the fill level at which `ch` binds, valid only
+/// while `ver` matches the channel's version (lazy deletion).
+struct Sat {
+    fill: f64,
+    ch: usize,
+    ver: u32,
+}
+
+impl PartialEq for Sat {
+    fn eq(&self, other: &Self) -> bool {
+        self.fill == other.fill && self.ch == other.ch
+    }
+}
+impl Eq for Sat {}
+impl PartialOrd for Sat {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Sat {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the smallest fill.
+        other
+            .fill
+            .total_cmp(&self.fill)
+            .then_with(|| other.ch.cmp(&self.ch))
+    }
+}
+
+/// Incremental max-min fair solver over a mutable flow set.
+///
+/// Invariant (after every public call): `rate(id)` of every alive flow
+/// equals the max-min fair allocation of the full alive flow set on the
+/// network passed to the mutating calls — i.e. incrementality is a pure
+/// optimization, never a semantic change.
+#[derive(Default)]
+pub struct Rates {
+    flows: Vec<FlowState>,
+    free: Vec<FlowId>,
+    /// Channel idx → alive flow ids, one entry per crossing (a flow that
+    /// crosses a channel twice appears twice — multiplicity matters for
+    /// the fair share, matching the oracle's bookkeeping).
+    by_channel: Vec<Vec<FlowId>>,
+    /// Flows whose rate may have changed in the last mutating call.
+    touched: Vec<FlowId>,
+
+    // ---- per-solve scratch (generation-stamped, never cleared) -------
+    gen: u64,
+    chan_gen: Vec<u64>,
+    chan_occ: Vec<u32>,
+    chan_frozen_load: Vec<f64>,
+    chan_ver: Vec<u32>,
+}
+
+impl Rates {
+    pub fn new() -> Rates {
+        Rates::default()
+    }
+
+    /// Number of alive flows.
+    pub fn len(&self) -> usize {
+        self.flows.iter().filter(|f| f.alive).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current rate (GB/s) of an alive flow.
+    #[inline]
+    pub fn rate(&self, id: FlowId) -> f64 {
+        debug_assert!(self.flows[id].alive, "rate() on dead flow {id}");
+        self.flows[id].rate
+    }
+
+    /// Flows whose rate may have changed in the last `add_flows` /
+    /// `remove_flows` call (the affected component, including the new
+    /// flows themselves). The DAG runner uses this to re-settle only
+    /// what moved.
+    pub fn touched(&self) -> &[FlowId] {
+        &self.touched
+    }
+
+    fn ensure_channels(&mut self, upto: usize) {
+        if self.by_channel.len() < upto {
+            self.by_channel.resize_with(upto, Vec::new);
+            self.chan_gen.resize(upto, 0);
+            self.chan_occ.resize(upto, 0);
+            self.chan_frozen_load.resize(upto, 0.0);
+            self.chan_ver.resize(upto, 0);
+        }
+    }
+
+    /// Register new flows and re-solve the affected component(s).
+    /// Returns one [`FlowId`] per input flow, in order.
+    pub fn add_flows(&mut self, net: &SimNet, flows: &[&[Channel]]) -> Vec<FlowId> {
+        self.ensure_channels(net.channel_count());
+        let mut ids = Vec::with_capacity(flows.len());
+        let mut dirty: Vec<usize> = Vec::new();
+        for chans in flows {
+            assert!(!chans.is_empty(), "flow with no channels");
+            let id = match self.free.pop() {
+                Some(id) => id,
+                None => {
+                    self.flows.push(FlowState::default());
+                    self.flows.len() - 1
+                }
+            };
+            let st = &mut self.flows[id];
+            st.channels = chans.to_vec();
+            st.rate = 0.0;
+            st.alive = true;
+            st.in_component = 0;
+            st.frozen_at = 0;
+            for c in chans.iter() {
+                let ci = c.idx();
+                debug_assert!(ci < self.by_channel.len(), "channel beyond net");
+                self.by_channel[ci].push(id);
+                dirty.push(ci);
+            }
+            ids.push(id);
+        }
+        self.resolve(net, &dirty);
+        ids
+    }
+
+    /// Deregister flows and re-solve the affected component(s). Rates of
+    /// the removed flows become meaningless; their ids are recycled.
+    pub fn remove_flows(&mut self, net: &SimNet, ids: &[FlowId]) {
+        let mut dirty: Vec<usize> = Vec::new();
+        for &id in ids {
+            assert!(self.flows[id].alive, "remove of dead flow {id}");
+            self.flows[id].alive = false;
+            let channels = std::mem::take(&mut self.flows[id].channels);
+            for c in &channels {
+                let ci = c.idx();
+                // Remove ONE occurrence per crossing.
+                let lst = &mut self.by_channel[ci];
+                let pos = lst
+                    .iter()
+                    .position(|&f| f == id)
+                    .expect("flow missing from inverted index");
+                lst.swap_remove(pos);
+                dirty.push(ci);
+            }
+            self.free.push(id);
+        }
+        self.resolve(net, &dirty);
+    }
+
+    /// Re-solve the union of components reachable from `dirty` channels.
+    ///
+    /// Correctness: a max-min allocation factors across connected
+    /// components of the flow/channel bipartite graph (no shared channel
+    /// → no shared constraint), so restricting the water-filling to the
+    /// affected component reproduces the global solution for it exactly.
+    fn resolve(&mut self, net: &SimNet, dirty: &[usize]) {
+        self.touched.clear();
+        if dirty.is_empty() {
+            return;
+        }
+        self.gen += 1;
+        let gen = self.gen;
+
+        // ---- component discovery: BFS channels ↔ flows ----------------
+        let mut chan_stack: Vec<usize> = Vec::new();
+        for &ci in dirty {
+            if self.chan_gen[ci] != gen {
+                self.chan_gen[ci] = gen;
+                self.chan_occ[ci] = 0;
+                self.chan_frozen_load[ci] = 0.0;
+                chan_stack.push(ci);
+            }
+        }
+        let mut member_flows: Vec<FlowId> = Vec::new();
+        while let Some(ci) = chan_stack.pop() {
+            for k in 0..self.by_channel[ci].len() {
+                let fid = self.by_channel[ci][k];
+                if self.flows[fid].in_component == gen {
+                    continue;
+                }
+                self.flows[fid].in_component = gen;
+                member_flows.push(fid);
+                // Borrow dance: clone-free walk over this flow's channels.
+                for j in 0..self.flows[fid].channels.len() {
+                    let cj = self.flows[fid].channels[j].idx();
+                    if self.chan_gen[cj] != gen {
+                        self.chan_gen[cj] = gen;
+                        self.chan_occ[cj] = 0;
+                        self.chan_frozen_load[cj] = 0.0;
+                        chan_stack.push(cj);
+                    }
+                }
+            }
+        }
+
+        // ---- freeze dead-channel flows at 0, count multiplicities -----
+        let mut unfrozen = 0usize;
+        for &fid in &member_flows {
+            let blocked = self.flows[fid]
+                .channels
+                .iter()
+                .any(|&c| net.capacity(c) <= 0.0);
+            if blocked {
+                self.flows[fid].rate = 0.0;
+                self.flows[fid].frozen_at = gen;
+            } else {
+                unfrozen += 1;
+                for j in 0..self.flows[fid].channels.len() {
+                    let cj = self.flows[fid].channels[j].idx();
+                    self.chan_occ[cj] += 1;
+                }
+            }
+        }
+
+        // ---- water-filling driven by the saturation heap ---------------
+        let mut heap: BinaryHeap<Sat> = BinaryHeap::new();
+        let mut seed_channels: Vec<usize> = Vec::new();
+        for &fid in &member_flows {
+            for c in &self.flows[fid].channels {
+                let ci = c.idx();
+                if self.chan_occ[ci] > 0 {
+                    seed_channels.push(ci);
+                }
+            }
+        }
+        seed_channels.sort_unstable();
+        seed_channels.dedup();
+        for &ci in &seed_channels {
+            self.chan_ver[ci] = self.chan_ver[ci].wrapping_add(1);
+            if self.chan_occ[ci] > 0 {
+                heap.push(Sat {
+                    fill: (net.cap_by_idx(ci) - self.chan_frozen_load[ci])
+                        / self.chan_occ[ci] as f64,
+                    ch: ci,
+                    ver: self.chan_ver[ci],
+                });
+            }
+        }
+
+        let mut fill = 0.0f64;
+        while unfrozen > 0 {
+            let Some(top) = heap.pop() else {
+                // Defensive: should be unreachable (every unfrozen flow
+                // keeps a live heap entry on each of its channels).
+                break;
+            };
+            let ci = top.ch;
+            if top.ver != self.chan_ver[ci] || self.chan_occ[ci] == 0 {
+                continue; // lazily-deleted stale entry
+            }
+            fill = top.fill.max(fill).max(0.0);
+
+            // Freeze every unfrozen flow crossing the binding channel.
+            // Collect first (freezing mutates by_channel-adjacent state),
+            // marking `frozen_at` during collection so a flow crossing
+            // this channel twice dedups in O(1) instead of a Vec scan.
+            let mut to_freeze: Vec<FlowId> = Vec::new();
+            for k in 0..self.by_channel[ci].len() {
+                let fid = self.by_channel[ci][k];
+                if self.flows[fid].frozen_at != gen {
+                    self.flows[fid].frozen_at = gen;
+                    to_freeze.push(fid);
+                }
+            }
+            for fid in to_freeze {
+                self.flows[fid].rate = fill;
+                unfrozen -= 1;
+                for j in 0..self.flows[fid].channels.len() {
+                    let cj = self.flows[fid].channels[j].idx();
+                    self.chan_occ[cj] -= 1;
+                    self.chan_frozen_load[cj] += fill;
+                    self.chan_ver[cj] = self.chan_ver[cj].wrapping_add(1);
+                    if self.chan_occ[cj] > 0 {
+                        heap.push(Sat {
+                            fill: ((net.cap_by_idx(cj) - self.chan_frozen_load[cj])
+                                / self.chan_occ[cj] as f64)
+                                .max(fill),
+                            ch: cj,
+                            ver: self.chan_ver[cj],
+                        });
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(unfrozen, 0, "water-filling left unfrozen flows");
+        self.touched = member_flows;
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +544,81 @@ mod tests {
                 assert!(rates[i] > 0.0);
             }
         });
+    }
+
+    #[test]
+    fn indexed_solver_matches_naive_oracle() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        forall("indexed vs naive", 128, |rng: &mut Rng| {
+            let nflows = rng.range(1, 24);
+            let flows: Vec<Vec<Channel>> = (0..nflows)
+                .map(|_| {
+                    (0..rng.range(1, 5))
+                        .map(|_| Channel {
+                            link: LinkId(rng.range(0, t.link_count()) as u32),
+                            rev: rng.chance(0.5),
+                        })
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+            let fast = max_min_rates(&net, &refs);
+            let slow = naive_max_min_rates(&net, &refs);
+            for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6 * b.max(1.0),
+                    "flow {i}: fast {a} vs naive {b}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn incremental_remove_matches_fresh_solve() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let c0 = [Channel::forward(LinkId(0))];
+        let c01 = [Channel::forward(LinkId(0)), Channel::forward(LinkId(1))];
+        let c1 = [Channel::forward(LinkId(1))];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&c01, &c0, &c1]);
+        assert!((r.rate(ids[0]) - 25.0).abs() < 1e-6);
+        // Remove the link-1-only flow: the shared flow is still capped by
+        // link 0's 50/50 split, and the link-0 flow keeps 25.
+        r.remove_flows(&net, &[ids[2]]);
+        let fresh = max_min_rates(&net, &[&c01, &c0]);
+        assert!((r.rate(ids[0]) - fresh[0]).abs() < 1e-9);
+        assert!((r.rate(ids[1]) - fresh[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_components_are_untouched() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let a = [Channel::forward(LinkId(0))];
+        let b = [Channel::forward(LinkId(3))];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&a, &a, &b]);
+        let before = r.rate(ids[2]);
+        r.remove_flows(&net, &[ids[0]]);
+        // The link-3 component was not part of the change.
+        assert!(!r.touched().contains(&ids[2]));
+        assert_eq!(r.rate(ids[2]), before);
+        // And the surviving link-0 flow reclaims the full link.
+        assert!((r.rate(ids[1]) - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flow_ids_are_recycled() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let a = [Channel::forward(LinkId(0))];
+        let mut r = Rates::new();
+        let first = r.add_flows(&net, &[&a]);
+        r.remove_flows(&net, &first);
+        let second = r.add_flows(&net, &[&a]);
+        assert_eq!(first, second, "freed slot should be reused");
+        assert!((r.rate(second[0]) - 50.0).abs() < 1e-6);
     }
 }

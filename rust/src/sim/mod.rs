@@ -6,7 +6,41 @@
 //! channels, share link capacity max-min fairly ([`fair`]), and complete
 //! when their bytes drain. Collectives and training steps are expressed
 //! as stage DAGs ([`schedule`]) whose stages release flows when their
-//! dependencies finish.
+//! dependencies finish. Independent scenarios fan out across OS threads
+//! via [`sweep`].
+//!
+//! # Scaling architecture (this is the Pod-scale hot path)
+//!
+//! * [`fair::Rates`] is the incremental max-min solver: a channel→flow
+//!   inverted index plus a *saturation heap* ordered by the fill level
+//!   at which each channel binds, so a filling round touches only the
+//!   channels whose flows freeze — not every active flow. Its
+//!   `add_flows`/`remove_flows` re-solve only the connected component of
+//!   the flow/channel bipartite graph the change touches.
+//!
+//!   **Invariants** (pinned by `rust/tests/properties.rs` and the
+//!   differential oracle in `rust/tests/differential_fair.rs`):
+//!   1. after every call, each alive flow's rate equals the from-scratch
+//!      max-min allocation of the alive flow set (order-invariance: any
+//!      add/remove sequence reaching the same set yields the same rates);
+//!   2. per-channel load never exceeds capacity;
+//!   3. work conservation — every flow whose channels are all live gets
+//!      a strictly positive rate;
+//!   4. flows crossing a failed (zero-capacity) channel sit at rate 0.
+//!
+//! * [`schedule::run`] drives the DAG from a binary-heap event queue
+//!   (gates, flow completions, compute) with **lazy deletion**: rate
+//!   changes stamp-invalidate predictions instead of rebuilding the
+//!   queue, and simultaneous completions are batched into a single
+//!   solver update so symmetric collectives stay linear.
+//!
+//! * [`sweep::sweep`] runs scenario batches (failure sets × topologies ×
+//!   collectives) across threads with deterministic per-scenario RNG
+//!   seeding — results are bit-identical for any thread count.
+//!
+//! The original O(flows × hops)-per-round solver is retained as
+//! [`fair::naive_max_min_rates`], the oracle the differential tests
+//! compare against.
 //!
 //! Fidelity notes (DESIGN.md §1): the paper reports architecture
 //! *ratios* (e.g. 2D-FM at 93–96% of Clos), which a fluid model
@@ -18,7 +52,10 @@ pub mod fair;
 pub mod flow;
 pub mod network;
 pub mod schedule;
+pub mod sweep;
 
+pub use fair::{max_min_rates, FlowId, Rates};
 pub use flow::FlowSpec;
 pub use network::SimNet;
 pub use schedule::{SimReport, Stage, StageDag};
+pub use sweep::{scenario_seed, sweep as run_sweep, SweepConfig};

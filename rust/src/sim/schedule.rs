@@ -2,20 +2,37 @@
 //!
 //! A [`StageDag`] models a collective or a whole training iteration:
 //! each [`Stage`] holds flows plus an optional local compute duration,
-//! and starts when all its dependencies complete. The runner advances a
-//! fluid simulation: rates are max-min fair; the next event is the
-//! earliest flow/compute completion; state is settled and rates are
-//! recomputed at every event.
+//! and starts when all its dependencies complete.
+//!
+//! The runner is event-driven around a **binary-heap event queue**
+//! (gate openings, flow completions, compute completions) with lazy
+//! deletion: a flow completion is predicted from its current rate and
+//! stamped; when rates change the stamp is bumped and the stale heap
+//! entry is simply skipped on pop, so rate changes never force a queue
+//! rebuild. Rates come from the incremental [`Rates`] solver: at each
+//! event batch only the affected component is re-solved and only flows
+//! the solver reports as touched are re-settled (their drained bytes
+//! accounted at the old rate before the new rate applies). Events that
+//! land at the same instant are processed as one batch — a single
+//! remove/add pair on the solver — which keeps symmetric collectives
+//! (all flows of a phase finishing together) linear instead of
+//! quadratic.
+
+use std::collections::BinaryHeap;
 
 use crate::topology::Channel;
 
-use super::fair::max_min_rates;
+use super::fair::{FlowId, Rates};
 use super::flow::FlowSpec;
 use super::network::SimNet;
 
 /// Flows are considered drained below this remnant (bytes). Sub-byte
 /// remnants otherwise produce completion deltas that underflow f64 time
 /// resolution once `now` is large, starving the event loop.
+///
+/// Flows *created* at or below the remnant complete the instant their
+/// gate opens (the previous linear-scan runner deadlocked on them: they
+/// were excluded from event generation but never retired).
 const REMNANT_BYTES: f64 = 0.5;
 
 /// One DAG stage.
@@ -102,13 +119,53 @@ pub struct SimReport {
 
 struct ActiveFlow {
     stage: usize,
-    channels: Vec<Channel>,
-    /// Remaining payload (GB to keep rate units consistent: capacity is
-    /// GB/s and time is µs, so we track bytes and convert).
+    /// Channels, present until the flow joins the solver (then owned by
+    /// the solver's inverted index).
+    channels: Option<Vec<Channel>>,
+    hops: f64,
+    /// Remaining payload bytes (capacity is GB/s and time µs, so drain
+    /// is `rate × 1e3` bytes/µs).
     remaining_bytes: f64,
-    /// Start gate: latency delay before bytes drain.
-    gate_us: f64,
     rate_gb_s: f64,
+    /// Last time `remaining_bytes` was brought up to date.
+    settled_us: f64,
+    /// Solver handle once the gate opened.
+    solver_id: Option<FlowId>,
+    done: bool,
+    /// Lazy-deletion stamp for completion events.
+    stamp: u64,
+}
+
+#[derive(Copy, Clone)]
+enum EvKind {
+    /// Gate opens: flow starts draining (joins the rate allocation).
+    Gate(usize),
+    /// Predicted completion of active flow (valid if stamp matches).
+    FlowDone(usize, u64),
+    /// Stage-local compute finishes.
+    Compute(usize),
+}
+
+struct Ev {
+    t: f64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.t.total_cmp(&self.t) // reversed: min-heap on time
+    }
 }
 
 /// Execute the DAG on the network. Panics on cyclic dependencies.
@@ -126,44 +183,82 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
     let mut stage_done = vec![f64::NAN; n];
     let mut flows_left: Vec<usize> = dag.stages.iter().map(|s| s.flows.len()).collect();
     let mut compute_done_at: Vec<f64> = vec![f64::NAN; n];
-    let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut now = 0.0f64;
-    let mut events = 0u64;
-    let mut byte_hops = 0.0f64;
-    let mut peak = 0usize;
     let mut started = vec![false; n];
     let mut done_count = 0usize;
 
-    // Start all ready stages.
-    let mut ready: Vec<usize> = (0..n).filter(|&i| dep_left[i] == 0).collect();
+    let mut active: Vec<ActiveFlow> = Vec::new();
+    let mut rates = Rates::new();
+    // Reverse map: solver FlowId → index in `active` (MAX = free).
+    let mut sid_to_active: Vec<usize> = Vec::new();
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut now = 0.0f64;
+    let mut events = 0u64;
+    let mut byte_hops = 0.0f64;
+    let mut alive = 0usize;
+    let mut peak = 0usize;
 
-    let start_stage = |i: usize,
-                           now: f64,
-                           active: &mut Vec<ActiveFlow>,
-                           compute_done_at: &mut Vec<f64>,
-                           started: &mut Vec<bool>| {
-        debug_assert!(!started[i]);
-        started[i] = true;
-        for f in &dag.stages[i].flows {
-            active.push(ActiveFlow {
-                stage: i,
-                channels: f.channels.clone(),
-                remaining_bytes: f.bytes,
-                gate_us: now + f.latency_us,
-                rate_gb_s: 0.0,
-            });
+    // Start a stage: spawn its gated flows + compute event.
+    macro_rules! start_stage {
+        ($i:expr) => {{
+            let i = $i;
+            debug_assert!(!started[i]);
+            started[i] = true;
+            for f in &dag.stages[i].flows {
+                let gate = now + f.latency_us;
+                active.push(ActiveFlow {
+                    stage: i,
+                    hops: f.channels.len() as f64,
+                    channels: Some(f.channels.clone()),
+                    remaining_bytes: f.bytes,
+                    rate_gb_s: 0.0,
+                    settled_us: gate,
+                    solver_id: None,
+                    done: false,
+                    stamp: 0,
+                });
+                alive += 1;
+                heap.push(Ev {
+                    t: gate,
+                    kind: EvKind::Gate(active.len() - 1),
+                });
+            }
+            peak = peak.max(alive);
+            compute_done_at[i] = now + dag.stages[i].compute_us;
+            if dag.stages[i].compute_us > 0.0 {
+                heap.push(Ev {
+                    t: compute_done_at[i],
+                    kind: EvKind::Compute(i),
+                });
+            }
+            events += 1;
+        }};
+    }
+
+    // Settle a flow's drained bytes up to `t` at its current rate.
+    macro_rules! settle {
+        ($f:expr, $t:expr) => {{
+            let f = &mut *$f; // reborrow: caller keeps its &mut afterwards
+            if !f.done && f.solver_id.is_some() {
+                let dt = $t - f.settled_us;
+                if dt > 0.0 && f.rate_gb_s > 0.0 {
+                    let drained = (f.rate_gb_s * 1e3 * dt).min(f.remaining_bytes);
+                    f.remaining_bytes -= drained;
+                    byte_hops += drained * f.hops;
+                }
+            }
+            f.settled_us = $t;
+        }};
+    }
+
+    for i in 0..n {
+        if dep_left[i] == 0 {
+            start_stage!(i);
         }
-        compute_done_at[i] = now + dag.stages[i].compute_us;
-    };
-
-    for i in ready.drain(..) {
-        start_stage(i, now, &mut active, &mut compute_done_at, &mut started);
-        events += 1;
     }
 
     loop {
         // Settle stage completions at the current instant (fixpoint:
-        // zero-duration stages may cascade).
+        // zero-duration stages may cascade, starting new stages now).
         loop {
             let mut changed = false;
             for i in 0..n {
@@ -176,16 +271,11 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
                     done_count += 1;
                     events += 1;
                     changed = true;
-                    for &d in &dependants[i] {
+                    for k in 0..dependants[i].len() {
+                        let d = dependants[i][k];
                         dep_left[d] -= 1;
                         if dep_left[d] == 0 {
-                            start_stage(
-                                d,
-                                now,
-                                &mut active,
-                                &mut compute_done_at,
-                                &mut started,
-                            );
+                            start_stage!(d);
                         }
                     }
                 }
@@ -198,72 +288,99 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
             break;
         }
 
-        peak = peak.max(active.len());
-        // Recompute rates for gate-open flows.
-        let open: Vec<usize> = (0..active.len())
-            .filter(|&i| active[i].gate_us <= now + 1e-12 && active[i].remaining_bytes > 0.0)
-            .collect();
-        let chan_refs: Vec<&[Channel]> =
-            open.iter().map(|&i| active[i].channels.as_slice()).collect();
-        let rates = max_min_rates(net, &chan_refs);
-        for (k, &i) in open.iter().enumerate() {
-            active[i].rate_gb_s = rates[k];
+        // ---- next event batch (lazy deletion + simultaneity merge) ----
+        let t0 = loop {
+            match heap.pop() {
+                None => break f64::NAN,
+                Some(ev) => {
+                    if let EvKind::FlowDone(i, stamp) = ev.kind {
+                        if active[i].done || active[i].stamp != stamp {
+                            continue; // stale
+                        }
+                    }
+                    heap.push(ev); // fresh: put back, pop in the batch loop
+                    break heap.peek().unwrap().t;
+                }
+            }
+        };
+        if t0.is_nan() {
+            break; // queue drained with stages outstanding → stalled
+        }
+        now = now.max(t0);
+        let batch_eps = 1e-9 * now.abs().max(1.0);
+
+        let mut opened: Vec<usize> = Vec::new(); // active idx joining solver
+        let mut completed: Vec<usize> = Vec::new(); // active idx finishing
+        while let Some(ev) = heap.peek() {
+            if ev.t > t0 + batch_eps {
+                break;
+            }
+            let ev = heap.pop().unwrap();
+            match ev.kind {
+                EvKind::Gate(i) => {
+                    if active[i].remaining_bytes <= REMNANT_BYTES {
+                        // Degenerate zero-byte flow: completes at the gate.
+                        completed.push(i);
+                    } else {
+                        opened.push(i);
+                    }
+                    events += 1;
+                }
+                EvKind::FlowDone(i, stamp) => {
+                    if active[i].done || active[i].stamp != stamp {
+                        continue; // stale entry, lazily deleted
+                    }
+                    completed.push(i);
+                    events += 1;
+                }
+                EvKind::Compute(_) => {
+                    events += 1; // handled by the settle fixpoint above
+                }
+            }
         }
 
-        // Next event: earliest of flow completion, gate opening, or
-        // pending compute completion.
-        let mut next = f64::INFINITY;
-        for f in &active {
-            if f.remaining_bytes <= REMNANT_BYTES {
-                continue;
+        // ---- apply the batch to the solver ----------------------------
+        for &i in &completed {
+            let f = &mut active[i];
+            settle!(f, now);
+            // Credit the fp remnant so byte-hop conservation holds exactly.
+            if f.remaining_bytes > 0.0 {
+                byte_hops += f.remaining_bytes * f.hops;
+                f.remaining_bytes = 0.0;
             }
-            if f.gate_us > now + 1e-12 {
-                next = next.min(f.gate_us);
-            } else if f.rate_gb_s > 0.0 {
-                // rate GB/s -> bytes per microsecond = rate * 1e3.
-                let t = f.remaining_bytes / (f.rate_gb_s * 1e3);
-                next = next.min(now + t);
-            }
+            f.done = true;
+            f.stamp += 1;
+            alive -= 1;
+            flows_left[f.stage] -= 1;
         }
-        for i in 0..n {
-            if started[i] && stage_done[i].is_nan() && compute_done_at[i] > now + 1e-9 {
-                next = next.min(compute_done_at[i]);
-            }
-        }
-
-        if !next.is_finite() {
-            break; // stalled (failed links) or nothing left
-        }
-        // Guarantee monotone progress even if fp rounding collapses the
-        // next event onto `now`.
-        if next <= now {
-            next = now + 1e-6;
-        }
-
-        // Drain bytes until `next`.
-        let dt = next - now;
-        for f in active.iter_mut() {
-            if f.remaining_bytes > 0.0 && f.gate_us <= now + 1e-12 && f.rate_gb_s > 0.0 {
-                let drained = (f.rate_gb_s * 1e3 * dt).min(f.remaining_bytes);
-                f.remaining_bytes -= drained;
-                byte_hops += drained * f.channels.len() as f64;
+        let mut done_ids: Vec<FlowId> = Vec::with_capacity(completed.len());
+        for &i in &completed {
+            if let Some(id) = active[i].solver_id.take() {
+                sid_to_active[id] = usize::MAX;
+                done_ids.push(id);
             }
         }
-        now = next;
-        events += 1;
-
-        // Settle flow completions.
-        let mut completed_stage_flows: Vec<usize> = Vec::new();
-        active.retain(|f| {
-            if f.remaining_bytes <= REMNANT_BYTES {
-                completed_stage_flows.push(f.stage);
-                false
-            } else {
-                true
+        if !done_ids.is_empty() {
+            rates.remove_flows(net, &done_ids);
+            byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
+        }
+        if !opened.is_empty() {
+            // Register the newly-gated flows in one call.
+            let chans: Vec<Vec<Channel>> = opened
+                .iter()
+                .map(|&i| active[i].channels.take().expect("gate fired twice"))
+                .collect();
+            let refs: Vec<&[Channel]> = chans.iter().map(|c| c.as_slice()).collect();
+            let ids = rates.add_flows(net, &refs);
+            for (&i, id) in opened.iter().zip(ids) {
+                active[i].solver_id = Some(id);
+                active[i].settled_us = now;
+                if sid_to_active.len() <= id {
+                    sid_to_active.resize(id + 1, usize::MAX);
+                }
+                sid_to_active[id] = i;
             }
-        });
-        for s in completed_stage_flows {
-            flows_left[s] -= 1;
+            byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
         }
     }
 
@@ -280,6 +397,57 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
         events,
         peak_flows: peak,
     }
+}
+
+/// After a solver change: re-settle every touched flow at its old rate
+/// (returning the byte-hops drained in the process), adopt the new rate,
+/// and push a fresh completion prediction. The old heap entry is
+/// invalidated by the stamp bump — lazy deletion, no queue rebuild.
+fn retime(
+    active: &mut [ActiveFlow],
+    sid_to_active: &[usize],
+    rates: &Rates,
+    now: f64,
+    heap: &mut BinaryHeap<Ev>,
+) -> f64 {
+    let mut byte_hops = 0.0;
+    for &fid in rates.touched() {
+        let i = sid_to_active[fid];
+        if i == usize::MAX {
+            continue; // removed in this same batch
+        }
+        let f = &mut active[i];
+        let new_rate = rates.rate(fid);
+        if new_rate == f.rate_gb_s {
+            // Unchanged rate → the pending completion prediction is
+            // still exact; leave the heap entry alone (no churn).
+            continue;
+        }
+        // Settle at the old rate up to now before the new rate applies.
+        let dt = now - f.settled_us;
+        if dt > 0.0 && f.rate_gb_s > 0.0 {
+            let drained = (f.rate_gb_s * 1e3 * dt).min(f.remaining_bytes);
+            f.remaining_bytes -= drained;
+            byte_hops += drained * f.hops;
+        }
+        f.settled_us = now;
+        f.rate_gb_s = new_rate;
+        f.stamp += 1;
+        if f.remaining_bytes <= REMNANT_BYTES {
+            // Already (numerically) drained: complete at once.
+            heap.push(Ev {
+                t: now,
+                kind: EvKind::FlowDone(i, f.stamp),
+            });
+        } else if new_rate > 0.0 {
+            heap.push(Ev {
+                t: now + f.remaining_bytes / (new_rate * 1e3),
+                kind: EvKind::FlowDone(i, f.stamp),
+            });
+        }
+        // rate 0 (blocked): no event — the stall assert reports it.
+    }
+    byte_hops
 }
 
 #[cfg(test)]
@@ -379,6 +547,38 @@ mod tests {
         let r = run(&net, &dag);
         let expect = 500e6 / (50.0 * 1e3);
         assert!((r.makespan_us - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn empty_dag_is_a_noop() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let r = run(&net, &StageDag::default());
+        assert_eq!(r.makespan_us, 0.0);
+        assert_eq!(r.events, 0);
+    }
+
+    #[test]
+    fn completion_frees_bandwidth_for_survivors() {
+        // Small flow + big flow share a link; once the small one drains,
+        // the big one must speed up to the full link (the incremental
+        // re-solve in action). Closed form: both at 25 GB/s until the
+        // 100 MB flow ends (t1 = 100e6/25e3 = 4000 µs), then the 900 MB
+        // flow finishes its remaining 800 MB at 50 GB/s (16_000 µs more).
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("pair").with_flows(vec![
+            FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 100e6),
+            FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 900e6),
+        ]));
+        let r = run(&net, &dag);
+        let expect = 4000.0 + 16_000.0;
+        assert!(
+            (r.makespan_us - expect).abs() / expect < 0.01,
+            "{} vs {expect}",
+            r.makespan_us
+        );
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Parallel scenario sweeps: run many independent simulations (failure
+//! sets × topologies × collectives × seeds) across OS threads.
+//!
+//! Every paper-scale experiment is embarrassingly parallel at the
+//! scenario granularity — each scenario builds its own `SimNet`/DAG and
+//! shares nothing mutable — so the sweep is a simple work-stealing loop
+//! over an atomic index. Two properties the benches rely on:
+//!
+//! * **Determinism**: each scenario gets its own [`Rng`] seeded by
+//!   [`scenario_seed`]`(base_seed, index)` — a pure function of the
+//!   scenario's position, never of thread assignment — so results are
+//!   bit-identical across thread counts (including `threads = 1`).
+//! * **Order preservation**: results come back indexed like the input
+//!   scenario slice, so tables print in the order the sweep was declared.
+//!
+//! Used by `benches/fig12_fault_recovery.rs`, `benches/fig22_linearity.rs`,
+//! the reliability Monte-Carlo ([`crate::reliability::montecarlo::run_par`])
+//! and `examples/failover_demo.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::{splitmix64, Rng};
+
+/// Deterministic per-scenario seed: mixes `base` with the scenario index
+/// through SplitMix64 so neighbouring indices get decorrelated streams.
+pub fn scenario_seed(base: u64, index: usize) -> u64 {
+    let mut s = base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Worker threads (≥ 1). Defaults to the machine's parallelism.
+    pub threads: usize,
+    /// Base seed mixed into every scenario's RNG.
+    pub base_seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            base_seed: 0x0B5E_5EED_0002,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Single-threaded sweep (useful to confirm determinism).
+    pub fn serial() -> SweepConfig {
+        SweepConfig {
+            threads: 1,
+            ..SweepConfig::default()
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> SweepConfig {
+        self.base_seed = seed;
+        self
+    }
+}
+
+/// Run `f(index, scenario, rng)` for every scenario, in parallel, and
+/// return the results in scenario order. Panics in a worker propagate
+/// once the scope joins (the sweep does not swallow failures).
+pub fn sweep<S, T, F>(cfg: &SweepConfig, scenarios: &[S], f: F) -> Vec<T>
+where
+    S: Sync,
+    T: Send,
+    F: Fn(usize, &S, &mut Rng) -> T + Sync,
+{
+    let n = scenarios.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = cfg.threads.max(1).min(n);
+    if threads == 1 {
+        return scenarios
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut rng = Rng::new(scenario_seed(cfg.base_seed, i));
+                f(i, s, &mut rng)
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let mut rng = Rng::new(scenario_seed(cfg.base_seed, i));
+                let out = f(i, &scenarios[i], &mut rng);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("sweep: scenario produced no result")
+        })
+        .collect()
+}
+
+/// [`sweep`] with the default config (all cores, fixed base seed).
+pub fn sweep_default<S, T, F>(scenarios: &[S], f: F) -> Vec<T>
+where
+    S: Sync,
+    T: Send,
+    F: Fn(usize, &S, &mut Rng) -> T + Sync,
+{
+    sweep(&SweepConfig::default(), scenarios, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_visits_all() {
+        let scenarios: Vec<usize> = (0..100).collect();
+        let out = sweep_default(&scenarios, |i, &s, _rng| {
+            assert_eq!(i, s);
+            s * 3
+        });
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let scenarios: Vec<u32> = (0..64).collect();
+        let draw = |_i: usize, _s: &u32, rng: &mut Rng| rng.next_u64();
+        let serial = sweep(&SweepConfig::serial().with_seed(9), &scenarios, draw);
+        let par = sweep(
+            &SweepConfig {
+                threads: 8,
+                base_seed: 9,
+            },
+            &scenarios,
+            draw,
+        );
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn scenario_seeds_are_decorrelated() {
+        let a = scenario_seed(1, 0);
+        let b = scenario_seed(1, 1);
+        assert_ne!(a, b);
+        assert_ne!(scenario_seed(1, 0), scenario_seed(2, 0));
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        let out: Vec<u32> = sweep_default(&[] as &[u8], |_, _, _| 1);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_simulations_match_serial() {
+        use crate::sim::{self, FlowSpec, SimNet, Stage, StageDag};
+        use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+        use crate::topology::{CableClass, NodeId};
+        // Same DAG executed per-scenario: identical makespans regardless
+        // of which thread ran it.
+        let t = nd_fullmesh(
+            "k4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        );
+        let scenarios: Vec<f64> = (1..9).map(|i| i as f64 * 50e6).collect();
+        let run_one = |_i: usize, &bytes: &f64, _rng: &mut Rng| {
+            let net = SimNet::new(&t);
+            let mut dag = StageDag::default();
+            dag.push(Stage::new("x").with_flows(vec![FlowSpec::along(
+                &t,
+                &[NodeId(0), NodeId(1)],
+                bytes,
+            )]));
+            sim::schedule::run(&net, &dag).makespan_us
+        };
+        let serial = sweep(&SweepConfig::serial(), &scenarios, run_one);
+        let par = sweep_default(&scenarios, run_one);
+        assert_eq!(serial, par);
+        for w in serial.windows(2) {
+            assert!(w[1] > w[0], "more bytes → longer makespan");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal string-carrying error type standing in for `anyhow` (the
+//! offline build has no external crates — see the module docs above).
+//!
+//! Provides the same surface the crate uses: [`Result`], [`Error`], the
+//! [`Context`] extension trait, and the [`crate::anyhow!`] /
+//! [`crate::bail!`] macros. `?` works on any `std::error::Error` via the
+//! blanket `From` impl; `Error` itself deliberately does *not* implement
+//! `std::error::Error` so that blanket impl stays coherent (the same
+//! trick anyhow uses).
+
+use std::fmt;
+
+/// A boxed-string error with an optional chain of context messages.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (outermost first, like anyhow's `{:#}`).
+    pub fn context(self, outer: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{outer}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug prints the message too so `fn main() -> Result<()>` failures are
+// readable rather than a struct dump.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: no `From<String>`/`From<&str>` impls — they would conflict
+// (E0119) with the blanket impl below under coherence's "upstream may
+// implement `std::error::Error` for `String`" rule. Use `Error::msg` /
+// the `anyhow!` macro for ad-hoc messages, as anyhow itself does.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] in place (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(crate::anyhow!("thing {} broke", 7))
+    }
+
+    #[test]
+    fn message_and_context_compose() {
+        let e = fails().context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config: thing 7 broke");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            Ok("12x".parse::<i32>()?)
+        }
+        assert!(parse().unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "slot")).unwrap_err();
+        assert_eq!(e.to_string(), "missing slot");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                crate::bail!("zero input");
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_err());
+        assert_eq!(f(3).unwrap(), 3);
+    }
+}

@@ -1,13 +1,14 @@
 //! Small self-contained utilities.
 //!
-//! The build environment is fully offline (no crates.io access beyond a
-//! ~99-crate cache), so we carry our own PRNG ([`rng`]), property-test
-//! driver ([`prop`]), CLI parser ([`cli`]), bench harness ([`bench`]) and
-//! ascii table printer ([`table`]) instead of `rand`/`proptest`/`clap`/
-//! `criterion`. See DESIGN.md §1 (offline-environment substitutions).
+//! The build environment is fully offline, so we carry our own PRNG
+//! ([`rng`]), property-test driver ([`prop`]), CLI parser ([`cli`]),
+//! bench harness ([`bench`]), ascii table printer ([`table`]) and error
+//! type ([`error`]) instead of `rand`/`proptest`/`clap`/`criterion`/
+//! `anyhow`. See DESIGN.md §1 (offline-environment substitutions).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod prop;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,138 @@
+//! Differential testing: the scalable inverted-index/saturation-heap
+//! max-min solver (`sim::fair::Rates` behind `max_min_rates`) against
+//! the retained naive progressive-filling oracle
+//! (`sim::fair::naive_max_min_rates`) on randomized topologies and flow
+//! sets, and the incremental add/remove entry points against fresh
+//! solves of the surviving flow set.
+//!
+//! Tolerance: the oracle accumulates the fill level through repeated
+//! `committed += delta` additions and freezes channels within a 1e-9
+//! relative headroom band, so the two solvers may differ by accumulated
+//! fp noise — we assert agreement within `1e-6 · max(rate, 1)` per flow
+//! (the bound the ISSUE specifies).
+
+use ubmesh::sim::fair::{max_min_rates, naive_max_min_rates, Rates};
+use ubmesh::sim::SimNet;
+use ubmesh::topology::ndmesh::{nd_fullmesh, DimSpec};
+use ubmesh::topology::{CableClass, Channel, LinkId, Topology};
+use ubmesh::util::prop::forall;
+use ubmesh::util::rng::Rng;
+
+/// Random nd-fullmesh, 1–4 dimensions of size 2–5, mixed lane counts.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let ndims = rng.range(1, 5);
+    let specs: Vec<DimSpec> = (0..ndims)
+        .map(|_| {
+            DimSpec::new(
+                rng.range(2, 6),
+                rng.range(1, 9) as u32,
+                CableClass::PassiveElectrical,
+                0.5,
+            )
+        })
+        .collect();
+    nd_fullmesh("rand", &specs)
+}
+
+/// Random flow = 1–5 random directed channels (not necessarily a path —
+/// the solver contract is over channel lists).
+fn random_flows(rng: &mut Rng, t: &Topology, lo: usize, hi: usize) -> Vec<Vec<Channel>> {
+    let nflows = rng.range(lo, hi);
+    (0..nflows)
+        .map(|_| {
+            (0..rng.range(1, 6))
+                .map(|_| Channel {
+                    link: LinkId(rng.range(0, t.link_count()) as u32),
+                    rev: rng.chance(0.5),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_close(fast: &[f64], slow: &[f64], ctx: &str) {
+    assert_eq!(fast.len(), slow.len());
+    for (i, (a, b)) in fast.iter().zip(slow).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-6 * b.max(1.0),
+            "{ctx}: flow {i} fast {a} vs naive {b}"
+        );
+    }
+}
+
+#[test]
+fn indexed_solver_matches_oracle_on_random_instances() {
+    // ≥64 randomized cases (ISSUE acceptance bar); each case draws its
+    // own topology, flow set and failure pattern.
+    forall("indexed vs naive (randomized)", 96, |rng: &mut Rng| {
+        let t = random_topology(rng);
+        let mut net = SimNet::new(&t);
+        // Random failures on up to 20% of links.
+        for l in 0..t.link_count() {
+            if rng.chance(0.2) {
+                net.fail_link(LinkId(l as u32));
+            }
+        }
+        let flows = random_flows(rng, &t, 1, 48);
+        let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+        let fast = max_min_rates(&net, &refs);
+        let slow = naive_max_min_rates(&net, &refs);
+        assert_close(&fast, &slow, "full solve");
+    });
+}
+
+#[test]
+fn incremental_removal_matches_oracle_on_survivors() {
+    forall("incremental remove vs naive", 64, |rng: &mut Rng| {
+        let t = random_topology(rng);
+        let net = SimNet::new(&t);
+        let flows = random_flows(rng, &t, 2, 32);
+        let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &refs);
+        // Remove a random subset, one batch.
+        let mut removed = Vec::new();
+        let mut survivors = Vec::new();
+        for (k, &id) in ids.iter().enumerate() {
+            if rng.chance(0.4) {
+                removed.push(id);
+            } else {
+                survivors.push(k);
+            }
+        }
+        if removed.is_empty() || survivors.is_empty() {
+            return;
+        }
+        r.remove_flows(&net, &removed);
+        let surv_refs: Vec<&[Channel]> =
+            survivors.iter().map(|&k| flows[k].as_slice()).collect();
+        let oracle = naive_max_min_rates(&net, &surv_refs);
+        let got: Vec<f64> = survivors.iter().map(|&k| r.rate(ids[k])).collect();
+        assert_close(&got, &oracle, "post-removal");
+    });
+}
+
+#[test]
+fn incremental_readdition_matches_oracle() {
+    forall("incremental add vs naive", 64, |rng: &mut Rng| {
+        let t = random_topology(rng);
+        let net = SimNet::new(&t);
+        let first = random_flows(rng, &t, 1, 16);
+        let second = random_flows(rng, &t, 1, 16);
+        let mut r = Rates::new();
+        let ids1 = r.add_flows(&net, &first.iter().map(|f| f.as_slice()).collect::<Vec<_>>());
+        let ids2 = r.add_flows(&net, &second.iter().map(|f| f.as_slice()).collect::<Vec<_>>());
+        let all: Vec<&[Channel]> = first
+            .iter()
+            .chain(second.iter())
+            .map(|f| f.as_slice())
+            .collect();
+        let oracle = naive_max_min_rates(&net, &all);
+        let got: Vec<f64> = ids1
+            .iter()
+            .chain(ids2.iter())
+            .map(|&id| r.rate(id))
+            .collect();
+        assert_close(&got, &oracle, "post-addition");
+    });
+}

@@ -3,7 +3,7 @@
 
 use ubmesh::routing::apr::{paths_2d, to_routed};
 use ubmesh::routing::tfc::verify_deadlock_free;
-use ubmesh::sim::fair::max_min_rates;
+use ubmesh::sim::fair::{max_min_rates, Rates};
 use ubmesh::sim::{self, FlowSpec, SimNet, Stage, StageDag};
 use ubmesh::topology::ndmesh::{expected_links, nd_fullmesh, DimSpec};
 use ubmesh::topology::{CableClass, Channel, NodeId};
@@ -95,6 +95,159 @@ fn max_min_never_oversubscribes_and_is_work_conserving() {
         }
         for (ci, &l) in load.iter().enumerate() {
             assert!(l <= net.cap_by_idx(ci) * (1.0 + 1e-6) + 1e-9);
+        }
+    });
+}
+
+/// Random nd-fullmesh up to 4D (sizes 2–4 per dim) for the incremental
+/// solver invariants.
+fn random_nd_mesh(rng: &mut Rng) -> ubmesh::topology::Topology {
+    let ndims = rng.range(1, 5);
+    let specs: Vec<DimSpec> = (0..ndims)
+        .map(|_| {
+            DimSpec::new(
+                rng.range(2, 5),
+                rng.range(1, 8) as u32,
+                CableClass::PassiveElectrical,
+                0.5,
+            )
+        })
+        .collect();
+    nd_fullmesh("nd", &specs)
+}
+
+fn random_channel_flows(
+    rng: &mut Rng,
+    t: &ubmesh::topology::Topology,
+    n: usize,
+) -> Vec<Vec<Channel>> {
+    (0..n)
+        .map(|_| {
+            (0..rng.range(1, 5))
+                .map(|_| Channel {
+                    link: ubmesh::topology::LinkId(rng.range(0, t.link_count()) as u32),
+                    rev: rng.chance(0.5),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_solver_respects_capacity_and_conserves_work() {
+    // Invariants 2 & 3 of sim::fair::Rates, checked *through* the
+    // incremental entry points (add, then staged removals): per-channel
+    // load ≤ capacity and strictly positive rates on live paths.
+    forall("incremental feasibility on nD meshes", 48, |rng| {
+        let t = random_nd_mesh(rng);
+        let net = SimNet::new(&t);
+        let flows = random_channel_flows(rng, &t, rng.range(2, 32));
+        let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &refs);
+        let mut alive: Vec<usize> = (0..flows.len()).collect();
+        loop {
+            // Feasibility of the current allocation.
+            let mut load = vec![0.0f64; net.channel_count()];
+            for &k in &alive {
+                let rate = r.rate(ids[k]);
+                assert!(rate > 0.0, "work conservation (flow {k})");
+                for c in &flows[k] {
+                    load[c.idx()] += rate;
+                }
+            }
+            for (ci, &l) in load.iter().enumerate() {
+                assert!(
+                    l <= net.cap_by_idx(ci) * (1.0 + 1e-6) + 1e-9,
+                    "ch {ci} over capacity: {l}"
+                );
+            }
+            if alive.len() <= 1 {
+                break;
+            }
+            // Remove a random non-empty batch and re-check.
+            let nrem = rng.range(1, alive.len());
+            let mut batch = Vec::new();
+            for _ in 0..nrem {
+                let k = alive.swap_remove(rng.range(0, alive.len()));
+                batch.push(ids[k]);
+            }
+            r.remove_flows(&net, &batch);
+        }
+    });
+}
+
+#[test]
+fn incremental_solver_is_order_invariant() {
+    // Invariant 1 of sim::fair::Rates: any add/remove sequence reaching
+    // the same surviving flow set yields the same rates as a single
+    // from-scratch solve — on nd-fullmesh topologies up to 4D.
+    forall("add/remove order invariance", 48, |rng| {
+        let t = random_nd_mesh(rng);
+        let net = SimNet::new(&t);
+        let flows = random_channel_flows(rng, &t, rng.range(3, 24));
+        let n = flows.len();
+        // Choose the survivor set up front.
+        let survive: Vec<bool> = (0..n).map(|_| rng.chance(0.6)).collect();
+        if !survive.iter().any(|&s| s) {
+            return;
+        }
+
+        // Sequence A: add all in one batch, remove the victims in
+        // random batches.
+        let refs: Vec<&[Channel]> = flows.iter().map(|f| f.as_slice()).collect();
+        let mut ra = Rates::new();
+        let ids_a = ra.add_flows(&net, &refs);
+        let mut victims: Vec<usize> = (0..n).filter(|&k| !survive[k]).collect();
+        rng.shuffle(&mut victims);
+        let mut i = 0;
+        while i < victims.len() {
+            let take = rng.range(1, victims.len() - i + 1);
+            let batch: Vec<_> = victims[i..i + take].iter().map(|&k| ids_a[k]).collect();
+            ra.remove_flows(&net, &batch);
+            i += take;
+        }
+
+        // Sequence B: add one by one in a shuffled order, interleaving
+        // removals of the victims as soon as they are in.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut rb = Rates::new();
+        let mut ids_b = vec![usize::MAX; n];
+        for &k in &order {
+            ids_b[k] = rb.add_flows(&net, &[flows[k].as_slice()])[0];
+            if !survive[k] && rng.chance(0.5) {
+                rb.remove_flows(&net, &[ids_b[k]]);
+                ids_b[k] = usize::MAX;
+            }
+        }
+        let stragglers: Vec<usize> = (0..n)
+            .filter(|&k| !survive[k] && ids_b[k] != usize::MAX)
+            .map(|k| ids_b[k])
+            .collect();
+        if !stragglers.is_empty() {
+            rb.remove_flows(&net, &stragglers);
+        }
+
+        // Both must equal the from-scratch allocation of the survivors.
+        let surv_refs: Vec<&[Channel]> = (0..n)
+            .filter(|&k| survive[k])
+            .map(|k| flows[k].as_slice())
+            .collect();
+        let fresh = max_min_rates(&net, &surv_refs);
+        for (j, k) in (0..n).filter(|&k| survive[k]).enumerate() {
+            let fa = ra.rate(ids_a[k]);
+            let fb = rb.rate(ids_b[k]);
+            assert!(
+                (fa - fresh[j]).abs() <= 1e-6 * fresh[j].max(1.0),
+                "seq A flow {k}: {fa} vs fresh {}",
+                fresh[j]
+            );
+            assert!(
+                (fb - fresh[j]).abs() <= 1e-6 * fresh[j].max(1.0),
+                "seq B flow {k}: {fb} vs fresh {}",
+                fresh[j]
+            );
         }
     });
 }
