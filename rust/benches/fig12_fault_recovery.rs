@@ -1,30 +1,30 @@
 //! Fig 12 — From Hop-by-hop to Direct Notification: routing-convergence
 //! latency after a link failure, swept over topology scale.
 //!
-//! Each mesh size is an independent scenario; the sweep fans them out
-//! across threads (`sim::sweep`) and returns rows in declaration order.
+//! PR 2: the scenario set is a cartesian grid (mesh size × failed link)
+//! built with `sim::sweep::GridBuilder`, and per-size results aggregate
+//! through `AggTable` (mean/p99 over the failure axis) instead of the
+//! previous single-failure hand-rolled rows.
 
 use ubmesh::routing::apr::{paths_2d, to_routed};
 use ubmesh::routing::failure::{
     affected_sources, direct_notification_convergence_us, hop_by_hop_convergence_us,
     RecoveryModel,
 };
-use ubmesh::sim::sweep::sweep_default;
+use ubmesh::sim::sweep::{AggTable, GridBuilder};
 use ubmesh::topology::ndmesh::{nd_fullmesh, DimSpec};
 use ubmesh::topology::{CableClass, NodeId};
 use ubmesh::util::table::{fmt, Table};
 
-struct Row {
-    n: usize,
-    affected: usize,
-    slow: f64,
-    fast: f64,
-}
-
 fn main() {
     let m = RecoveryModel::default();
     let sizes = [4usize, 8, 16];
-    let rows: Vec<Row> = sweep_default(&sizes, |_i, &n, _rng| {
+    // Failure axis: break the dim-0 link (k,0)—(k+1 mod n,0); different
+    // k exercise different affected-source populations.
+    let faults = [0usize, 1, 2, 3];
+    let grid = GridBuilder::cartesian2(&sizes, &faults, |&n, &k| Some((n, k)));
+
+    let rows: Vec<(usize, usize, f64, f64)> = grid.run(|_i, &(n, k), _rng| {
         let t = nd_fullmesh(
             "g",
             &[
@@ -43,31 +43,49 @@ fn main() {
                 }
             }
         }
-        let failed = t.link_between(node(0, 0), node(1, 0)).unwrap();
+        let failed = t.link_between(node(k, 0), node((k + 1) % n, 0)).unwrap();
         let affected = affected_sources(&t, &paths, failed);
         let slow = hop_by_hop_convergence_us(&t, failed, &affected, &m);
         let fast = direct_notification_convergence_us(&t, failed, &affected, &m);
-        Row {
-            n,
-            affected: affected.len(),
-            slow,
-            fast,
-        }
+        assert!(fast < slow, "direct must beat hop-by-hop (n={n}, k={k})");
+        (n, affected.len(), slow, fast)
     });
 
+    // Aggregate over the failure axis, keyed by mesh size.
+    let mut slow_agg = AggTable::default();
+    let mut fast_agg = AggTable::default();
+    let mut affected_agg = AggTable::default();
+    for &(n, affected, slow, fast) in &rows {
+        let key = format!("{n}x{n} 2D-FM");
+        slow_agg.add(key.clone(), slow);
+        fast_agg.add(key.clone(), fast);
+        affected_agg.add(key, affected as f64);
+    }
+
     let mut tbl = Table::with_title(
-        "Fig 12: convergence after a link failure (µs)",
-        vec!["mesh", "affected", "hop-by-hop", "direct", "speedup"],
+        "Fig 12: convergence after a link failure, over 4 failure sites (µs)",
+        vec![
+            "mesh",
+            "affected(mean)",
+            "hop-by-hop mean",
+            "hop-by-hop p99",
+            "direct mean",
+            "direct p99",
+            "speedup",
+        ],
     );
-    for r in &rows {
+    for (key, slow) in slow_agg.iter() {
+        let fast = fast_agg.get(key).unwrap();
+        let aff = affected_agg.get(key).unwrap();
         tbl.row(vec![
-            format!("{}x{} 2D-FM", r.n, r.n),
-            format!("{}", r.affected),
-            fmt(r.slow, 1),
-            fmt(r.fast, 1),
-            format!("{:.2}x", r.slow / r.fast),
+            key.to_string(),
+            fmt(aff.mean(), 1),
+            fmt(slow.mean(), 1),
+            fmt(slow.p99(), 1),
+            fmt(fast.mean(), 1),
+            fmt(fast.p99(), 1),
+            format!("{:.2}x", slow.mean() / fast.mean()),
         ]);
-        assert!(r.fast < r.slow);
     }
     tbl.print();
     println!(

@@ -1,12 +1,13 @@
 //! Fig 22 — Linearity Analysis @ Sequence 256K: per-NPU throughput vs
 //! base scale (Eq. 2), per model, 1×–64×.
 //!
-//! Every (model, scale) plan is an independent parallelization search,
-//! so the whole grid fans out across threads via `sim::sweep` and the
-//! table is assembled from the ordered results.
+//! Every (model, scale) plan is an independent parallelization search;
+//! PR 2: the (model × multiplier) grid is declared through
+//! `sim::sweep::GridBuilder` (the 64K-NPU cap is the grid filter) and
+//! fans out across threads, replacing the hand-rolled scenario loop.
 
 use ubmesh::coordinator::{linearity, Arch, Job};
-use ubmesh::sim::sweep::sweep_default;
+use ubmesh::sim::sweep::GridBuilder;
 use ubmesh::util::table::{pct, Table};
 
 fn main() {
@@ -20,18 +21,12 @@ fn main() {
     ];
     let mults = [1usize, 2, 4, 8, 16, 32, 64];
 
-    // Flatten the grid into scenarios: every (model, scale) pair that
-    // fits the 64K-NPU cap, base scales included via the 1× multiple.
-    let mut scenarios: Vec<(&str, usize)> = Vec::new();
-    for (model, base_scale) in cases {
-        for &m in &mults {
-            let scale = base_scale * m;
-            if scale <= 65536 {
-                scenarios.push((model, scale));
-            }
-        }
-    }
-    let tputs: Vec<f64> = sweep_default(&scenarios, |_i, &(model, scale), _rng| {
+    // Cartesian (model, base) × multiplier, capped at 64K NPUs.
+    let grid = GridBuilder::cartesian2(&cases, &mults, |&(model, base), &m| {
+        let scale = base * m;
+        (scale <= 65536).then_some((model, scale))
+    });
+    let tputs: Vec<f64> = grid.run(|_i, &(model, scale), _rng| {
         Job::new(model, scale, seq, Arch::ubmesh_default())
             .unwrap()
             .plan(None)
@@ -39,8 +34,7 @@ fn main() {
             .tokens_per_s
     });
     let tput = |model: &str, scale: usize| -> f64 {
-        let k = scenarios
-            .iter()
+        let k = grid
             .position(|&(mo, sc)| mo == model && sc == scale)
             .expect("scenario grid covers all (model, scale)");
         tputs[k]

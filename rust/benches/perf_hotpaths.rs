@@ -2,20 +2,75 @@
 //! EXPERIMENTS.md §Perf for targets and the iteration log).
 //!
 //! L3: DES event throughput, max-min allocation, routing lookups,
-//!     topology construction, APR enumeration.
+//!     topology construction, APR enumeration, and the SuperPod-scale
+//!     solver comparison (rise-only vs the PR 1 full-component solver).
 //! L2/L1 (via PJRT): artifact execution latency for the cost-model batch
 //!     and APSP kernels.
+//!
+//! Emits `BENCH_sim.json` (override the path with the `BENCH_SIM_JSON`
+//! env var; schema documented in `rust/benches/README.md`) so the perf
+//! trajectory is tracked across PRs — CI uploads it as an artifact.
 
+use std::time::Instant;
+
+use ubmesh::collectives::alltoall::superpod_alltoall_dag;
 use ubmesh::collectives::ring::ring_allreduce_dag;
 use ubmesh::routing::apr::paths_2d;
 use ubmesh::routing::table::{LinearTable, Segment, SegmentRoute};
 use ubmesh::routing::address::UbAddr;
-use ubmesh::sim::{self, SimNet};
+use ubmesh::sim::{self, ResolveStrategy, SimConfig, SimNet, SimReport};
+use ubmesh::topology::ndmesh::{nd_fullmesh, DimSpec};
 use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
-use ubmesh::topology::NodeId;
-use ubmesh::util::bench::{bench, black_box, section};
+use ubmesh::topology::{NodeId, Topology};
+use ubmesh::util::bench::{bench, black_box, section, BenchResult, JsonReport};
+
+/// Time one run of a DAG under the given solver strategy, print it as a
+/// bench line, and return (report, timing).
+fn timed_run(
+    name: &str,
+    net: &SimNet,
+    dag: &ubmesh::sim::StageDag,
+    strategy: ResolveStrategy,
+) -> (SimReport, BenchResult) {
+    let t0 = Instant::now();
+    let rep = sim::schedule::run_with(net, dag, &SimConfig { strategy });
+    let el = t0.elapsed();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean: el,
+        p50: el,
+        p99: el,
+        total: el,
+    };
+    println!("{r}");
+    println!(
+        "  → {} events, {} rate recomputes, {} full-component equiv, \
+         {} absorb restarts, {} fallbacks",
+        rep.events,
+        rep.solver.rate_recomputes,
+        rep.solver.full_component_recomputes,
+        rep.solver.absorb_restarts,
+        rep.solver.fallbacks
+    );
+    (rep, r)
+}
+
+/// nd-fullmesh of `dims ++ [pods]`: electrical intra-pod dims, optical
+/// pod tier (the generalized nD-FullMesh SuperPod of §3.3).
+fn superpod_mesh(dims: &[usize], pods: usize) -> Topology {
+    use ubmesh::topology::CableClass;
+    let mut specs: Vec<DimSpec> = dims
+        .iter()
+        .map(|&d| DimSpec::new(d, 2, CableClass::PassiveElectrical, 1.0))
+        .collect();
+    specs.push(DimSpec::new(pods, 2, CableClass::Optical, 50.0));
+    nd_fullmesh("superpod", &specs)
+}
 
 fn main() {
+    let mut json = JsonReport::new();
+
     // ---------------- L3: simulator ------------------------------------
     section("L3: discrete-event simulator");
     let (t, h) = ubmesh_rack(&RackConfig::default());
@@ -32,6 +87,7 @@ fn main() {
         "  → {:.2}M events/s",
         events_per_run as f64 / r.mean.as_secs_f64() / 1e6
     );
+    json.push(&r);
 
     let rows: Vec<Vec<NodeId>> = (0..8)
         .map(|b| (0..8).map(|s| h.npu(b, s, 8)).collect())
@@ -43,21 +99,170 @@ fn main() {
         &t, &rows, &cols, 360e6,
     );
     let mut ev = 0;
+    let mut pk = 0;
     let r = bench("rack hierarchical allreduce DES (~1.3k flows)", || {
         let rep = sim::schedule::run(&net, &hdag);
         ev = rep.events;
+        pk = rep.peak_flows;
         black_box(rep.makespan_us);
     });
-    println!("  → {:.2}M flow-events/s equivalent, {} peak flows", ev as f64 / r.mean.as_secs_f64() / 1e6, {
-        let rep = sim::schedule::run(&net, &hdag);
-        rep.peak_flows
-    });
+    println!(
+        "  → {:.2}M flow-events/s equivalent, {} peak flows",
+        ev as f64 / r.mean.as_secs_f64() / 1e6,
+        pk
+    );
+    json.push(&r);
+
+    // ---------------- L3: SuperPod-scale solver (ISSUE 2) ----------------
+    section("L3: SuperPod-scale solver — rise-only vs PR 1 full-component");
+
+    // Mid-scale slice (8 pods × 8×8 = 512 NPUs): small enough to *run*
+    // the PR 1 solver, so the comparison is measured, not estimated.
+    let mid_dims = [8usize, 8];
+    let mid_pods = 8;
+    let tm = superpod_mesh(&mid_dims, mid_pods);
+    let netm = SimNet::new(&tm);
+    let dagm = superpod_alltoall_dag(&tm, &mid_dims, mid_pods, 4e6, 1.0);
+    let (rep_rise, br) = timed_run(
+        "superpod 512-NPU a2a, rise-only solver",
+        &netm,
+        &dagm,
+        ResolveStrategy::RiseOnly,
+    );
+    json.push(&br);
+    let rise_wall = br.mean.as_secs_f64();
+    let (rep_bfs, br) = timed_run(
+        "superpod 512-NPU a2a, PR 1 full-component solver",
+        &netm,
+        &dagm,
+        ResolveStrategy::FullComponentBfs,
+    );
+    json.push(&br);
+    let bfs_wall = br.mean.as_secs_f64();
+    // The two strategies must agree — this is a differential test at
+    // workload scale, not just a benchmark.
+    assert!(
+        (rep_rise.makespan_us - rep_bfs.makespan_us).abs()
+            <= 1e-6 * rep_bfs.makespan_us,
+        "strategy divergence: rise {} vs bfs {} µs",
+        rep_rise.makespan_us,
+        rep_bfs.makespan_us
+    );
+    assert!(
+        (rep_rise.byte_hops - rep_bfs.byte_hops).abs() <= 1e-6 * rep_bfs.byte_hops,
+        "byte-hop divergence"
+    );
+    let mid_ratio =
+        rep_bfs.solver.rate_recomputes as f64 / rep_rise.solver.rate_recomputes as f64;
+    println!(
+        "  → measured recompute ratio {mid_ratio:.1}x, wall-clock speedup {:.1}x",
+        bfs_wall / rise_wall
+    );
+    assert!(
+        mid_ratio >= 5.0,
+        "acceptance: ≥5x fewer recomputations (measured {mid_ratio:.2}x)"
+    );
+    json.metric("superpod_mid.npus", (512) as f64);
+    json.metric("superpod_mid.events", rep_rise.events as f64);
+    json.metric(
+        "superpod_mid.rate_recomputes_rise",
+        rep_rise.solver.rate_recomputes as f64,
+    );
+    json.metric(
+        "superpod_mid.rate_recomputes_pr1_measured",
+        rep_bfs.solver.rate_recomputes as f64,
+    );
+    json.metric(
+        "superpod_mid.full_component_estimate",
+        rep_rise.solver.full_component_recomputes as f64,
+    );
+    json.metric("superpod_mid.recompute_ratio_measured", mid_ratio);
+    json.metric("superpod_mid.wallclock_speedup", bfs_wall / rise_wall);
+
+    // Full scale: 8 pods × 4096 = 32 768 NPUs, both solvers — the
+    // inter-pod sharing graph keeps components bounded (hundreds of
+    // flows), so even the PR 1 full-component solver completes and the
+    // comparison is fully *measured* at acceptance scale, with the
+    // union-find live-size estimate reported alongside as a
+    // cross-check.
+    let full_dims = [8usize, 8, 8, 8];
+    let full_pods = 8;
+    let tf = superpod_mesh(&full_dims, full_pods);
+    let netf = SimNet::new(&tf);
+    let dagf = superpod_alltoall_dag(&tf, &full_dims, full_pods, 2e6, 1.0);
+    let (rep32, br) = timed_run(
+        "superpod 32768-NPU a2a, rise-only solver",
+        &netf,
+        &dagf,
+        ResolveStrategy::RiseOnly,
+    );
+    json.push(&br);
+    let rise32_wall = br.mean.as_secs_f64();
+    let (rep32b, br) = timed_run(
+        "superpod 32768-NPU a2a, PR 1 full-component solver",
+        &netf,
+        &dagf,
+        ResolveStrategy::FullComponentBfs,
+    );
+    json.push(&br);
+    assert!(
+        (rep32.makespan_us - rep32b.makespan_us).abs() <= 1e-6 * rep32b.makespan_us,
+        "strategy divergence at 32K: rise {} vs bfs {} µs",
+        rep32.makespan_us,
+        rep32b.makespan_us
+    );
+    let ratio32 =
+        rep32b.solver.rate_recomputes as f64 / rep32.solver.rate_recomputes as f64;
+    let est32 = rep32.solver.full_component_recomputes as f64
+        / rep32.solver.rate_recomputes as f64;
+    let per_event_rise = rep32.solver.rate_recomputes as f64 / rep32.events as f64;
+    let per_event_pr1 =
+        rep32b.solver.rate_recomputes as f64 / rep32b.events as f64;
+    println!(
+        "  → {per_event_rise:.1} recomputes/event (rise-only) vs {per_event_pr1:.0} \
+         (PR 1 measured): {ratio32:.0}x measured, {est32:.0}x estimated, \
+         wall-clock speedup {:.1}x",
+        br.mean.as_secs_f64() / rise32_wall
+    );
+    assert!(
+        ratio32 >= 5.0,
+        "acceptance: ≥5x fewer recomputations per event at 32K (measured {ratio32:.2}x)"
+    );
+    json.metric("superpod32k.npus", 32768.0);
+    json.metric("superpod32k.makespan_us", rep32.makespan_us);
+    json.metric("superpod32k.wall_s", rise32_wall);
+    json.metric("superpod32k.pr1_wall_s", br.mean.as_secs_f64());
+    json.metric("superpod32k.events", rep32.events as f64);
+    json.metric("superpod32k.peak_flows", rep32.peak_flows as f64);
+    json.metric(
+        "superpod32k.rate_recomputes",
+        rep32.solver.rate_recomputes as f64,
+    );
+    json.metric(
+        "superpod32k.rate_recomputes_pr1_measured",
+        rep32b.solver.rate_recomputes as f64,
+    );
+    json.metric(
+        "superpod32k.full_component_recomputes",
+        rep32.solver.full_component_recomputes as f64,
+    );
+    json.metric("superpod32k.recomputes_per_event", per_event_rise);
+    json.metric("superpod32k.pr1_recomputes_per_event", per_event_pr1);
+    json.metric("superpod32k.recompute_ratio", ratio32);
+    json.metric("superpod32k.recompute_ratio_estimated", est32);
+    json.metric(
+        "superpod32k.absorb_restarts",
+        rep32.solver.absorb_restarts as f64,
+    );
+    json.metric("superpod32k.fallbacks", rep32.solver.fallbacks as f64);
+    json.metric("superpod32k.uf_rebuilds", rep32.solver.uf_rebuilds as f64);
 
     // ---------------- L3: routing ----------------------------------------
     section("L3: routing");
-    bench("APR enumerate all paths, one rack pair", || {
+    let r = bench("APR enumerate all paths, one rack pair", || {
         black_box(paths_2d((0, 0), (3, 4), 8, 8, true));
     });
+    json.push(&r);
     let mut lin = LinearTable::default();
     let local = UbAddr::new(0, 0, 0, 0, 0);
     let (prefix, bits) = local.rack_segment();
@@ -70,20 +275,23 @@ fn main() {
         },
     });
     let addr = UbAddr::new(0, 0, 3, 5, 0);
-    bench("linear table lookup (single)", || {
+    let r = bench("linear table lookup (single)", || {
         black_box(lin.lookup(addr));
     });
+    json.push(&r);
 
     // ---------------- L3: topology construction ---------------------------
     section("L3: topology construction");
-    bench("build 64-NPU rack (+LRS planes)", || {
+    let r = bench("build 64-NPU rack (+LRS planes)", || {
         black_box(ubmesh_rack(&RackConfig::default()));
     });
-    bench("build 1K-NPU pod", || {
+    json.push(&r);
+    let r = bench("build 1K-NPU pod", || {
         black_box(ubmesh::topology::pod::ubmesh_pod(
             &ubmesh::topology::pod::PodConfig::default(),
         ));
     });
+    json.push(&r);
 
     // ---------------- L2/L1 via PJRT --------------------------------------
     section("L2/L1: PJRT artifact execution");
@@ -125,5 +333,10 @@ fn main() {
         }
     }
 
+    let path = std::env::var("BENCH_SIM_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());
+    match json.write(&path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nfailed to write {path}: {e}"),
+    }
     println!("\nperf_hotpaths OK");
 }

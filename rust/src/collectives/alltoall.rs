@@ -1,4 +1,4 @@
-//! All-to-All on the 2D full-mesh (Fig 14).
+//! All-to-All on the 2D full-mesh (Fig 14) and at nD/SuperPod scale.
 //!
 //! * [`multipath_alltoall_dag`] — Fig 14-a: each (src, dst) element is
 //!   split into two partitions travelling the X-then-Y and Y-then-X
@@ -6,9 +6,24 @@
 //! * [`hierarchical_alltoall_dag`] — Fig 14-b/c: MoE token distribution
 //!   as overlapping broadcast + reduce, saving bandwidth by forwarding
 //!   one copy per row/column instead of one per destination.
+//! * [`dimwise_alltoall_dag`] — the nD generalization, one phase per
+//!   dimension.
+//! * [`superpod_alltoall_dag`] — the 8-Pod SuperPod workload: intra-pod
+//!   dimension-wise phases followed by an inter-pod phase with APR
+//!   two-path transmission and optional per-pair payload jitter.
+//!
+//! All DAG producers here build **lazy stages**
+//! ([`crate::sim::StageFlows::Lazy`]): the closures capture only cheap
+//! parameters (dims, node lists, payload sizes) and generate each
+//! phase's flow vector when the scheduler reaches it, so peak memory is
+//! one phase, not the whole schedule — the difference between ~25 MB and
+//! ~150 MB of `FlowSpec`s at 32K NPUs.
+
+use std::sync::Arc;
 
 use crate::sim::{FlowSpec, Stage, StageDag};
 use crate::topology::{NodeId, Topology};
+use crate::util::rng::splitmix64;
 
 /// Coordinate-indexed access to a 2D group of NPUs.
 pub struct Grid<'a> {
@@ -28,69 +43,117 @@ impl<'a> Grid<'a> {
     }
 }
 
+/// Owned grid parameters captured by the lazy stage builders.
+#[derive(Clone)]
+struct OwnedGrid {
+    nodes: Arc<Vec<NodeId>>,
+    n0: usize,
+    n1: usize,
+}
+
+impl OwnedGrid {
+    fn of(g: &Grid) -> OwnedGrid {
+        OwnedGrid {
+            nodes: Arc::new(g.nodes.to_vec()),
+            n0: g.n0,
+            n1: g.n1,
+        }
+    }
+    #[inline]
+    fn at(&self, x: usize, y: usize) -> NodeId {
+        self.nodes[y * self.n0 + x]
+    }
+}
+
 /// General multi-path All2All: every ordered pair exchanges
 /// `bytes_per_pair`; unaligned pairs split across both corner paths.
 pub fn multipath_alltoall_dag(t: &Topology, g: &Grid, bytes_per_pair: f64) -> StageDag {
-    let mut flows = Vec::new();
-    for sy in 0..g.n1 {
-        for sx in 0..g.n0 {
-            for dy in 0..g.n1 {
-                for dx in 0..g.n0 {
-                    if (sx, sy) == (dx, dy) {
-                        continue;
-                    }
-                    let s = g.at(sx, sy);
-                    let d = g.at(dx, dy);
-                    if sx == dx || sy == dy {
-                        // aligned: direct link
-                        flows.push(FlowSpec::along(t, &[s, d], bytes_per_pair));
-                    } else {
-                        // split halves over the two corner paths (Fig 14-a)
-                        let via_x = g.at(dx, sy);
-                        let via_y = g.at(sx, dy);
-                        flows.push(FlowSpec::along(
-                            t,
-                            &[s, via_x, d],
-                            bytes_per_pair / 2.0,
-                        ));
-                        flows.push(FlowSpec::along(
-                            t,
-                            &[s, via_y, d],
-                            bytes_per_pair / 2.0,
-                        ));
+    let n = g.n0 * g.n1;
+    let aligned = n * (g.n0 - 1 + g.n1 - 1);
+    let unaligned = n * (n - 1) - aligned;
+    let count = aligned + 2 * unaligned;
+    let bytes = n as f64 * (n - 1) as f64 * bytes_per_pair;
+    let og = OwnedGrid::of(g);
+    debug_assert!(g.nodes.iter().all(|n| n.idx() < t.node_count()));
+    let mut dag = StageDag::default();
+    dag.push(
+        Stage::new("a2a-multipath").with_lazy_flows(count, bytes, move |t| {
+            let g = &og;
+            let mut flows = Vec::with_capacity(count);
+            for sy in 0..g.n1 {
+                for sx in 0..g.n0 {
+                    for dy in 0..g.n1 {
+                        for dx in 0..g.n0 {
+                            if (sx, sy) == (dx, dy) {
+                                continue;
+                            }
+                            let s = g.at(sx, sy);
+                            let d = g.at(dx, dy);
+                            if sx == dx || sy == dy {
+                                // aligned: direct link
+                                flows.push(FlowSpec::along(t, &[s, d], bytes_per_pair));
+                            } else {
+                                // split halves over the two corner paths (Fig 14-a)
+                                let via_x = g.at(dx, sy);
+                                let via_y = g.at(sx, dy);
+                                flows.push(FlowSpec::along(
+                                    t,
+                                    &[s, via_x, d],
+                                    bytes_per_pair / 2.0,
+                                ));
+                                flows.push(FlowSpec::along(
+                                    t,
+                                    &[s, via_y, d],
+                                    bytes_per_pair / 2.0,
+                                ));
+                            }
+                        }
                     }
                 }
             }
-        }
-    }
-    let mut dag = StageDag::default();
-    dag.push(Stage::new("a2a-multipath").with_flows(flows));
+            flows
+        }),
+    );
     dag
 }
 
 /// Single-path baseline (X-then-Y only) for the Fig 14 comparison.
 pub fn singlepath_alltoall_dag(t: &Topology, g: &Grid, bytes_per_pair: f64) -> StageDag {
-    let mut flows = Vec::new();
-    for sy in 0..g.n1 {
-        for sx in 0..g.n0 {
-            for dy in 0..g.n1 {
-                for dx in 0..g.n0 {
-                    if (sx, sy) == (dx, dy) {
-                        continue;
-                    }
-                    let s = g.at(sx, sy);
-                    let d = g.at(dx, dy);
-                    if sx == dx || sy == dy {
-                        flows.push(FlowSpec::along(t, &[s, d], bytes_per_pair));
-                    } else {
-                        flows.push(FlowSpec::along(t, &[s, g.at(dx, sy), d], bytes_per_pair));
+    let n = g.n0 * g.n1;
+    let count = n * (n - 1);
+    let bytes = count as f64 * bytes_per_pair;
+    let og = OwnedGrid::of(g);
+    debug_assert!(g.nodes.iter().all(|n| n.idx() < t.node_count()));
+    let mut dag = StageDag::default();
+    dag.push(
+        Stage::new("a2a-singlepath").with_lazy_flows(count, bytes, move |t| {
+            let g = &og;
+            let mut flows = Vec::with_capacity(count);
+            for sy in 0..g.n1 {
+                for sx in 0..g.n0 {
+                    for dy in 0..g.n1 {
+                        for dx in 0..g.n0 {
+                            if (sx, sy) == (dx, dy) {
+                                continue;
+                            }
+                            let s = g.at(sx, sy);
+                            let d = g.at(dx, dy);
+                            if sx == dx || sy == dy {
+                                flows.push(FlowSpec::along(t, &[s, d], bytes_per_pair));
+                            } else {
+                                flows.push(FlowSpec::along(
+                                    t,
+                                    &[s, g.at(dx, sy), d],
+                                    bytes_per_pair,
+                                ));
+                            }
+                        }
                     }
                 }
             }
-        }
-    }
-    let mut dag = StageDag::default();
-    dag.push(Stage::new("a2a-singlepath").with_flows(flows));
+            flows
+        }),
+    );
     dag
 }
 
@@ -112,40 +175,60 @@ pub fn hierarchical_alltoall_dag(
     g: &Grid,
     bytes_per_pair: f64,
 ) -> StageDag {
+    let n = g.n0 * g.n1;
+    let p1_count = n * (g.n0 - 1);
+    let p2_count = n * (g.n1 - 1);
+    let og1 = OwnedGrid::of(g);
+    let og2 = og1.clone();
+    debug_assert!(g.nodes.iter().all(|n| n.idx() < t.node_count()));
     let mut dag = StageDag::default();
     // Phase 1: X-dimension broadcast (one copy per row peer).
-    let mut p1_flows = Vec::new();
-    for sy in 0..g.n1 {
-        for sx in 0..g.n0 {
-            for dx in 0..g.n0 {
-                if dx != sx {
-                    p1_flows.push(FlowSpec::along(
-                        t,
-                        &[g.at(sx, sy), g.at(dx, sy)],
-                        bytes_per_pair,
-                    ));
+    let p1 = dag.push(Stage::new("a2a-bcast-x").with_lazy_flows(
+        p1_count,
+        p1_count as f64 * bytes_per_pair,
+        move |t| {
+            let g = &og1;
+            let mut flows = Vec::with_capacity(p1_count);
+            for sy in 0..g.n1 {
+                for sx in 0..g.n0 {
+                    for dx in 0..g.n0 {
+                        if dx != sx {
+                            flows.push(FlowSpec::along(
+                                t,
+                                &[g.at(sx, sy), g.at(dx, sy)],
+                                bytes_per_pair,
+                            ));
+                        }
+                    }
                 }
             }
-        }
-    }
-    let p1 = dag.push(Stage::new("a2a-bcast-x").with_flows(p1_flows));
+            flows
+        },
+    ));
     // Phase 2: Y-dimension delivery of in-network-reduced payloads (one
     // combined message per column link).
-    let mut p2_flows = Vec::new();
-    for sx in 0..g.n0 {
-        for sy in 0..g.n1 {
-            for dy in 0..g.n1 {
-                if dy != sy {
-                    p2_flows.push(FlowSpec::along(
-                        t,
-                        &[g.at(sx, sy), g.at(sx, dy)],
-                        bytes_per_pair,
-                    ));
+    dag.push(
+        Stage::new("a2a-reduce-y")
+            .with_lazy_flows(p2_count, p2_count as f64 * bytes_per_pair, move |t| {
+                let g = &og2;
+                let mut flows = Vec::with_capacity(p2_count);
+                for sx in 0..g.n0 {
+                    for sy in 0..g.n1 {
+                        for dy in 0..g.n1 {
+                            if dy != sy {
+                                flows.push(FlowSpec::along(
+                                    t,
+                                    &[g.at(sx, sy), g.at(sx, dy)],
+                                    bytes_per_pair,
+                                ));
+                            }
+                        }
+                    }
                 }
-            }
-        }
-    }
-    dag.push(Stage::new("a2a-reduce-y").with_flows(p2_flows).after(vec![p1]));
+                flows
+            })
+            .after(vec![p1]),
+    );
     dag
 }
 
@@ -161,39 +244,201 @@ pub fn hierarchical_alltoall_dag(
 /// Total wire bytes: `N · Σ_d (size_d − 1) · bytes` vs the flat
 /// `N · (N − 1) · bytes` of a direct all-to-all.
 ///
-/// This is the Pod-scale workload the incremental solver is sized for:
-/// at 8×8×8×8 = 4096 NPUs it releases 28 672 single-hop flows per phase.
+/// Phases are lazy: at 32 768 NPUs (8⁵) a phase is 229 376 flows, and
+/// only the active phase is ever materialized.
 pub fn dimwise_alltoall_dag(t: &Topology, dims: &[usize], bytes_per_peer: f64) -> StageDag {
-    use crate::topology::ndmesh::{coords_of, index_of};
     let n: usize = dims.iter().product();
     assert_eq!(t.npus.len(), n, "dims {dims:?} must cover every NPU");
+    let dims: Arc<Vec<usize>> = Arc::new(dims.to_vec());
     let mut dag = StageDag::default();
     let mut prev: Option<usize> = None;
     for (d, &size) in dims.iter().enumerate() {
-        let mut flows = Vec::with_capacity(n * (size - 1));
-        for i in 0..n {
-            let ci = coords_of(i, dims);
-            for v in 0..size {
-                if v == ci[d] {
-                    continue;
-                }
-                let mut cj = ci.clone();
-                cj[d] = v;
-                let j = index_of(&cj, dims);
-                flows.push(FlowSpec::along(
-                    t,
-                    &[t.npus[i], t.npus[j]],
-                    bytes_per_peer,
-                ));
-            }
-        }
-        let mut s = Stage::new(format!("a2a-dim{d}")).with_flows(flows);
+        let count = n * (size - 1);
+        let dims_d = dims.clone();
+        let mut s = Stage::new(format!("a2a-dim{d}")).with_lazy_flows(
+            count,
+            count as f64 * bytes_per_peer,
+            move |t| dimwise_phase_flows(t, &dims_d, d, bytes_per_peer),
+        );
         if let Some(p) = prev {
             s = s.after(vec![p]);
         }
         prev = Some(dag.push(s));
     }
     dag
+}
+
+/// One dimension-wise phase: every node ↔ its `size_d − 1` dim-`d`
+/// neighbours, single-hop.
+fn dimwise_phase_flows(
+    t: &Topology,
+    dims: &[usize],
+    d: usize,
+    bytes_per_peer: f64,
+) -> Vec<FlowSpec> {
+    use crate::topology::ndmesh::{coords_of, index_of};
+    let n: usize = dims.iter().product();
+    let size = dims[d];
+    let mut flows = Vec::with_capacity(n * (size - 1));
+    for i in 0..n {
+        let ci = coords_of(i, dims);
+        for v in 0..size {
+            if v == ci[d] {
+                continue;
+            }
+            let mut cj = ci.clone();
+            cj[d] = v;
+            let j = index_of(&cj, dims);
+            flows.push(FlowSpec::along(t, &[t.npus[i], t.npus[j]], bytes_per_peer));
+        }
+    }
+    flows
+}
+
+/// SuperPod dimension-wise All2All (the PR 2 acceptance workload): on an
+/// nd-fullmesh of `dims ++ [pods]` (the last dimension is the pod tier),
+/// run the intra-pod dimension-wise phases over `dims`, then one
+/// inter-pod phase where every NPU exchanges `bytes_per_peer` with its
+/// rail-aligned peer in each other pod using **APR two-path
+/// transmission**: half over the direct pod-dimension link, half over a
+/// detour through a dim-0 neighbour (`x → x' → x'_q → x_q`), which
+/// soaks up the dim-0 links the intra-pod phases left idle ("idle links
+/// ... are leveraged via the APR mechanism to enhance bandwidth").
+///
+/// `jitter > 0` scales each (node, peer-pod) payload by a deterministic
+/// factor in `[1, 1+jitter]` (SplitMix64 of the pair index). Jitter
+/// staggers completions, which is what makes the inter-pod phase the
+/// solver stress test: every completion is its own event inside a
+/// shared-channel component hundreds of flows wide, so a full-component
+/// re-solve pays the whole component per event while the rise-only
+/// solver touches only the completed flow's channel-mates (~1–3 flows).
+pub fn superpod_alltoall_dag(
+    t: &Topology,
+    dims: &[usize],
+    pods: usize,
+    bytes_per_peer: f64,
+    jitter: f64,
+) -> StageDag {
+    assert!(pods >= 2, "need at least 2 pods");
+    assert!(dims[0] >= 2, "dim 0 hosts the detours");
+    let pod_n: usize = dims.iter().product();
+    let n = pod_n * pods;
+    assert_eq!(t.npus.len(), n, "dims {dims:?} × {pods} pods must cover every NPU");
+
+    let full_dims: Arc<Vec<usize>> = {
+        let mut v = dims.to_vec();
+        v.push(pods);
+        Arc::new(v)
+    };
+
+    let mut dag = StageDag::default();
+    let mut prev: Option<usize> = None;
+    // Intra-pod phases: dimension-wise over dims[0..], all pods at once
+    // (these are exactly the first n−1 dimension-wise phases of the full
+    // topology).
+    for (d, &size) in dims.iter().enumerate() {
+        let count = n * (size - 1);
+        let fd = full_dims.clone();
+        let mut s = Stage::new(format!("sp-a2a-dim{d}")).with_lazy_flows(
+            count,
+            count as f64 * bytes_per_peer,
+            move |t| dimwise_phase_flows(t, &fd, d, bytes_per_peer),
+        );
+        if let Some(p) = prev {
+            s = s.after(vec![p]);
+        }
+        prev = Some(dag.push(s));
+    }
+
+    // Inter-pod phase: APR 2-path (direct + dim-0 detour), jittered.
+    let count = n * (pods - 1) * 2;
+    let bytes = superpod_interpod_bytes(pod_n, pods, bytes_per_peer, jitter);
+    let fd = full_dims.clone();
+    let mut s = Stage::new("sp-a2a-pods").with_lazy_flows(count, bytes, move |t| {
+        superpod_interpod_flows(t, &fd, bytes_per_peer, jitter)
+    });
+    if let Some(p) = prev {
+        s = s.after(vec![p]);
+    }
+    dag.push(s);
+    dag
+}
+
+/// Deterministic payload factor for inter-pod pair (node `i`, peer pod
+/// offset `q`): uniform in `[1, 1+jitter]`.
+fn pair_factor(i: usize, q: usize, jitter: f64) -> f64 {
+    let mut s = 0x5EED_u64 ^ ((i as u64) << 20) ^ q as u64;
+    let u = splitmix64(&mut s) as f64 / u64::MAX as f64;
+    1.0 + jitter * u
+}
+
+/// Total payload bytes of the inter-pod phase (sum of the jittered pair
+/// payloads; both halves of a pair share one factor).
+fn superpod_interpod_bytes(pod_n: usize, pods: usize, bytes_per_peer: f64, jitter: f64) -> f64 {
+    let mut total = 0.0;
+    for i in 0..pod_n * pods {
+        for q in 1..pods {
+            total += bytes_per_peer * pair_factor(i, q, jitter);
+        }
+    }
+    total
+}
+
+/// The inter-pod flow vector. For node `x` (coords `c`, pod `p`) and pod
+/// offset `q ∈ 1..pods`: destination is the rail peer `x_q` (same
+/// intra-pod coords, pod `(p+q) % pods`); the detour hops through the
+/// dim-0 neighbour at offset `1 + (q-1 + i_pod·q) % (size0-1)` (i_pod =
+/// the node's intra-pod index), so different peer pods use different
+/// idle dim-0 links *and* the channel-sharing graph forms long chains —
+/// components of hundreds of flows whose per-event changes are still
+/// local (every dim-0 channel carries at most a few detour crossings).
+/// That contrast — big components, local changes — is exactly what the
+/// rise-only solver exploits and the PR 1 full-component solver pays
+/// for; a plain `% (size0-1)` rotation instead closes the sharing graph
+/// into 4-flow cycles and hides the difference.
+fn superpod_interpod_flows(
+    t: &Topology,
+    full_dims: &[usize],
+    bytes_per_peer: f64,
+    jitter: f64,
+) -> Vec<FlowSpec> {
+    use crate::topology::ndmesh::{coords_of, index_of};
+    let ndim = full_dims.len();
+    let pods = full_dims[ndim - 1];
+    let size0 = full_dims[0];
+    let n: usize = full_dims.iter().product();
+    let pod_n = n / pods;
+    let mut flows = Vec::with_capacity(n * (pods - 1) * 2);
+    for i in 0..n {
+        let c = coords_of(i, full_dims);
+        let i_pod = i % pod_n;
+        for q in 1..pods {
+            let b = bytes_per_peer * pair_factor(i, q, jitter);
+            // Direct: pod-dimension link to the rail peer.
+            let mut cd = c.clone();
+            cd[ndim - 1] = (c[ndim - 1] + q) % pods;
+            let dst = index_of(&cd, full_dims);
+            flows.push(FlowSpec::along(
+                t,
+                &[t.npus[i], t.npus[dst]],
+                b / 2.0,
+            ));
+            // Detour: dim-0 neighbour, its pod link, then dim-0 back.
+            let off = 1 + (q - 1 + i_pod * q) % (size0 - 1);
+            let mut cv = c.clone();
+            cv[0] = (c[0] + off) % size0;
+            let via = index_of(&cv, full_dims);
+            let mut cvq = cv.clone();
+            cvq[ndim - 1] = cd[ndim - 1];
+            let via_q = index_of(&cvq, full_dims);
+            flows.push(FlowSpec::along(
+                t,
+                &[t.npus[i], t.npus[via], t.npus[via_q], t.npus[dst]],
+                b / 2.0,
+            ));
+        }
+    }
+    flows
 }
 
 #[cfg(test)]
@@ -264,9 +509,13 @@ mod tests {
         let dag = multipath_alltoall_dag(&t, &g, 1e6);
         // 16×15 = 240 ordered pairs; aligned pairs (same row or col):
         // per node 3+3 = 6 → 96 aligned (1 flow), 144 unaligned (2 flows).
-        assert_eq!(dag.stages[0].flows.len(), 96 + 2 * 144);
-        let total: f64 = dag.stages[0].flows.iter().map(|f| f.bytes).sum();
+        assert_eq!(dag.stages[0].flow_count(), 96 + 2 * 144);
+        // Declared metadata must match what the builder materializes.
+        let flows = dag.stages[0].materialize_flows(&t);
+        assert_eq!(flows.len(), 96 + 2 * 144);
+        let total: f64 = flows.iter().map(|f| f.bytes).sum();
         assert!((total - 240.0 * 1e6).abs() < 1.0);
+        assert!((dag.total_bytes() - total).abs() < 1.0);
     }
 
     #[test]
@@ -294,8 +543,10 @@ mod tests {
         let dag = dimwise_alltoall_dag(&t, &[4, 4], bytes);
         assert_eq!(dag.stages.len(), 2);
         for s in &dag.stages {
-            assert_eq!(s.flows.len(), 16 * 3);
-            assert!(s.flows.iter().all(|f| f.channels.len() == 1));
+            assert!(s.is_lazy(), "dimwise phases are lazily materialized");
+            assert_eq!(s.flow_count(), 16 * 3);
+            let flows = s.materialize_flows(&t);
+            assert!(flows.iter().all(|f| f.channels.len() == 1));
         }
         assert!((dag.total_bytes() - 2.0 * 48.0 * bytes).abs() < 1.0);
         let net = SimNet::new(&t);
@@ -315,9 +566,65 @@ mod tests {
         let (t, nodes) = mesh_4x4();
         let g = Grid::new(&nodes, 4, 4);
         let dag = multipath_alltoall_dag(&t, &g, 1e6);
-        assert!(dag.stages[0]
-            .flows
+        assert!(
+            dag.stages[0]
+                .materialize_flows(&t)
+                .iter()
+                .all(|f| f.channels.len() <= 2),
+            "Fig 14-a: at most one-hop forwarding"
+        );
+    }
+
+    /// Small SuperPod: 2 pods × 2×2 mesh = 8 NPUs on a [2,2,2] fullmesh.
+    #[test]
+    fn superpod_alltoall_structure_and_conservation() {
+        let t = nd_fullmesh(
+            "sp8",
+            &[
+                DimSpec::new(2, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(2, 4, CableClass::PassiveElectrical, 1.0),
+                DimSpec::new(2, 4, CableClass::Optical, 20.0),
+            ],
+        );
+        let dag = superpod_alltoall_dag(&t, &[2, 2], 2, 8e6, 0.5);
+        assert_eq!(dag.stages.len(), 3); // 2 intra dims + inter-pod
+        assert_eq!(dag.stages[2].flow_count(), 8 * 1 * 2); // pairs × 2 paths
+        let flows = dag.stages[2].materialize_flows(&t);
+        // Direct halves are single-hop, detours are 3-hop.
+        assert!(flows.iter().all(|f| f.channels.len() == 1 || f.channels.len() == 3));
+        let declared = dag.stages[2].flow_bytes();
+        let actual: f64 = flows.iter().map(|f| f.bytes).sum();
+        assert!(
+            (declared - actual).abs() <= 1e-6 * actual,
+            "declared {declared} vs built {actual}"
+        );
+        // Jittered payloads stay within [1, 1.5]× the base.
+        for f in &flows {
+            assert!(f.bytes >= 8e6 / 2.0 * (1.0 - 1e-9));
+            assert!(f.bytes <= 8e6 / 2.0 * 1.5 * (1.0 + 1e-9));
+        }
+        // And the whole thing runs with exact byte-hop conservation.
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        let expect: f64 = dag
+            .stages
             .iter()
-            .all(|f| f.channels.len() <= 2), "Fig 14-a: at most one-hop forwarding");
+            .flat_map(|s| s.materialize_flows(&t))
+            .map(|f| f.bytes * f.channels.len() as f64)
+            .sum();
+        assert!(
+            (r.byte_hops - expect).abs() / expect < 1e-6,
+            "byte-hops {} vs {expect}",
+            r.byte_hops
+        );
+    }
+
+    #[test]
+    fn superpod_jitter_is_deterministic() {
+        assert_eq!(pair_factor(17, 3, 1.0), pair_factor(17, 3, 1.0));
+        assert!(pair_factor(17, 3, 0.0) == 1.0);
+        let a = pair_factor(17, 3, 1.0);
+        let b = pair_factor(18, 3, 1.0);
+        assert_ne!(a, b, "factors decorrelate across nodes");
     }
 }

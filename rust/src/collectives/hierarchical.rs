@@ -51,10 +51,15 @@ pub fn fullmesh_reduce_stage(
     Stage::new("reduce").with_flows(flows)
 }
 
-/// Full-mesh reduce-scatter: every rank ends with `bytes / n` of the
-/// group sum. Direct exchange: rank i sends the j-th shard to rank j —
-/// one stage of n(n-1) flows of `bytes/n`.
-pub fn fullmesh_reduce_scatter_stage(t: &Topology, group: &[NodeId], bytes: f64) -> Stage {
+/// Flow vector of a full-mesh direct shard exchange (rank i sends the
+/// j-th shard to rank j): n(n-1) flows of `bytes/n`. Both the
+/// reduce-scatter and the allgather have this wire pattern, and
+/// [`crate::workload::step`] splices it into fused stages directly.
+pub fn fullmesh_shard_exchange_flows(
+    t: &Topology,
+    group: &[NodeId],
+    bytes: f64,
+) -> Vec<FlowSpec> {
     let n = group.len();
     let shard = bytes / n as f64;
     let mut flows = Vec::with_capacity(n * (n - 1));
@@ -65,54 +70,70 @@ pub fn fullmesh_reduce_scatter_stage(t: &Topology, group: &[NodeId], bytes: f64)
             }
         }
     }
-    Stage::new("rs-direct").with_flows(flows)
+    flows
+}
+
+/// Full-mesh reduce-scatter: every rank ends with `bytes / n` of the
+/// group sum. Direct exchange — one stage of n(n-1) flows of `bytes/n`.
+pub fn fullmesh_reduce_scatter_stage(t: &Topology, group: &[NodeId], bytes: f64) -> Stage {
+    Stage::new("rs-direct").with_flows(fullmesh_shard_exchange_flows(t, group, bytes))
 }
 
 /// Full-mesh allgather: every rank broadcasts its `bytes / n` shard.
 pub fn fullmesh_allgather_stage(t: &Topology, group: &[NodeId], bytes: f64) -> Stage {
+    Stage::new("ag-direct").with_flows(fullmesh_shard_exchange_flows(t, group, bytes))
+}
+
+/// Lazy variant of the shard-exchange stage: captures the group by Arc
+/// and materializes when the scheduler reaches it.
+fn lazy_shard_exchange_stage(
+    name: &str,
+    group: std::sync::Arc<Vec<NodeId>>,
+    bytes: f64,
+) -> Stage {
     let n = group.len();
-    let shard = bytes / n as f64;
-    let mut flows = Vec::with_capacity(n * (n - 1));
-    for &i in group {
-        for &j in group {
-            if i != j {
-                flows.push(FlowSpec::along(t, &route(t, i, j), shard));
-            }
-        }
-    }
-    Stage::new("ag-direct").with_flows(flows)
+    Stage::new(name).with_lazy_flows(n * (n - 1), (n - 1) as f64 * bytes, move |t| {
+        fullmesh_shard_exchange_flows(t, &group, bytes)
+    })
 }
 
 /// Hierarchical AllReduce over a 2D grid of ranks (`groups_x[r]` = the
 /// ranks of row r; `groups_y[c]` = the ranks of column c):
 /// 1. reduce-scatter within rows, 2. allreduce (rs+ag) within columns on
-/// shards, 3. allgather within rows.
+/// shards, 3. allgather within rows. Stages are lazily materialized —
+/// at rack scale that is ~1.3k flows per phase instead of all phases at
+/// once.
 pub fn hierarchical_allreduce_dag(
     t: &Topology,
     rows: &[Vec<NodeId>],
     cols: &[Vec<NodeId>],
     bytes: f64,
 ) -> StageDag {
+    use std::sync::Arc;
+    let _ = t;
     let nx = rows[0].len();
+    let rows: Vec<Arc<Vec<NodeId>>> = rows.iter().map(|g| Arc::new(g.clone())).collect();
+    let cols: Vec<Arc<Vec<NodeId>>> = cols.iter().map(|g| Arc::new(g.clone())).collect();
     let mut dag = StageDag::default();
     // Phase 1: row reduce-scatter.
     let p1: Vec<usize> = rows
         .iter()
-        .map(|g| dag.push(fullmesh_reduce_scatter_stage(t, g, bytes)))
+        .map(|g| dag.push(lazy_shard_exchange_stage("rs-direct", g.clone(), bytes)))
         .collect();
     // Phase 2: column allreduce on bytes/nx shards (rs + ag).
     let shard = bytes / nx as f64;
     let mut p2 = Vec::new();
-    for g in cols {
+    for g in &cols {
         let rs = dag.push(
-            fullmesh_reduce_scatter_stage(t, g, shard).after(p1.clone()),
+            lazy_shard_exchange_stage("rs-direct", g.clone(), shard).after(p1.clone()),
         );
-        let ag = dag.push(fullmesh_allgather_stage(t, g, shard).after(vec![rs]));
+        let ag = dag
+            .push(lazy_shard_exchange_stage("ag-direct", g.clone(), shard).after(vec![rs]));
         p2.push(ag);
     }
     // Phase 3: row allgather.
-    for g in rows {
-        dag.push(fullmesh_allgather_stage(t, g, bytes).after(p2.clone()));
+    for g in &rows {
+        dag.push(lazy_shard_exchange_stage("ag-direct", g.clone(), bytes).after(p2.clone()));
     }
     dag
 }
@@ -191,10 +212,10 @@ mod tests {
         let t = mesh_4x4();
         let group: Vec<NodeId> = (0..4).map(|i| NodeId(i as u32)).collect();
         let b = fullmesh_broadcast_stage(&t, group[0], &group, 1e6);
-        assert_eq!(b.flows.len(), 3);
+        assert_eq!(b.flow_count(), 3);
         let r = fullmesh_reduce_stage(&t, group[0], &group, 1e6);
-        assert_eq!(r.flows.len(), 3);
-        assert!(r.flows.iter().all(|f| f.dst == group[0]));
+        assert_eq!(r.flow_count(), 3);
+        assert!(r.eager_flows().unwrap().iter().all(|f| f.dst == group[0]));
     }
 
     #[test]
@@ -203,8 +224,16 @@ mod tests {
         let group: Vec<NodeId> = (0..4).map(|i| NodeId(i as u32)).collect();
         let s = fullmesh_reduce_scatter_stage(&t, &group, 4e6);
         // n(n-1) flows of bytes/n.
-        assert_eq!(s.flows.len(), 12);
-        let total: f64 = s.flows.iter().map(|f| f.bytes).sum();
+        assert_eq!(s.flow_count(), 12);
+        let total: f64 = s.flow_bytes();
         assert!((total - 12.0 * 1e6).abs() < 1.0);
+        // The lazy variant declares the same totals.
+        let lazy = lazy_shard_exchange_stage(
+            "rs-direct",
+            std::sync::Arc::new(group.clone()),
+            4e6,
+        );
+        assert_eq!(lazy.flow_count(), 12);
+        assert!((lazy.flow_bytes() - total).abs() < 1.0);
     }
 }

@@ -49,6 +49,11 @@ pub fn walecki_cycles(n: usize) -> Vec<Vec<usize>> {
 /// `bytes / n` on every ring edge concurrently. Non-adjacent ring
 /// neighbors (e.g. a backup NPU standing in through the LRS, Fig 9) are
 /// routed over their shortest path.
+///
+/// The ring edges are resolved to physical paths once; each of the
+/// 2(n-1) stages is **lazily materialized** from the shared path table
+/// when the scheduler reaches it, so a long ring schedule holds one
+/// step's flows at a time instead of all of them.
 pub fn ring_allreduce_dag(t: &Topology, ring: &[NodeId], bytes: f64) -> StageDag {
     let n = ring.len();
     assert!(n >= 2);
@@ -56,35 +61,41 @@ pub fn ring_allreduce_dag(t: &Topology, ring: &[NodeId], bytes: f64) -> StageDag
     // Resolve each ring edge to physical path(s) once. Non-adjacent
     // edges are sprayed across up to 4 link-disjoint paths (the UB IO
     // controller uses all backplane planes, Fig 9).
-    let hop_paths: Vec<Vec<Vec<NodeId>>> = (0..n)
-        .map(|i| {
-            let (a, b) = (ring[i], ring[(i + 1) % n]);
-            if t.link_between(a, b).is_some() {
-                vec![vec![a, b]]
-            } else {
-                let paths = crate::routing::spf::k_disjoint_paths(t, a, b, 4, true);
-                assert!(!paths.is_empty(), "ring edge {a}→{b} unroutable");
-                paths
-            }
-        })
-        .collect();
+    let hop_paths: std::sync::Arc<Vec<Vec<Vec<NodeId>>>> = std::sync::Arc::new(
+        (0..n)
+            .map(|i| {
+                let (a, b) = (ring[i], ring[(i + 1) % n]);
+                if t.link_between(a, b).is_some() {
+                    vec![vec![a, b]]
+                } else {
+                    let paths = crate::routing::spf::k_disjoint_paths(t, a, b, 4, true);
+                    assert!(!paths.is_empty(), "ring edge {a}→{b} unroutable");
+                    paths
+                }
+            })
+            .collect(),
+    );
+    let flows_per_stage: usize = hop_paths.iter().map(|p| p.len()).sum();
     let mut stages = Vec::with_capacity(2 * (n - 1));
     for phase in 0..2 {
         for step in 0..(n - 1) {
-            let mut flows = Vec::with_capacity(n);
-            for paths in &hop_paths {
-                let share = chunk / paths.len() as f64;
-                for path in paths {
-                    flows.push(FlowSpec::along(t, path, share));
-                }
-            }
+            let hp = hop_paths.clone();
             stages.push(
                 Stage::new(format!(
                     "{}-{}",
                     if phase == 0 { "rs" } else { "ag" },
                     step
                 ))
-                .with_flows(flows),
+                .with_lazy_flows(flows_per_stage, n as f64 * chunk, move |t| {
+                    let mut flows = Vec::with_capacity(flows_per_stage);
+                    for paths in hp.iter() {
+                        let share = chunk / paths.len() as f64;
+                        for path in paths {
+                            flows.push(FlowSpec::along(t, path, share));
+                        }
+                    }
+                    flows
+                }),
             );
         }
     }

@@ -90,30 +90,39 @@ pub fn run(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
     }
 }
 
-/// Parallel Monte-Carlo over [`crate::sim::sweep`]: trials are split
+/// Parallel Monte-Carlo over the sweep grid builder: trials are split
 /// into a *fixed* number of chunks (independent of thread count), each
 /// chunk drawing from its own
 /// [`scenario_seed`](crate::sim::sweep::scenario_seed)-derived stream, so the
 /// result is deterministic for a given `(trials, seed)` no matter how
 /// many threads run it. Numerically it is a different (equally valid)
 /// sample than [`run`] with the same seed — the streams differ.
+///
+/// Aggregation rides on [`OnlineStats`] (the sweep benches' reducer)
+/// instead of an ad-hoc fold: the exact running `sum()` reproduces the
+/// old accumulation bit-for-bit (same chunk order), and the per-chunk
+/// mean/spread becomes available to callers prototyping confidence
+/// intervals.
 pub fn run_par(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
-    use crate::sim::sweep::{sweep, SweepConfig};
+    use crate::sim::sweep::{GridBuilder, OnlineStats, SweepConfig};
     const CHUNKS: u32 = 32;
     let chunks = CHUNKS.min(trials.max(1));
-    let sizes: Vec<u32> = (0..chunks)
-        .map(|i| trials / chunks + u32::from(i < trials % chunks))
-        .collect();
-    let cfg_sweep = SweepConfig::default().with_seed(seed);
-    let parts = sweep(&cfg_sweep, &sizes, |_i, &n, rng| run_trials(cfg, n, rng));
-    let (down_total, failures) = parts
-        .iter()
-        .fold((0.0, 0u64), |(d, f), &(dd, ff)| (d + dd, f + ff));
+    let grid = GridBuilder::cartesian1(&(0..chunks).collect::<Vec<u32>>(), |&i| {
+        Some(trials / chunks + u32::from(i < trials % chunks))
+    })
+    .with_config(SweepConfig::default().with_seed(seed));
+    let parts = grid.run(|_i, &n, rng| run_trials(cfg, n, rng));
+    let mut down = OnlineStats::default();
+    let mut fails = OnlineStats::default();
+    for &(dd, ff) in &parts {
+        down.push(dd);
+        fails.push(ff as f64); // exact: counts are far below 2^53
+    }
     let mission_total = cfg.mission_hours * trials as f64;
     McResult {
-        availability: 1.0 - down_total / mission_total,
-        failures,
-        downtime_hours: down_total,
+        availability: 1.0 - down.sum() / mission_total,
+        failures: fails.sum() as u64,
+        downtime_hours: down.sum(),
     }
 }
 

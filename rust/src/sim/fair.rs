@@ -5,27 +5,60 @@
 //! the current level, and filling continues for the rest. This is the
 //! standard fluid-model allocation used by flow-level DC simulators.
 //!
-//! Two implementations live here:
+//! Three solver layers live here (PR 2 — SuperPod scale):
 //!
 //! * [`naive_max_min_rates`] — the original O(rounds × flows × hops)
 //!   scan, retained verbatim as the differential-test oracle.
-//! * [`Rates`] — the scalable solver. It keeps a channel→flow inverted
-//!   index and drives each filling round from a **saturation heap**: for
-//!   a channel `c` with unfrozen multiplicity `k_c` and frozen load
-//!   `F_c`, the uniform fill level at which it binds is
-//!   `(cap_c − F_c) / k_c`; the heap pops the next binding channel
-//!   directly, so a round costs O(hops of the frozen flows × log C)
-//!   instead of O(all flows × hops). Heap entries are invalidated lazily
-//!   (per-channel version stamps) rather than removed.
+//! * [`Rates`] with [`ResolveStrategy::FullComponentBfs`] — the PR 1
+//!   solver: a channel→flow inverted index drives a **saturation heap**
+//!   (each heap entry is the uniform fill level at which a channel
+//!   binds), and every `add_flows`/`remove_flows` re-solves the
+//!   connected component(s) of the flow/channel bipartite graph the
+//!   change touches, discovered by BFS. Kept as the second differential
+//!   oracle and for measured before/after comparisons in
+//!   `benches/perf_hotpaths.rs`.
+//! * [`Rates`] with [`ResolveStrategy::RiseOnly`] (the default) — the
+//!   SuperPod-scale solver:
 //!
-//! [`Rates`] is also **incremental**: [`Rates::add_flows`] and
-//! [`Rates::remove_flows`] re-solve only the connected component(s) of
-//! the flow/channel bipartite graph that the change touches. Flows in
-//! other components share no channel with the changed flows — max-min
-//! allocations factor across components, so their rates are provably
-//! unaffected (the invariant the property tests in
-//! `rust/tests/properties.rs` pin down: any add/remove sequence yields
-//! the same rates as a from-scratch solve of the surviving flow set).
+//!   1. **Union-find over channels** replaces the per-event component
+//!      BFS. `add_flows` unions the channels of each new flow (near-O(α)
+//!      per hop) and attaches the flow to the component root's member
+//!      list; `remove_flows` only decrements the root's live count. A
+//!      removal of a multi-channel flow *may* split its component; the
+//!      split is reclaimed lazily — the component is rebuilt (reset +
+//!      re-union of its alive members, epoch-tagged so only that
+//!      component's channels are touched) once enough such removals
+//!      accumulate. Until then the component is a *conservative union*
+//!      of true components, which is always correct (re-solving extra
+//!      components reproduces their rates) and only costs accuracy in
+//!      the [`SolverStats::full_component_recomputes`] estimate.
+//!   2. **Rise-only bounded re-solve on removal**: removing flows can
+//!      only free capacity, so only flows sharing a bottleneck chain
+//!      with the removed flows can change rate. The re-solve seeds a
+//!      candidate set from the flows on the removed flows' *saturated*
+//!      channels and water-fills just those candidates against the
+//!      frozen rates of everything else. Three absorption triggers grow
+//!      the candidate set when the bounded solve would be inconsistent
+//!      with global max-min (see `resolve_rise` for the derivation):
+//!      (a) a binding channel carries a frozen non-candidate with a
+//!      higher rate than the binding level — that flow may have to
+//!      *fall* (a candidate rising past it steals shared capacity);
+//!      (b) a previously saturated candidate channel ends with less
+//!      candidate load than before — flows frozen on it may now *rise*;
+//!      (c) a now-saturated candidate channel carries a frozen flow
+//!      *below* the level the candidates reached and that flow has no
+//!      valid bottleneck elsewhere — it is under-served and must rise
+//!      to the common level. Each trigger restarts the solve with the
+//!      enlarged set; the set grows monotonically, and a (rare) runaway
+//!      chain falls back to a full component solve.
+//!
+//! Invariant (after every public call, any strategy): `rate(id)` of
+//! every alive flow equals the max-min fair allocation of the full alive
+//! flow set — incrementality is a pure optimization, never a semantic
+//! change. `rust/tests/differential_fair.rs` pins this with randomized
+//! add/remove interleavings against both oracles, and
+//! `rust/tests/properties.rs` with order-invariance/feasibility
+//! properties.
 //!
 //! [`max_min_rates`] keeps the original one-shot API as a thin wrapper
 //! over [`Rates`].
@@ -143,14 +176,50 @@ pub fn naive_max_min_rates(net: &SimNet, flows: &[&[Channel]]) -> Vec<f64> {
 /// Handle of a flow registered in a [`Rates`] solver.
 pub type FlowId = usize;
 
+/// How [`Rates`] re-solves after a mutation.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum ResolveStrategy {
+    /// The SuperPod-scale default: additions solve the union-find
+    /// component; removals run the rise-only bounded re-solve.
+    #[default]
+    RiseOnly,
+    /// PR 1 behavior, kept as a differential oracle: BFS the affected
+    /// component and water-fill it from zero on every mutation.
+    FullComponentBfs,
+}
+
+/// Work counters, reset via [`Rates::reset_stats`]. The headline perf
+/// metric of `benches/perf_hotpaths.rs` is
+/// `full_component_recomputes / rate_recomputes` — how much narrower the
+/// bounded re-solve is than a full component re-solve per event.
+#[derive(Clone, Debug, Default)]
+pub struct SolverStats {
+    /// Mutating calls that triggered a re-solve.
+    pub resolves: u64,
+    /// Flow-rate assignments actually performed (all solve attempts).
+    pub rate_recomputes: u64,
+    /// Flow-rate assignments a full-component re-solve (the PR 1
+    /// strategy) would perform on the same call sequence. Exact under
+    /// `FullComponentBfs`; under `RiseOnly` it is the union-find live
+    /// component size — a sharp estimate that can only over-count while
+    /// a split component awaits its lazy rebuild.
+    pub full_component_recomputes: u64,
+    /// Rise-only solves that restarted with an enlarged candidate set.
+    pub absorb_restarts: u64,
+    /// Rise-only solves that gave up and ran a full component solve.
+    pub fallbacks: u64,
+    /// Lazy union-find component rebuilds (split reclamation).
+    pub uf_rebuilds: u64,
+}
+
 #[derive(Clone, Debug, Default)]
 struct FlowState {
     channels: Vec<Channel>,
     rate: f64,
     alive: bool,
     /// Generation stamps (== the solver's current `gen`) marking
-    /// membership in the component being re-solved / frozen-ness within
-    /// that solve. Stamps avoid O(all flows) clears per solve.
+    /// membership in the set being re-solved / frozen-ness within that
+    /// solve. Stamps avoid O(all flows) clears per solve.
     in_component: u64,
     frozen_at: u64,
 }
@@ -184,14 +253,93 @@ impl Ord for Sat {
     }
 }
 
-/// Incremental max-min fair solver over a mutable flow set.
+/// Union-find over channel indices, maintaining per-component alive-flow
+/// counts and member lists (flow ids attached beneath each root).
 ///
-/// Invariant (after every public call): `rate(id)` of every alive flow
-/// equals the max-min fair allocation of the full alive flow set on the
-/// network passed to the mutating calls — i.e. incrementality is a pure
-/// optimization, never a semantic change.
+/// Member lists are only ever non-empty at current roots: `attach`
+/// pushes at the root and `union` moves the losing root's list into the
+/// winner, so an alive flow's entry is always reachable from
+/// `find(any of its channels)`. Entries of dead flows — and duplicate
+/// entries for a recycled [`FlowId`] — are purged lazily whenever a
+/// component is collected ([`Rates::collect_members`]) or rebuilt.
+#[derive(Default)]
+struct ChannelUf {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    members: Vec<Vec<FlowId>>,
+    /// Alive flows in the component (valid at roots).
+    live: Vec<u32>,
+    /// Multi-channel-flow removals since the last rebuild (valid at
+    /// roots); each may have split the component.
+    splits: Vec<u32>,
+}
+
+impl ChannelUf {
+    fn ensure(&mut self, upto: usize) {
+        let from = self.parent.len();
+        if from < upto {
+            self.parent.extend((from..upto).map(|i| i as u32));
+            self.rank.resize(upto, 0);
+            self.members.resize_with(upto, Vec::new);
+            self.live.resize(upto, 0);
+            self.splits.resize(upto, 0);
+        }
+    }
+
+    fn find(&mut self, mut c: usize) -> usize {
+        while self.parent[c] as usize != c {
+            let gp = self.parent[self.parent[c] as usize];
+            self.parent[c] = gp; // path halving
+            c = gp as usize;
+        }
+        c
+    }
+
+    /// Union the components of roots/channels `a` and `b`; returns the
+    /// surviving root.
+    fn union(&mut self, a: usize, b: usize) -> usize {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return ra;
+        }
+        let (w, l) = if self.rank[ra] >= self.rank[rb] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        if self.rank[w] == self.rank[l] {
+            self.rank[w] += 1;
+        }
+        self.parent[l] = w as u32;
+        let moved = std::mem::take(&mut self.members[l]);
+        if self.members[w].is_empty() {
+            self.members[w] = moved;
+        } else {
+            self.members[w].extend(moved);
+        }
+        self.live[w] += self.live[l];
+        self.live[l] = 0;
+        self.splits[w] += self.splits[l];
+        self.splits[l] = 0;
+        w
+    }
+
+    /// Reset a channel to a fresh singleton (used by component rebuild).
+    fn reset(&mut self, c: usize) {
+        self.parent[c] = c as u32;
+        self.rank[c] = 0;
+        self.members[c].clear();
+        self.live[c] = 0;
+        self.splits[c] = 0;
+    }
+}
+
+/// Incremental max-min fair solver over a mutable flow set. See the
+/// module docs for the three-layer architecture and invariants.
 #[derive(Default)]
 pub struct Rates {
+    strategy: ResolveStrategy,
+    stats: SolverStats,
     flows: Vec<FlowState>,
     free: Vec<FlowId>,
     /// Channel idx → alive flow ids, one entry per crossing (a flow that
@@ -200,6 +348,7 @@ pub struct Rates {
     by_channel: Vec<Vec<FlowId>>,
     /// Flows whose rate may have changed in the last mutating call.
     touched: Vec<FlowId>,
+    uf: ChannelUf,
 
     // ---- per-solve scratch (generation-stamped, never cleared) -------
     gen: u64,
@@ -207,11 +356,42 @@ pub struct Rates {
     chan_occ: Vec<u32>,
     chan_frozen_load: Vec<f64>,
     chan_ver: Vec<u32>,
+    /// Rise-only scratch: pre-solve candidate load per involved channel.
+    chan_old_cand: Vec<f64>,
+    /// Heap-seeding dedup stamp (one entry per channel per fill).
+    chan_seeded: Vec<u64>,
 }
+
+/// Give up on the bounded re-solve after this many absorption restarts
+/// and solve the whole component (each restart strictly grows the
+/// candidate set, so this only triggers on pathological chains).
+const MAX_RISE_ATTEMPTS: u32 = 32;
 
 impl Rates {
     pub fn new() -> Rates {
         Rates::default()
+    }
+
+    /// Solver with an explicit re-solve strategy (benches/tests pit the
+    /// strategies against each other).
+    pub fn with_strategy(strategy: ResolveStrategy) -> Rates {
+        Rates {
+            strategy,
+            ..Rates::default()
+        }
+    }
+
+    pub fn strategy(&self) -> ResolveStrategy {
+        self.strategy
+    }
+
+    /// Work counters accumulated since construction / the last reset.
+    pub fn stats(&self) -> &SolverStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = SolverStats::default();
     }
 
     /// Number of alive flows.
@@ -231,9 +411,9 @@ impl Rates {
     }
 
     /// Flows whose rate may have changed in the last `add_flows` /
-    /// `remove_flows` call (the affected component, including the new
-    /// flows themselves). The DAG runner uses this to re-settle only
-    /// what moved.
+    /// `remove_flows` call (the re-solved set, including the new flows
+    /// themselves). The DAG runner uses this to re-settle only what
+    /// moved.
     pub fn touched(&self) -> &[FlowId] {
         &self.touched
     }
@@ -245,7 +425,10 @@ impl Rates {
             self.chan_occ.resize(upto, 0);
             self.chan_frozen_load.resize(upto, 0.0);
             self.chan_ver.resize(upto, 0);
+            self.chan_old_cand.resize(upto, 0.0);
+            self.chan_seeded.resize(upto, 0);
         }
+        self.uf.ensure(upto);
     }
 
     /// Register new flows and re-solve the affected component(s).
@@ -276,18 +459,35 @@ impl Rates {
                 dirty.push(ci);
             }
             ids.push(id);
+            // Union-find maintenance: merge the flow's channels into one
+            // component and attach the flow to its root.
+            let mut root = self.uf.find(chans[0].idx());
+            for c in &chans[1..] {
+                root = self.uf.union(root, c.idx());
+            }
+            self.uf.members[root].push(id);
+            self.uf.live[root] += 1;
         }
-        self.resolve(net, &dirty);
+        match self.strategy {
+            ResolveStrategy::FullComponentBfs => self.resolve_bfs(net, &dirty),
+            ResolveStrategy::RiseOnly => self.resolve_component_uf(net, &dirty),
+        }
         ids
     }
 
-    /// Deregister flows and re-solve the affected component(s). Rates of
-    /// the removed flows become meaningless; their ids are recycled.
+    /// Deregister flows and re-solve the affected flows. Rates of the
+    /// removed flows become meaningless; their ids are recycled.
     pub fn remove_flows(&mut self, net: &SimNet, ids: &[FlowId]) {
-        let mut dirty: Vec<usize> = Vec::new();
+        // (channel, removed crossing's rate) — the rate part lets the
+        // rise-only path reconstruct pre-removal loads.
+        let mut dirty: Vec<(usize, f64)> = Vec::new();
+        let mut roots: Vec<usize> = Vec::new();
+        self.gen += 1;
+        let root_gen = self.gen; // dedups roots in O(1) per removed flow
         for &id in ids {
             assert!(self.flows[id].alive, "remove of dead flow {id}");
             self.flows[id].alive = false;
+            let old_rate = self.flows[id].rate;
             let channels = std::mem::take(&mut self.flows[id].channels);
             for c in &channels {
                 let ci = c.idx();
@@ -298,24 +498,178 @@ impl Rates {
                     .position(|&f| f == id)
                     .expect("flow missing from inverted index");
                 lst.swap_remove(pos);
-                dirty.push(ci);
+                dirty.push((ci, old_rate));
+            }
+            // Union-find maintenance. The member-list entry is purged
+            // lazily; a single-channel flow can never have bridged two
+            // channel groups, so only multi-channel removals may split.
+            let root = self.uf.find(channels[0].idx());
+            self.uf.live[root] = self.uf.live[root].saturating_sub(1);
+            if channels.iter().any(|c| c.idx() != channels[0].idx()) {
+                self.uf.splits[root] += 1;
+            }
+            if self.chan_gen[root] != root_gen {
+                self.chan_gen[root] = root_gen;
+                roots.push(root);
             }
             self.free.push(id);
         }
-        self.resolve(net, &dirty);
+        match self.strategy {
+            ResolveStrategy::FullComponentBfs => {
+                let chans: Vec<usize> = dirty.iter().map(|&(ci, _)| ci).collect();
+                self.resolve_bfs(net, &chans);
+            }
+            ResolveStrategy::RiseOnly => {
+                // PR 1-equivalent work estimate: re-solving the whole
+                // component would recompute every surviving member.
+                for &r in &roots {
+                    self.stats.full_component_recomputes += self.uf.live[r] as u64;
+                }
+                self.resolve_rise(net, &dirty);
+            }
+        }
+        // Lazy split reclamation: once removals that may have split a
+        // component outnumber half its survivors, rebuild it so the
+        // conservative union doesn't degrade add-path solves and the
+        // full-component estimate.
+        for r in roots {
+            let r = self.uf.find(r); // unions in resolve paths can't happen, but be safe
+            if self.uf.splits[r] > 8 && self.uf.splits[r] as u64 * 2 > self.uf.live[r] as u64 {
+                self.rebuild_component(r);
+            }
+        }
     }
 
-    /// Re-solve the union of components reachable from `dirty` channels.
-    ///
-    /// Correctness: a max-min allocation factors across connected
-    /// components of the flow/channel bipartite graph (no shared channel
-    /// → no shared constraint), so restricting the water-filling to the
-    /// affected component reproduces the global solution for it exactly.
-    fn resolve(&mut self, net: &SimNet, dirty: &[usize]) {
+    // ------------------------------------------------------------------
+    // Component discovery
+    // ------------------------------------------------------------------
+
+    /// Collect the alive member flows of the union-find components that
+    /// contain `dirty` channels, compacting the member lists as a side
+    /// effect (dead entries and recycled-id duplicates are dropped,
+    /// survivors re-homed at their current root).
+    fn collect_members(&mut self, dirty: &[usize]) -> Vec<FlowId> {
+        self.gen += 1;
+        let gen = self.gen;
+        let mut roots: Vec<usize> = Vec::new();
+        for &ci in dirty {
+            let r = self.uf.find(ci);
+            if self.chan_gen[r] != gen {
+                self.chan_gen[r] = gen;
+                roots.push(r);
+            }
+        }
+        let mut flows: Vec<FlowId> = Vec::new();
+        for &r in &roots {
+            for fid in std::mem::take(&mut self.uf.members[r]) {
+                if self.flows[fid].alive && self.flows[fid].in_component != gen {
+                    // A recycled id may appear in a foreign root's stale
+                    // list; its real entry lives at its current root, so
+                    // only keep it if it belongs here.
+                    let home = self.uf.find(self.flows[fid].channels[0].idx());
+                    if self.chan_gen[home] == gen {
+                        self.flows[fid].in_component = gen;
+                        flows.push(fid);
+                    }
+                }
+            }
+            // live is recounted below; splits is deliberately kept — a
+            // collection does not undo possible splits, only a rebuild
+            // does.
+            self.uf.live[r] = 0;
+        }
+        // Re-home the survivors at their current roots.
+        for &fid in &flows {
+            let home = self.uf.find(self.flows[fid].channels[0].idx());
+            self.uf.members[home].push(fid);
+            self.uf.live[home] += 1;
+        }
+        flows
+    }
+
+    /// Rebuild one component's union-find structure from its alive
+    /// members, splitting it back into true components. Epoch-tagged via
+    /// `chan_gen`: only this component's channels are touched.
+    fn rebuild_component(&mut self, root: usize) {
+        self.gen += 1;
+        let gen = self.gen;
+        let mut flows: Vec<FlowId> = Vec::new();
+        for fid in std::mem::take(&mut self.uf.members[root]) {
+            if self.flows[fid].alive && self.flows[fid].in_component != gen {
+                let home = self.uf.find(self.flows[fid].channels[0].idx());
+                if home == root {
+                    self.flows[fid].in_component = gen;
+                    flows.push(fid);
+                }
+                // else: stale duplicate of a recycled id — its real
+                // entry lives at its own root; drop this one.
+            }
+        }
+        // Reset every channel the alive members touch (plus the old root
+        // itself so it cannot keep a stale member list or counters).
+        self.gen += 1;
+        let rgen = self.gen;
+        self.chan_gen[root] = rgen;
+        self.uf.reset(root);
+        for &fid in &flows {
+            for j in 0..self.flows[fid].channels.len() {
+                let ci = self.flows[fid].channels[j].idx();
+                if self.chan_gen[ci] != rgen {
+                    self.chan_gen[ci] = rgen;
+                    self.uf.reset(ci);
+                }
+            }
+        }
+        // Re-union per flow, then attach each flow at its new root.
+        for &fid in &flows {
+            let c0 = self.flows[fid].channels[0].idx();
+            let mut r = self.uf.find(c0);
+            for j in 1..self.flows[fid].channels.len() {
+                let cj = self.flows[fid].channels[j].idx();
+                r = self.uf.union(r, cj);
+            }
+        }
+        for &fid in &flows {
+            let r = self.uf.find(self.flows[fid].channels[0].idx());
+            self.uf.members[r].push(fid);
+            self.uf.live[r] += 1;
+        }
+        self.stats.uf_rebuilds += 1;
+    }
+
+    // ------------------------------------------------------------------
+    // Solvers
+    // ------------------------------------------------------------------
+
+    /// Full solve of the union-find component(s) containing `dirty`
+    /// channels (the add path, and the rise-only fallback).
+    fn resolve_component_uf(&mut self, net: &SimNet, dirty: &[usize]) {
         self.touched.clear();
         if dirty.is_empty() {
             return;
         }
+        self.stats.resolves += 1;
+        let members = self.collect_members(dirty);
+        self.stats.rate_recomputes += members.len() as u64;
+        self.stats.full_component_recomputes += members.len() as u64;
+        self.solve_from_zero(net, &members);
+        self.touched = members;
+    }
+
+    /// Re-solve the union of components reachable from `dirty` channels,
+    /// discovered by BFS over the flow/channel bipartite graph — the
+    /// PR 1 code path, retained as [`ResolveStrategy::FullComponentBfs`].
+    ///
+    /// Correctness: a max-min allocation factors across connected
+    /// components (no shared channel → no shared constraint), so
+    /// restricting the water-filling to the affected component
+    /// reproduces the global solution for it exactly.
+    fn resolve_bfs(&mut self, net: &SimNet, dirty: &[usize]) {
+        self.touched.clear();
+        if dirty.is_empty() {
+            return;
+        }
+        self.stats.resolves += 1;
         self.gen += 1;
         let gen = self.gen;
 
@@ -324,8 +678,6 @@ impl Rates {
         for &ci in dirty {
             if self.chan_gen[ci] != gen {
                 self.chan_gen[ci] = gen;
-                self.chan_occ[ci] = 0;
-                self.chan_frozen_load[ci] = 0.0;
                 chan_stack.push(ci);
             }
         }
@@ -343,17 +695,307 @@ impl Rates {
                     let cj = self.flows[fid].channels[j].idx();
                     if self.chan_gen[cj] != gen {
                         self.chan_gen[cj] = gen;
-                        self.chan_occ[cj] = 0;
-                        self.chan_frozen_load[cj] = 0.0;
                         chan_stack.push(cj);
                     }
                 }
             }
         }
+        self.stats.rate_recomputes += member_flows.len() as u64;
+        self.stats.full_component_recomputes += member_flows.len() as u64;
+        self.solve_from_zero(net, &member_flows);
+        self.touched = member_flows;
+    }
 
+    /// Water-fill `members` from fill level zero with no background load
+    /// (the member set must be closed under channel sharing — a union of
+    /// whole components). Stamps its own generation.
+    fn solve_from_zero(&mut self, net: &SimNet, members: &[FlowId]) {
+        self.gen += 1;
+        let gen = self.gen;
+        for &fid in members {
+            self.flows[fid].in_component = gen;
+            for j in 0..self.flows[fid].channels.len() {
+                let cj = self.flows[fid].channels[j].idx();
+                if self.chan_gen[cj] != gen {
+                    self.chan_gen[cj] = gen;
+                    self.chan_occ[cj] = 0;
+                    self.chan_frozen_load[cj] = 0.0;
+                }
+            }
+        }
+        self.fill(net, members, gen, None);
+    }
+
+    /// Bounded re-solve after removals: only flows sharing a bottleneck
+    /// chain with the removed flows are recomputed; everything else is
+    /// frozen background.
+    ///
+    /// Seeding: removing a flow frees capacity only on its own channels,
+    /// and a frozen flow's rate can change only if (i) a channel it
+    /// crosses gains slack while being its bottleneck — it *rises* — or
+    /// (ii) a flow sharing one of its saturated channels rises past it —
+    /// it may *fall* (the classic non-monotone chain: freeing `a` lets
+    /// `b` rise on one channel, which steals from `c` on another). Flows
+    /// bottlenecked on an *unsaturated* removed channel don't exist (an
+    /// unsaturated channel pins nobody), so the initial candidates are
+    /// the flows on the removed flows' saturated channels. Chains of
+    /// type (i)/(ii) beyond the seed are caught by the three absorption
+    /// triggers during/after the fill (see module docs) which restart
+    /// with the larger set; `rust/tests/differential_fair.rs` hammers
+    /// exactly these chains against the oracles, and the
+    /// statement-level Python port of this algorithm was differentially
+    /// fuzzed against the naive oracle on 13k+ randomized interleavings
+    /// (the fuzz found and fixed the missing trigger (c)).
+    fn resolve_rise(&mut self, net: &SimNet, dirty: &[(usize, f64)]) {
+        self.touched.clear();
+        if dirty.is_empty() {
+            return;
+        }
+        self.stats.resolves += 1;
+
+        // ---- pre-removal saturation test per dirty channel -----------
+        // Pre-removal load = current alive load + the removed crossings.
+        self.gen += 1;
+        let gen0 = self.gen;
+        let mut dirty_chans: Vec<usize> = Vec::new();
+        for &(ci, removed_rate) in dirty {
+            if self.chan_gen[ci] != gen0 {
+                self.chan_gen[ci] = gen0;
+                self.chan_old_cand[ci] = 0.0; // accumulates removed load
+                dirty_chans.push(ci);
+            }
+            self.chan_old_cand[ci] += removed_rate;
+        }
+        let mut cands: Vec<FlowId> = Vec::new();
+        let mut cand_old: Vec<f64> = Vec::new();
+        self.gen += 1;
+        let cgen = self.gen; // stamps candidate membership (flows)
+        for &ci in &dirty_chans {
+            let mut load = self.chan_old_cand[ci];
+            for k in 0..self.by_channel[ci].len() {
+                load += self.flows[self.by_channel[ci][k]].rate;
+            }
+            let cap = net.cap_by_idx(ci);
+            if load < cap - 1e-6 * cap.max(1.0) {
+                // The channel had slack before the removal, so it pinned
+                // nobody — its flows cannot rise through it.
+                continue;
+            }
+            for k in 0..self.by_channel[ci].len() {
+                let fid = self.by_channel[ci][k];
+                if self.flows[fid].in_component != cgen {
+                    self.flows[fid].in_component = cgen;
+                    cands.push(fid);
+                    cand_old.push(self.flows[fid].rate);
+                }
+            }
+        }
+        if cands.is_empty() {
+            return;
+        }
+
+        let mut involved: Vec<usize> = Vec::new();
+        let mut absorb: Vec<usize> = Vec::new();
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            if attempts > MAX_RISE_ATTEMPTS {
+                // Pathological absorption chain: solve the whole
+                // component instead (always correct).
+                self.stats.fallbacks += 1;
+                let mut seed: Vec<usize> = dirty_chans.clone();
+                for &fid in &cands {
+                    seed.extend(self.flows[fid].channels.iter().map(|c| c.idx()));
+                }
+                // resolve_component_uf counts its own resolve and adds
+                // members.len() to the full-component estimate, which
+                // remove_flows already pre-charged from the union-find
+                // live counts; undo both double counts.
+                self.stats.resolves -= 1;
+                self.resolve_component_uf(net, &seed);
+                self.stats.full_component_recomputes -= self.touched.len() as u64;
+                return;
+            }
+
+            // ---- stamp this attempt: members + involved channels ------
+            self.gen += 1;
+            let gen = self.gen;
+            for &fid in &cands {
+                self.flows[fid].in_component = gen;
+            }
+            involved.clear();
+            for &fid in &cands {
+                for j in 0..self.flows[fid].channels.len() {
+                    let cj = self.flows[fid].channels[j].idx();
+                    if self.chan_gen[cj] != gen {
+                        self.chan_gen[cj] = gen;
+                        self.chan_occ[cj] = 0;
+                        self.chan_frozen_load[cj] = 0.0;
+                        self.chan_old_cand[cj] = 0.0;
+                        involved.push(cj);
+                    }
+                }
+            }
+            // Frozen background: alive non-candidates keep their rates.
+            for &ci in &involved {
+                for k in 0..self.by_channel[ci].len() {
+                    let fid = self.by_channel[ci][k];
+                    if self.flows[fid].in_component != gen {
+                        self.chan_frozen_load[ci] += self.flows[fid].rate;
+                    }
+                }
+            }
+            // Pre-solve candidate load (for the rise trigger below).
+            for (k, &fid) in cands.iter().enumerate() {
+                for j in 0..self.flows[fid].channels.len() {
+                    let cj = self.flows[fid].channels[j].idx();
+                    self.chan_old_cand[cj] += cand_old[k];
+                }
+            }
+
+            // ---- fill the candidates against the background -----------
+            absorb.clear();
+            self.fill(net, &cands, gen, Some(&mut absorb));
+            self.stats.rate_recomputes += cands.len() as u64;
+
+            // ---- post-solve absorption triggers on involved channels:
+            // (b) rise: the channel was saturated and now carries less
+            //     candidate load — frozen flows on it may rise;
+            // (c) under-served: the channel is saturated *now* and a
+            //     frozen flow sits below the level the candidates
+            //     reached — unless it is validly pinned on another
+            //     saturated channel (where it is maximal), max-min
+            //     fairness says it must rise to the common level.
+            for &ci in &involved {
+                let cap = net.cap_by_idx(ci);
+                let bg = self.chan_frozen_load_snapshot(ci, gen);
+                let old_total = bg + self.chan_old_cand[ci];
+                let mut new_cand = 0.0;
+                let mut max_cand = 0.0f64;
+                let mut has_frozen = false;
+                for k in 0..self.by_channel[ci].len() {
+                    let fid = self.by_channel[ci][k];
+                    if self.flows[fid].in_component == gen {
+                        new_cand += self.flows[fid].rate;
+                        max_cand = max_cand.max(self.flows[fid].rate);
+                    } else {
+                        has_frozen = true;
+                    }
+                }
+                if !has_frozen {
+                    continue; // all flows here are already candidates
+                }
+                if old_total >= cap - 1e-6 * cap.max(1.0)
+                    && new_cand < self.chan_old_cand[ci] - 1e-7 * self.chan_old_cand[ci].max(1.0)
+                {
+                    absorb.push(ci); // trigger (b)
+                    continue;
+                }
+                if bg + new_cand < cap - 1e-6 * cap.max(1.0) {
+                    continue; // unsaturated now: pins nobody (c)
+                }
+                for k in 0..self.by_channel[ci].len() {
+                    let fid = self.by_channel[ci][k];
+                    if self.flows[fid].in_component == gen {
+                        continue;
+                    }
+                    if self.flows[fid].rate >= max_cand - 1e-6 * max_cand.max(1.0) - 1e-9 {
+                        continue;
+                    }
+                    if !self.pinned_elsewhere(net, fid, ci) {
+                        absorb.push(ci); // trigger (c)
+                        break;
+                    }
+                }
+            }
+
+            if absorb.is_empty() {
+                break; // converged
+            }
+            // Enlarge the candidate set with every frozen flow on the
+            // flagged channels and re-solve.
+            let mut grew = false;
+            for a in 0..absorb.len() {
+                let ci = absorb[a];
+                for k in 0..self.by_channel[ci].len() {
+                    let fid = self.by_channel[ci][k];
+                    if self.flows[fid].in_component != gen && self.flows[fid].in_component != cgen
+                    {
+                        grew = true;
+                        self.flows[fid].in_component = cgen;
+                        cands.push(fid);
+                        cand_old.push(self.flows[fid].rate);
+                    }
+                }
+            }
+            // Re-stamp existing candidates so the cgen membership test
+            // above stays valid next round.
+            for &fid in &cands {
+                self.flows[fid].in_component = cgen;
+            }
+            if !grew {
+                break; // flagged flows were already candidates
+            }
+            self.stats.absorb_restarts += 1;
+        }
+        self.touched = cands;
+    }
+
+    /// True if the flow has a saturated channel other than `skip_ci`
+    /// where it is maximal — a valid max-min bottleneck that justifies
+    /// its current rate (used by absorption trigger (c) to avoid
+    /// absorbing flows that provably cannot rise).
+    fn pinned_elsewhere(&self, net: &SimNet, fid: FlowId, skip_ci: usize) -> bool {
+        let rate = self.flows[fid].rate;
+        for c in &self.flows[fid].channels {
+            let d = c.idx();
+            if d == skip_ci {
+                continue;
+            }
+            let mut load = 0.0;
+            let mut mx = 0.0f64;
+            for &other in &self.by_channel[d] {
+                let r = self.flows[other].rate;
+                load += r;
+                mx = mx.max(r);
+            }
+            let cap = net.cap_by_idx(d);
+            if load >= cap * (1.0 - 1e-6) - 1e-9 && rate >= mx - 1e-6 * mx.max(1.0) - 1e-9 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Background (frozen non-candidate) load of channel `ci` as
+    /// initialized for generation `gen`. `chan_frozen_load` accumulates
+    /// frozen *candidate* rates during the fill, so recompute the
+    /// background from the inverted index.
+    fn chan_frozen_load_snapshot(&self, ci: usize, gen: u64) -> f64 {
+        let mut bg = 0.0;
+        for &fid in &self.by_channel[ci] {
+            if self.flows[fid].in_component != gen {
+                bg += self.flows[fid].rate;
+            }
+        }
+        bg
+    }
+
+    /// Water-filling driven by the saturation heap over `members`, whose
+    /// channels must already be stamped with `gen` and initialized
+    /// (`chan_occ = 0`, `chan_frozen_load` = background load). If
+    /// `absorb` is given, channels that bind while carrying a frozen
+    /// non-member with a higher rate are recorded (absorption trigger a).
+    fn fill(
+        &mut self,
+        net: &SimNet,
+        members: &[FlowId],
+        gen: u64,
+        mut absorb: Option<&mut Vec<usize>>,
+    ) {
         // ---- freeze dead-channel flows at 0, count multiplicities -----
         let mut unfrozen = 0usize;
-        for &fid in &member_flows {
+        for &fid in members {
             let blocked = self.flows[fid]
                 .channels
                 .iter()
@@ -370,28 +1012,25 @@ impl Rates {
             }
         }
 
-        // ---- water-filling driven by the saturation heap ---------------
+        // ---- seed the heap over the members' channels -----------------
         let mut heap: BinaryHeap<Sat> = BinaryHeap::new();
-        let mut seed_channels: Vec<usize> = Vec::new();
-        for &fid in &member_flows {
-            for c in &self.flows[fid].channels {
-                let ci = c.idx();
-                if self.chan_occ[ci] > 0 {
-                    seed_channels.push(ci);
+        for &fid in members {
+            for j in 0..self.flows[fid].channels.len() {
+                let ci = self.flows[fid].channels[j].idx();
+                // First touch per channel: bump the version so any stale
+                // entries from earlier solves die, then push one entry.
+                if self.chan_seeded[ci] != gen {
+                    self.chan_seeded[ci] = gen;
+                    self.chan_ver[ci] = self.chan_ver[ci].wrapping_add(1);
+                    if self.chan_occ[ci] > 0 {
+                        heap.push(Sat {
+                            fill: (net.cap_by_idx(ci) - self.chan_frozen_load[ci])
+                                / self.chan_occ[ci] as f64,
+                            ch: ci,
+                            ver: self.chan_ver[ci],
+                        });
+                    }
                 }
-            }
-        }
-        seed_channels.sort_unstable();
-        seed_channels.dedup();
-        for &ci in &seed_channels {
-            self.chan_ver[ci] = self.chan_ver[ci].wrapping_add(1);
-            if self.chan_occ[ci] > 0 {
-                heap.push(Sat {
-                    fill: (net.cap_by_idx(ci) - self.chan_frozen_load[ci])
-                        / self.chan_occ[ci] as f64,
-                    ch: ci,
-                    ver: self.chan_ver[ci],
-                });
             }
         }
 
@@ -408,14 +1047,29 @@ impl Rates {
             }
             fill = top.fill.max(fill).max(0.0);
 
-            // Freeze every unfrozen flow crossing the binding channel.
-            // Collect first (freezing mutates by_channel-adjacent state),
-            // marking `frozen_at` during collection so a flow crossing
-            // this channel twice dedups in O(1) instead of a Vec scan.
+            // Absorption trigger (a): a frozen non-member on the binding
+            // channel with a higher rate lacks a valid bottleneck here —
+            // it may have to fall; the caller must re-solve with it.
+            if let Some(out) = absorb.as_mut() {
+                for k in 0..self.by_channel[ci].len() {
+                    let fid = self.by_channel[ci][k];
+                    if self.flows[fid].in_component != gen
+                        && self.flows[fid].rate > fill * (1.0 + 1e-6) + 1e-9
+                    {
+                        out.push(ci);
+                        break;
+                    }
+                }
+            }
+
+            // Freeze every unfrozen member crossing the binding channel.
+            // Collect first (freezing mutates channel state), marking
+            // `frozen_at` during collection so a flow crossing this
+            // channel twice dedups in O(1) instead of a Vec scan.
             let mut to_freeze: Vec<FlowId> = Vec::new();
             for k in 0..self.by_channel[ci].len() {
                 let fid = self.by_channel[ci][k];
-                if self.flows[fid].frozen_at != gen {
+                if self.flows[fid].in_component == gen && self.flows[fid].frozen_at != gen {
                     self.flows[fid].frozen_at = gen;
                     to_freeze.push(fid);
                 }
@@ -441,7 +1095,6 @@ impl Rates {
             }
         }
         debug_assert_eq!(unfrozen, 0, "water-filling left unfrozen flows");
-        self.touched = member_flows;
     }
 }
 
@@ -620,5 +1273,125 @@ mod tests {
         let second = r.add_flows(&net, &[&a]);
         assert_eq!(first, second, "freed slot should be reused");
         assert!((r.rate(second[0]) - 50.0).abs() < 1e-6);
+    }
+
+    /// The classic non-monotone removal chain (absorption trigger a):
+    /// freeing `a` lets `b` rise on link 0, which *steals* from `c` on
+    /// link 1 — c must fall from 95 to 90 even though only a was removed.
+    #[test]
+    fn removal_fall_chain_is_absorbed() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), 10.0);
+        net.set_link_capacity(LinkId(1), 100.0);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let fa = [c0];
+        let fb = [c0, c1];
+        let fc = [c1];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&fa, &fb, &fc]);
+        assert!((r.rate(ids[0]) - 5.0).abs() < 1e-9);
+        assert!((r.rate(ids[1]) - 5.0).abs() < 1e-9);
+        assert!((r.rate(ids[2]) - 95.0).abs() < 1e-9);
+        r.remove_flows(&net, &[ids[0]]);
+        assert!((r.rate(ids[1]) - 10.0).abs() < 1e-9, "{}", r.rate(ids[1]));
+        assert!((r.rate(ids[2]) - 90.0).abs() < 1e-9, "{}", r.rate(ids[2]));
+        assert!(r.stats().absorb_restarts >= 1, "chain must trigger absorb");
+    }
+
+    /// The two-step chain (absorption triggers a then b): removing `a`
+    /// lets `b` rise, which makes `c` fall on their shared link, which
+    /// frees capacity for `g` to *rise* on a third link.
+    #[test]
+    fn removal_rise_chain_is_absorbed() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), 10.0);
+        net.set_link_capacity(LinkId(1), 60.0);
+        net.set_link_capacity(LinkId(2), 120.0);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let c2 = Channel::forward(LinkId(2));
+        let fa = [c0];
+        let fb = [c0, c1];
+        let fc = [c1, c2];
+        let fg = [c2];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&fa, &fb, &fc, &fg]);
+        assert!((r.rate(ids[2]) - 55.0).abs() < 1e-9);
+        assert!((r.rate(ids[3]) - 65.0).abs() < 1e-9);
+        r.remove_flows(&net, &[ids[0]]);
+        let fresh = max_min_rates(&net, &[&fb, &fc, &fg]);
+        assert!((r.rate(ids[1]) - fresh[0]).abs() < 1e-9, "b {}", r.rate(ids[1]));
+        assert!((r.rate(ids[2]) - fresh[1]).abs() < 1e-9, "c {}", r.rate(ids[2]));
+        assert!((r.rate(ids[3]) - fresh[2]).abs() < 1e-9, "g {}", r.rate(ids[3]));
+        assert!((r.rate(ids[3]) - 70.0).abs() < 1e-9, "g must rise to 70");
+    }
+
+    /// Both strategies agree through an add/remove sequence, and the
+    /// rise-only strategy does strictly less re-solve work on a
+    /// many-component workload.
+    #[test]
+    fn strategies_agree_and_rise_only_is_narrower() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        // Two independent bottleneck groups + one bridging flow.
+        let chans: Vec<[Channel; 1]> =
+            (0..6).map(|l| [Channel::forward(LinkId(l))]).collect();
+        let bridge = [Channel::forward(LinkId(0)), Channel::forward(LinkId(5))];
+        let mut rise = Rates::new();
+        let mut bfs = Rates::with_strategy(ResolveStrategy::FullComponentBfs);
+        let mut specs: Vec<&[Channel]> = chans.iter().map(|c| c.as_slice()).collect();
+        specs.push(&bridge);
+        let ids_r = rise.add_flows(&net, &specs);
+        let ids_b = bfs.add_flows(&net, &specs);
+        for (&a, &b) in ids_r.iter().zip(&ids_b) {
+            assert!((rise.rate(a) - bfs.rate(b)).abs() < 1e-9);
+        }
+        // Remove the link-0 flow: only the bridge (its channel-mate) can
+        // change; the link-5 flow keeps its share.
+        rise.remove_flows(&net, &[ids_r[0]]);
+        bfs.remove_flows(&net, &[ids_b[0]]);
+        for k in [1usize, 2, 3, 4, 5, 6] {
+            assert!(
+                (rise.rate(ids_r[k]) - bfs.rate(ids_b[k])).abs() < 1e-9,
+                "flow {k}"
+            );
+        }
+        // Rise-only recomputed just the bridge (1 flow); the BFS solver
+        // re-walked the whole bridged component (bridge + link-5 flow).
+        assert_eq!(rise.touched(), &[ids_r[6]][..]);
+        assert!(
+            rise.stats().rate_recomputes < bfs.stats().rate_recomputes,
+            "rise {} vs bfs {}",
+            rise.stats().rate_recomputes,
+            bfs.stats().rate_recomputes
+        );
+    }
+
+    /// Union-find split reclamation: enough multi-channel removals
+    /// trigger a component rebuild that separates the halves again.
+    #[test]
+    fn lazy_rebuild_splits_components() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let left = [Channel::forward(LinkId(0))];
+        let right = [Channel::forward(LinkId(5))];
+        let bridge = [Channel::forward(LinkId(0)), Channel::forward(LinkId(5))];
+        let mut r = Rates::new();
+        let l = r.add_flows(&net, &[&left])[0];
+        let rt = r.add_flows(&net, &[&right])[0];
+        // Repeatedly add and remove bridging flows: every removal is a
+        // potential split; the counters must eventually trigger a
+        // rebuild instead of letting the merged component persist.
+        for _ in 0..24 {
+            let b = r.add_flows(&net, &[&bridge]);
+            r.remove_flows(&net, &b);
+        }
+        assert!(r.stats().uf_rebuilds >= 1, "rebuild never fired");
+        // Rates stay exact throughout.
+        assert!((r.rate(l) - 50.0).abs() < 1e-6);
+        assert!((r.rate(rt) - 50.0).abs() < 1e-6);
     }
 }

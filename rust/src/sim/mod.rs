@@ -9,17 +9,25 @@
 //! dependencies finish. Independent scenarios fan out across OS threads
 //! via [`sweep`].
 //!
-//! # Scaling architecture (this is the Pod-scale hot path)
+//! # Scaling architecture (SuperPod-scale hot path, PR 2)
 //!
 //! * [`fair::Rates`] is the incremental max-min solver: a channel→flow
 //!   inverted index plus a *saturation heap* ordered by the fill level
-//!   at which each channel binds, so a filling round touches only the
-//!   channels whose flows freeze — not every active flow. Its
-//!   `add_flows`/`remove_flows` re-solve only the connected component of
-//!   the flow/channel bipartite graph the change touches.
+//!   at which each channel binds. Component discovery is a **union-find
+//!   over channels** maintained incrementally by `add_flows` (union) and
+//!   split lazily on `remove_flows` (epoch-tagged component rebuild once
+//!   enough possibly-splitting removals accumulate). Removals run a
+//!   **rise-only bounded re-solve**: only flows sharing a bottleneck
+//!   chain with the removed flows are recomputed, against the frozen
+//!   rates of everything else, with three absorption triggers catching
+//!   the non-monotone chains (falls past frozen flows, rises on
+//!   de-loaded channels, under-served frozen flows on newly saturated
+//!   channels). The PR 1 full-component-BFS solver is kept as
+//!   [`fair::ResolveStrategy::FullComponentBfs`], one of two
+//!   differential oracles (the other is [`fair::naive_max_min_rates`]).
 //!
 //!   **Invariants** (pinned by `rust/tests/properties.rs` and the
-//!   differential oracle in `rust/tests/differential_fair.rs`):
+//!   differential interleavings in `rust/tests/differential_fair.rs`):
 //!   1. after every call, each alive flow's rate equals the from-scratch
 //!      max-min allocation of the alive flow set (order-invariance: any
 //!      add/remove sequence reaching the same set yields the same rates);
@@ -32,15 +40,19 @@
 //!   (gates, flow completions, compute) with **lazy deletion**: rate
 //!   changes stamp-invalidate predictions instead of rebuilding the
 //!   queue, and simultaneous completions are batched into a single
-//!   solver update so symmetric collectives stay linear.
+//!   solver update so symmetric collectives stay linear. Stages may be
+//!   **lazily materialized** ([`schedule::StageFlows::Lazy`]) and flow
+//!   slots are recycled, so peak memory is O(active flows) rather than
+//!   O(stages × flows). [`schedule::run_with`] selects the solver
+//!   strategy; [`SimReport::solver`] reports the solver work counters.
 //!
-//! * [`sweep::sweep`] runs scenario batches (failure sets × topologies ×
-//!   collectives) across threads with deterministic per-scenario RNG
-//!   seeding — results are bit-identical for any thread count.
-//!
-//! The original O(flows × hops)-per-round solver is retained as
-//! [`fair::naive_max_min_rates`], the oracle the differential tests
-//! compare against.
+//! * [`sweep::sweep`] runs scenario batches across threads with
+//!   deterministic per-scenario RNG seeding — results are bit-identical
+//!   for any thread count. [`sweep::GridBuilder`] generates cartesian
+//!   (failure set × topology × collective) scenario grids and
+//!   [`sweep::OnlineStats`]/[`sweep::AggTable`] aggregate mean/p99
+//!   tables online; the paper benches and the reliability Monte-Carlo
+//!   build on these instead of hand-rolled loops.
 //!
 //! Fidelity notes (DESIGN.md §1): the paper reports architecture
 //! *ratios* (e.g. 2D-FM at 93–96% of Clos), which a fluid model
@@ -54,8 +66,10 @@ pub mod network;
 pub mod schedule;
 pub mod sweep;
 
-pub use fair::{max_min_rates, FlowId, Rates};
+pub use fair::{max_min_rates, FlowId, Rates, ResolveStrategy, SolverStats};
 pub use flow::FlowSpec;
 pub use network::SimNet;
-pub use schedule::{SimReport, Stage, StageDag};
-pub use sweep::{scenario_seed, sweep as run_sweep, SweepConfig};
+pub use schedule::{run_with, SimConfig, SimReport, Stage, StageDag, StageFlows};
+pub use sweep::{
+    scenario_seed, sweep as run_sweep, AggTable, GridBuilder, OnlineStats, SweepConfig,
+};

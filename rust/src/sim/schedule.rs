@@ -10,19 +10,41 @@
 //! stamped; when rates change the stamp is bumped and the stale heap
 //! entry is simply skipped on pop, so rate changes never force a queue
 //! rebuild. Rates come from the incremental [`Rates`] solver: at each
-//! event batch only the affected component is re-solved and only flows
-//! the solver reports as touched are re-settled (their drained bytes
+//! event batch only the affected flows are re-solved and only flows the
+//! solver reports as touched are re-settled (their drained bytes
 //! accounted at the old rate before the new rate applies). Events that
 //! land at the same instant are processed as one batch — a single
 //! remove/add pair on the solver — which keeps symmetric collectives
 //! (all flows of a phase finishing together) linear instead of
 //! quadratic.
+//!
+//! # SuperPod-scale memory (PR 2)
+//!
+//! Two mechanisms keep peak memory at O(active flows) instead of
+//! O(all flows in the DAG):
+//!
+//! * **Lazy stage materialization** ([`StageFlows::Lazy`]): a stage may
+//!   carry a closure that generates its flow vector on demand; the
+//!   runner materializes it the moment the stage starts and moves the
+//!   channel vectors straight into the solver, so a 5-phase SuperPod
+//!   all-to-all never holds more than one phase's flows. Declared
+//!   `count`/`bytes` metadata keeps [`Stage::flow_count`] and
+//!   [`StageDag::total_bytes`] cheap without materializing.
+//! * **Flow-slot recycling**: completed flows' slots (and their channel
+//!   vectors) are reused by later stages via a free list; stale
+//!   completion events are fended off by the per-slot stamp that lazy
+//!   deletion already maintains.
+//!
+//! [`run_with`] exposes the solver [`ResolveStrategy`] so benches and
+//! differential tests can pit the PR 1 full-component solver against the
+//! rise-only solver on identical workloads ([`run`] uses the default).
 
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
-use crate::topology::Channel;
+use crate::topology::{Channel, Topology};
 
-use super::fair::{FlowId, Rates};
+use super::fair::{FlowId, Rates, ResolveStrategy, SolverStats};
 use super::flow::FlowSpec;
 use super::network::SimNet;
 
@@ -35,11 +57,43 @@ use super::network::SimNet;
 /// were excluded from event generation but never retired).
 const REMNANT_BYTES: f64 = 0.5;
 
+/// A stage's flows: either an eager vector (the PR 1 representation,
+/// still the default for small hand-built DAGs) or a builder closure
+/// materialized when the scheduler reaches the stage.
+#[derive(Clone, Default)]
+pub enum StageFlows {
+    #[default]
+    Empty,
+    Eager(Vec<FlowSpec>),
+    Lazy {
+        /// Generates the stage's flows; must be deterministic and must
+        /// produce exactly `count` flows totalling `bytes` payload
+        /// bytes (the runner asserts the count). Receives the topology
+        /// the simulation runs on, so producers capture only cheap
+        /// parameters (node lists, dims, payload sizes).
+        build: Arc<dyn Fn(&Topology) -> Vec<FlowSpec> + Send + Sync>,
+        count: usize,
+        bytes: f64,
+    },
+}
+
+impl std::fmt::Debug for StageFlows {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageFlows::Empty => write!(f, "Empty"),
+            StageFlows::Eager(v) => write!(f, "Eager({} flows)", v.len()),
+            StageFlows::Lazy { count, bytes, .. } => {
+                write!(f, "Lazy({count} flows, {bytes:.0} B)")
+            }
+        }
+    }
+}
+
 /// One DAG stage.
 #[derive(Clone, Debug, Default)]
 pub struct Stage {
     pub name: String,
-    pub flows: Vec<FlowSpec>,
+    flows: StageFlows,
     /// Local computation overlapped with nothing else in this stage; the
     /// stage ends when flows *and* compute are done.
     pub compute_us: f64,
@@ -54,17 +108,89 @@ impl Stage {
             ..Default::default()
         }
     }
+
+    /// Attach an eager flow vector.
     pub fn with_flows(mut self, flows: Vec<FlowSpec>) -> Stage {
-        self.flows = flows;
+        self.flows = StageFlows::Eager(flows);
         self
     }
+
+    /// Attach a lazy flow builder. `count` and `bytes` must match what
+    /// `build` produces (count is asserted at materialization; bytes
+    /// feeds [`StageDag::total_bytes`]).
+    pub fn with_lazy_flows(
+        mut self,
+        count: usize,
+        bytes: f64,
+        build: impl Fn(&Topology) -> Vec<FlowSpec> + Send + Sync + 'static,
+    ) -> Stage {
+        self.flows = StageFlows::Lazy {
+            build: Arc::new(build),
+            count,
+            bytes,
+        };
+        self
+    }
+
     pub fn with_compute(mut self, us: f64) -> Stage {
         self.compute_us = us;
         self
     }
+
     pub fn after(mut self, deps: Vec<usize>) -> Stage {
         self.deps = deps;
         self
+    }
+
+    /// Number of flows this stage will release (no materialization).
+    pub fn flow_count(&self) -> usize {
+        match &self.flows {
+            StageFlows::Empty => 0,
+            StageFlows::Eager(v) => v.len(),
+            StageFlows::Lazy { count, .. } => *count,
+        }
+    }
+
+    /// Total payload bytes this stage carries (no materialization).
+    pub fn flow_bytes(&self) -> f64 {
+        match &self.flows {
+            StageFlows::Empty => 0.0,
+            StageFlows::Eager(v) => v.iter().map(|f| f.bytes).sum(),
+            StageFlows::Lazy { bytes, .. } => *bytes,
+        }
+    }
+
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.flows, StageFlows::Lazy { .. })
+    }
+
+    /// The eager flow vector, if this stage has one (tests and DAG
+    /// composition helpers use this; lazy stages return `None`).
+    pub fn eager_flows(&self) -> Option<&[FlowSpec]> {
+        match &self.flows {
+            StageFlows::Empty => Some(&[]),
+            StageFlows::Eager(v) => Some(v),
+            StageFlows::Lazy { .. } => None,
+        }
+    }
+
+    /// Materialize this stage's flows (clones eager vectors).
+    pub fn materialize_flows(&self, t: &Topology) -> Vec<FlowSpec> {
+        match &self.flows {
+            StageFlows::Empty => Vec::new(),
+            StageFlows::Eager(v) => v.clone(),
+            StageFlows::Lazy { build, count, .. } => {
+                let v = build(t);
+                assert_eq!(
+                    v.len(),
+                    *count,
+                    "lazy stage '{}' declared {count} flows but built {}",
+                    self.name,
+                    v.len()
+                );
+                v
+            }
+        }
     }
 }
 
@@ -93,13 +219,41 @@ impl StageDag {
         dag
     }
 
+    /// Total payload bytes across all stages (lazy stages answer from
+    /// their declared metadata, no materialization).
     pub fn total_bytes(&self) -> f64 {
-        self.stages
-            .iter()
-            .flat_map(|s| &s.flows)
-            .map(|f| f.bytes)
-            .sum()
+        self.stages.iter().map(|s| s.flow_bytes()).sum()
     }
+
+    /// Total flow count across all stages.
+    pub fn total_flow_count(&self) -> usize {
+        self.stages.iter().map(|s| s.flow_count()).sum()
+    }
+
+    /// An all-eager copy of this DAG (every lazy stage materialized
+    /// against `t`). The lazy/eager equivalence property test runs both
+    /// through [`run`] and asserts identical reports.
+    pub fn materialized(&self, t: &Topology) -> StageDag {
+        StageDag {
+            stages: self
+                .stages
+                .iter()
+                .map(|s| Stage {
+                    name: s.name.clone(),
+                    flows: StageFlows::Eager(s.materialize_flows(t)),
+                    compute_us: s.compute_us,
+                    deps: s.deps.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Runner configuration (see [`run_with`]).
+#[derive(Clone, Debug, Default)]
+pub struct SimConfig {
+    /// Re-solve strategy for the max-min solver.
+    pub strategy: ResolveStrategy,
 }
 
 /// Result of executing a DAG.
@@ -115,8 +269,12 @@ pub struct SimReport {
     pub events: u64,
     /// Peak concurrently-active flows.
     pub peak_flows: usize,
+    /// Solver work counters for the whole run (re-solves, rate
+    /// recomputes, the full-component equivalent, absorb restarts).
+    pub solver: SolverStats,
 }
 
+#[derive(Default)]
 struct ActiveFlow {
     stage: usize,
     /// Channels, present until the flow joins the solver (then owned by
@@ -132,7 +290,9 @@ struct ActiveFlow {
     /// Solver handle once the gate opened.
     solver_id: Option<FlowId>,
     done: bool,
-    /// Lazy-deletion stamp for completion events.
+    /// Lazy-deletion stamp for completion events. Survives slot reuse —
+    /// a recycled slot keeps counting up, so events addressed to the
+    /// previous occupant stay stale.
     stamp: u64,
 }
 
@@ -168,8 +328,14 @@ impl Ord for Ev {
     }
 }
 
-/// Execute the DAG on the network. Panics on cyclic dependencies.
+/// Execute the DAG on the network with the default configuration.
+/// Panics on cyclic dependencies.
 pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
+    run_with(net, dag, &SimConfig::default())
+}
+
+/// Execute the DAG with an explicit [`SimConfig`].
+pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
     let n = dag.stages.len();
     let mut dep_left: Vec<usize> = dag.stages.iter().map(|s| s.deps.len()).collect();
     let mut dependants: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -181,13 +347,14 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
     }
 
     let mut stage_done = vec![f64::NAN; n];
-    let mut flows_left: Vec<usize> = dag.stages.iter().map(|s| s.flows.len()).collect();
+    let mut flows_left: Vec<usize> = dag.stages.iter().map(|s| s.flow_count()).collect();
     let mut compute_done_at: Vec<f64> = vec![f64::NAN; n];
     let mut started = vec![false; n];
     let mut done_count = 0usize;
 
     let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut rates = Rates::new();
+    let mut free_slots: Vec<usize> = Vec::new();
+    let mut rates = Rates::with_strategy(cfg.strategy);
     // Reverse map: solver FlowId → index in `active` (MAX = free).
     let mut sid_to_active: Vec<usize> = Vec::new();
     let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
@@ -197,30 +364,69 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
     let mut alive = 0usize;
     let mut peak = 0usize;
 
-    // Start a stage: spawn its gated flows + compute event.
+    // Spawn one gated flow into a (possibly recycled) slot. All inputs
+    // are evaluated before any local binding — the caller's expressions
+    // may reference names this macro would otherwise shadow.
+    macro_rules! spawn_flow {
+        ($stage:expr, $bytes:expr, $latency:expr, $channels:expr) => {{
+            let spawn_stage: usize = $stage;
+            let spawn_bytes: f64 = $bytes;
+            let gate = now + $latency;
+            let channels: Vec<Channel> = $channels;
+            let slot = match free_slots.pop() {
+                Some(s) => s,
+                None => {
+                    active.push(ActiveFlow::default());
+                    active.len() - 1
+                }
+            };
+            let slot_f = &mut active[slot];
+            slot_f.stage = spawn_stage;
+            slot_f.hops = channels.len() as f64;
+            slot_f.channels = Some(channels);
+            slot_f.remaining_bytes = spawn_bytes;
+            slot_f.rate_gb_s = 0.0;
+            slot_f.settled_us = gate;
+            slot_f.solver_id = None;
+            slot_f.done = false;
+            slot_f.stamp += 1; // fence off events for the previous occupant
+            alive += 1;
+            heap.push(Ev {
+                t: gate,
+                kind: EvKind::Gate(slot),
+            });
+        }};
+    }
+
+    // Start a stage: materialize + spawn its gated flows, compute event.
     macro_rules! start_stage {
         ($i:expr) => {{
             let i = $i;
             debug_assert!(!started[i]);
             started[i] = true;
-            for f in &dag.stages[i].flows {
-                let gate = now + f.latency_us;
-                active.push(ActiveFlow {
-                    stage: i,
-                    hops: f.channels.len() as f64,
-                    channels: Some(f.channels.clone()),
-                    remaining_bytes: f.bytes,
-                    rate_gb_s: 0.0,
-                    settled_us: gate,
-                    solver_id: None,
-                    done: false,
-                    stamp: 0,
-                });
-                alive += 1;
-                heap.push(Ev {
-                    t: gate,
-                    kind: EvKind::Gate(active.len() - 1),
-                });
+            match &dag.stages[i].flows {
+                StageFlows::Empty => {}
+                StageFlows::Eager(v) => {
+                    for f in v {
+                        spawn_flow!(i, f.bytes, f.latency_us, f.channels.clone());
+                    }
+                }
+                StageFlows::Lazy { build, count, .. } => {
+                    let v = build(net.topo);
+                    assert_eq!(
+                        v.len(),
+                        *count,
+                        "lazy stage '{}' declared {} flows but built {}",
+                        dag.stages[i].name,
+                        count,
+                        v.len()
+                    );
+                    for f in v {
+                        // Move the channel vectors: the materialized
+                        // stage is dropped right here, not retained.
+                        spawn_flow!(i, f.bytes, f.latency_us, f.channels);
+                    }
+                }
             }
             peak = peak.max(alive);
             compute_done_at[i] = now + dag.stages[i].compute_us;
@@ -350,6 +556,9 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
             }
             f.done = true;
             f.stamp += 1;
+            // An un-gated degenerate flow still owns its channel vector;
+            // drop it now so recycled slots don't hoard memory.
+            f.channels = None;
             alive -= 1;
             flows_left[f.stage] -= 1;
         }
@@ -382,6 +591,10 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
             }
             byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
         }
+        // Recycle the completed slots for stages started at the next
+        // settle fixpoint. (Safe: their stamps were bumped above, so any
+        // still-queued event for them is stale.)
+        free_slots.extend_from_slice(&completed);
     }
 
     assert!(
@@ -396,6 +609,7 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
         byte_hops,
         events,
         peak_flows: peak,
+        solver: rates.stats().clone(),
     }
 }
 
@@ -412,7 +626,7 @@ fn retime(
 ) -> f64 {
     let mut byte_hops = 0.0;
     for &fid in rates.touched() {
-        let i = sid_to_active[fid];
+        let i = sid_to_active.get(fid).copied().unwrap_or(usize::MAX);
         if i == usize::MAX {
             continue; // removed in this same batch
         }
@@ -579,6 +793,90 @@ mod tests {
             "{} vs {expect}",
             r.makespan_us
         );
+    }
+
+    #[test]
+    fn both_strategies_produce_identical_reports() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        let a = dag.push(Stage::new("a").with_flows(vec![
+            FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 100e6),
+            FlowSpec::along(&t, &[NodeId(0), NodeId(1), NodeId(2)], 250e6),
+            FlowSpec::along(&t, &[NodeId(1), NodeId(2)], 400e6),
+        ]));
+        dag.push(
+            Stage::new("b")
+                .with_flows(vec![FlowSpec::along(&t, &[NodeId(2), NodeId(3)], 80e6)])
+                .after(vec![a]),
+        );
+        let rise = run_with(&net, &dag, &SimConfig::default());
+        let bfs = run_with(
+            &net,
+            &dag,
+            &SimConfig {
+                strategy: ResolveStrategy::FullComponentBfs,
+            },
+        );
+        assert!((rise.makespan_us - bfs.makespan_us).abs() < 1e-6 * bfs.makespan_us);
+        assert!((rise.byte_hops - bfs.byte_hops).abs() < 1e-6 * bfs.byte_hops);
+        assert_eq!(rise.peak_flows, bfs.peak_flows);
+    }
+
+    #[test]
+    fn lazy_stage_materializes_and_matches_eager() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let bytes = 500e6;
+        let mut lazy = StageDag::default();
+        lazy.push(Stage::new("xfer").with_lazy_flows(2, 2.0 * bytes, move |t| {
+            vec![
+                FlowSpec::along(t, &[NodeId(0), NodeId(1)], bytes),
+                FlowSpec::along(t, &[NodeId(2), NodeId(3)], bytes),
+            ]
+        }));
+        assert!(lazy.stages[0].is_lazy());
+        assert_eq!(lazy.stages[0].flow_count(), 2);
+        assert!((lazy.total_bytes() - 2.0 * bytes).abs() < 1.0);
+        let r1 = run(&net, &lazy);
+        let r2 = run(&net, &lazy.materialized(&t));
+        assert_eq!(r1.makespan_us, r2.makespan_us);
+        assert_eq!(r1.byte_hops, r2.byte_hops);
+        assert_eq!(r1.events, r2.events);
+    }
+
+    #[test]
+    #[should_panic(expected = "declared 3 flows but built 2")]
+    fn lazy_stage_count_mismatch_panics() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("bad").with_lazy_flows(3, 1e6, |t| {
+            vec![
+                FlowSpec::along(t, &[NodeId(0), NodeId(1)], 5e5),
+                FlowSpec::along(t, &[NodeId(1), NodeId(2)], 5e5),
+            ]
+        }));
+        run(&net, &dag);
+    }
+
+    #[test]
+    fn flow_slots_are_recycled_across_stages() {
+        // 6 serial stages of 2 flows each: peak concurrency is 2, so the
+        // active table should recycle instead of growing 12 slots.
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut stages = Vec::new();
+        for k in 0..6 {
+            stages.push(Stage::new(format!("s{k}")).with_flows(vec![
+                FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 10e6),
+                FlowSpec::along(&t, &[NodeId(2), NodeId(3)], 10e6),
+            ]));
+        }
+        let dag = StageDag::chain(stages);
+        let r = run(&net, &dag);
+        assert_eq!(r.peak_flows, 2);
+        assert!((r.byte_hops - 12.0 * 10e6).abs() < 1.0);
     }
 
     #[test]

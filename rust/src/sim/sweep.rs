@@ -123,6 +123,243 @@ where
     sweep(&SweepConfig::default(), scenarios, f)
 }
 
+// ----------------------------------------------------------------------
+// Cartesian scenario grids + online aggregation (PR 2 sweep ergonomics)
+// ----------------------------------------------------------------------
+
+/// Cartesian scenario grid feeding [`sweep`]. Replaces the hand-rolled
+/// scenario-vector + index-lookup loops in the paper benches: declare
+/// the axes, get the ordered scenario list and a parallel runner.
+///
+/// ```ignore
+/// let grid = GridBuilder::cartesian2(&sizes, &faults, |&n, &k| Some((n, k)));
+/// let rows = grid.run(|_i, &(n, k), rng| simulate(n, k, rng));
+/// ```
+pub struct GridBuilder<S> {
+    scenarios: Vec<S>,
+    cfg: SweepConfig,
+}
+
+impl<S: Sync> GridBuilder<S> {
+    /// Wrap an explicit scenario list (chunked Monte-Carlo, custom
+    /// grids).
+    pub fn from_scenarios(scenarios: Vec<S>) -> GridBuilder<S> {
+        GridBuilder {
+            scenarios,
+            cfg: SweepConfig::default(),
+        }
+    }
+
+    /// One-axis grid: `make` may veto combinations by returning `None`.
+    pub fn cartesian1<A>(a: &[A], make: impl Fn(&A) -> Option<S>) -> GridBuilder<S> {
+        GridBuilder::from_scenarios(a.iter().filter_map(make).collect())
+    }
+
+    /// Two-axis cartesian product, row-major (`a` outer, `b` inner).
+    pub fn cartesian2<A, B>(
+        a: &[A],
+        b: &[B],
+        make: impl Fn(&A, &B) -> Option<S>,
+    ) -> GridBuilder<S> {
+        let mut scenarios = Vec::with_capacity(a.len() * b.len());
+        for x in a {
+            for y in b {
+                if let Some(s) = make(x, y) {
+                    scenarios.push(s);
+                }
+            }
+        }
+        GridBuilder::from_scenarios(scenarios)
+    }
+
+    /// Three-axis cartesian product (failure set × topology ×
+    /// collective), row-major.
+    pub fn cartesian3<A, B, C>(
+        a: &[A],
+        b: &[B],
+        c: &[C],
+        make: impl Fn(&A, &B, &C) -> Option<S>,
+    ) -> GridBuilder<S> {
+        let mut scenarios = Vec::with_capacity(a.len() * b.len() * c.len());
+        for x in a {
+            for y in b {
+                for z in c {
+                    if let Some(s) = make(x, y, z) {
+                        scenarios.push(s);
+                    }
+                }
+            }
+        }
+        GridBuilder::from_scenarios(scenarios)
+    }
+
+    pub fn with_config(mut self, cfg: SweepConfig) -> GridBuilder<S> {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn scenarios(&self) -> &[S] {
+        &self.scenarios
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    /// Index of the first scenario matching `pred` (benches use this to
+    /// look results back up by axis values).
+    pub fn position(&self, pred: impl Fn(&S) -> bool) -> Option<usize> {
+        self.scenarios.iter().position(pred)
+    }
+
+    /// Run the grid through [`sweep`]; results come back in scenario
+    /// order (deterministic for any thread count).
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &S, &mut Rng) -> T + Sync,
+    {
+        sweep(&self.cfg, &self.scenarios, f)
+    }
+
+    /// Run the grid and fold each scenario's `f64` result into an
+    /// [`AggTable`] keyed by `key` (insertion-ordered, so table rows
+    /// print in axis order).
+    pub fn run_agg<F, K>(&self, key: K, f: F) -> AggTable
+    where
+        F: Fn(usize, &S, &mut Rng) -> f64 + Sync,
+        K: Fn(&S) -> String,
+    {
+        let vals = self.run(f);
+        let mut agg = AggTable::default();
+        for (s, v) in self.scenarios.iter().zip(vals) {
+            agg.add(key(s), v);
+        }
+        agg
+    }
+}
+
+/// Streaming summary statistics: Welford mean/variance plus exact
+/// quantiles from retained samples (scenario counts are small — at most
+/// a few thousand per sweep — so exactness beats a sketch).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+}
+
+impl OnlineStats {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.samples.push(x);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Exact running sum (the Monte-Carlo reducer needs sums, not means).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Exact quantile (nearest-rank on the sorted samples), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile {q} out of range");
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((sorted.len() as f64 * q).ceil() as usize)
+            .saturating_sub(1)
+            .min(sorted.len() - 1);
+        sorted[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Insertion-ordered table of key → [`OnlineStats`]: the mean/p99
+/// aggregation behind the sweep benches' tables.
+#[derive(Clone, Debug, Default)]
+pub struct AggTable {
+    rows: Vec<(String, OnlineStats)>,
+}
+
+impl AggTable {
+    pub fn add(&mut self, key: impl Into<String>, value: f64) {
+        let key = key.into();
+        match self.rows.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, stats)) => stats.push(value),
+            None => {
+                let mut stats = OnlineStats::default();
+                stats.push(value);
+                self.rows.push((key, stats));
+            }
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&OnlineStats> {
+        self.rows.iter().find(|(k, _)| k == key).map(|(_, s)| s)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &OnlineStats)> {
+        self.rows.iter().map(|(k, s)| (k.as_str(), s))
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +402,63 @@ mod tests {
     fn empty_sweep_is_empty() {
         let out: Vec<u32> = sweep_default(&[] as &[u8], |_, _, _| 1);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn grid_builder_cartesian_orders_and_filters() {
+        let a = [1usize, 2, 3];
+        let b = ["x", "y"];
+        let g = GridBuilder::cartesian2(&a, &b, |&n, &s| {
+            (n != 2).then(|| (n, s.to_string()))
+        });
+        assert_eq!(g.len(), 4); // n=2 vetoed on both b values
+        assert_eq!(g.scenarios()[0], (1, "x".to_string()));
+        assert_eq!(g.scenarios()[1], (1, "y".to_string()));
+        assert_eq!(g.scenarios()[3], (3, "y".to_string()));
+        assert_eq!(g.position(|s| s.0 == 3), Some(2));
+        let out = g.run(|i, s, _| (i, s.0));
+        assert_eq!(out, vec![(0, 1), (1, 1), (2, 3), (3, 3)]);
+    }
+
+    #[test]
+    fn grid_builder_cartesian3_row_major() {
+        let g = GridBuilder::cartesian3(&[0u8, 1], &[0u8, 1], &[0u8, 1], |&a, &b, &c| {
+            Some((a, b, c))
+        });
+        assert_eq!(g.len(), 8);
+        assert_eq!(g.scenarios()[0], (0, 0, 0));
+        assert_eq!(g.scenarios()[1], (0, 0, 1));
+        assert_eq!(g.scenarios()[7], (1, 1, 1));
+    }
+
+    #[test]
+    fn online_stats_mean_quantiles_and_sum() {
+        let mut s = OnlineStats::default();
+        for x in [4.0, 1.0, 3.0, 2.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.sum() - 15.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.p99(), 5.0);
+        assert!((s.var() - 2.5).abs() < 1e-12); // sample variance of 1..5
+    }
+
+    #[test]
+    fn agg_table_groups_in_insertion_order() {
+        let sizes = [4usize, 8];
+        let reps = [0u64, 1, 2];
+        let agg = GridBuilder::cartesian2(&sizes, &reps, |&n, &r| Some((n, r)))
+            .run_agg(|&(n, _)| format!("n={n}"), |_i, &(n, r), _rng| (n + r as usize) as f64);
+        assert_eq!(agg.len(), 2);
+        let keys: Vec<&str> = agg.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["n=4", "n=8"]);
+        let s4 = agg.get("n=4").unwrap();
+        assert_eq!(s4.n(), 3);
+        assert!((s4.mean() - 5.0).abs() < 1e-12); // (4+5+6)/3
     }
 
     #[test]

@@ -90,6 +90,84 @@ pub fn section(title: &str) {
     println!("\n### {title}");
 }
 
+/// Machine-readable bench sink: collects [`BenchResult`]s and scalar
+/// metrics, then writes the `BENCH_sim.json` document (schema
+/// `ubmesh.bench_sim.v1`, documented in `rust/benches/README.md`) so the
+/// perf trajectory is tracked across PRs / CI artifacts. Hand-rolled
+/// writer — the crate is zero-dependency, no serde offline.
+#[derive(Default)]
+pub struct JsonReport {
+    benches: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.benches.push(r.clone());
+    }
+
+    /// Record a named scalar (counters, ratios, µs values). Keys are
+    /// dotted paths, e.g. `superpod32k.recompute_ratio`.
+    pub fn metric(&mut self, name: impl Into<String>, value: f64) {
+        self.metrics.push((name.into(), value));
+    }
+
+    /// Serialize to the schema string.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.chars()
+                .flat_map(|c| match c {
+                    '"' => "\\\"".chars().collect::<Vec<_>>(),
+                    '\\' => "\\\\".chars().collect(),
+                    '\n' => "\\n".chars().collect(),
+                    c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                    c => vec![c],
+                })
+                .collect()
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                // Round-trippable and JSON-legal (no trailing dot, no inf).
+                format!("{v:?}")
+            } else {
+                "null".into()
+            }
+        }
+        let mut out = String::from("{\n  \"schema\": \"ubmesh.bench_sim.v1\",\n  \"benches\": [");
+        for (i, b) in self.benches.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}}}",
+                esc(&b.name),
+                b.iters,
+                b.mean.as_nanos(),
+                b.p50.as_nanos(),
+                b.p99.as_nanos()
+            ));
+        }
+        out.push_str("\n  ],\n  \"metrics\": {");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": {}", esc(k), num(*v)));
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +181,26 @@ mod tests {
         });
         assert_eq!(r.iters + 1, n); // +1 warmup
         assert!(r.mean <= r.p99 * 2 + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut j = JsonReport::new();
+        let r = bench_with_budget("a \"quoted\" name", Duration::from_millis(1), || {
+            black_box(1 + 1);
+        });
+        j.push(&r);
+        j.metric("superpod32k.recompute_ratio", 7.5);
+        j.metric("bad.value", f64::NAN);
+        let s = j.to_json();
+        assert!(s.contains("\"schema\": \"ubmesh.bench_sim.v1\""));
+        assert!(s.contains("a \\\"quoted\\\" name"));
+        assert!(s.contains("\"superpod32k.recompute_ratio\": 7.5"));
+        assert!(s.contains("\"bad.value\": null"));
+        // Must be parseable by the CI artifact consumers: minimal sanity
+        // — balanced braces/brackets, no stray trailing commas.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]") && !s.contains(",\n  }"));
     }
 }

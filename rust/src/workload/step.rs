@@ -136,13 +136,14 @@ pub fn rack_iteration_dag(
         let shard = act / 8.0;
         let mut tp_flows = Vec::new();
         for b in &boards {
-            let rs = crate::collectives::hierarchical::fullmesh_reduce_scatter_stage(
+            // Reduce-scatter + allgather wire patterns fused into one
+            // overlapped stage — both are the direct shard exchange, so
+            // build the flow set once and release it twice.
+            let xchg = crate::collectives::hierarchical::fullmesh_shard_exchange_flows(
                 t, b, shard,
             );
-            tp_flows.extend(rs.flows);
-            let ag =
-                crate::collectives::hierarchical::fullmesh_allgather_stage(t, b, shard);
-            tp_flows.extend(ag.flows);
+            tp_flows.extend(xchg.iter().cloned());
+            tp_flows.extend(xchg);
         }
         stages.push(
             Stage::new(format!("L{l}-tp"))
@@ -152,9 +153,11 @@ pub fn rack_iteration_dag(
         // SP AllGather across columns.
         let mut sp_flows = Vec::new();
         for c in &cols {
-            let ag =
-                crate::collectives::hierarchical::fullmesh_allgather_stage(t, c, act);
-            sp_flows.extend(ag.flows);
+            sp_flows.extend(
+                crate::collectives::hierarchical::fullmesh_shard_exchange_flows(
+                    t, c, act,
+                ),
+            );
         }
         stages.push(Stage::new(format!("L{l}-sp")).with_flows(sp_flows));
     }

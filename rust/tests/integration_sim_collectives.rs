@@ -73,7 +73,10 @@ fn rack_alltoall_completes_with_one_hop_forwarding() {
     let (t, h) = rack();
     let g = Grid::new(&h.npus, 8, 8);
     let dag = multipath_alltoall_dag(&t, &g, 10.5e6 / 63.0); // Table 1 EP volume
-    assert!(dag.stages[0].flows.iter().all(|f| f.channels.len() <= 2));
+    assert!(dag.stages[0]
+        .materialize_flows(&t)
+        .iter()
+        .all(|f| f.channels.len() <= 2));
     let net = SimNet::new(&t);
     let r = sim::schedule::run(&net, &dag);
     assert!(r.makespan_us > 0.0);

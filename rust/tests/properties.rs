@@ -308,6 +308,80 @@ fn des_conserves_byte_hops() {
 }
 
 #[test]
+fn lazy_and_eager_stage_materialization_agree() {
+    // Lazy builders are deterministic and the runner consumes flows in
+    // the same order either way, so the reports must be *identical* —
+    // not merely close — across the lazy DAG producers.
+    use ubmesh::collectives::alltoall::{
+        dimwise_alltoall_dag, multipath_alltoall_dag, superpod_alltoall_dag, Grid,
+    };
+    use ubmesh::collectives::ring::ring_allreduce_dag;
+    forall("lazy == eager stage materialization", 12, |rng| {
+        let d0 = rng.range(2, 5);
+        let d1 = rng.range(2, 4);
+        let pods = rng.range(2, 4);
+        let t = nd_fullmesh(
+            "lz",
+            &[
+                DimSpec::new(d0, 2, CableClass::PassiveElectrical, 0.5),
+                DimSpec::new(d1, 2, CableClass::PassiveElectrical, 1.0),
+                DimSpec::new(pods, 2, CableClass::Optical, 20.0),
+            ],
+        );
+        let bytes = 1e6 * (1.0 + rng.f64() * 7.0);
+        let dags = [
+            dimwise_alltoall_dag(&t, &[d0, d1, pods], bytes),
+            superpod_alltoall_dag(&t, &[d0, d1], pods, bytes, rng.f64()),
+            ring_allreduce_dag(
+                &t,
+                &(0..d0).map(|i| NodeId(i as u32)).collect::<Vec<_>>(),
+                bytes,
+            ),
+        ];
+        let net = SimNet::new(&t);
+        // The 2D grid producers need a genuine 2D mesh (grid rows and
+        // columns must be directly linked).
+        let t2 = nd_fullmesh(
+            "lz2",
+            &[
+                DimSpec::new(d0, 2, CableClass::PassiveElectrical, 0.5),
+                DimSpec::new(d1, 2, CableClass::PassiveElectrical, 1.0),
+            ],
+        );
+        let g_nodes = t2.npus.clone();
+        let dag2 = multipath_alltoall_dag(&t2, &Grid::new(&g_nodes, d0, d1), bytes / 10.0);
+        let net2 = SimNet::new(&t2);
+        let l2 = sim::schedule::run(&net2, &dag2);
+        let e2 = sim::schedule::run(&net2, &dag2.materialized(&t2));
+        assert_eq!(l2.makespan_us, e2.makespan_us);
+        assert_eq!(l2.byte_hops, e2.byte_hops);
+        for dag in &dags {
+            assert!(dag.stages.iter().any(|s| s.is_lazy()));
+            let lazy = sim::schedule::run(&net, dag);
+            let eager = sim::schedule::run(&net, &dag.materialized(&t));
+            assert_eq!(lazy.makespan_us, eager.makespan_us);
+            assert_eq!(lazy.byte_hops, eager.byte_hops);
+            assert_eq!(lazy.events, eager.events);
+            assert_eq!(lazy.peak_flows, eager.peak_flows);
+            assert_eq!(lazy.stage_done_us, eager.stage_done_us);
+            // Declared lazy metadata matches what materialization built.
+            let total: f64 = dag
+                .stages
+                .iter()
+                .map(|s| {
+                    s.materialize_flows(&t).iter().map(|f| f.bytes).sum::<f64>()
+                })
+                .sum();
+            assert!(
+                (dag.total_bytes() - total).abs() <= 1e-6 * total.max(1.0),
+                "declared {} vs built {total}",
+                dag.total_bytes()
+            );
+        }
+    });
+}
+
+#[test]
 fn cost_models_are_scale_homogeneous() {
     // Doubling every price doubles CapEx but leaves ratios unchanged —
     // guards the Fig 21 ratios against price-book drift.
