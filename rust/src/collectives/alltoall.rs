@@ -10,7 +10,16 @@
 //!   dimension.
 //! * [`superpod_alltoall_dag`] — the 8-Pod SuperPod workload: intra-pod
 //!   dimension-wise phases followed by an inter-pod phase with APR
-//!   two-path transmission and optional per-pair payload jitter.
+//!   two-path transmission and optional per-pair payload jitter. The
+//!   pod tier is modeled as the generalized nD-FullMesh dimension.
+//! * [`superpod_hrs_alltoall_dag`] — the *HRS-routed* SuperPod workload
+//!   (PR 3): built on the real [`crate::topology::superpod`] Clos tier,
+//!   the inter-pod phase routes every flow through rack uplinks →
+//!   HRS → destination rack (6 hops), with APR two-path selection
+//!   across uplink planes, bottleneck-weighted traffic splits, payload
+//!   jitter *and* deterministic gate staggering — thousands of
+//!   stage-gate adds land in a live contention-heavy component, which
+//!   is exactly what the fall-only bounded add re-solve is for.
 //!
 //! All DAG producers here build **lazy stages**
 //! ([`crate::sim::StageFlows::Lazy`]): the closures capture only cheap
@@ -21,7 +30,9 @@
 
 use std::sync::Arc;
 
+use crate::routing::apr::{hrs_plane_pair, PathKind, PathSet, RoutedPath};
 use crate::sim::{FlowSpec, Stage, StageDag};
+use crate::topology::superpod::SuperPodHandles;
 use crate::topology::{NodeId, Topology};
 use crate::util::rng::splitmix64;
 
@@ -372,16 +383,22 @@ fn pair_factor(i: usize, q: usize, jitter: f64) -> f64 {
     1.0 + jitter * u
 }
 
-/// Total payload bytes of the inter-pod phase (sum of the jittered pair
-/// payloads; both halves of a pair share one factor).
-fn superpod_interpod_bytes(pod_n: usize, pods: usize, bytes_per_peer: f64, jitter: f64) -> f64 {
+/// Total payload bytes of `n` nodes each exchanging with `peers` peer
+/// pods (sum of the jittered pair payloads; both halves of a pair
+/// share one factor).
+fn jittered_pairs_bytes(n: usize, peers: usize, bytes_per_peer: f64, jitter: f64) -> f64 {
     let mut total = 0.0;
-    for i in 0..pod_n * pods {
-        for q in 1..pods {
+    for i in 0..n {
+        for q in 1..=peers {
             total += bytes_per_peer * pair_factor(i, q, jitter);
         }
     }
     total
+}
+
+/// Total payload bytes of the inter-pod phase.
+fn superpod_interpod_bytes(pod_n: usize, pods: usize, bytes_per_peer: f64, jitter: f64) -> f64 {
+    jittered_pairs_bytes(pod_n * pods, pods - 1, bytes_per_peer, jitter)
 }
 
 /// The inter-pod flow vector. For node `x` (coords `c`, pod `p`) and pod
@@ -436,6 +453,261 @@ fn superpod_interpod_flows(
                 &[t.npus[i], t.npus[via], t.npus[via_q], t.npus[dst]],
                 b / 2.0,
             ));
+        }
+    }
+    flows
+}
+
+/// Owned SuperPod structure captured by the HRS lazy stage builders:
+/// just the node-id tables the flow generators index into, not the
+/// topology itself.
+struct HrsCtx {
+    /// Per rack (pod-major), NPUs in board-major order.
+    rack_npus: Vec<Vec<NodeId>>,
+    /// Per rack, per plane: the 8 board-attach LRS.
+    npu_lrs: Vec<Vec<Vec<NodeId>>>,
+    /// Per rack, per uplink-LRS index `k = plane*2 + slot`: the LRS and
+    /// its HRS neighbors (see `SuperPodHandles::rack_uplinks`).
+    uplinks: Vec<Vec<(NodeId, Vec<NodeId>)>>,
+    racks_per_pod: usize,
+    pods: usize,
+    slots: usize,
+}
+
+/// Deterministic per-(node, peer-pod) seed for the gate stagger
+/// (independent of the payload stream; plane/HRS selection is a
+/// *balanced rotation*, not seed-driven — see `hrs_interpod_flows`).
+fn hrs_pair_seed(i: usize, q: usize) -> u64 {
+    let mut s = 0x0DD_C0FFEE_u64 ^ ((i as u64) << 18) ^ q as u64;
+    splitmix64(&mut s)
+}
+
+/// SuperPod All2All over the real HRS Clos tier (§3.3.4): two intra-rack
+/// phases (board-X then slot-Y full-mesh exchanges over direct links),
+/// then one **HRS-routed inter-pod phase**. Every NPU exchanges
+/// `bytes_per_peer` with its rail-aligned peer (same rack index within
+/// the pod, same NPU index within the rack) in each of `peer_pods`
+/// following pods; each pair's payload is split over **two APR paths
+/// through distinct uplink planes** ([`hrs_plane_pair`]), weighted by
+/// path bottleneck ([`PathSet::weighted_by_bottleneck`]):
+///
+/// ```text
+/// npu → board LRS → uplink LRS → HRS → uplink LRS' → board LRS' → npu'
+///        (plane π)   (slot k)     (j)    (dst rack)    (plane π)
+/// ```
+///
+/// `jitter > 0` does two things, both deterministic (SplitMix64 of the
+/// pair index, so lazy == eager materialization exactly): it scales
+/// each pair's payload by a factor in `[1, 1+jitter]` — staggering
+/// *completions* — and scales each pair's gate latency by an
+/// independent factor in the same range — staggering *starts*. The
+/// staggered starts are what make this the fall-only add stress test:
+/// thousands of gate-open adds land one at a time inside a live
+/// component spanning the shared switch channels, where a
+/// full-component re-solve pays the whole component per add and the
+/// bounded add touches only the new flow's binding chains.
+///
+/// Rack-uplink contention is the workload's point: at 1:1 each uplink
+/// channel carries a handful of flows at x32-per-LRS lane budgets; with
+/// `SuperPodConfig::uplink_oversub` at N:1 the same flow set squeezes
+/// through 1/N the uplink lanes, lengthening the inter-pod phase — the
+/// switch-port economy trade the paper's cost analysis argues over.
+pub fn superpod_hrs_alltoall_dag(
+    t: &Topology,
+    h: &SuperPodHandles,
+    bytes_per_peer: f64,
+    jitter: f64,
+    peer_pods: usize,
+) -> StageDag {
+    let pods = h.pods.len();
+    assert!(pods >= 2, "need at least 2 pods");
+    assert!(
+        peer_pods >= 1 && peer_pods < pods,
+        "peer_pods {peer_pods} must be in 1..{pods}"
+    );
+    assert!(
+        h.uplink_planes() >= 2,
+        "APR two-path selection needs ≥ 2 uplink planes"
+    );
+    let racks_per_pod = h.pods[0].racks.len();
+    let boards = h.pods[0].racks[0].npu_lrs[0].len();
+    let slots = h.pods[0].racks[0].npus.len() / boards;
+    let ctx = Arc::new(HrsCtx {
+        rack_npus: h
+            .pods
+            .iter()
+            .flat_map(|p| p.racks.iter().map(|r| r.npus.clone()))
+            .collect(),
+        npu_lrs: h
+            .pods
+            .iter()
+            .flat_map(|p| p.racks.iter().map(|r| r.npu_lrs.clone()))
+            .collect(),
+        uplinks: h.rack_uplinks.clone(),
+        racks_per_pod,
+        pods,
+        slots,
+    });
+    let n: usize = ctx.rack_npus.iter().map(|r| r.len()).sum();
+    debug_assert_eq!(ctx.uplinks.len(), ctx.rack_npus.len());
+
+    let mut dag = StageDag::default();
+    // Phase 1/2: intra-rack X (same board) and Y (same slot) exchanges —
+    // direct NPU-NPU links, uniform payloads (cheap phases that put the
+    // intra-rack tier on the wire before the uplink contention starts).
+    let cx = ctx.clone();
+    let x_count = n * (slots - 1);
+    let px = dag.push(Stage::new("hrs-a2a-x").with_lazy_flows(
+        x_count,
+        x_count as f64 * bytes_per_peer,
+        move |t| {
+            let mut flows = Vec::with_capacity(x_count);
+            for rack in &cx.rack_npus {
+                let boards = rack.len() / cx.slots;
+                for b in 0..boards {
+                    for s in 0..cx.slots {
+                        for s2 in 0..cx.slots {
+                            if s2 != s {
+                                flows.push(FlowSpec::along(
+                                    t,
+                                    &[rack[b * cx.slots + s], rack[b * cx.slots + s2]],
+                                    bytes_per_peer,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            flows
+        },
+    ));
+    let cy = ctx.clone();
+    let y_count = n * (boards - 1);
+    let py = dag.push(
+        Stage::new("hrs-a2a-y")
+            .with_lazy_flows(y_count, y_count as f64 * bytes_per_peer, move |t| {
+                let mut flows = Vec::with_capacity(y_count);
+                for rack in &cy.rack_npus {
+                    let boards = rack.len() / cy.slots;
+                    for s in 0..cy.slots {
+                        for b in 0..boards {
+                            for b2 in 0..boards {
+                                if b2 != b {
+                                    flows.push(FlowSpec::along(
+                                        t,
+                                        &[rack[b * cy.slots + s], rack[b2 * cy.slots + s]],
+                                        bytes_per_peer,
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                flows
+            })
+            .after(vec![px]),
+    );
+
+    // Phase 3: HRS-routed inter-pod APR two-path exchange.
+    let count = n * peer_pods * 2;
+    let bytes = jittered_pairs_bytes(n, peer_pods, bytes_per_peer, jitter);
+    let ci = ctx.clone();
+    dag.push(
+        Stage::new("hrs-a2a-pods")
+            .with_lazy_flows(count, bytes, move |t| {
+                hrs_interpod_flows(t, &ci, bytes_per_peer, jitter, peer_pods)
+            })
+            .after(vec![py]),
+    );
+    dag
+}
+
+/// The HRS-routed inter-pod flow vector (see
+/// [`superpod_hrs_alltoall_dag`] for the path shape and staggering).
+fn hrs_interpod_flows(
+    t: &Topology,
+    ctx: &HrsCtx,
+    bytes_per_peer: f64,
+    jitter: f64,
+    peer_pods: usize,
+) -> Vec<FlowSpec> {
+    let racks = ctx.rack_npus.len();
+    let planes = ctx.uplinks[0].len();
+    let mut flows = Vec::with_capacity(
+        ctx.rack_npus.iter().map(|r| r.len()).sum::<usize>() * peer_pods * 2,
+    );
+    let mut i = 0usize; // global NPU index, pod-major
+    for r in 0..racks {
+        let pod = r / ctx.racks_per_pod;
+        let rr = r % ctx.racks_per_pod;
+        for m in 0..ctx.rack_npus[r].len() {
+            let src = ctx.rack_npus[r][m];
+            let b = m / ctx.slots;
+            for q in 1..=peer_pods {
+                let seed = hrs_pair_seed(i, q);
+                let payload = bytes_per_peer * pair_factor(i, q, jitter);
+                let rq = ((pod + q) % ctx.pods) * ctx.racks_per_pod + rr;
+                let dst = ctx.rack_npus[rq][m];
+                // Balanced APR plane selection: the first plane rotates
+                // with the (NPU, peer) index so each board's slots
+                // spread exactly evenly over the uplink LRS, and the
+                // second takes a board/peer-driven stride. A hash-random
+                // choice here lets balls-in-bins collisions on the thin
+                // backplane-mesh hop (x2 lanes per LRS pair) bind the
+                // phase and mask the uplink economics this workload
+                // exists to measure.
+                let sel = ((m + q) % planes) as u64 + planes as u64 * (b + q) as u64;
+                let (k1, k2) = hrs_plane_pair(sel, planes);
+                let boards = ctx.rack_npus[r].len() / ctx.slots;
+                let paths: Vec<RoutedPath> = [k1, k2]
+                    .iter()
+                    .enumerate()
+                    .map(|(half, &k)| {
+                        let (src_lrs, targets) = &ctx.uplinks[r][k];
+                        // Balanced HRS choice within the plane, same
+                        // rationale as the plane rotation: the board
+                        // rotates the target, the half offsets it by a
+                        // board-block so a pair's two halves never
+                        // share an uplink channel. On 1-lane uplinks
+                        // (32K scale) hash collisions here would set
+                        // the same worst-channel load at 1:1 and 4:1
+                        // and flatten the oversubscription signal.
+                        let j = (b + boards * half + q) % targets.len();
+                        let hrs = targets[j];
+                        let (dst_lrs, dst_targets) = &ctx.uplinks[rq][k];
+                        debug_assert_eq!(
+                            dst_targets[j], hrs,
+                            "per-rack uplink wiring must repeat"
+                        );
+                        let plane = k / 2;
+                        RoutedPath {
+                            nodes: vec![
+                                src,
+                                ctx.npu_lrs[r][plane][b],
+                                *src_lrs,
+                                hrs,
+                                *dst_lrs,
+                                ctx.npu_lrs[rq][plane][b],
+                                dst,
+                            ],
+                            kind: PathKind::Direct,
+                            dims: Vec::new(),
+                        }
+                    })
+                    .collect();
+                let PathSet { paths, weights } = PathSet::weighted_by_bottleneck(paths, t);
+                let node_paths: Vec<Vec<NodeId>> =
+                    paths.into_iter().map(|p| p.nodes).collect();
+                // Gate stagger: scale the path latency by a factor in
+                // [1, 1+jitter] drawn from the selector stream.
+                let stagger =
+                    1.0 + jitter * ((seed >> 11) & ((1 << 40) - 1)) as f64 / (1u64 << 40) as f64;
+                for mut f in FlowSpec::split(t, &node_paths, &weights, payload) {
+                    f.latency_us *= stagger;
+                    flows.push(f);
+                }
+            }
+            i += 1;
         }
     }
     flows
@@ -626,5 +898,118 @@ mod tests {
         let a = pair_factor(17, 3, 1.0);
         let b = pair_factor(18, 3, 1.0);
         assert_ne!(a, b, "factors decorrelate across nodes");
+    }
+
+    /// 2 pods × 2×2 racks = 512 NPUs over a real 4-HRS Clos tier.
+    fn small_hrs_superpod(oversub: u32) -> (Topology, SuperPodHandles) {
+        use crate::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        cfg.uplink_oversub = oversub;
+        ubmesh_superpod(&cfg)
+    }
+
+    #[test]
+    fn hrs_superpod_structure_and_conservation() {
+        let (t, h) = small_hrs_superpod(1);
+        let n = 512;
+        let dag = superpod_hrs_alltoall_dag(&t, &h, 4e6, 0.5, 1);
+        assert_eq!(dag.stages.len(), 3); // X, Y, inter-pod
+        assert!(dag.stages.iter().all(|s| s.is_lazy()));
+        assert_eq!(dag.stages[0].flow_count(), n * 7);
+        assert_eq!(dag.stages[1].flow_count(), n * 7);
+        assert_eq!(dag.stages[2].flow_count(), n * 2); // 1 peer pod × 2 paths
+        let flows = dag.stages[2].materialize_flows(&t);
+        assert_eq!(flows.len(), n * 2);
+        // Every inter-pod flow takes the 6-hop uplink route, and each
+        // pair's two halves travel distinct uplink planes.
+        assert!(flows.iter().all(|f| f.channels.len() == 6));
+        for p in 0..n {
+            assert_ne!(
+                flows[2 * p].channels[2],
+                flows[2 * p + 1].channels[2],
+                "pair {p}: APR halves must use distinct uplink LRS"
+            );
+        }
+        // Declared lazy metadata matches what the builder produces.
+        let declared = dag.stages[2].flow_bytes();
+        let actual: f64 = flows.iter().map(|f| f.bytes).sum();
+        assert!(
+            (declared - actual).abs() <= 1e-6 * actual,
+            "declared {declared} vs built {actual}"
+        );
+        // And the whole DAG runs with exact byte-hop conservation.
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        let expect: f64 = dag
+            .stages
+            .iter()
+            .flat_map(|s| s.materialize_flows(&t))
+            .map(|f| f.bytes * f.channels.len() as f64)
+            .sum();
+        assert!(
+            (r.byte_hops - expect).abs() / expect < 1e-6,
+            "byte-hops {} vs {expect}",
+            r.byte_hops
+        );
+        // Staggered gates really spread the adds: far more solver
+        // resolves than the 3 a batched-gate schedule would produce.
+        assert!(r.solver.resolves > 500, "{} resolves", r.solver.resolves);
+        assert!(r.solver.add_resolves > 250, "{}", r.solver.add_resolves);
+    }
+
+    /// The bounded (fall-only add) strategy must agree with the PR 1
+    /// full-component solver on the HRS workload — and do strictly less
+    /// add-path work.
+    #[test]
+    fn hrs_superpod_strategies_agree_and_bounded_add_is_narrower() {
+        use crate::sim::{ResolveStrategy, SimConfig};
+        let (t, h) = small_hrs_superpod(1);
+        let dag = superpod_hrs_alltoall_dag(&t, &h, 2e6, 1.0, 1);
+        let net = SimNet::new(&t);
+        let bounded = sim::schedule::run_with(&net, &dag, &SimConfig::default());
+        let bfs = sim::schedule::run_with(
+            &net,
+            &dag,
+            &SimConfig {
+                strategy: ResolveStrategy::FullComponentBfs,
+            },
+        );
+        assert!(
+            (bounded.makespan_us - bfs.makespan_us).abs() <= 1e-6 * bfs.makespan_us,
+            "strategy divergence: {} vs {}",
+            bounded.makespan_us,
+            bfs.makespan_us
+        );
+        assert!(
+            (bounded.byte_hops - bfs.byte_hops).abs() <= 1e-6 * bfs.byte_hops,
+            "byte-hop divergence"
+        );
+        assert!(
+            bounded.solver.add_rate_recomputes < bfs.solver.add_rate_recomputes,
+            "bounded adds {} vs measured full-component adds {}",
+            bounded.solver.add_rate_recomputes,
+            bfs.solver.add_rate_recomputes
+        );
+    }
+
+    #[test]
+    fn hrs_superpod_oversubscription_slows_interpod_phase() {
+        let (t1, h1) = small_hrs_superpod(1);
+        let (t4, h4) = small_hrs_superpod(4);
+        let interpod_us = |t: &Topology, h: &SuperPodHandles| {
+            let dag = superpod_hrs_alltoall_dag(t, h, 4e6, 0.5, 1);
+            let net = SimNet::new(t);
+            let r = sim::schedule::run(&net, &dag);
+            r.makespan_us - r.stage_done_us[1]
+        };
+        let base = interpod_us(&t1, &h1);
+        let over = interpod_us(&t4, &h4);
+        assert!(
+            over > base * 1.5,
+            "4:1 oversubscription must lengthen the inter-pod phase: {over} vs {base}"
+        );
     }
 }

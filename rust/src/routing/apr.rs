@@ -218,6 +218,22 @@ impl PathSet {
     }
 }
 
+/// APR two-path selection across HRS uplink planes (§4.1 applied to the
+/// SuperPod tier): pick two *distinct* uplink planes — uplink-LRS
+/// indices within a rack, `plane*2 + slot` — for an inter-pod pair.
+/// Deterministic in `pair_seed` so lazy DAG builders reproduce the
+/// choice exactly; the first plane rotates with the low seed bits and
+/// the second with an independent stride, so consecutive pairs spread
+/// over all ordered plane pairs instead of hammering two fixed planes
+/// (the switch-port analogue of Fig 10-b's "many parallel paths").
+pub fn hrs_plane_pair(pair_seed: u64, planes: usize) -> (usize, usize) {
+    assert!(planes >= 2, "two-path selection needs ≥ 2 uplink planes");
+    let a = (pair_seed % planes as u64) as usize;
+    let step = 1 + ((pair_seed / planes as u64) % (planes as u64 - 1)) as usize;
+    let b = (a + step) % planes;
+    (a, b)
+}
+
 /// Convert a [`MeshPath`] into a [`RoutedPath`] using a coordinate→node
 /// mapping (e.g. `RackHandles::npu` or a rack-graph index).
 pub fn to_routed<F: Fn(usize, usize) -> NodeId>(mesh: &MeshPath, f: F) -> RoutedPath {
@@ -300,5 +316,21 @@ mod tests {
         // Fig 10-b: APR exposes many parallel paths.
         let ps = paths_2d((0, 0), (7, 7), 8, 8, true);
         assert_eq!(ps.len(), 2 + 6 + 6);
+    }
+
+    #[test]
+    fn hrs_plane_pairs_are_distinct_and_cover_all() {
+        for planes in [2usize, 3, 4, 8] {
+            let mut seen = std::collections::HashSet::new();
+            for seed in 0..(planes * (planes - 1) * 4) as u64 {
+                let (a, b) = hrs_plane_pair(seed, planes);
+                assert!(a < planes && b < planes);
+                assert_ne!(a, b, "paths must use distinct planes");
+                assert_eq!(hrs_plane_pair(seed, planes), (a, b), "deterministic");
+                seen.insert((a, b));
+            }
+            // Every ordered plane pair is eventually used.
+            assert_eq!(seen.len(), planes * (planes - 1), "planes {planes}");
+        }
     }
 }

@@ -5,6 +5,8 @@
 
 pub mod artifacts;
 pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod xla_shim;
 
 pub use artifacts::{Artifacts, CostBatch};
 pub use client::Engine;

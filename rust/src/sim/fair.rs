@@ -5,7 +5,8 @@
 //! the current level, and filling continues for the rest. This is the
 //! standard fluid-model allocation used by flow-level DC simulators.
 //!
-//! Three solver layers live here (PR 2 — SuperPod scale):
+//! Four solver layers live here (PR 2 rise-only removals, PR 3 fall-only
+//! adds):
 //!
 //! * [`naive_max_min_rates`] — the original O(rounds × flows × hops)
 //!   scan, retained verbatim as the differential-test oracle.
@@ -17,8 +18,9 @@
 //!   change touches, discovered by BFS. Kept as the second differential
 //!   oracle and for measured before/after comparisons in
 //!   `benches/perf_hotpaths.rs`.
-//! * [`Rates`] with [`ResolveStrategy::RiseOnly`] (the default) — the
-//!   SuperPod-scale solver:
+//! * [`Rates`] with [`ResolveStrategy::RiseOnly`] — the PR 2
+//!   SuperPod-scale solver (rise-only bounded removals, full-component
+//!   adds):
 //!
 //!   1. **Union-find over channels** replaces the per-event component
 //!      BFS. `add_flows` unions the channels of each new flow (near-O(α)
@@ -51,6 +53,38 @@
 //!      to the common level. Each trigger restarts the solve with the
 //!      enlarged set; the set grows monotonically, and a (rare) runaway
 //!      chain falls back to a full component solve.
+//!
+//! * [`Rates`] with [`ResolveStrategy::Bounded`] (the default, PR 3) —
+//!   rise-only removals **plus the symmetric fall-only bounded add
+//!   re-solve**. Adding flows is dual to removing them: new flows can
+//!   only *steal* capacity, so existing rates can only fall along
+//!   binding-channel chains reachable from the new flows' channels
+//!   (with second-order rises where a fall de-loads another channel).
+//!   The add path:
+//!
+//!   1. **Seeding** — the candidate set is exactly the new flows
+//!      (pre-solve rate 0). Unlike the removal path there is no
+//!      saturation pre-test: an unsaturated channel of a new flow simply
+//!      lets it rise through, and a saturated one binds at the current
+//!      bottleneck level during the very first fill, which is where
+//!      existing flows get pulled in.
+//!   2. **Absorption** — the same three triggers as the removal path,
+//!      mirrored in direction: (a) the new flow's binding channel
+//!      carries a frozen flow *above* the binding level — that flow must
+//!      fall to make room (the primary add direction); (b) an absorbed
+//!      fall de-loads a previously saturated channel — flows frozen on
+//!      it may rise; (c) a now-saturated channel carries an under-served
+//!      frozen flow with no valid bottleneck elsewhere — it must rise.
+//!      Each trigger restarts the bounded fill with the enlarged set
+//!      ([`SolverStats::add_absorb_restarts`]); runaway chains fall back
+//!      to the full component solve ([`SolverStats::add_fallbacks`]).
+//!   3. **Fallback + oracle** — the full-component solve is retained
+//!      both as the in-band fallback and, via
+//!      [`ResolveStrategy::FullComponentBfs`] /
+//!      [`ResolveStrategy::RiseOnly`], as differential oracles; the
+//!      add-path work counters ([`SolverStats::add_rate_recomputes`] vs
+//!      [`SolverStats::add_full_component_recomputes`]) make the
+//!      bounded-vs-full comparison measurable per stage-gate add.
 //!
 //! Invariant (after every public call, any strategy): `rate(id)` of
 //! every alive flow equals the max-min fair allocation of the full alive
@@ -179,9 +213,15 @@ pub type FlowId = usize;
 /// How [`Rates`] re-solves after a mutation.
 #[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
 pub enum ResolveStrategy {
-    /// The SuperPod-scale default: additions solve the union-find
-    /// component; removals run the rise-only bounded re-solve.
+    /// The combined bounded mode (default): additions run the fall-only
+    /// bounded re-solve seeded from the new flows, removals the
+    /// rise-only bounded re-solve seeded from the removed flows'
+    /// saturated channels.
     #[default]
+    Bounded,
+    /// PR 2 behavior, kept as a differential oracle and for the add-path
+    /// before/after comparison: additions solve the whole union-find
+    /// component; removals run the rise-only bounded re-solve.
     RiseOnly,
     /// PR 1 behavior, kept as a differential oracle: BFS the affected
     /// component and water-fill it from zero on every mutation.
@@ -204,12 +244,49 @@ pub struct SolverStats {
     /// component size — a sharp estimate that can only over-count while
     /// a split component awaits its lazy rebuild.
     pub full_component_recomputes: u64,
-    /// Rise-only solves that restarted with an enlarged candidate set.
+    /// Bounded solves that restarted with an enlarged candidate set.
     pub absorb_restarts: u64,
-    /// Rise-only solves that gave up and ran a full component solve.
+    /// Bounded solves that gave up and ran a full component solve.
     pub fallbacks: u64,
     /// Lazy union-find component rebuilds (split reclamation).
     pub uf_rebuilds: u64,
+    /// Add-path slices of the aggregate counters above (each `add_*`
+    /// value is also included in its aggregate): `add_flows` calls that
+    /// re-solved, the rate recomputes they performed, what a full
+    /// component re-solve would have performed on the same calls, and
+    /// the add-path absorption restarts / fallbacks. The headline
+    /// add-path metric is `add_full_component_recomputes /
+    /// add_rate_recomputes` — how much narrower the fall-only add is
+    /// than the PR 2 full-component add per stage-gate event.
+    pub add_resolves: u64,
+    pub add_rate_recomputes: u64,
+    pub add_full_component_recomputes: u64,
+    pub add_absorb_restarts: u64,
+    pub add_fallbacks: u64,
+}
+
+impl SolverStats {
+    /// Add-path narrowness: full-component-equivalent recomputes per
+    /// actually-performed recompute on the add path (≥ 1; `None` until
+    /// an add re-solved something).
+    pub fn add_recompute_ratio(&self) -> Option<f64> {
+        (self.add_rate_recomputes > 0)
+            .then(|| self.add_full_component_recomputes as f64 / self.add_rate_recomputes as f64)
+    }
+
+    /// Undo the double counts of a bounded-solve fallback: the fallback
+    /// runs `resolve_component_uf`, which counts its own resolve and
+    /// adds the member count to the full-component estimate that the
+    /// mutating entry point already pre-charged from the union-find
+    /// live counts. Saturating: the counters are adjusted, never
+    /// trusted to be large enough (a `reset_stats` between the
+    /// pre-charge and the fallback, or a conservative pre-charge
+    /// undercount, must clamp to zero rather than wrap to `u64::MAX`
+    /// and wreck every later ratio).
+    fn discount_fallback(&mut self, members: u64) {
+        self.resolves = self.resolves.saturating_sub(1);
+        self.full_component_recomputes = self.full_component_recomputes.saturating_sub(members);
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -362,9 +439,10 @@ pub struct Rates {
     chan_seeded: Vec<u64>,
 }
 
-/// Give up on the bounded re-solve after this many absorption restarts
-/// and solve the whole component (each restart strictly grows the
-/// candidate set, so this only triggers on pathological chains).
+/// Give up on a bounded re-solve (rise-only removal or fall-only add)
+/// after this many absorption restarts and solve the whole component
+/// (each restart strictly grows the candidate set, so this only
+/// triggers on pathological chains).
 const MAX_RISE_ATTEMPTS: u32 = 32;
 
 impl Rates {
@@ -467,11 +545,42 @@ impl Rates {
             }
             self.uf.members[root].push(id);
             self.uf.live[root] += 1;
+            // The bounded add path never collects members (only the
+            // fallback does), so dead/duplicate entries from recycled
+            // ids would otherwise accumulate; compact opportunistically.
+            if self.uf.members[root].len() > 2 * self.uf.live[root] as usize + 16 {
+                self.compact_members(root);
+            }
         }
+        // Slice this call's solver work into the add_* counters.
+        let before = self.stats.clone();
         match self.strategy {
             ResolveStrategy::FullComponentBfs => self.resolve_bfs(net, &dirty),
             ResolveStrategy::RiseOnly => self.resolve_component_uf(net, &dirty),
+            ResolveStrategy::Bounded => {
+                // PR 2-equivalent work estimate for the add path: a
+                // full-component re-solve would recompute every alive
+                // member of the touched components (new flows included).
+                self.gen += 1;
+                let rgen = self.gen;
+                for &ci in &dirty {
+                    let r = self.uf.find(ci);
+                    if self.chan_gen[r] != rgen {
+                        self.chan_gen[r] = rgen;
+                        self.stats.full_component_recomputes += self.uf.live[r] as u64;
+                    }
+                }
+                self.resolve_fall(net, &ids);
+            }
         }
+        let s = &mut self.stats;
+        s.add_resolves += s.resolves.saturating_sub(before.resolves);
+        s.add_rate_recomputes += s.rate_recomputes.saturating_sub(before.rate_recomputes);
+        s.add_full_component_recomputes += s
+            .full_component_recomputes
+            .saturating_sub(before.full_component_recomputes);
+        s.add_absorb_restarts += s.absorb_restarts.saturating_sub(before.absorb_restarts);
+        s.add_fallbacks += s.fallbacks.saturating_sub(before.fallbacks);
         ids
     }
 
@@ -519,7 +628,7 @@ impl Rates {
                 let chans: Vec<usize> = dirty.iter().map(|&(ci, _)| ci).collect();
                 self.resolve_bfs(net, &chans);
             }
-            ResolveStrategy::RiseOnly => {
+            ResolveStrategy::RiseOnly | ResolveStrategy::Bounded => {
                 // PR 1-equivalent work estimate: re-solving the whole
                 // component would recompute every surviving member.
                 for &r in &roots {
@@ -635,6 +744,30 @@ impl Rates {
             self.uf.live[r] += 1;
         }
         self.stats.uf_rebuilds += 1;
+    }
+
+    /// Drop dead and recycled-duplicate entries from one root's member
+    /// list (no union-find structure change, unlike a rebuild). The
+    /// bounded add path calls this when a list outgrows its live count:
+    /// unlike the PR 2 add path it never collects members, so a pure
+    /// add/remove churn of single-channel flows (which never trigger a
+    /// split rebuild) would otherwise grow the list without bound.
+    fn compact_members(&mut self, root: usize) {
+        self.gen += 1;
+        let gen = self.gen;
+        let mut kept: Vec<FlowId> = Vec::with_capacity(self.uf.live[root] as usize);
+        for fid in std::mem::take(&mut self.uf.members[root]) {
+            if self.flows[fid].alive && self.flows[fid].in_component != gen {
+                let home = self.uf.find(self.flows[fid].channels[0].idx());
+                if home == root {
+                    self.flows[fid].in_component = gen;
+                    kept.push(fid);
+                }
+                // else: stale duplicate of a recycled id, homed elsewhere.
+            }
+        }
+        self.uf.live[root] = kept.len() as u32;
+        self.uf.members[root] = kept;
     }
 
     // ------------------------------------------------------------------
@@ -793,7 +926,62 @@ impl Rates {
         if cands.is_empty() {
             return;
         }
+        self.bounded_solve(net, cands, cand_old, cgen, &dirty_chans);
+    }
 
+    /// Bounded re-solve after additions — the fall-only dual of
+    /// [`Rates::resolve_rise`]: new flows can only *steal* capacity, so
+    /// existing rates can only fall (with second-order rises where a
+    /// fall de-loads another channel).
+    ///
+    /// Seeding: the candidates are exactly the new flows. A new flow
+    /// water-fills against the frozen background and stops at its
+    /// current bottleneck level; if that binding channel carries frozen
+    /// flows above the level (they must fall to make room), absorption
+    /// trigger (a) pulls them in during the fill, and triggers (b)/(c)
+    /// then catch the second-order rise chains — see the module docs.
+    /// The differential interleavings in
+    /// `rust/tests/differential_fair.rs` hammer these chains against
+    /// three oracles, and the statement-level Python port of this
+    /// algorithm was differentially fuzzed against the naive oracle on
+    /// 20k+ randomized add/remove interleavings.
+    fn resolve_fall(&mut self, net: &SimNet, new_ids: &[FlowId]) {
+        self.touched.clear();
+        if new_ids.is_empty() {
+            return;
+        }
+        self.stats.resolves += 1;
+        self.gen += 1;
+        let cgen = self.gen; // stamps candidate membership (flows)
+        let mut cands: Vec<FlowId> = Vec::with_capacity(new_ids.len());
+        let mut cand_old: Vec<f64> = Vec::with_capacity(new_ids.len());
+        for &fid in new_ids {
+            debug_assert!(self.flows[fid].alive);
+            if self.flows[fid].in_component != cgen {
+                self.flows[fid].in_component = cgen;
+                cands.push(fid);
+                cand_old.push(0.0); // new flows carried no pre-add load
+            }
+        }
+        self.bounded_solve(net, cands, cand_old, cgen, &[]);
+    }
+
+    /// The shared absorption loop behind [`Rates::resolve_rise`] and
+    /// [`Rates::resolve_fall`]: water-fill `cands` against the frozen
+    /// background, enlarging the set via the three absorption triggers
+    /// until the bounded solution is consistent with global max-min.
+    /// `cand_old` holds each candidate's pre-mutation rate (0 for new
+    /// flows) and every candidate must already carry the `cgen` stamp;
+    /// `fallback_seed` lists extra channels (beyond the candidates' own)
+    /// whose components the fallback must cover.
+    fn bounded_solve(
+        &mut self,
+        net: &SimNet,
+        mut cands: Vec<FlowId>,
+        mut cand_old: Vec<f64>,
+        cgen: u64,
+        fallback_seed: &[usize],
+    ) {
         let mut involved: Vec<usize> = Vec::new();
         let mut absorb: Vec<usize> = Vec::new();
         let mut attempts = 0u32;
@@ -803,17 +991,13 @@ impl Rates {
                 // Pathological absorption chain: solve the whole
                 // component instead (always correct).
                 self.stats.fallbacks += 1;
-                let mut seed: Vec<usize> = dirty_chans.clone();
+                let mut seed: Vec<usize> = fallback_seed.to_vec();
                 for &fid in &cands {
                     seed.extend(self.flows[fid].channels.iter().map(|c| c.idx()));
                 }
-                // resolve_component_uf counts its own resolve and adds
-                // members.len() to the full-component estimate, which
-                // remove_flows already pre-charged from the union-find
-                // live counts; undo both double counts.
-                self.stats.resolves -= 1;
                 self.resolve_component_uf(net, &seed);
-                self.stats.full_component_recomputes -= self.touched.len() as u64;
+                let members = self.touched.len() as u64;
+                self.stats.discount_fallback(members);
                 return;
             }
 
@@ -1393,5 +1577,153 @@ mod tests {
         // Rates stay exact throughout.
         assert!((r.rate(l) - 50.0).abs() < 1e-6);
         assert!((r.rate(rt) - 50.0).abs() < 1e-6);
+    }
+
+    /// The mirror of `removal_fall_chain_is_absorbed` (fall-only add,
+    /// absorption triggers a then b): adding `a` on link 0 forces `b`
+    /// to *fall* from 10 to 5, which frees link-1 capacity and lets `c`
+    /// *rise* from 90 to 95 — even though only one flow was added.
+    #[test]
+    fn addition_fall_chain_is_absorbed() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), 10.0);
+        net.set_link_capacity(LinkId(1), 100.0);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let fb = [c0, c1];
+        let fc = [c1];
+        let mut r = Rates::new();
+        assert_eq!(r.strategy(), ResolveStrategy::Bounded);
+        let ids = r.add_flows(&net, &[&fb, &fc]);
+        assert!((r.rate(ids[0]) - 10.0).abs() < 1e-9);
+        assert!((r.rate(ids[1]) - 90.0).abs() < 1e-9);
+        let fa = [c0];
+        let a = r.add_flows(&net, &[&fa])[0];
+        assert!((r.rate(a) - 5.0).abs() < 1e-9, "{}", r.rate(a));
+        assert!((r.rate(ids[0]) - 5.0).abs() < 1e-9, "{}", r.rate(ids[0]));
+        assert!((r.rate(ids[1]) - 95.0).abs() < 1e-9, "{}", r.rate(ids[1]));
+        assert!(
+            r.stats().add_absorb_restarts >= 1,
+            "add chain must trigger absorb"
+        );
+    }
+
+    /// The three-link mirror of `removal_rise_chain_is_absorbed`:
+    /// adding `a` makes `b` fall on their shared link, which lets `c`
+    /// rise on link 1, which in turn steals from `g` on link 2 — a
+    /// fall → rise → fall chain through all three triggers.
+    #[test]
+    fn addition_rise_chain_is_absorbed() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), 10.0);
+        net.set_link_capacity(LinkId(1), 60.0);
+        net.set_link_capacity(LinkId(2), 120.0);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let c2 = Channel::forward(LinkId(2));
+        let fb = [c0, c1];
+        let fc = [c1, c2];
+        let fg = [c2];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&fb, &fc, &fg]);
+        assert!((r.rate(ids[0]) - 10.0).abs() < 1e-9);
+        assert!((r.rate(ids[1]) - 50.0).abs() < 1e-9);
+        assert!((r.rate(ids[2]) - 70.0).abs() < 1e-9);
+        let fa = [c0];
+        let a = r.add_flows(&net, &[&fa])[0];
+        let fresh = max_min_rates(&net, &[&fb, &fc, &fg, &fa]);
+        assert!((r.rate(ids[0]) - fresh[0]).abs() < 1e-9, "b {}", r.rate(ids[0]));
+        assert!((r.rate(ids[1]) - fresh[1]).abs() < 1e-9, "c {}", r.rate(ids[1]));
+        assert!((r.rate(ids[2]) - fresh[2]).abs() < 1e-9, "g {}", r.rate(ids[2]));
+        assert!((r.rate(a) - fresh[3]).abs() < 1e-9, "a {}", r.rate(a));
+        assert!((r.rate(ids[1]) - 55.0).abs() < 1e-9, "c must rise to 55");
+        assert!((r.rate(ids[2]) - 65.0).abs() < 1e-9, "g must fall to 65");
+    }
+
+    /// A fall-only add re-solves only the chains reachable from the new
+    /// flow's channels, not the whole component — the add-path
+    /// counters record both the actual and the full-component work.
+    #[test]
+    fn bounded_add_is_narrower_than_full_component() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        // `left` is pinned at 10 by its private link 3, so the add-side
+        // chain (bridge/right on link 5) never reaches it even though
+        // all four flows share one union-find component via link 0.
+        net.set_link_capacity(LinkId(3), 10.0);
+        let left = [Channel::forward(LinkId(3)), Channel::forward(LinkId(0))];
+        let right = [Channel::forward(LinkId(5))];
+        let bridge = [Channel::forward(LinkId(0)), Channel::forward(LinkId(5))];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&left, &left, &right, &bridge]);
+        assert!((r.rate(ids[0]) - 5.0).abs() < 1e-9);
+        r.reset_stats();
+        // New flow on link 5: only the right/bridge chain can change;
+        // the two pinned left flows keep their rates, untouched.
+        let x = r.add_flows(&net, &[&right])[0];
+        assert!(!r.touched().contains(&ids[0]), "left flow must stay frozen");
+        assert!(!r.touched().contains(&ids[1]), "left flow must stay frozen");
+        let fresh = max_min_rates(&net, &[&left, &left, &right, &bridge, &right]);
+        for (got, want) in [ids[0], ids[1], ids[2], ids[3], x].iter().zip(&fresh) {
+            assert!((r.rate(*got) - want).abs() <= 1e-9, "{} vs {want}", r.rate(*got));
+        }
+        let s = r.stats();
+        assert_eq!(s.add_resolves, 1);
+        assert_eq!(s.add_full_component_recomputes, 5, "component live count");
+        assert!(
+            s.add_rate_recomputes < s.add_full_component_recomputes,
+            "bounded add did {} recomputes, full component would do {}",
+            s.add_rate_recomputes,
+            s.add_full_component_recomputes
+        );
+        // The add-path slices stayed within the aggregates.
+        assert!(s.add_rate_recomputes <= s.rate_recomputes);
+        assert!(s.add_full_component_recomputes <= s.full_component_recomputes);
+        assert_eq!(s.add_recompute_ratio().map(|r| r >= 1.0), Some(true));
+    }
+
+    /// Satellite fix: the fallback's counter discounts must saturate
+    /// instead of wrapping when the counters were reset (or the
+    /// pre-charge undercounted) between charge and discount.
+    #[test]
+    fn fallback_discount_saturates_at_zero() {
+        let mut s = SolverStats::default();
+        s.discount_fallback(10);
+        assert_eq!(s.resolves, 0, "resolves must clamp, not wrap");
+        assert_eq!(s.full_component_recomputes, 0);
+        s.resolves = 2;
+        s.full_component_recomputes = 7;
+        s.discount_fallback(3);
+        assert_eq!(s.resolves, 1);
+        assert_eq!(s.full_component_recomputes, 4);
+    }
+
+    /// Single-channel add/remove churn never triggers a split rebuild,
+    /// so the bounded add path must compact member lists itself or they
+    /// grow without bound.
+    #[test]
+    fn member_lists_stay_compact_under_churn() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let a = [Channel::forward(LinkId(0))];
+        let mut r = Rates::new();
+        let keep = r.add_flows(&net, &[&a])[0];
+        for _ in 0..256 {
+            let tmp = r.add_flows(&net, &[&a, &a, &a]);
+            r.remove_flows(&net, &tmp);
+        }
+        // Without compaction the list would hold ~768 dead entries; the
+        // compaction threshold keeps it within a small constant of the
+        // live count (1) regardless of churn length.
+        let root = r.uf.find(a[0].idx());
+        assert!(
+            r.uf.members[root].len() < 64,
+            "member list grew to {} for {} live flows",
+            r.uf.members[root].len(),
+            r.uf.live[root]
+        );
+        assert!((r.rate(keep) - 50.0).abs() < 1e-6);
     }
 }

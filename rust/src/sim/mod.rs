@@ -9,7 +9,7 @@
 //! dependencies finish. Independent scenarios fan out across OS threads
 //! via [`sweep`].
 //!
-//! # Scaling architecture (SuperPod-scale hot path, PR 2)
+//! # Scaling architecture (SuperPod-scale hot path, PR 2 + PR 3)
 //!
 //! * [`fair::Rates`] is the incremental max-min solver: a channel→flow
 //!   inverted index plus a *saturation heap* ordered by the fill level
@@ -22,9 +22,18 @@
 //!   rates of everything else, with three absorption triggers catching
 //!   the non-monotone chains (falls past frozen flows, rises on
 //!   de-loaded channels, under-served frozen flows on newly saturated
-//!   channels). The PR 1 full-component-BFS solver is kept as
-//!   [`fair::ResolveStrategy::FullComponentBfs`], one of two
-//!   differential oracles (the other is [`fair::naive_max_min_rates`]).
+//!   channels). Additions run the symmetric **fall-only bounded
+//!   re-solve** (PR 3): the new flows water-fill against the frozen
+//!   background and existing flows are absorbed only along
+//!   binding-channel chains, with the mirrored triggers — the last
+//!   O(component) hot path. Both are combined by the default
+//!   [`fair::ResolveStrategy::Bounded`]; the PR 2 full-component-add
+//!   behavior survives as [`fair::ResolveStrategy::RiseOnly`] and the
+//!   PR 1 solver as [`fair::ResolveStrategy::FullComponentBfs`] —
+//!   two differential oracles next to [`fair::naive_max_min_rates`].
+//!   [`fair::SolverStats`] slices the add-path work out
+//!   (`add_rate_recomputes` vs `add_full_component_recomputes`) so the
+//!   bounded-vs-full comparison is measurable per stage-gate add.
 //!
 //!   **Invariants** (pinned by `rust/tests/properties.rs` and the
 //!   differential interleavings in `rust/tests/differential_fair.rs`):

@@ -16,7 +16,13 @@
 //! land at the same instant are processed as one batch — a single
 //! remove/add pair on the solver — which keeps symmetric collectives
 //! (all flows of a phase finishing together) linear instead of
-//! quadratic.
+//! quadratic. Under the default [`ResolveStrategy::Bounded`] both
+//! halves of that pair are bounded re-solves: the removal runs the
+//! rise-only re-solve and the **gate-open add runs the fall-only
+//! re-solve** (PR 3), so a staggered stage gate — thousands of flows
+//! joining a live contention component one event at a time, the
+//! HRS-routed SuperPod shape — costs per-event work proportional to
+//! the new flows' binding chains, not to the component.
 //!
 //! # SuperPod-scale memory (PR 2)
 //!

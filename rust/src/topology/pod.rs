@@ -146,7 +146,7 @@ pub fn build_pod(t: &mut Topology, cfg: &PodConfig, pod: u16) -> PodHandles {
         for _ in 0..cfg.uplink_hrs {
             hrs.push(t.add_node(NodeKind::Hrs, loc));
         }
-        wire_uplinks(t, &racks, &hrs, planes);
+        wire_uplinks(t, &racks, &hrs, planes, 1);
     }
 
     PodHandles {
@@ -158,38 +158,66 @@ pub fn build_pod(t: &mut Topology, cfg: &PodConfig, pod: u16) -> PodHandles {
 }
 
 /// Wire each rack's uplink LRS (slots 6,7 per plane, x32 each = x256 per
-/// rack) across `hrs` switches, round-robin so each uplink LRS spreads
-/// evenly. Total per rack = planes × 2 × 32 lanes.
+/// rack at 1:1) across `hrs` switches, round-robin so each uplink LRS
+/// spreads evenly. `oversub` is the rack-uplink oversubscription ratio
+/// N:1 — it divides each uplink LRS's out-facing lanes by N (fewer
+/// HRS-side switch ports and/or thinner cables; the HRS tier itself is
+/// left sized for 1:1, so oversubscription trades switch-port spend for
+/// inter-pod bandwidth, the §3.3.4 cost knob). Total per rack =
+/// planes × 2 × 32/N lanes.
+///
+/// Returns the wiring map — per rack, per uplink-LRS index
+/// `k = plane*2 + slot` (slot ∈ {0, 1} for ir_lrs slots 6/7): the
+/// uplink LRS node and its HRS neighbors in wiring order. The counter
+/// resets per rack, so `map[r][k].1[j]` is the *same* HRS node for
+/// every rack `r` — which is what lets the HRS-routed collectives pick
+/// a (plane, switch) pair once and know both endpoint racks reach it.
 pub fn wire_uplinks(
     t: &mut Topology,
     racks: &[RackHandles],
     hrs: &[NodeId],
     planes: usize,
-) {
+    oversub: u32,
+) -> Vec<Vec<(NodeId, Vec<NodeId>)>> {
     assert!(!hrs.is_empty());
+    assert!(
+        oversub >= 1 && oversub <= 32 && 32 % oversub == 0,
+        "oversubscription ratio {oversub}:1 must divide the x32 uplink \
+         LRS budget (1, 2, 4, 8, 16 or 32) — anything else silently \
+         builds a different ratio than requested"
+    );
+    let mut map = Vec::with_capacity(racks.len());
     for rh in racks {
         // Collect the 2·planes uplink LRS of the rack.
         let ups: Vec<NodeId> = (0..planes)
             .flat_map(|p| [rh.ir_lrs[p][6], rh.ir_lrs[p][7]])
             .collect();
-        // Each uplink LRS has x32 outward; split it over a set of HRS.
-        let per_lrs_targets = (hrs.len() / ups.len()).max(1);
-        let lanes_per_link = 32 / per_lrs_targets.min(32) as u32;
+        // Each uplink LRS has x32/N outward; split it over a set of HRS.
+        let effective = (32 / oversub).max(1);
+        let per_lrs_targets = (hrs.len() / ups.len()).max(1).min(effective as usize);
+        let lanes_per_link = (effective / per_lrs_targets as u32).max(1);
         let mut h = 0usize;
+        let mut rack_map = Vec::with_capacity(ups.len());
         for &u in &ups {
+            let mut targets = Vec::with_capacity(per_lrs_targets);
             for _ in 0..per_lrs_targets {
+                let hn = hrs[h % hrs.len()];
                 t.add_link(
                     u,
-                    hrs[h % hrs.len()],
-                    lanes_per_link.max(1),
+                    hn,
+                    lanes_per_link,
                     CableClass::Optical,
                     LinkRole::PodUplink,
                     1000.0,
                 );
+                targets.push(hn);
                 h += 1;
             }
+            rack_map.push((u, targets));
         }
+        map.push(rack_map);
     }
+    map
 }
 
 /// A standalone UB-Mesh-Pod (1024 NPUs with default config).

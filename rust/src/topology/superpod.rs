@@ -13,6 +13,12 @@ use super::pod::{build_pod, wire_uplinks, PodConfig, PodHandles};
 pub struct SuperPodConfig {
     pub pods: usize,
     pub pod: PodConfig,
+    /// Rack-uplink oversubscription ratio N:1 (1 = the paper's x256 per
+    /// rack). Each uplink LRS exposes x32/N toward the HRS tier, so the
+    /// rack's aggregate uplink shrinks to 256/N lanes while the HRS
+    /// tier stays sized for 1:1 — the §3.3.4 switch-port economy knob
+    /// the Rail-only comparison argues over.
+    pub uplink_oversub: u32,
 }
 
 impl Default for SuperPodConfig {
@@ -20,6 +26,7 @@ impl Default for SuperPodConfig {
         SuperPodConfig {
             pods: 8,
             pod: PodConfig::default(),
+            uplink_oversub: 1,
         }
     }
 }
@@ -45,12 +52,24 @@ pub struct SuperPodHandles {
     pub pods: Vec<PodHandles>,
     /// The pod-level HRS Clos tier.
     pub hrs: Vec<NodeId>,
+    /// Uplink wiring map, racks in pod-major order: `rack_uplinks[r][k]`
+    /// is rack `r`'s `k`-th uplink LRS (`k = plane*2 + slot`, slots 6/7)
+    /// and its HRS neighbors in wiring order. Identical `(k, j)` indices
+    /// resolve to the same HRS node for every rack (see
+    /// [`wire_uplinks`]), which the HRS-routed collectives rely on.
+    pub rack_uplinks: Vec<Vec<(NodeId, Vec<NodeId>)>>,
 }
 
 impl SuperPodHandles {
     /// All regular NPUs in rank order (pod-major, then rack-major).
     pub fn npus(&self) -> Vec<NodeId> {
         self.pods.iter().flat_map(|p| p.npus()).collect()
+    }
+
+    /// Uplink "planes" available for APR path selection: the number of
+    /// uplink LRS per rack (backplane planes × 2 slots).
+    pub fn uplink_planes(&self) -> usize {
+        self.rack_uplinks.first().map_or(0, |r| r.len())
     }
 }
 
@@ -70,9 +89,22 @@ pub fn ubmesh_superpod(cfg: &SuperPodConfig) -> (Topology, SuperPodHandles) {
         .map(|_| t.add_node(NodeKind::Hrs, Location::default()))
         .collect();
     let all_racks: Vec<_> = pods.iter().flat_map(|p| p.racks.clone()).collect();
-    wire_uplinks(&mut t, &all_racks, &hrs, cfg.pod.rack.planes);
+    let rack_uplinks = wire_uplinks(
+        &mut t,
+        &all_racks,
+        &hrs,
+        cfg.pod.rack.planes,
+        cfg.uplink_oversub,
+    );
     debug_assert!(t.check_lane_budgets().is_ok());
-    (t, SuperPodHandles { pods, hrs })
+    (
+        t,
+        SuperPodHandles {
+            pods,
+            hrs,
+            rack_uplinks,
+        },
+    )
 }
 
 #[cfg(test)]
@@ -116,6 +148,50 @@ mod tests {
             p.iter().any(|n| t.node(*n).kind == NodeKind::Hrs),
             "cross-pod path must traverse the HRS tier"
         );
+    }
+
+    #[test]
+    fn uplink_map_is_rack_invariant_and_links_exist() {
+        let (t, h) = ubmesh_superpod(&small());
+        assert_eq!(h.uplink_planes(), 8); // 4 planes × 2 slots
+        let first = &h.rack_uplinks[0];
+        for rack in &h.rack_uplinks {
+            assert_eq!(rack.len(), first.len());
+            for (k, (lrs, targets)) in rack.iter().enumerate() {
+                // Same (k, j) → same HRS node across racks.
+                assert_eq!(targets, &first[k].1, "per-rack wiring must repeat");
+                for &hn in targets {
+                    assert!(
+                        t.link_between(*lrs, hn).is_some(),
+                        "map entry without a physical link"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscription_thins_uplinks_but_keeps_connectivity() {
+        let base = small();
+        let mut over = small();
+        over.uplink_oversub = 4;
+        let (t1, _) = ubmesh_superpod(&base);
+        let (t4, h4) = ubmesh_superpod(&over);
+        let lanes = |t: &Topology| -> u32 {
+            t.links
+                .iter()
+                .filter(|l| l.role == LinkRole::PodUplink)
+                .map(|l| l.lanes)
+                .sum()
+        };
+        assert_eq!(lanes(&t1), 4 * lanes(&t4), "4:1 must quarter uplink lanes");
+        assert!(t4.npus_connected());
+        t4.check_lane_budgets().unwrap();
+        // Cross-pod paths still traverse the HRS tier.
+        let a = h4.pods[0].racks[0].npus[0];
+        let b = h4.pods[1].racks[0].npus[0];
+        let p = t4.shortest_path(a, b, true).unwrap();
+        assert!(p.iter().any(|n| t4.node(*n).kind == NodeKind::Hrs));
     }
 
     #[test]

@@ -3,10 +3,13 @@
 //! the retained naive progressive-filling oracle
 //! (`sim::fair::naive_max_min_rates`) on randomized topologies and flow
 //! sets, the incremental add/remove entry points against fresh solves of
-//! the surviving flow set, and (PR 2) the union-find + rise-only solver
-//! against the PR 1 full-component-BFS solver on randomized add/remove
-//! *interleavings* — the workload shape where the bounded re-solve's
-//! absorption chains must hold up.
+//! the surviving flow set, and (PR 2/PR 3) the bounded solvers — the
+//! default `Bounded` strategy (fall-only adds + rise-only removals) and
+//! `RiseOnly` (full-component adds) — against the PR 1
+//! full-component-BFS solver on randomized add/remove *interleavings*,
+//! checked after **every** mutation — the workload shape where the
+//! bounded re-solves' absorption chains must hold up in both
+//! directions.
 //!
 //! Tolerance: the oracle accumulates the fill level through repeated
 //! `committed += delta` additions and freezes channels within a 1e-9
@@ -115,81 +118,99 @@ fn incremental_removal_matches_oracle_on_survivors() {
     });
 }
 
-/// The PR 2 acceptance differential: both strategies and the naive
-/// oracle stepped through the *same* randomized add/remove interleaving,
-/// compared after every mutation. Failures here mean the rise-only
-/// candidate seeding or an absorption trigger missed a chain.
+/// The PR 2/PR 3 acceptance differential: all three strategies and the
+/// naive oracle stepped through the *same* randomized add/remove
+/// interleaving, compared after every mutation. Failures here mean a
+/// bounded candidate seeding (rise-only removal or fall-only add) or an
+/// absorption trigger missed a chain.
 #[test]
-fn rise_only_matches_oracles_on_randomized_interleavings() {
-    forall("rise-only vs bfs vs naive interleavings", 96, |rng: &mut Rng| {
-        let t = random_topology(rng);
-        let mut net = SimNet::new(&t);
-        // Random failures on up to 10% of links — blocked (rate-0) flows
-        // must stay inert through the bounded re-solves.
-        for l in 0..t.link_count() {
-            if rng.chance(0.1) {
-                net.fail_link(LinkId(l as u32));
-            }
-        }
-        let mut rise = Rates::new();
-        assert_eq!(rise.strategy(), ResolveStrategy::RiseOnly);
-        let mut bfs = Rates::with_strategy(ResolveStrategy::FullComponentBfs);
-
-        // Alive bookkeeping: spec k → (flow spec, rise id, bfs id).
-        let mut specs: Vec<Vec<Channel>> = Vec::new();
-        let mut ids_rise: Vec<usize> = Vec::new();
-        let mut ids_bfs: Vec<usize> = Vec::new();
-        let mut alive: Vec<usize> = Vec::new();
-
-        let steps = rng.range(6, 16);
-        for _ in 0..steps {
-            let removing = !alive.is_empty() && rng.chance(0.45);
-            if removing {
-                // Remove a random batch (1..=3 flows).
-                let nrem = rng.range(1, 4.min(alive.len() + 1));
-                let mut batch_r = Vec::new();
-                let mut batch_b = Vec::new();
-                for _ in 0..nrem.min(alive.len()) {
-                    let k = alive.swap_remove(rng.range(0, alive.len()));
-                    batch_r.push(ids_rise[k]);
-                    batch_b.push(ids_bfs[k]);
-                }
-                rise.remove_flows(&net, &batch_r);
-                bfs.remove_flows(&net, &batch_b);
-            } else {
-                // Add a random batch (1..=4 flows).
-                let extra = random_flows(rng, &t, 1, 5);
-                let refs: Vec<&[Channel]> =
-                    extra.iter().map(|f| f.as_slice()).collect();
-                let new_r = rise.add_flows(&net, &refs);
-                let new_b = bfs.add_flows(&net, &refs);
-                for (f, (ir, ib)) in extra.into_iter().zip(new_r.iter().zip(&new_b)) {
-                    alive.push(specs.len());
-                    specs.push(f);
-                    ids_rise.push(*ir);
-                    ids_bfs.push(*ib);
+fn bounded_strategies_match_oracles_on_randomized_interleavings() {
+    forall(
+        "bounded vs rise-only vs bfs vs naive interleavings",
+        96,
+        |rng: &mut Rng| {
+            let t = random_topology(rng);
+            let mut net = SimNet::new(&t);
+            // Random failures on up to 10% of links — blocked (rate-0)
+            // flows must stay inert through the bounded re-solves.
+            for l in 0..t.link_count() {
+                if rng.chance(0.1) {
+                    net.fail_link(LinkId(l as u32));
                 }
             }
-            // After EVERY mutation: all three solvers agree on the
-            // alive set.
-            let alive_refs: Vec<&[Channel]> =
-                alive.iter().map(|&k| specs[k].as_slice()).collect();
-            let oracle = naive_max_min_rates(&net, &alive_refs);
-            for (j, &k) in alive.iter().enumerate() {
-                let rr = rise.rate(ids_rise[k]);
-                let rb = bfs.rate(ids_bfs[k]);
-                assert!(
-                    (rr - rb).abs() <= 1e-6 * rb.max(1.0),
-                    "rise {rr} vs bfs {rb} (flow {k})"
-                );
-                assert!(
-                    (rr - oracle[j]).abs() <= 1e-6 * oracle[j].max(1.0),
-                    "rise {rr} vs naive {} (flow {k})",
-                    oracle[j]
-                );
+            let mut bounded = Rates::new();
+            assert_eq!(bounded.strategy(), ResolveStrategy::Bounded);
+            let mut rise = Rates::with_strategy(ResolveStrategy::RiseOnly);
+            let mut bfs = Rates::with_strategy(ResolveStrategy::FullComponentBfs);
+
+            // Alive bookkeeping: spec k → per-solver flow ids.
+            let mut specs: Vec<Vec<Channel>> = Vec::new();
+            let mut ids_bnd: Vec<usize> = Vec::new();
+            let mut ids_rise: Vec<usize> = Vec::new();
+            let mut ids_bfs: Vec<usize> = Vec::new();
+            let mut alive: Vec<usize> = Vec::new();
+
+            let steps = rng.range(6, 16);
+            for _ in 0..steps {
+                let removing = !alive.is_empty() && rng.chance(0.45);
+                if removing {
+                    // Remove a random batch (1..=3 flows).
+                    let nrem = rng.range(1, 4.min(alive.len() + 1));
+                    let mut batch_n = Vec::new();
+                    let mut batch_r = Vec::new();
+                    let mut batch_b = Vec::new();
+                    for _ in 0..nrem.min(alive.len()) {
+                        let k = alive.swap_remove(rng.range(0, alive.len()));
+                        batch_n.push(ids_bnd[k]);
+                        batch_r.push(ids_rise[k]);
+                        batch_b.push(ids_bfs[k]);
+                    }
+                    bounded.remove_flows(&net, &batch_n);
+                    rise.remove_flows(&net, &batch_r);
+                    bfs.remove_flows(&net, &batch_b);
+                } else {
+                    // Add a random batch (1..=4 flows) — the fall-only
+                    // add path under test.
+                    let extra = random_flows(rng, &t, 1, 5);
+                    let refs: Vec<&[Channel]> =
+                        extra.iter().map(|f| f.as_slice()).collect();
+                    let new_n = bounded.add_flows(&net, &refs);
+                    let new_r = rise.add_flows(&net, &refs);
+                    let new_b = bfs.add_flows(&net, &refs);
+                    for (j, f) in extra.into_iter().enumerate() {
+                        alive.push(specs.len());
+                        specs.push(f);
+                        ids_bnd.push(new_n[j]);
+                        ids_rise.push(new_r[j]);
+                        ids_bfs.push(new_b[j]);
+                    }
+                }
+                // After EVERY mutation: all four solvers agree on the
+                // alive set.
+                let alive_refs: Vec<&[Channel]> =
+                    alive.iter().map(|&k| specs[k].as_slice()).collect();
+                let oracle = naive_max_min_rates(&net, &alive_refs);
+                for (j, &k) in alive.iter().enumerate() {
+                    let rn = bounded.rate(ids_bnd[k]);
+                    let rr = rise.rate(ids_rise[k]);
+                    let rb = bfs.rate(ids_bfs[k]);
+                    assert!(
+                        (rn - rb).abs() <= 1e-6 * rb.max(1.0),
+                        "bounded {rn} vs bfs {rb} (flow {k})"
+                    );
+                    assert!(
+                        (rr - rb).abs() <= 1e-6 * rb.max(1.0),
+                        "rise {rr} vs bfs {rb} (flow {k})"
+                    );
+                    assert!(
+                        (rn - oracle[j]).abs() <= 1e-6 * oracle[j].max(1.0),
+                        "bounded {rn} vs naive {} (flow {k})",
+                        oracle[j]
+                    );
+                }
             }
-        }
-    });
+        },
+    );
 }
 
 #[test]

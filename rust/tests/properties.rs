@@ -382,6 +382,48 @@ fn lazy_and_eager_stage_materialization_agree() {
 }
 
 #[test]
+fn hrs_superpod_lazy_and_eager_agree() {
+    // The HRS-routed SuperPod producer draws plane/HRS selections, the
+    // payload jitter AND the gate stagger from deterministic SplitMix64
+    // streams, so a lazily materialized run must be *identical* — not
+    // merely close — to the eagerly materialized copy, across
+    // oversubscription ratios and jitter settings.
+    use ubmesh::collectives::alltoall::superpod_hrs_alltoall_dag;
+    use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+    forall("hrs lazy == eager", 4, |rng| {
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        cfg.uplink_oversub = [1, 2, 4][rng.range(0, 3)];
+        let (t, h) = ubmesh_superpod(&cfg);
+        let bytes = 1e6 * (1.0 + rng.f64() * 7.0);
+        let jitter = rng.f64();
+        let dag = superpod_hrs_alltoall_dag(&t, &h, bytes, jitter, 1);
+        assert!(dag.stages.iter().all(|s| s.is_lazy()));
+        let net = SimNet::new(&t);
+        let lazy = sim::schedule::run(&net, &dag);
+        let eager = sim::schedule::run(&net, &dag.materialized(&t));
+        assert_eq!(lazy.makespan_us, eager.makespan_us);
+        assert_eq!(lazy.byte_hops, eager.byte_hops);
+        assert_eq!(lazy.events, eager.events);
+        assert_eq!(lazy.peak_flows, eager.peak_flows);
+        assert_eq!(lazy.stage_done_us, eager.stage_done_us);
+        // Declared lazy metadata matches what materialization built.
+        let total: f64 = dag
+            .stages
+            .iter()
+            .map(|s| s.materialize_flows(&t).iter().map(|f| f.bytes).sum::<f64>())
+            .sum();
+        assert!(
+            (dag.total_bytes() - total).abs() <= 1e-6 * total.max(1.0),
+            "declared {} vs built {total}",
+            dag.total_bytes()
+        );
+    });
+}
+
+#[test]
 fn cost_models_are_scale_homogeneous() {
     // Doubling every price doubles CapEx but leaves ratios unchanged —
     // guards the Fig 21 ratios against price-book drift.

@@ -1,13 +1,12 @@
-//! SuperPod-scale acceptance tests (ISSUE 2): 32 768 NPUs — 8 Pods of
-//! 4096 — as the generalized 5D nd-fullmesh ([8,8,8,8,8], the 4D
-//! intra-pod mesh plus the pod tier as the 5th dimension).
+//! SuperPod-scale acceptance tests (ISSUE 2 + ISSUE 3): 32 768 NPUs.
 //!
-//! Two workloads:
+//! Three workloads:
 //!
-//! * the uniform dimension-wise all-to-all, whose makespan has an exact
-//!   closed form (every directed channel carries exactly one flow per
-//!   phase) — proves the solver + event loop complete and stay exact at
-//!   8× the PR 1 Pod scale;
+//! * the uniform dimension-wise all-to-all on the generalized 5D
+//!   nd-fullmesh ([8,8,8,8,8]), whose makespan has an exact closed form
+//!   (every directed channel carries exactly one flow per phase) —
+//!   proves the solver + event loop complete and stay exact at 8× the
+//!   PR 1 Pod scale;
 //! * the jittered SuperPod all-to-all with APR two-path inter-pod
 //!   transmission — hundreds of thousands of *staggered* completions
 //!   inside shared-channel components hundreds of flows wide, the
@@ -15,14 +14,26 @@
 //!   the ≥5× recompute reduction vs the PR 1 full-component solver (the
 //!   acceptance bar; `benches/perf_hotpaths.rs` measures the same ratio
 //!   by actually running both solvers — at 512 NPUs *and* at the full
-//!   32K — and records it in BENCH_sim.json).
+//!   32K — and records it in BENCH_sim.json);
+//! * (ISSUE 3) the **HRS-routed** SuperPod all-to-all on the *real*
+//!   Clos tier (32 pods × 1024-NPU pods, 512 racks, 256 HRS): staggered
+//!   gate opens spawn ~200k six-hop flows one event at a time into the
+//!   live switch-contention component — the fall-only bounded add's
+//!   acceptance workload. The test pins the ≥3× add-path recompute
+//!   reduction vs a full-component add (the union-find live estimate,
+//!   which `benches/perf_hotpaths.rs` validates against a *measured*
+//!   full-component run at the 1024-NPU mid-scale) and the 4:1 vs 1:1
+//!   rack-uplink oversubscription ordering.
 //!
 //! Lazy stage materialization + flow-slot recycling keep peak memory at
-//! one phase's flows (≈230–460k) instead of the whole 1.6M-flow DAG.
+//! one phase's flows instead of the whole DAG.
 
-use ubmesh::collectives::alltoall::{dimwise_alltoall_dag, superpod_alltoall_dag};
+use ubmesh::collectives::alltoall::{
+    dimwise_alltoall_dag, superpod_alltoall_dag, superpod_hrs_alltoall_dag,
+};
 use ubmesh::sim::{self, SimNet};
 use ubmesh::topology::ndmesh::{expected_links, nd_fullmesh, DimSpec};
+use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
 use ubmesh::topology::ublink::LANE_GB_S;
 use ubmesh::topology::{CableClass, Topology};
 
@@ -156,5 +167,101 @@ fn superpod_apr_alltoall_rise_only_solver_wins() {
         r.makespan_us < intra_us + inter_bytes_worst / (bw * 1e3) * 100.0,
         "makespan {} suspiciously large",
         r.makespan_us
+    );
+}
+
+/// ISSUE 3 acceptance: the HRS-routed SuperPod all-to-all at 32 768
+/// NPUs (32 pods × 4×4 racks × 64 NPUs over 256 HRS), lazy stages.
+///
+/// The jittered 1:1 run staggers both gate opens and completions, so
+/// every add lands in a live contention component; the fall-only
+/// bounded add must do ≥3× less work per stage-gate add than a
+/// full-component re-solve would (the union-find live estimate —
+/// *exactly* equal to the measured PR 2 full-component add work on this
+/// workload shape, see `benches/perf_hotpaths.rs` which executes both
+/// at mid-scale and asserts so). The oversubscription pair then runs
+/// uniform (batched) payloads — cheap at full scale — and pins the
+/// 4:1 > 1:1 inter-pod phase ordering.
+///
+/// The ≥3× bar is asserted on the 1:1 workload deliberately: at 4:1
+/// the saturated uplinks chain nearly the whole component into every
+/// add's absorption set (measured ~1.2–1.7× on the reference port), so
+/// oversubscribed fabrics fall back toward full-component cost — the
+/// bounded add buys the most exactly where the fabric is provisioned
+/// sanely.
+#[test]
+fn superpod_hrs_32k_bounded_adds_and_oversubscription() {
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = 32;
+    let (t, h) = ubmesh_superpod(&cfg);
+    assert_eq!(h.npus().len(), 32768);
+    assert_eq!(h.hrs.len(), 256);
+
+    let bytes = 1e6;
+    let peer_pods = 3;
+    let dag = superpod_hrs_alltoall_dag(&t, &h, bytes, 1.0, peer_pods);
+    assert_eq!(dag.stages.len(), 3);
+    assert!(dag.stages.iter().all(|s| s.is_lazy()), "stages must be lazy");
+    assert_eq!(dag.stages[0].flow_count(), 32768 * 7);
+    assert_eq!(dag.stages[1].flow_count(), 32768 * 7);
+    let inter_flows = 32768 * peer_pods * 2; // 196 608 six-hop flows
+    assert_eq!(dag.stages[2].flow_count(), inter_flows);
+
+    let net = SimNet::new(&t);
+    let r = sim::schedule::run(&net, &dag); // default = Bounded
+
+    // Byte-hop conservation against the independently materialized
+    // schedule (jittered payloads, 1-hop intra + 6-hop inter flows).
+    let expect: f64 = dag
+        .stages
+        .iter()
+        .map(|s| {
+            s.materialize_flows(&t)
+                .iter()
+                .map(|f| f.bytes * f.channels.len() as f64)
+                .sum::<f64>()
+        })
+        .sum();
+    assert!(
+        (r.byte_hops - expect).abs() / expect < 1e-6,
+        "byte-hops {} vs {expect}",
+        r.byte_hops
+    );
+
+    // Gate staggering really spread the adds into separate events.
+    let s = &r.solver;
+    assert!(
+        s.add_resolves > 10_000,
+        "expected staggered gate opens, got {} add resolves",
+        s.add_resolves
+    );
+
+    // Acceptance: ≥3× fewer rate recomputations per stage-gate add than
+    // the full-component add path on the same event sequence.
+    let ratio = s.add_full_component_recomputes as f64 / s.add_rate_recomputes as f64;
+    assert!(
+        ratio >= 3.0,
+        "fall-only add must be ≥3x narrower: {} full-component vs {} actual ({ratio:.2}x)",
+        s.add_full_component_recomputes,
+        s.add_rate_recomputes
+    );
+
+    // Oversubscription sanity at full scale: uniform payloads (no
+    // jitter → batched gates/completions, so both runs stay cheap);
+    // 4:1 rack uplinks must strictly lengthen the inter-pod phase.
+    let interpod_us = |cfg: &SuperPodConfig| {
+        let (t, h) = ubmesh_superpod(cfg);
+        let dag = superpod_hrs_alltoall_dag(&t, &h, bytes, 0.0, 1);
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        r.makespan_us - r.stage_done_us[1]
+    };
+    let base = interpod_us(&cfg);
+    let mut over = cfg.clone();
+    over.uplink_oversub = 4;
+    let slowed = interpod_us(&over);
+    assert!(
+        slowed > base * 1.5,
+        "4:1 oversubscription must lengthen the inter-pod phase: {slowed} vs {base} µs"
     );
 }
