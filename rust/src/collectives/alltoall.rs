@@ -713,6 +713,86 @@ fn hrs_interpod_flows(
     flows
 }
 
+/// SuperPod-tier APR path reselection for mid-run faults
+/// ([`crate::sim::fault::Reroute::Custom`]): when an uplink or
+/// backplane link on an inter-pod flow's path dies, re-pick the uplink
+/// plane / HRS with [`hrs_plane_pair`]-style rotation until a fully
+/// alive 6-hop route exists — the workload-aware alternative to the
+/// generic BFS reselection, mirroring how the notified source would
+/// re-run its own path selection. Intra-rack pairs (and NPUs outside
+/// the SuperPod's rank lists, e.g. backups) fall back to the BFS
+/// detour.
+pub fn hrs_reroute(h: &SuperPodHandles) -> crate::sim::fault::Reroute {
+    use crate::sim::fault::{shortest_alive_path, Reroute};
+    use std::collections::HashMap;
+    let rack_npus: Vec<Vec<NodeId>> = h
+        .pods
+        .iter()
+        .flat_map(|p| p.racks.iter().map(|r| r.npus.clone()))
+        .collect();
+    let npu_lrs: Vec<Vec<Vec<NodeId>>> = h
+        .pods
+        .iter()
+        .flat_map(|p| p.racks.iter().map(|r| r.npu_lrs.clone()))
+        .collect();
+    let uplinks = h.rack_uplinks.clone();
+    let slots = {
+        let boards = h.pods[0].racks[0].npu_lrs[0].len();
+        h.pods[0].racks[0].npus.len() / boards
+    };
+    // NPU → (rack index, index within the rack).
+    let mut loc: HashMap<NodeId, (usize, usize)> = HashMap::new();
+    for (r, rack) in rack_npus.iter().enumerate() {
+        for (m, &npu) in rack.iter().enumerate() {
+            loc.insert(npu, (r, m));
+        }
+    }
+    Reroute::Custom(Arc::new(move |t: &Topology,
+                                   net: &crate::sim::SimNet,
+                                   src: NodeId,
+                                   dst: NodeId| {
+        let (Some(&(r, m)), Some(&(rq, mq))) = (loc.get(&src), loc.get(&dst)) else {
+            return shortest_alive_path(t, net, src, dst, true);
+        };
+        if r == rq {
+            return shortest_alive_path(t, net, src, dst, true);
+        }
+        let alive = |nodes: &[NodeId]| {
+            nodes
+                .windows(2)
+                .all(|w| t.hop_usable(w[0], w[1], |l| net.is_usable(l)))
+        };
+        let (b, bq) = (m / slots, mq / slots);
+        let planes = uplinks[r].len();
+        // Rotate planes starting from a pair-derived offset so reroutes
+        // spread instead of all piling onto plane 0.
+        let start = (m + rq) % planes;
+        for dk in 0..planes {
+            let k = (start + dk) % planes;
+            let (src_lrs, targets) = &uplinks[r][k];
+            let (dst_lrs, _) = &uplinks[rq][k];
+            let plane = k / 2;
+            for dj in 0..targets.len() {
+                let j = (b + dj) % targets.len();
+                let nodes = vec![
+                    src,
+                    npu_lrs[r][plane][b],
+                    *src_lrs,
+                    targets[j],
+                    *dst_lrs,
+                    npu_lrs[rq][plane][bq],
+                    dst,
+                ];
+                if alive(&nodes) {
+                    return Some(nodes);
+                }
+            }
+        }
+        // Every plane is cut: last resort is the generic BFS.
+        shortest_alive_path(t, net, src, dst, true)
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -993,6 +1073,32 @@ mod tests {
             bounded.solver.add_rate_recomputes,
             bfs.solver.add_rate_recomputes
         );
+    }
+
+    #[test]
+    fn hrs_reroute_picks_surviving_plane() {
+        let (t, h) = small_hrs_superpod(1);
+        let mut net = SimNet::new(&t);
+        let policy = hrs_reroute(&h);
+        let src = h.pods[0].racks[0].npus[0];
+        let dst = h.pods[1].racks[0].npus[0];
+        let p1 = policy.path(&t, &net, src, dst, true).unwrap();
+        assert_eq!(p1.len(), 7, "6-hop uplink route: {p1:?}");
+        // Kill the uplink-LRS → HRS hop of that route: the reselection
+        // must land on another plane/HRS with every hop alive.
+        let l = t.link_between(p1[2], p1[3]).unwrap();
+        net.fail_link(l);
+        let p2 = policy.path(&t, &net, src, dst, true).unwrap();
+        assert_eq!(p2.len(), 7);
+        for w in p2.windows(2) {
+            let l2 = t.link_between(w[0], w[1]).unwrap();
+            assert!(!net.is_down(l2), "rerouted hop {}-{} dead", w[0], w[1]);
+        }
+        assert_ne!((p2[2], p2[3]), (p1[2], p1[3]), "must leave the dead uplink");
+        // Same-rack pairs take the BFS fallback (direct link here).
+        let peer = h.pods[0].racks[0].npus[1];
+        let pr = policy.path(&t, &net, src, peer, true).unwrap();
+        assert!(pr.len() <= 3, "intra-rack fallback: {pr:?}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! superior to simply masking NPU-3 and running tasks on the remaining
 //! seven NPUs."
 
+use crate::sim::fault::FaultEvent;
 use crate::sim::SimNet;
 use crate::topology::rack::RackHandles;
 use crate::topology::{NodeId, Topology};
@@ -33,6 +34,21 @@ pub fn ranks_masked(h: &RackHandles, failed: NodeId) -> Vec<NodeId> {
 pub fn fail_npu(net: &mut SimNet, t: &Topology, failed: NodeId) {
     for &(_, l) in t.neighbors(failed) {
         net.fail_link(l);
+    }
+}
+
+/// The *online* 64+1 failover as a scripted fault event
+/// ([`crate::sim::fault::FaultPlan`]): the NPU dies mid-run, and once
+/// the rack's backup activates (`activation_us` later — minutes in the
+/// paper, §3.3.2) every in-flight and future flow terminating at the
+/// dead NPU is redirected to the backup over the LRS path ("the path
+/// 5-3 is redirected to path 5-LRS-B"). With no backup configured the
+/// event degrades to a plain NPU death — blocked flows stall or wait
+/// for explicit restores.
+pub fn npu_down_event(h: &RackHandles, failed: NodeId, activation_us: f64) -> FaultEvent {
+    FaultEvent::NpuDown {
+        npu: failed,
+        backup: h.backup.map(|b| (b, activation_us)),
     }
 }
 
@@ -94,6 +110,42 @@ mod tests {
             healthy.makespan_us
         );
         assert!(slowdown >= 1.0);
+    }
+
+    /// The paper's Fig 9 failover, *online*: the NPU dies mid-collective,
+    /// the backup activates after a delay, and the run completes with
+    /// the dead NPU's flows redirected over the LRS path — slower than
+    /// healthy, but it finishes instead of stalling.
+    #[test]
+    fn online_npu_failover_redirects_to_backup() {
+        use crate::sim::fault::{FaultPlan, RecoveryConfig};
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let failed = h.npus[3];
+        let bytes = 64e6;
+        let board: Vec<NodeId> = (0..8).map(|s| h.npu(0, s, 8)).collect();
+        let dag = ring_allreduce_dag(&t, &board, bytes);
+        let net = SimNet::new(&t);
+        let healthy = sim::schedule::run(&net, &dag);
+
+        // Kill NPU (0,3) a third of the way in; backup activates 200 µs
+        // later and the redirected flows resume.
+        let plan = FaultPlan::new()
+            .at(
+                healthy.makespan_us / 3.0,
+                npu_down_event(&h, failed, 200.0),
+            )
+            .with_recovery(RecoveryConfig::direct());
+        let r = sim::schedule::run_faulted(&net, &dag, &sim::SimConfig::default(), &plan);
+        assert!(!r.is_stalled(), "stalled: {:?}", r.stalled);
+        assert!(r.reroutes >= 1, "redirection must happen ({} reroutes)", r.reroutes);
+        assert!(
+            r.makespan_us > healthy.makespan_us,
+            "failover {} vs healthy {}",
+            r.makespan_us,
+            healthy.makespan_us
+        );
+        // And the activation delay is a floor on the added time.
+        assert!(r.makespan_us >= healthy.makespan_us / 3.0 + 200.0);
     }
 
     #[test]

@@ -44,6 +44,12 @@ pub struct McResult {
 
 /// Core loop: `trials` independent missions drawn from `rng`. Returns
 /// (total downtime hours, failure count).
+///
+/// Downtime is **truncated at the mission horizon**: a repair window
+/// that extends past `mission_hours` only counts the in-mission part.
+/// Accruing the full repair (`t += down` overshooting the horizon)
+/// biased availability low and drove it *negative* for long-MTTR
+/// configs — downtime outside the mission is not mission downtime.
 fn run_trials(cfg: &McConfig, trials: u32, rng: &mut Rng) -> (f64, u64) {
     let hours_per_year = 365.0 * 24.0;
     let net_rate = cfg.network_afr / hours_per_year; // failures/hour
@@ -71,7 +77,7 @@ fn run_trials(cfg: &McConfig, trials: u32, rng: &mut Rng) -> (f64, u64) {
             } else {
                 cfg.network_mttr_hours
             };
-            down_total += down;
+            down_total += down.min(cfg.mission_hours - t);
             t += down;
         }
     }
@@ -126,6 +132,90 @@ pub fn run_par(cfg: &McConfig, trials: u32, seed: u64) -> McResult {
     }
 }
 
+/// Result of [`measured_fault_cost`]: the *measured* per-failure cost
+/// distribution, the fluid-sim analogue of the closed-form MTTR terms
+/// the availability model charges per failure.
+#[derive(Clone, Debug)]
+pub struct FaultCost {
+    /// Healthy (fault-free) makespan of the sampled collective, µs.
+    pub healthy_us: f64,
+    /// Makespan degradation per sampled failure (µs), over all trials.
+    pub degradation_us: crate::sim::OnlineStats,
+    /// Total mid-flight reroutes across trials.
+    pub reroutes: u64,
+    /// Trials whose failure cut the collective off entirely (no
+    /// surviving path — counts toward downtime, not degradation).
+    pub disconnected: u32,
+}
+
+/// Sample `trials` single-link fault plans against a 2D `n × n`
+/// full-mesh all-to-all and *measure* each failure's cost by running
+/// the fluid simulator with online APR recovery — Monte-Carlo over
+/// fault plans instead of closed-form downtime. Each trial draws a
+/// uniformly random link and a failure time uniform in the healthy
+/// makespan, then runs [`crate::sim::schedule::run_faulted`]; the
+/// reported distribution is the per-failure makespan degradation.
+/// Deterministic in `(trials, seed)` and thread-parallel via the sweep
+/// grid.
+pub fn measured_fault_cost(
+    n: usize,
+    bytes_per_peer: f64,
+    trials: u32,
+    seed: u64,
+    recovery: &crate::sim::RecoveryConfig,
+) -> FaultCost {
+    use crate::collectives::alltoall::dimwise_alltoall_dag;
+    use crate::sim::fault::{FaultEvent, FaultPlan};
+    use crate::sim::sweep::{GridBuilder, SweepConfig};
+    use crate::sim::{self, OnlineStats, SimNet};
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::{CableClass, LinkId};
+
+    let t = nd_fullmesh(
+        "mc-fault",
+        &[
+            DimSpec::new(n, 4, CableClass::PassiveElectrical, 0.3),
+            DimSpec::new(n, 4, CableClass::PassiveElectrical, 1.0),
+        ],
+    );
+    let net = SimNet::new(&t);
+    let dag = dimwise_alltoall_dag(&t, &[n, n], bytes_per_peer);
+    let healthy = sim::schedule::run(&net, &dag);
+
+    let grid = GridBuilder::cartesian1(&(0..trials).collect::<Vec<u32>>(), |&i| Some(i))
+        .with_config(SweepConfig::default().with_seed(seed));
+    let runs: Vec<(f64, u64, bool)> = grid.run(|_i, _trial, rng| {
+        let link = LinkId(rng.range(0, t.link_count()) as u32);
+        let t_fail = rng.f64() * healthy.makespan_us;
+        let plan = FaultPlan::new()
+            .at(t_fail, FaultEvent::LinkDown(link))
+            .with_recovery(recovery.clone());
+        let r = sim::schedule::run_faulted(&net, &dag, &sim::SimConfig::default(), &plan);
+        if r.is_stalled() {
+            (0.0, r.reroutes, true)
+        } else {
+            (r.makespan_us - healthy.makespan_us, r.reroutes, false)
+        }
+    });
+    let mut degradation_us = OnlineStats::default();
+    let mut reroutes = 0u64;
+    let mut disconnected = 0u32;
+    for (deg, rr, cut) in runs {
+        reroutes += rr;
+        if cut {
+            disconnected += 1;
+        } else {
+            degradation_us.push(deg);
+        }
+    }
+    FaultCost {
+        healthy_us: healthy.makespan_us,
+        degradation_us,
+        reroutes,
+        disconnected,
+    }
+}
+
 impl McConfig {
     /// The paper's 8K UB-Mesh setting (network AFR from Table 6-style
     /// census, 75-min MTTR, 3-min backup activation).
@@ -170,6 +260,63 @@ mod tests {
         );
     }
 
+    /// Satellite regression: a repair window straddling the mission
+    /// boundary only counts its in-mission part. With MTTR ≫ mission the
+    /// first failure ends the mission, so the truncated closed form is
+    /// E[downtime] = M − (1 − e^{−λM})/λ; the untruncated accrual would
+    /// instead count ~MTTR per failure and push availability far below
+    /// zero.
+    #[test]
+    fn downtime_truncates_at_mission_boundary() {
+        let hours_per_year = 365.0 * 24.0;
+        let cfg = McConfig {
+            mission_hours: 1.0,
+            network_afr: hours_per_year, // λ = 1 failure/hour
+            npu_afr: 0.0,
+            network_mttr_hours: 1000.0, // repair always straddles the end
+            npu_mttr_hours: 1000.0,
+            backup_activation_hours: 1000.0,
+            use_backup: false,
+        };
+        let r = run(&cfg, 4096, 99);
+        assert!(
+            (0.0..=1.0).contains(&r.availability),
+            "availability {} outside [0, 1]",
+            r.availability
+        );
+        let lambda = 1.0f64;
+        let m = cfg.mission_hours;
+        let expect = 1.0 - (m - (1.0 - (-lambda * m).exp()) / lambda) / m;
+        assert!(
+            (r.availability - expect).abs() < 0.02,
+            "MC {} vs truncated closed form {expect}",
+            r.availability
+        );
+    }
+
+    /// Satellite regression: both AFRs at zero is a valid config — the
+    /// inter-arrival draw is +∞ (`Rng::exp(0)`), the mission loop exits
+    /// on its horizon check, and the fleet is fully available.
+    #[test]
+    fn zero_rate_config_is_fully_available() {
+        let cfg = McConfig {
+            mission_hours: 24.0,
+            network_afr: 0.0,
+            npu_afr: 0.0,
+            network_mttr_hours: 1.0,
+            npu_mttr_hours: 1.0,
+            backup_activation_hours: 0.05,
+            use_backup: true,
+        };
+        let r = run(&cfg, 16, 5);
+        assert_eq!(r.failures, 0);
+        assert_eq!(r.downtime_hours, 0.0);
+        assert_eq!(r.availability, 1.0);
+        let p = run_par(&cfg, 64, 5);
+        assert_eq!(p.failures, 0);
+        assert_eq!(p.availability, 1.0);
+    }
+
     #[test]
     fn backup_improves_availability() {
         let a = afr(88.9);
@@ -208,6 +355,25 @@ mod tests {
             p1.availability,
             s.availability
         );
+    }
+
+    /// Tentpole: sampled fault plans drive short fluid-sim runs — every
+    /// sampled single-link failure is survivable on the 2D full-mesh
+    /// (APR reroutes, the run completes) and the measured per-failure
+    /// degradation is a finite, non-negative, deterministic
+    /// distribution.
+    #[test]
+    fn measured_fault_cost_recovers_every_sampled_failure() {
+        use crate::sim::RecoveryConfig;
+        let fc = measured_fault_cost(4, 8e6, 8, 42, &RecoveryConfig::direct());
+        assert!(fc.healthy_us > 0.0);
+        assert_eq!(fc.disconnected, 0, "2D full-mesh survives any single link");
+        assert_eq!(fc.degradation_us.n(), 8);
+        assert!(fc.degradation_us.min() >= -1e-9, "{}", fc.degradation_us.min());
+        assert!(fc.degradation_us.max().is_finite());
+        let fc2 = measured_fault_cost(4, 8e6, 8, 42, &RecoveryConfig::direct());
+        assert_eq!(fc.degradation_us.mean(), fc2.degradation_us.mean());
+        assert_eq!(fc.reroutes, fc2.reroutes);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! TFC compose: "the TFC algorithm ... enables deadlock-free all-path
 //! routing with only 2 VL resources".
 
-use crate::topology::{NodeId, Topology};
+use crate::topology::{LinkId, NodeId, Topology};
 
 /// How a path was derived — matches the Fig 18 routing strategies.
 #[derive(Copy, Clone, PartialEq, Eq, Debug)]
@@ -216,6 +216,39 @@ impl PathSet {
     pub fn aggregate_gb_s(&self, t: &Topology) -> f64 {
         self.paths.iter().map(|p| p.bottleneck_gb_s(t)).sum()
     }
+
+    /// APR path reselection after failures: drop every path that
+    /// traverses a link `is_down` reports dead (a hop on a multi-link
+    /// pair survives if any parallel is alive) and renormalize the
+    /// surviving weights. `None` when no path survives — the caller
+    /// falls back to full reselection (e.g. a BFS detour or another
+    /// [`hrs_plane_pair`]).
+    pub fn filter_alive(
+        &self,
+        t: &Topology,
+        is_down: impl Fn(LinkId) -> bool,
+    ) -> Option<PathSet> {
+        let mut paths = Vec::new();
+        let mut weights = Vec::new();
+        for (p, &w) in self.paths.iter().zip(&self.weights) {
+            let dead = p
+                .nodes
+                .windows(2)
+                .any(|hop| !t.hop_usable(hop[0], hop[1], |l| !is_down(l)));
+            if !dead {
+                paths.push(p.clone());
+                weights.push(w);
+            }
+        }
+        if paths.is_empty() {
+            return None;
+        }
+        let sum: f64 = weights.iter().sum();
+        Some(PathSet {
+            paths,
+            weights: weights.iter().map(|w| w / sum).collect(),
+        })
+    }
 }
 
 /// APR two-path selection across HRS uplink planes (§4.1 applied to the
@@ -316,6 +349,35 @@ mod tests {
         // Fig 10-b: APR exposes many parallel paths.
         let ps = paths_2d((0, 0), (7, 7), 8, 8, true);
         assert_eq!(ps.len(), 2 + 6 + 6);
+    }
+
+    #[test]
+    fn filter_alive_drops_dead_paths_and_renormalizes() {
+        use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+        use crate::topology::CableClass;
+        let t = nd_fullmesh(
+            "m44",
+            &[
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        );
+        let node = |x: usize, y: usize| crate::topology::NodeId((y * 4 + x) as u32);
+        let paths: Vec<RoutedPath> = paths_2d((0, 0), (2, 2), 4, 4, false)
+            .iter()
+            .map(|mp| to_routed(mp, node))
+            .collect();
+        let ps = PathSet::weighted_by_bottleneck(paths, &t);
+        assert_eq!(ps.paths.len(), 2); // two corner paths
+        // Kill the first hop of the X-then-Y corner: only Y-then-X lives.
+        let dead = t.link_between(node(0, 0), node(2, 0)).unwrap();
+        let alive = ps.filter_alive(&t, |l| l == dead).unwrap();
+        assert_eq!(alive.paths.len(), 1);
+        assert!((alive.weights[0] - 1.0).abs() < 1e-12, "renormalized");
+        assert_eq!(alive.paths[0].nodes[1], node(0, 2), "Y-then-X survives");
+        // Killing both corners leaves nothing.
+        let dead2 = t.link_between(node(0, 0), node(0, 2)).unwrap();
+        assert!(ps.filter_alive(&t, |l| l == dead || l == dead2).is_none());
     }
 
     #[test]

@@ -38,12 +38,22 @@ impl Default for RecoveryModel {
 
 /// Sources whose installed paths traverse `failed` — the deterministic
 /// notification set of §4.2.
+///
+/// A hop is matched against the failed link's *endpoints*, i.e. the
+/// hop's full link set: on a multi-link node pair
+/// ([`Topology::add_parallel_link`], channel multiplicity) a path hop
+/// may ride any of the parallels, so every source crossing the pair is
+/// notified. Matching via `link_between(..) == Some(failed)` only ever
+/// saw the pair's first link and silently dropped sources when a later
+/// parallel failed.
 pub fn affected_sources(t: &Topology, paths: &[RoutedPath], failed: LinkId) -> Vec<NodeId> {
+    let lk = t.link(failed);
     let mut out = std::collections::BTreeSet::new();
     for p in paths {
-        let uses = p.nodes.windows(2).any(|w| {
-            t.link_between(w[0], w[1]) == Some(failed)
-        });
+        let uses = p
+            .nodes
+            .windows(2)
+            .any(|w| (w[0] == lk.a && w[1] == lk.b) || (w[0] == lk.b && w[1] == lk.a));
         if uses {
             out.insert(p.nodes[0]);
         }
@@ -154,6 +164,46 @@ mod tests {
             fast < slow,
             "direct {fast}µs should beat hop-by-hop {slow}µs"
         );
+    }
+
+    #[test]
+    fn affected_sources_sees_parallel_links() {
+        use crate::topology::{LinkRole, Location, NodeKind};
+        // a —(2 parallel links)— b — c, with installed paths a→b→c and
+        // b→a. Failing the SECOND parallel must notify the same sources
+        // as failing the first: either could carry the hop.
+        let mut t = Topology::new("multi");
+        let a = t.add_node(NodeKind::Npu, Location::default());
+        let b = t.add_node(NodeKind::Npu, Location::default());
+        let c = t.add_node(NodeKind::Npu, Location::default());
+        let l1 = t.add_link(a, b, 4, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+        let l2 =
+            t.add_parallel_link(a, b, 4, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+        t.add_link(b, c, 4, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+        assert_eq!(t.links_between(a, b), vec![l1, l2]);
+        let paths = vec![
+            RoutedPath {
+                nodes: vec![a, b, c],
+                kind: crate::routing::apr::PathKind::Direct,
+                dims: vec![0, 0],
+            },
+            RoutedPath {
+                nodes: vec![b, a],
+                kind: crate::routing::apr::PathKind::Direct,
+                dims: vec![0],
+            },
+            RoutedPath {
+                nodes: vec![c, b],
+                kind: crate::routing::apr::PathKind::Direct,
+                dims: vec![0],
+            },
+        ];
+        // Both parallels notify both a→ and b→ sources; c's path never
+        // crosses the pair.
+        for failed in [l1, l2] {
+            let affected = affected_sources(&t, &paths, failed);
+            assert_eq!(affected, vec![a, b], "failed {failed:?}");
+        }
     }
 
     #[test]

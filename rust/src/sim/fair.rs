@@ -86,9 +86,20 @@
 //!      [`SolverStats::add_full_component_recomputes`]) make the
 //!      bounded-vs-full comparison measurable per stage-gate add.
 //!
+//! A fourth mutation class (PR 4, mid-run fault injection) changes the
+//! *constraints* instead of the flow set: [`Rates::links_changed`] /
+//! [`Rates::channels_changed`] re-solve after a link fails, restores or
+//! rescales mid-run. The bounded strategies seed from every flow
+//! crossing a changed channel and reuse the same absorption machinery —
+//! fall-dominated on capacity loss, rise-dominated on restore — with
+//! work sliced into the [`SolverStats`] `cap_*` counters;
+//! `FullComponentBfs` re-solves the affected component, remaining the
+//! differential oracle.
+//!
 //! Invariant (after every public call, any strategy): `rate(id)` of
 //! every alive flow equals the max-min fair allocation of the full alive
-//! flow set — incrementality is a pure optimization, never a semantic
+//! flow set — under the *current* [`SimNet`] capacities —
+//! incrementality is a pure optimization, never a semantic
 //! change. `rust/tests/differential_fair.rs` pins this with randomized
 //! add/remove interleavings against both oracles, and
 //! `rust/tests/properties.rs` with order-invariance/feasibility
@@ -99,7 +110,7 @@
 
 use std::collections::BinaryHeap;
 
-use crate::topology::Channel;
+use crate::topology::{Channel, LinkId};
 
 use super::network::SimNet;
 
@@ -263,6 +274,16 @@ pub struct SolverStats {
     pub add_full_component_recomputes: u64,
     pub add_absorb_restarts: u64,
     pub add_fallbacks: u64,
+    /// Capacity-change-path slices (PR 4, mid-run fault injection): the
+    /// same accounting for [`Rates::channels_changed`] /
+    /// [`Rates::links_changed`] calls — re-solves after a link
+    /// fails/restores/rescales mid-run, their rate recomputes, the
+    /// full-component equivalent, and absorption restarts / fallbacks.
+    pub cap_resolves: u64,
+    pub cap_rate_recomputes: u64,
+    pub cap_full_component_recomputes: u64,
+    pub cap_absorb_restarts: u64,
+    pub cap_fallbacks: u64,
 }
 
 impl SolverStats {
@@ -272,6 +293,13 @@ impl SolverStats {
     pub fn add_recompute_ratio(&self) -> Option<f64> {
         (self.add_rate_recomputes > 0)
             .then(|| self.add_full_component_recomputes as f64 / self.add_rate_recomputes as f64)
+    }
+
+    /// Capacity-change-path narrowness, mirroring
+    /// [`SolverStats::add_recompute_ratio`] for mid-run fault events.
+    pub fn cap_recompute_ratio(&self) -> Option<f64> {
+        (self.cap_rate_recomputes > 0)
+            .then(|| self.cap_full_component_recomputes as f64 / self.cap_rate_recomputes as f64)
     }
 
     /// Undo the double counts of a bounded-solve fallback: the fallback
@@ -489,11 +517,18 @@ impl Rates {
     }
 
     /// Flows whose rate may have changed in the last `add_flows` /
-    /// `remove_flows` call (the re-solved set, including the new flows
-    /// themselves). The DAG runner uses this to re-settle only what
-    /// moved.
+    /// `remove_flows` / `channels_changed` call (the re-solved set,
+    /// including the new flows themselves). The DAG runner uses this to
+    /// re-settle only what moved.
     pub fn touched(&self) -> &[FlowId] {
         &self.touched
+    }
+
+    /// Channel list of an alive flow (the runner's stall report and
+    /// reroute path both inspect this).
+    pub fn channels(&self, id: FlowId) -> &[Channel] {
+        debug_assert!(self.flows[id].alive, "channels() on dead flow {id}");
+        &self.flows[id].channels
     }
 
     fn ensure_channels(&mut self, upto: usize) {
@@ -647,6 +682,68 @@ impl Rates {
                 self.rebuild_component(r);
             }
         }
+    }
+
+    /// Re-solve after the capacities of `links` changed in `net` — the
+    /// mid-run fault-injection entry point (PR 4): call
+    /// [`SimNet::fail_link`] / [`SimNet::restore_link`] /
+    /// [`SimNet::set_link_capacity`] first, then hand the changed links
+    /// here. Both directed channels of each link are re-solved.
+    pub fn links_changed(&mut self, net: &SimNet, links: &[LinkId]) {
+        let chans: Vec<usize> = links
+            .iter()
+            .flat_map(|l| {
+                let c = l.idx() * 2;
+                [c, c + 1]
+            })
+            .collect();
+        self.channels_changed(net, &chans);
+    }
+
+    /// Re-solve after the capacities of raw channel indices `chans`
+    /// changed in `net`. The flow set is untouched — only the
+    /// constraints moved — so there is no union-find maintenance; under
+    /// [`ResolveStrategy::Bounded`]/[`ResolveStrategy::RiseOnly`] the
+    /// candidate set seeds from **every flow crossing a changed
+    /// channel** and the shared bounded machinery absorbs the chains in
+    /// either direction: a capacity *loss* makes the seeded flows fall
+    /// (a failed link pins them at 0 outright) with second-order rises
+    /// on the channels they de-load (triggers b/c), and a *restore*
+    /// lets them rise with second-order falls where they steal shared
+    /// capacity (trigger a). Seeding the whole crossing set — rather
+    /// than the saturation-filtered seed of the removal path — keeps
+    /// the changed channel free of frozen non-candidates, so the
+    /// triggers never have to reason about a channel whose capacity
+    /// itself moved. Work lands in the [`SolverStats`] `cap_*` slices.
+    pub fn channels_changed(&mut self, net: &SimNet, chans: &[usize]) {
+        self.ensure_channels(net.channel_count());
+        let before = self.stats.clone();
+        match self.strategy {
+            ResolveStrategy::FullComponentBfs => self.resolve_bfs(net, chans),
+            ResolveStrategy::RiseOnly | ResolveStrategy::Bounded => {
+                // Full-component work estimate, as on the other bounded
+                // paths: a PR 1 re-solve would recompute every alive
+                // member of the touched components.
+                self.gen += 1;
+                let rgen = self.gen;
+                for &ci in chans {
+                    let r = self.uf.find(ci);
+                    if self.chan_gen[r] != rgen {
+                        self.chan_gen[r] = rgen;
+                        self.stats.full_component_recomputes += self.uf.live[r] as u64;
+                    }
+                }
+                self.resolve_cap(net, chans);
+            }
+        }
+        let s = &mut self.stats;
+        s.cap_resolves += s.resolves.saturating_sub(before.resolves);
+        s.cap_rate_recomputes += s.rate_recomputes.saturating_sub(before.rate_recomputes);
+        s.cap_full_component_recomputes += s
+            .full_component_recomputes
+            .saturating_sub(before.full_component_recomputes);
+        s.cap_absorb_restarts += s.absorb_restarts.saturating_sub(before.absorb_restarts);
+        s.cap_fallbacks += s.fallbacks.saturating_sub(before.fallbacks);
     }
 
     // ------------------------------------------------------------------
@@ -964,6 +1061,33 @@ impl Rates {
             }
         }
         self.bounded_solve(net, cands, cand_old, cgen, &[]);
+    }
+
+    /// Bounded re-solve after capacity changes on `chans` (see
+    /// [`Rates::channels_changed`] for the seeding/direction argument):
+    /// candidates are every flow crossing a changed channel, with their
+    /// pre-change rates as the trigger baseline.
+    fn resolve_cap(&mut self, net: &SimNet, chans: &[usize]) {
+        self.touched.clear();
+        self.gen += 1;
+        let cgen = self.gen; // stamps candidate membership (flows)
+        let mut cands: Vec<FlowId> = Vec::new();
+        let mut cand_old: Vec<f64> = Vec::new();
+        for &ci in chans {
+            for k in 0..self.by_channel[ci].len() {
+                let fid = self.by_channel[ci][k];
+                if self.flows[fid].in_component != cgen {
+                    self.flows[fid].in_component = cgen;
+                    cands.push(fid);
+                    cand_old.push(self.flows[fid].rate);
+                }
+            }
+        }
+        if cands.is_empty() {
+            return; // changed channels carry no flows: no rate can move
+        }
+        self.stats.resolves += 1;
+        self.bounded_solve(net, cands, cand_old, cgen, chans);
     }
 
     /// The shared absorption loop behind [`Rates::resolve_rise`] and
@@ -1682,6 +1806,152 @@ mod tests {
         assert!(s.add_rate_recomputes <= s.rate_recomputes);
         assert!(s.add_full_component_recomputes <= s.full_component_recomputes);
         assert_eq!(s.add_recompute_ratio().map(|r| r >= 1.0), Some(true));
+    }
+
+    /// Mid-run capacity loss pins crossing flows at 0; restore revives
+    /// them — the fail/restore round-trip through `links_changed`.
+    #[test]
+    fn link_fail_and_restore_round_trip() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        let a = [Channel::forward(LinkId(0))];
+        let b = [Channel::forward(LinkId(1))];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&a, &a, &b]);
+        assert!((r.rate(ids[0]) - 25.0).abs() < 1e-9);
+        net.fail_link(LinkId(0));
+        r.links_changed(&net, &[LinkId(0)]);
+        assert_eq!(r.rate(ids[0]), 0.0);
+        assert_eq!(r.rate(ids[1]), 0.0);
+        assert!((r.rate(ids[2]) - 50.0).abs() < 1e-9, "disjoint flow untouched");
+        assert!(r.touched().contains(&ids[0]) && r.touched().contains(&ids[1]));
+        net.restore_link(LinkId(0));
+        r.links_changed(&net, &[LinkId(0)]);
+        assert!((r.rate(ids[0]) - 25.0).abs() < 1e-9);
+        assert!((r.rate(ids[1]) - 25.0).abs() < 1e-9);
+        let s = r.stats();
+        assert_eq!(s.cap_resolves, 2);
+        assert!(s.cap_rate_recomputes >= 4); // 2 flows × 2 events
+        assert!(s.cap_rate_recomputes <= s.rate_recomputes);
+    }
+
+    /// Capacity *loss* chain (the fall direction): shrinking link 0 makes
+    /// the two-hop flow fall, which de-loads link 1 and lets the frozen
+    /// link-1 flow rise — trigger (b) from a constraint change.
+    #[test]
+    fn capacity_loss_fall_chain_is_absorbed() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), 10.0);
+        net.set_link_capacity(LinkId(1), 100.0);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let fb = [c0, c1];
+        let fc = [c1];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&fb, &fc]);
+        assert!((r.rate(ids[0]) - 10.0).abs() < 1e-9);
+        assert!((r.rate(ids[1]) - 90.0).abs() < 1e-9);
+        net.set_link_capacity(LinkId(0), 4.0);
+        r.links_changed(&net, &[LinkId(0)]);
+        assert!((r.rate(ids[0]) - 4.0).abs() < 1e-9, "{}", r.rate(ids[0]));
+        assert!((r.rate(ids[1]) - 96.0).abs() < 1e-9, "{}", r.rate(ids[1]));
+        assert!(r.stats().cap_absorb_restarts >= 1, "chain must absorb");
+    }
+
+    /// Capacity *restore* chain (the rise direction): growing link 0
+    /// lets the two-hop flow rise past the frozen link-1 flow's share —
+    /// trigger (a) pulls the frozen flow in and it falls.
+    #[test]
+    fn capacity_gain_rise_chain_is_absorbed() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), 10.0);
+        net.set_link_capacity(LinkId(1), 100.0);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let fb = [c0, c1];
+        let fc = [c1];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&fb, &fc]);
+        net.set_link_capacity(LinkId(0), 80.0);
+        r.links_changed(&net, &[LinkId(0)]);
+        // Fresh max-min under the new caps: both share link 1 at 50/50.
+        assert!((r.rate(ids[0]) - 50.0).abs() < 1e-9, "{}", r.rate(ids[0]));
+        assert!((r.rate(ids[1]) - 50.0).abs() < 1e-9, "{}", r.rate(ids[1]));
+    }
+
+    /// The oracle strategy handles capacity changes by full-component
+    /// re-solve, and both strategies agree with a fresh naive solve.
+    #[test]
+    fn capacity_change_strategies_match_naive() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let c2 = Channel::forward(LinkId(2));
+        let specs: Vec<Vec<Channel>> =
+            vec![vec![c0, c1], vec![c1, c2], vec![c0], vec![c2], vec![c1]];
+        let refs: Vec<&[Channel]> = specs.iter().map(|f| f.as_slice()).collect();
+        let mut bounded = Rates::new();
+        let mut bfs = Rates::with_strategy(ResolveStrategy::FullComponentBfs);
+        let ids_n = bounded.add_flows(&net, &refs);
+        let ids_b = bfs.add_flows(&net, &refs);
+        for step in [
+            (LinkId(1), 12.0),
+            (LinkId(0), 0.0), // dead
+            (LinkId(2), 77.0),
+            (LinkId(0), 35.0), // revived
+        ] {
+            let (l, cap) = step;
+            if cap == 0.0 {
+                net.fail_link(l);
+            } else {
+                net.restore_link(l);
+                net.set_link_capacity(l, cap);
+            }
+            bounded.links_changed(&net, &[l]);
+            bfs.links_changed(&net, &[l]);
+            let oracle = naive_max_min_rates(&net, &refs);
+            for (k, (&idn, &idb)) in ids_n.iter().zip(&ids_b).enumerate() {
+                assert!(
+                    (bounded.rate(idn) - oracle[k]).abs() <= 1e-6 * oracle[k].max(1.0),
+                    "bounded flow {k}: {} vs naive {}",
+                    bounded.rate(idn),
+                    oracle[k]
+                );
+                assert!(
+                    (bfs.rate(idb) - oracle[k]).abs() <= 1e-6 * oracle[k].max(1.0),
+                    "bfs flow {k}: {} vs naive {}",
+                    bfs.rate(idb),
+                    oracle[k]
+                );
+            }
+        }
+        let s = bounded.stats();
+        assert_eq!(s.cap_resolves, 4);
+        assert!(s.cap_rate_recomputes <= s.rate_recomputes);
+        assert!(s.cap_full_component_recomputes <= s.full_component_recomputes);
+        // On a tiny chain-heavy instance the absorption restarts can
+        // recount candidates past the one-shot full-component estimate,
+        // so only the ratio's existence is asserted here — the 32K
+        // scale test pins the large-component win.
+        assert!(s.cap_recompute_ratio().is_some());
+    }
+
+    /// A capacity change on a channel carrying no flows is a no-op.
+    #[test]
+    fn capacity_change_on_idle_channel_is_noop() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        let a = [Channel::forward(LinkId(0))];
+        let mut r = Rates::new();
+        let ids = r.add_flows(&net, &[&a]);
+        net.fail_link(LinkId(4));
+        r.links_changed(&net, &[LinkId(4)]);
+        assert!(r.touched().is_empty());
+        assert!((r.rate(ids[0]) - 50.0).abs() < 1e-9);
+        assert_eq!(r.stats().cap_rate_recomputes, 0);
     }
 
     /// Satellite fix: the fallback's counter discounts must saturate

@@ -1,0 +1,301 @@
+//! Mid-run fault injection: a [`FaultPlan`] timeline of link/NPU events
+//! executed inside the [`super::schedule`] event loop, with optional
+//! online APR recovery.
+//!
+//! The paper's availability story (§3.3.2 64+1 backup, §4.2 fast
+//! recovery, Fig 12) is *dynamic*: a link dies mid-collective, the
+//! control plane converges (hop-by-hop flooding or topology-aware
+//! direct notification, [`RecoveryModel`] timing), and affected sources
+//! re-select APR paths around the failure instead of stalling the
+//! training step. A `FaultPlan` scripts exactly that: capacity changes
+//! flow through [`super::fair::Rates::links_changed`] (the bounded
+//! mid-run re-solve) and, when a [`RecoveryConfig`] is present, flows
+//! cut off by a dead channel are re-routed mid-flight — retired from
+//! the solver and respawned with their *remaining* bytes on a surviving
+//! path — once the per-link routing tables have converged.
+//!
+//! Without a `RecoveryConfig` the plan is the *naive bound*: blocked
+//! flows stall until a `LinkUp` revives them (or the run ends in the
+//! structured stall report, [`super::schedule::SimReport::stalled`]).
+//! The measured gap between the recovered run and this bound is the
+//! fig12 experiment.
+
+use std::sync::Arc;
+
+use crate::routing::failure::{
+    direct_notification_convergence_us, hop_by_hop_convergence_us, RecoveryModel,
+};
+use crate::topology::{LinkId, NodeId, Topology};
+
+use super::network::SimNet;
+
+/// How routing-table updates reach affected sources after a failure
+/// (§4.2, Fig 12).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum NotifyMode {
+    /// Link-state flooding: every router on the way adds processing
+    /// latency.
+    HopByHop,
+    /// Topology-aware direct notification: the detecting endpoint
+    /// unicasts each affected source (wire latency only per hop).
+    Direct,
+}
+
+/// Path re-selection policy for flows cut off by a fault.
+#[derive(Clone, Default)]
+pub enum Reroute {
+    /// BFS shortest path over live links — the generic APR reselection
+    /// (on a full-mesh tier this finds a direct/detour path; on the
+    /// SuperPod Clos tier, a surviving uplink plane).
+    #[default]
+    Shortest,
+    /// Workload-aware selector (e.g.
+    /// [`crate::collectives::alltoall::hrs_reroute`], which re-picks
+    /// uplink planes via `hrs_plane_pair`; policies holding an APR
+    /// [`crate::routing::apr::PathSet`] can prune it with
+    /// `PathSet::filter_alive(t, |l| !net.is_usable(l))` — `is_usable`,
+    /// not `!is_down`, so zero-capacity rescaled links are pruned too —
+    /// before falling back to full reselection). Returns the full node path
+    /// src → dst, or `None` if the pair is disconnected.
+    Custom(Arc<dyn Fn(&Topology, &SimNet, NodeId, NodeId) -> Option<Vec<NodeId>> + Send + Sync>),
+}
+
+impl std::fmt::Debug for Reroute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reroute::Shortest => write!(f, "Shortest"),
+            Reroute::Custom(_) => write!(f, "Custom(..)"),
+        }
+    }
+}
+
+impl Reroute {
+    /// Resolve a live path for `src → dst` under the current link
+    /// state.
+    pub fn path(
+        &self,
+        t: &Topology,
+        net: &SimNet,
+        src: NodeId,
+        dst: NodeId,
+        npu_routable: bool,
+    ) -> Option<Vec<NodeId>> {
+        match self {
+            Reroute::Shortest => shortest_alive_path(t, net, src, dst, npu_routable),
+            Reroute::Custom(f) => f(t, net, src, dst),
+        }
+    }
+}
+
+/// Online recovery configuration. Present in a [`FaultPlan`], it makes
+/// the runner re-route cut-off flows after the control-plane
+/// convergence latency of the failed link.
+#[derive(Clone, Debug)]
+pub struct RecoveryConfig {
+    pub model: RecoveryModel,
+    pub mode: NotifyMode,
+    pub reroute: Reroute,
+    /// NPUs may serve as interior forwarding hops on rerouted paths
+    /// (they can in UB-Mesh: the UB IO controller routes, §3.3.1).
+    /// Applies to the built-in [`Reroute::Shortest`] BFS only — a
+    /// [`Reroute::Custom`] selector owns its forwarding rules (e.g.
+    /// `hrs_reroute` always routes through the switch tier and uses an
+    /// NPU-routable BFS as last resort).
+    pub npu_routable: bool,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            model: RecoveryModel::default(),
+            mode: NotifyMode::Direct,
+            reroute: Reroute::Shortest,
+            npu_routable: true,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    pub fn hop_by_hop() -> RecoveryConfig {
+        RecoveryConfig {
+            mode: NotifyMode::HopByHop,
+            ..RecoveryConfig::default()
+        }
+    }
+
+    pub fn direct() -> RecoveryConfig {
+        RecoveryConfig::default()
+    }
+
+    pub fn with_reroute(mut self, reroute: Reroute) -> RecoveryConfig {
+        self.reroute = reroute;
+        self
+    }
+
+    /// Routing-convergence latency (µs) for `failed`, given the sources
+    /// whose in-flight flows traverse it — the moment their tables are
+    /// updated and rerouting may begin.
+    pub fn convergence_us(&self, t: &Topology, failed: LinkId, affected: &[NodeId]) -> f64 {
+        match self.mode {
+            NotifyMode::HopByHop => hop_by_hop_convergence_us(t, failed, affected, &self.model),
+            NotifyMode::Direct => {
+                direct_notification_convergence_us(t, failed, affected, &self.model)
+            }
+        }
+    }
+}
+
+/// One timeline entry.
+#[derive(Clone, Debug)]
+pub enum FaultEvent {
+    /// Link capacity drops to zero.
+    LinkDown(LinkId),
+    /// Clears a [`FaultEvent::LinkDown`] failure: capacity returns to
+    /// the link's *current configured* value. A
+    /// [`FaultEvent::LinkCapacity`] rescale — including a rescale to
+    /// zero — persists across `LinkUp`; script another `LinkCapacity`
+    /// to lift it.
+    LinkUp(LinkId),
+    /// Link rescaled (degraded lanes, backup attach with fewer lanes).
+    /// A rescale to `0.0` is a failure for recovery purposes: the link
+    /// becomes unusable ([`SimNet::is_usable`]) and cut flows re-route
+    /// off it instead of endlessly re-selecting a zero-bandwidth path.
+    LinkCapacity(LinkId, f64),
+    /// NPU death: every link of `npu` goes down (§3.3.2). With
+    /// `backup: Some((b, activation_us))`, flows terminating at the
+    /// dead NPU are redirected to `b` once it activates,
+    /// `activation_us` after this event — the 64+1 substitution.
+    NpuDown {
+        npu: NodeId,
+        backup: Option<(NodeId, f64)>,
+    },
+}
+
+/// A scripted failure timeline plus the recovery behavior, consumed by
+/// [`super::schedule::run_faulted`].
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// `(time µs, event)` — any order; the runner feeds them through
+    /// its event heap.
+    pub events: Vec<(f64, FaultEvent)>,
+    /// Online recovery; `None` = faults only (the stall-until-restore
+    /// naive bound).
+    pub recovery: Option<RecoveryConfig>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Append an event at `t_us` (builder style). Fails fast on
+    /// malformed inputs (negative/NaN times, non-finite or negative
+    /// capacities) — a NaN capacity would otherwise flow silently
+    /// through the water-fill and poison every downstream rate.
+    pub fn at(mut self, t_us: f64, ev: FaultEvent) -> FaultPlan {
+        assert!(t_us >= 0.0 && t_us.is_finite(), "fault at t={t_us}");
+        match &ev {
+            FaultEvent::LinkCapacity(l, gb_s) => {
+                assert!(
+                    gb_s.is_finite() && *gb_s >= 0.0,
+                    "LinkCapacity({l}, {gb_s}): capacity must be finite and ≥ 0"
+                );
+            }
+            FaultEvent::NpuDown {
+                npu,
+                backup: Some((_, activation_us)),
+            } => {
+                assert!(
+                    activation_us.is_finite() && *activation_us >= 0.0,
+                    "NpuDown({npu}): activation delay {activation_us} must be finite and ≥ 0"
+                );
+            }
+            _ => {}
+        }
+        self.events.push((t_us, ev));
+        self
+    }
+
+    pub fn with_recovery(mut self, recovery: RecoveryConfig) -> FaultPlan {
+        self.recovery = Some(recovery);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// BFS shortest path from `src` to `dst` crossing only *usable* links
+/// (up and non-zero capacity, [`SimNet::is_usable`]) — the shared
+/// [`Topology::shortest_path_filtered`] BFS with the live-link
+/// predicate. NPUs are allowed as interior hops iff `npu_routable`.
+pub fn shortest_alive_path(
+    t: &Topology,
+    net: &SimNet,
+    src: NodeId,
+    dst: NodeId,
+    npu_routable: bool,
+) -> Option<Vec<NodeId>> {
+    t.shortest_path_filtered(src, dst, npu_routable, |l| net.is_usable(l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+    use crate::topology::CableClass;
+
+    fn k4() -> Topology {
+        nd_fullmesh(
+            "k4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        )
+    }
+
+    #[test]
+    fn shortest_alive_path_avoids_down_links() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        let (a, b) = (t.npus[0], t.npus[1]);
+        let direct = t.link_between(a, b).unwrap();
+        let p = shortest_alive_path(&t, &net, a, b, true).unwrap();
+        assert_eq!(p, vec![a, b]);
+        net.fail_link(direct);
+        let p = shortest_alive_path(&t, &net, a, b, true).unwrap();
+        assert_eq!(p.len(), 3, "detour via a relay: {p:?}");
+        assert_ne!(p[1], a);
+        assert_ne!(p[1], b);
+        // Fully cut: no path.
+        for &(_, l) in t.neighbors(a) {
+            net.fail_link(l);
+        }
+        assert!(shortest_alive_path(&t, &net, a, b, true).is_none());
+    }
+
+    #[test]
+    fn convergence_modes_order() {
+        let t = k4();
+        let rc_slow = RecoveryConfig::hop_by_hop();
+        let rc_fast = RecoveryConfig::direct();
+        let l = t.link_between(t.npus[0], t.npus[1]).unwrap();
+        // A source 2+ hops from the failure must hear about it later
+        // under flooding than under direct notification.
+        let affected = vec![t.npus[2], t.npus[3]];
+        let slow = rc_slow.convergence_us(&t, l, &affected);
+        let fast = rc_fast.convergence_us(&t, l, &affected);
+        assert!(slow >= fast, "hop-by-hop {slow} vs direct {fast}");
+    }
+
+    #[test]
+    fn fault_plan_builder() {
+        let plan = FaultPlan::new()
+            .at(10.0, FaultEvent::LinkDown(LinkId(3)))
+            .at(50.0, FaultEvent::LinkUp(LinkId(3)))
+            .with_recovery(RecoveryConfig::direct());
+        assert_eq!(plan.events.len(), 2);
+        assert!(plan.recovery.is_some());
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::new().is_empty());
+    }
+}

@@ -55,6 +55,16 @@
 //!   O(stages × flows). [`schedule::run_with`] selects the solver
 //!   strategy; [`SimReport::solver`] reports the solver work counters.
 //!
+//! * [`fault::FaultPlan`] (PR 4) scripts mid-run failures as first-class
+//!   events in that heap: link down/up/rescale and NPU death (with 64+1
+//!   backup substitution) mutate the runner's private [`SimNet`] clone,
+//!   re-solve through [`fair::Rates::links_changed`] (the bounded
+//!   capacity-change path, `cap_*` counters), and — with a
+//!   [`fault::RecoveryConfig`] — re-route cut-off flows onto surviving
+//!   APR paths after the §4.2 convergence latency (hop-by-hop vs direct
+//!   notification). Runs that end blocked return a structured stall
+//!   report ([`schedule::SimReport::stalled`]) instead of panicking.
+//!
 //! * [`sweep::sweep`] runs scenario batches across threads with
 //!   deterministic per-scenario RNG seeding — results are bit-identical
 //!   for any thread count. [`sweep::GridBuilder`] generates cartesian
@@ -70,15 +80,19 @@
 //! [`crate::routing::tfc`] instead.
 
 pub mod fair;
+pub mod fault;
 pub mod flow;
 pub mod network;
 pub mod schedule;
 pub mod sweep;
 
 pub use fair::{max_min_rates, FlowId, Rates, ResolveStrategy, SolverStats};
+pub use fault::{FaultEvent, FaultPlan, NotifyMode, RecoveryConfig, Reroute};
 pub use flow::FlowSpec;
 pub use network::SimNet;
-pub use schedule::{run_with, SimConfig, SimReport, Stage, StageDag, StageFlows};
+pub use schedule::{
+    run_faulted, run_with, SimConfig, SimReport, Stage, StageDag, StageFlows, StalledFlow,
+};
 pub use sweep::{
     scenario_seed, sweep as run_sweep, AggTable, GridBuilder, OnlineStats, SweepConfig,
 };

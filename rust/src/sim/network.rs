@@ -4,6 +4,13 @@ use crate::topology::{Channel, LinkId, Topology};
 
 /// Directed-channel capacity view over a topology, with link up/down
 /// state for failure-injection experiments.
+///
+/// `Clone` copies the capacity/down state (the topology is shared by
+/// reference) — the fault-injecting runner
+/// ([`crate::sim::schedule::run_faulted`]) works on a private clone so
+/// a scripted [`crate::sim::fault::FaultPlan`] never mutates the
+/// caller's view.
+#[derive(Clone)]
 pub struct SimNet<'a> {
     pub topo: &'a Topology,
     /// Capacity per channel index (GB/s). 2 channels per link.
@@ -61,6 +68,16 @@ impl<'a> SimNet<'a> {
         self.down[l.idx()]
     }
 
+    /// True if the link can carry traffic: not failed *and* not rescaled
+    /// to zero capacity. Rerouting and stall analysis use this rather
+    /// than [`SimNet::is_down`] — a `set_link_capacity(l, 0.0)` link is
+    /// as dead as a failed one, and re-selecting a path across it would
+    /// loop forever.
+    pub fn is_usable(&self, l: LinkId) -> bool {
+        !self.down[l.idx()]
+            && self.cap[l.idx() * 2].max(self.cap[l.idx() * 2 + 1]) > 0.0
+    }
+
     /// Scale a single link's capacity (e.g. backup NPU attach with fewer
     /// lanes, degraded links).
     pub fn set_link_capacity(&mut self, l: LinkId, gb_s: f64) {
@@ -88,5 +105,22 @@ mod tests {
         assert_eq!(net.capacity(ch), 0.0);
         net.restore_link(LinkId(0));
         assert!(net.capacity(ch) > 0.0);
+    }
+
+    #[test]
+    fn zero_capacity_rescale_is_unusable() {
+        let t = nd_fullmesh(
+            "m4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        );
+        let mut net = SimNet::new(&t);
+        assert!(net.is_usable(LinkId(0)));
+        net.fail_link(LinkId(0));
+        assert!(!net.is_usable(LinkId(0)));
+        net.restore_link(LinkId(0));
+        net.set_link_capacity(LinkId(0), 0.0);
+        assert!(!net.is_usable(LinkId(0)), "zero-capacity link is dead");
+        net.set_link_capacity(LinkId(0), 10.0);
+        assert!(net.is_usable(LinkId(0)));
     }
 }

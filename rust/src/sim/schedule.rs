@@ -41,16 +41,33 @@
 //!   completion events are fended off by the per-slot stamp that lazy
 //!   deletion already maintains.
 //!
+//! # Mid-run faults (PR 4)
+//!
+//! [`run_faulted`] executes a [`FaultPlan`] inside the same event heap:
+//! fault events mutate a private [`SimNet`] clone, push the capacity
+//! change through the solver's bounded mid-run re-solve
+//! ([`Rates::links_changed`]) and — when the plan carries a
+//! [`super::fault::RecoveryConfig`] — re-route every cut-off flow once
+//! the failed link's routing tables have converged
+//! ([`super::fault::RecoveryConfig::convergence_us`], hop-by-hop vs
+//! direct notification): the blocked flow is retired from the solver
+//! and respawned with its *remaining* bytes on a surviving path (APR
+//! reselection). Without recovery, blocked flows wait for a `LinkUp` to
+//! revive them; if the event queue drains first, the run ends in a
+//! **structured stall report** ([`SimReport::stalled`], naming each
+//! blocked flow and its dead links) instead of a panic.
+//!
 //! [`run_with`] exposes the solver [`ResolveStrategy`] so benches and
 //! differential tests can pit the PR 1 full-component solver against the
 //! rise-only solver on identical workloads ([`run`] uses the default).
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
-use crate::topology::{Channel, Topology};
+use crate::topology::{Channel, LinkId, NodeId, Topology};
 
 use super::fair::{FlowId, Rates, ResolveStrategy, SolverStats};
+use super::fault::{FaultEvent, FaultPlan};
 use super::flow::FlowSpec;
 use super::network::SimNet;
 
@@ -262,12 +279,32 @@ pub struct SimConfig {
     pub strategy: ResolveStrategy,
 }
 
+/// One flow left blocked on a dead channel when the event queue
+/// drained — the structured stall outcome that replaced the old
+/// "DAG stalled" panic (callers without a fault plan get a diagnosable
+/// report; the fault-plan reroute path consumes the same information
+/// live).
+#[derive(Clone, Debug)]
+pub struct StalledFlow {
+    /// Index of the stage the flow belongs to.
+    pub stage: usize,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Undrained payload at stall time.
+    pub remaining_bytes: f64,
+    /// The unusable (down or zero-capacity) links on the flow's path
+    /// (deduplicated, path order).
+    pub dead_links: Vec<LinkId>,
+}
+
 /// Result of executing a DAG.
 #[derive(Clone, Debug)]
 pub struct SimReport {
-    /// Wall-clock makespan, µs.
+    /// Wall-clock makespan, µs — `+∞` when the run stalled (see
+    /// [`SimReport::stalled`]).
     pub makespan_us: f64,
-    /// Completion time of each stage, µs.
+    /// Completion time of each stage, µs (`NaN` for stages that never
+    /// finished in a stalled run).
     pub stage_done_us: Vec<f64>,
     /// Total bytes × distance actually carried (byte-hops).
     pub byte_hops: f64,
@@ -275,14 +312,29 @@ pub struct SimReport {
     pub events: u64,
     /// Peak concurrently-active flows.
     pub peak_flows: usize,
+    /// Flows blocked on dead channels when the event queue drained with
+    /// stages outstanding; empty on a completed run.
+    pub stalled: Vec<StalledFlow>,
+    /// Mid-flight APR reroutes performed (fault plans with recovery).
+    pub reroutes: u64,
+    /// Fault-plan events executed before the run ended.
+    pub fault_events: u64,
     /// Solver work counters for the whole run (re-solves, rate
     /// recomputes, the full-component equivalent, absorb restarts).
     pub solver: SolverStats,
 }
 
-#[derive(Default)]
+impl SimReport {
+    /// True if the run ended blocked instead of completing every stage.
+    pub fn is_stalled(&self) -> bool {
+        !self.stalled.is_empty()
+    }
+}
+
 struct ActiveFlow {
     stage: usize,
+    src: NodeId,
+    dst: NodeId,
     /// Channels, present until the flow joins the solver (then owned by
     /// the solver's inverted index).
     channels: Option<Vec<Channel>>,
@@ -302,6 +354,24 @@ struct ActiveFlow {
     stamp: u64,
 }
 
+impl Default for ActiveFlow {
+    fn default() -> Self {
+        ActiveFlow {
+            stage: 0,
+            src: NodeId(u32::MAX),
+            dst: NodeId(u32::MAX),
+            channels: None,
+            hops: 0.0,
+            remaining_bytes: 0.0,
+            rate_gb_s: 0.0,
+            settled_us: 0.0,
+            solver_id: None,
+            done: false,
+            stamp: 0,
+        }
+    }
+}
+
 #[derive(Copy, Clone)]
 enum EvKind {
     /// Gate opens: flow starts draining (joins the rate allocation).
@@ -310,6 +380,12 @@ enum EvKind {
     FlowDone(usize, u64),
     /// Stage-local compute finishes.
     Compute(usize),
+    /// Scripted fault-plan event (index into `FaultPlan::events`).
+    Fault(usize),
+    /// Routing tables converged for a cut-off flow: re-route it (valid
+    /// if stamp matches — a revived or already-rerouted flow fences the
+    /// event off via its stamp).
+    Reroute(usize, u64),
 }
 
 struct Ev {
@@ -342,6 +418,62 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
 
 /// Execute the DAG with an explicit [`SimConfig`].
 pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
+    run_faulted(net, dag, cfg, &FaultPlan::default())
+}
+
+/// Earliest time flow `i` may be rerouted: every dead link on its path
+/// must have converged routing tables, and a backup substitution must
+/// wait for the backup NPU's activation.
+fn reroute_ready_at(
+    i: usize,
+    now: f64,
+    active: &[ActiveFlow],
+    rates: &Rates,
+    net: &SimNet,
+    table_at: &HashMap<LinkId, f64>,
+    npu_backup: &HashMap<NodeId, (NodeId, f64)>,
+) -> f64 {
+    let mut at = now;
+    let chans: &[Channel] = match (&active[i].channels, active[i].solver_id) {
+        (Some(c), _) => c,
+        (None, Some(id)) => rates.channels(id),
+        (None, None) => &[],
+    };
+    for c in chans {
+        if !net.is_usable(c.link) {
+            // Links down since before the run have no entry: their
+            // tables are treated as already converged.
+            if let Some(&t_upd) = table_at.get(&c.link) {
+                at = at.max(t_upd);
+            }
+        }
+    }
+    for nid in [active[i].src, active[i].dst] {
+        if let Some(&(_, active_at)) = npu_backup.get(&nid) {
+            at = at.max(active_at);
+        }
+    }
+    at
+}
+
+/// Execute the DAG under a scripted [`FaultPlan`] (see the module docs
+/// for the fault/recovery semantics). The caller's `net` is never
+/// mutated — fault events apply to a private clone.
+pub fn run_faulted(
+    net: &SimNet,
+    dag: &StageDag,
+    cfg: &SimConfig,
+    plan: &FaultPlan,
+) -> SimReport {
+    // Only a plan with events ever mutates capacities; the common
+    // fault-free path (`run`/`run_with`) borrows the caller's net
+    // instead of copying the O(channels) capacity state per run.
+    let mut net: std::borrow::Cow<SimNet> = if plan.events.is_empty() {
+        std::borrow::Cow::Borrowed(net)
+    } else {
+        std::borrow::Cow::Owned(net.clone())
+    };
+    let topo: &Topology = net.topo;
     let n = dag.stages.len();
     let mut dep_left: Vec<usize> = dag.stages.iter().map(|s| s.deps.len()).collect();
     let mut dependants: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -369,16 +501,30 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
     let mut byte_hops = 0.0f64;
     let mut alive = 0usize;
     let mut peak = 0usize;
+    // Fault-plan state: per-link routing-table convergence times and
+    // dead-NPU → (backup, activation time) substitutions.
+    let mut table_at: HashMap<LinkId, f64> = HashMap::new();
+    let mut npu_backup: HashMap<NodeId, (NodeId, f64)> = HashMap::new();
+    let mut reroutes_done = 0u64;
+    let mut fault_count = 0u64;
+    for (k, ev) in plan.events.iter().enumerate() {
+        heap.push(Ev {
+            t: ev.0,
+            kind: EvKind::Fault(k),
+        });
+    }
 
     // Spawn one gated flow into a (possibly recycled) slot. All inputs
     // are evaluated before any local binding — the caller's expressions
     // may reference names this macro would otherwise shadow.
     macro_rules! spawn_flow {
-        ($stage:expr, $bytes:expr, $latency:expr, $channels:expr) => {{
+        ($stage:expr, $bytes:expr, $latency:expr, $channels:expr, $src:expr, $dst:expr) => {{
             let spawn_stage: usize = $stage;
             let spawn_bytes: f64 = $bytes;
             let gate = now + $latency;
             let channels: Vec<Channel> = $channels;
+            let spawn_src: NodeId = $src;
+            let spawn_dst: NodeId = $dst;
             let slot = match free_slots.pop() {
                 Some(s) => s,
                 None => {
@@ -388,6 +534,8 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
             };
             let slot_f = &mut active[slot];
             slot_f.stage = spawn_stage;
+            slot_f.src = spawn_src;
+            slot_f.dst = spawn_dst;
             slot_f.hops = channels.len() as f64;
             slot_f.channels = Some(channels);
             slot_f.remaining_bytes = spawn_bytes;
@@ -414,11 +562,11 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
                 StageFlows::Empty => {}
                 StageFlows::Eager(v) => {
                     for f in v {
-                        spawn_flow!(i, f.bytes, f.latency_us, f.channels.clone());
+                        spawn_flow!(i, f.bytes, f.latency_us, f.channels.clone(), f.src, f.dst);
                     }
                 }
                 StageFlows::Lazy { build, count, .. } => {
-                    let v = build(net.topo);
+                    let v = build(topo);
                     assert_eq!(
                         v.len(),
                         *count,
@@ -430,7 +578,7 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
                     for f in v {
                         // Move the channel vectors: the materialized
                         // stage is dropped right here, not retained.
-                        spawn_flow!(i, f.bytes, f.latency_us, f.channels);
+                        spawn_flow!(i, f.bytes, f.latency_us, f.channels, f.src, f.dst);
                     }
                 }
             }
@@ -505,7 +653,7 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
             match heap.pop() {
                 None => break f64::NAN,
                 Some(ev) => {
-                    if let EvKind::FlowDone(i, stamp) = ev.kind {
+                    if let EvKind::FlowDone(i, stamp) | EvKind::Reroute(i, stamp) = ev.kind {
                         if active[i].done || active[i].stamp != stamp {
                             continue; // stale
                         }
@@ -523,6 +671,8 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
 
         let mut opened: Vec<usize> = Vec::new(); // active idx joining solver
         let mut completed: Vec<usize> = Vec::new(); // active idx finishing
+        let mut faults: Vec<usize> = Vec::new(); // plan event idx
+        let mut reroute_req: Vec<usize> = Vec::new(); // active idx to re-path
         while let Some(ev) = heap.peek() {
             if ev.t > t0 + batch_eps {
                 break;
@@ -547,6 +697,18 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
                 }
                 EvKind::Compute(_) => {
                     events += 1; // handled by the settle fixpoint above
+                }
+                EvKind::Fault(k) => {
+                    faults.push(k);
+                    events += 1;
+                    fault_count += 1;
+                }
+                EvKind::Reroute(i, stamp) => {
+                    if active[i].done || active[i].stamp != stamp {
+                        continue; // revived or already rerouted: stale
+                    }
+                    reroute_req.push(i);
+                    events += 1;
                 }
             }
         }
@@ -576,7 +738,7 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
             }
         }
         if !done_ids.is_empty() {
-            rates.remove_flows(net, &done_ids);
+            rates.remove_flows(&net, &done_ids);
             byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
         }
         if !opened.is_empty() {
@@ -586,7 +748,7 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
                 .map(|&i| active[i].channels.take().expect("gate fired twice"))
                 .collect();
             let refs: Vec<&[Channel]> = chans.iter().map(|c| c.as_slice()).collect();
-            let ids = rates.add_flows(net, &refs);
+            let ids = rates.add_flows(&net, &refs);
             for (&i, id) in opened.iter().zip(ids) {
                 active[i].solver_id = Some(id);
                 active[i].settled_us = now;
@@ -596,6 +758,229 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
                 sid_to_active[id] = i;
             }
             byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
+            // A flow that gated onto an already-dead channel sits at
+            // rate 0: with recovery, its source re-routes as soon as
+            // the failed links' tables have converged (immediately, for
+            // faults that converged before this gate).
+            if plan.recovery.is_some() {
+                for &i in &opened {
+                    let Some(id) = active[i].solver_id else { continue };
+                    if rates.rate(id) > 0.0 {
+                        continue;
+                    }
+                    let at = reroute_ready_at(
+                        i, now, &active, &rates, &net, &table_at, &npu_backup,
+                    );
+                    heap.push(Ev {
+                        t: at.max(now),
+                        kind: EvKind::Reroute(i, active[i].stamp),
+                    });
+                }
+            }
+        }
+        // ---- scripted fault events ------------------------------------
+        if !faults.is_empty() {
+            // Same-instant events apply in FaultPlan order, not heap
+            // tie-break order (plan indices are append-ordered).
+            faults.sort_unstable();
+            let mut changed: Vec<LinkId> = Vec::new();
+            for &k in &faults {
+                match &plan.events[k].1 {
+                    FaultEvent::LinkDown(l) => {
+                        net.to_mut().fail_link(*l);
+                        changed.push(*l);
+                    }
+                    FaultEvent::LinkUp(l) => {
+                        net.to_mut().restore_link(*l);
+                        changed.push(*l);
+                    }
+                    FaultEvent::LinkCapacity(l, gb_s) => {
+                        net.to_mut().set_link_capacity(*l, *gb_s);
+                        changed.push(*l);
+                    }
+                    FaultEvent::NpuDown { npu, backup } => {
+                        for &(_, l) in topo.neighbors(*npu) {
+                            if !net.is_down(l) {
+                                net.to_mut().fail_link(l);
+                                changed.push(l);
+                            }
+                        }
+                        if let Some((b, activation_us)) = backup {
+                            npu_backup.insert(*npu, (*b, now + *activation_us));
+                        }
+                    }
+                }
+            }
+            // Push the capacity changes through the bounded mid-run
+            // re-solve; touched flows re-settle at their old rate first.
+            rates.links_changed(&net, &changed);
+            byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
+            if let Some(rc) = &plan.recovery {
+                // Flows the fault cut off (re-solved to rate 0 on a dead
+                // channel), grouped by dead link for the §4.2
+                // notification model: the affected sources determine
+                // each link's convergence latency.
+                let mut affected_by_link: HashMap<LinkId, Vec<NodeId>> = HashMap::new();
+                let mut cut: Vec<usize> = Vec::new();
+                for &fid in rates.touched() {
+                    let i = sid_to_active.get(fid).copied().unwrap_or(usize::MAX);
+                    if i == usize::MAX || active[i].done || rates.rate(fid) > 0.0 {
+                        continue;
+                    }
+                    cut.push(i);
+                    for c in rates.channels(fid) {
+                        if !net.is_usable(c.link) {
+                            affected_by_link
+                                .entry(c.link)
+                                .or_default()
+                                .push(active[i].src);
+                        }
+                    }
+                }
+                for &l in &changed {
+                    if !net.is_usable(l) {
+                        let empty: Vec<NodeId> = Vec::new();
+                        let srcs = affected_by_link.get(&l).unwrap_or(&empty);
+                        let conv = rc.convergence_us(topo, l, srcs);
+                        table_at.insert(l, now + conv);
+                    } else {
+                        table_at.remove(&l);
+                    }
+                }
+                for &i in &cut {
+                    let at = reroute_ready_at(
+                        i, now, &active, &rates, &net, &table_at, &npu_backup,
+                    );
+                    heap.push(Ev {
+                        t: at.max(now),
+                        kind: EvKind::Reroute(i, active[i].stamp),
+                    });
+                }
+                // A restore can open a detour for a flow whose own
+                // links stayed dead (its earlier reroute found no live
+                // path and gave up) — such flows are not in `touched`,
+                // so rescan every still-blocked flow and retry.
+                // Duplicate events are harmless: the done-guard, stamp
+                // fencing and the revived-rate check at processing make
+                // extra reroute events no-ops.
+                if changed.iter().any(|&l| net.is_usable(l)) {
+                    for i in 0..active.len() {
+                        let f = &active[i];
+                        if f.done {
+                            continue;
+                        }
+                        let Some(id) = f.solver_id else { continue };
+                        if rates.rate(id) > 0.0 {
+                            continue;
+                        }
+                        let at = reroute_ready_at(
+                            i, now, &active, &rates, &net, &table_at, &npu_backup,
+                        );
+                        heap.push(Ev {
+                            t: at.max(now),
+                            kind: EvKind::Reroute(i, active[i].stamp),
+                        });
+                    }
+                }
+            }
+        }
+        // ---- mid-flight APR reroutes ----------------------------------
+        if !reroute_req.is_empty() {
+            let rc = plan
+                .recovery
+                .as_ref()
+                .expect("reroute event without recovery config");
+            let mut retired_ids: Vec<FlowId> = Vec::new();
+            let mut respawns: Vec<(usize, f64, Vec<NodeId>)> = Vec::new();
+            for &i in &reroute_req {
+                // Two reroute events for one flow can land in the same
+                // batch (a second fault re-schedules a still-cut flow
+                // at a coinciding convergence time); the first retires
+                // it, the rest are no-ops.
+                if active[i].done {
+                    continue;
+                }
+                // A restore may have revived the flow since (same-batch
+                // LinkUp: the stamp only fences rate *changes*).
+                if let Some(id) = active[i].solver_id {
+                    if rates.rate(id) > 0.0 {
+                        continue;
+                    }
+                }
+                // Ready time is authoritative at *fire* time: a later
+                // fault may have cut the same flow with a slower
+                // convergence (its rate stayed 0, so no stamp bump
+                // invalidated this event) — rerouting now would dodge a
+                // failure the source has not been notified of yet.
+                let at = reroute_ready_at(
+                    i, now, &active, &rates, &net, &table_at, &npu_backup,
+                );
+                if at > now + batch_eps {
+                    heap.push(Ev {
+                        t: at,
+                        kind: EvKind::Reroute(i, active[i].stamp),
+                    });
+                    continue;
+                }
+                let src = npu_backup.get(&active[i].src).map_or(active[i].src, |&(b, _)| b);
+                let dst = npu_backup.get(&active[i].dst).map_or(active[i].dst, |&(b, _)| b);
+                if src == dst {
+                    // Backup substitution collapsed the endpoints (the
+                    // flow targeted the node that now replaces its
+                    // source, or two dead NPUs share one backup): the
+                    // transfer is local, deliver it on the spot.
+                    let f = &mut active[i];
+                    f.remaining_bytes = 0.0; // zero hops: no wire bytes
+                    f.done = true;
+                    f.stamp += 1;
+                    f.channels = None;
+                    alive -= 1;
+                    flows_left[f.stage] -= 1;
+                    if let Some(id) = f.solver_id.take() {
+                        sid_to_active[id] = usize::MAX;
+                        retired_ids.push(id);
+                    }
+                    free_slots.push(i);
+                    reroutes_done += 1;
+                    continue;
+                }
+                let Some(path) = rc.reroute.path(topo, &net, src, dst, rc.npu_routable) else {
+                    // Disconnected: leave the flow blocked — a later
+                    // LinkUp may revive it, else the stall report names
+                    // it.
+                    continue;
+                };
+                debug_assert!(path.len() >= 2, "reroute returned a hopless path");
+                let f = &mut active[i];
+                settle!(f, now);
+                let stage = f.stage;
+                let rem = f.remaining_bytes;
+                f.done = true;
+                f.stamp += 1;
+                f.channels = None;
+                f.remaining_bytes = 0.0;
+                alive -= 1;
+                if let Some(id) = f.solver_id.take() {
+                    sid_to_active[id] = usize::MAX;
+                    retired_ids.push(id);
+                }
+                free_slots.push(i);
+                respawns.push((stage, rem, path));
+                reroutes_done += 1;
+            }
+            if !retired_ids.is_empty() {
+                rates.remove_flows(&net, &retired_ids);
+                byte_hops += retime(&mut active, &sid_to_active, &rates, now, &mut heap);
+            }
+            // Respawn with the remaining payload on the new path; the
+            // stage's flow accounting is untouched (retire + respawn is
+            // net zero), so the stage completes when the replacement
+            // drains.
+            for (stage, rem, path) in respawns {
+                let spec = FlowSpec::along(topo, &path, rem);
+                spawn_flow!(stage, spec.bytes, spec.latency_us, spec.channels, spec.src, spec.dst);
+            }
+            peak = peak.max(alive);
         }
         // Recycle the completed slots for stages started at the next
         // settle fixpoint. (Safe: their stamps were bumped above, so any
@@ -603,18 +988,48 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
         free_slots.extend_from_slice(&completed);
     }
 
-    assert!(
-        done_count == n,
-        "DAG stalled: {}/{} stages done at t={now}µs (failed links or cyclic deps?)",
-        done_count,
-        n
-    );
+    // ---- stall analysis / report --------------------------------------
+    let mut stalled: Vec<StalledFlow> = Vec::new();
+    if done_count < n {
+        for f in &active {
+            if f.done {
+                continue;
+            }
+            let chans: &[Channel] = match (&f.channels, f.solver_id) {
+                (Some(c), _) => c,
+                (None, Some(id)) => rates.channels(id),
+                (None, None) => &[],
+            };
+            let mut dead_links: Vec<LinkId> = Vec::new();
+            for c in chans {
+                if !net.is_usable(c.link) && !dead_links.contains(&c.link) {
+                    dead_links.push(c.link);
+                }
+            }
+            stalled.push(StalledFlow {
+                stage: f.stage,
+                src: f.src,
+                dst: f.dst,
+                remaining_bytes: f.remaining_bytes,
+                dead_links,
+            });
+        }
+        // No blocked flow to blame: the schedule itself is broken.
+        assert!(
+            !stalled.is_empty(),
+            "DAG stalled with no blocked flows: {done_count}/{n} stages done at t={now}µs \
+             (cyclic deps?)"
+        );
+    }
     SimReport {
-        makespan_us: now,
+        makespan_us: if stalled.is_empty() { now } else { f64::INFINITY },
         stage_done_us: stage_done,
         byte_hops,
         events,
         peak_flows: peak,
+        stalled,
+        reroutes: reroutes_done,
+        fault_events: fault_count,
         solver: rates.stats().clone(),
     }
 }
@@ -665,7 +1080,9 @@ fn retime(
                 kind: EvKind::FlowDone(i, f.stamp),
             });
         }
-        // rate 0 (blocked): no event — the stall assert reports it.
+        // rate 0 (blocked): no completion event — a scheduled reroute
+        // revives the flow, a LinkUp re-solve restores it, or the
+        // structured stall report names it.
     }
     byte_hops
 }
@@ -885,8 +1302,10 @@ mod tests {
         assert!((r.byte_hops - 12.0 * 10e6).abs() < 1.0);
     }
 
+    /// Satellite fix: a flow sitting on a zero-capacity channel used to
+    /// panic the runner ("DAG stalled"); now the run ends in a
+    /// structured stall report naming the flow and its dead link.
     #[test]
-    #[should_panic(expected = "DAG stalled")]
     fn failed_link_stalls_and_reports() {
         let t = k4();
         let mut net = SimNet::new(&t);
@@ -898,6 +1317,333 @@ mod tests {
             &[NodeId(0), NodeId(1)],
             1e6,
         )]));
+        let r = run(&net, &dag);
+        assert!(r.is_stalled());
+        assert!(r.makespan_us.is_infinite());
+        assert_eq!(r.stalled.len(), 1);
+        let s = &r.stalled[0];
+        assert_eq!(s.stage, 0);
+        assert_eq!((s.src, s.dst), (NodeId(0), NodeId(1)));
+        assert_eq!(s.dead_links, vec![l]);
+        assert!((s.remaining_bytes - 1e6).abs() < 1.0, "{}", s.remaining_bytes);
+        assert!(r.stage_done_us[0].is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "cyclic deps")]
+    fn cyclic_deps_still_panic() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        // 0 depends on 1 and 1 on 0: neither ever starts.
+        dag.push(Stage::new("a").with_compute(1.0).after(vec![1]));
+        dag.push(Stage::new("b").with_compute(1.0).after(vec![0]));
         run(&net, &dag);
+    }
+
+    /// Mid-run fault with recovery: the flow loses its link halfway,
+    /// reroutes after the convergence latency, and finishes on a detour
+    /// — makespan sits strictly between the healthy run and the
+    /// stall-until-restore naive bound.
+    #[test]
+    fn midrun_fault_reroutes_and_completes() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let bytes = 500e6; // healthy: 10_000 µs at 50 GB/s
+        let l = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1)],
+            bytes,
+        )]));
+        let healthy = run(&net, &dag);
+
+        let t_fail = 4_000.0;
+        let t_restore = 60_000.0;
+        let faults = FaultPlan::new()
+            .at(t_fail, FaultEvent::LinkDown(l))
+            .at(t_restore, FaultEvent::LinkUp(l));
+
+        // Naive bound: no recovery — the flow stalls until the restore.
+        let stall = run_faulted(&net, &dag, &SimConfig::default(), &faults);
+        assert!(!stall.is_stalled(), "LinkUp must revive the flow");
+        assert!(stall.makespan_us > t_restore, "{}", stall.makespan_us);
+
+        // Recovered: the flow reroutes onto a 2-hop detour whose links
+        // are idle, so it drains at the full 50 GB/s — only the
+        // convergence latency and the re-gate delay are lost.
+        let rec = run_faulted(
+            &net,
+            &dag,
+            &SimConfig::default(),
+            &faults.clone().with_recovery(RecoveryConfig::direct()),
+        );
+        assert!(!rec.is_stalled());
+        assert_eq!(rec.reroutes, 1);
+        // Only the LinkDown fires: the rerouted run completes long
+        // before the scripted restore.
+        assert_eq!(rec.fault_events, 1);
+        assert!(
+            rec.makespan_us > healthy.makespan_us,
+            "rerouted {} vs healthy {}",
+            rec.makespan_us,
+            healthy.makespan_us
+        );
+        assert!(
+            rec.makespan_us < stall.makespan_us,
+            "rerouted {} vs stall bound {}",
+            rec.makespan_us,
+            stall.makespan_us
+        );
+        // Byte conservation across the reroute: 4000µs × 50 GB/s drained
+        // direct (1 hop), the remaining 300 MB drained over 2 hops.
+        let drained_direct = 4_000.0 * 50.0 * 1e3;
+        let expect_hops = drained_direct + (bytes - drained_direct) * 2.0;
+        assert!(
+            (rec.byte_hops - expect_hops).abs() / expect_hops < 0.01,
+            "byte-hops {} vs {expect_hops}",
+            rec.byte_hops
+        );
+    }
+
+    /// A fault landing before a stage's gate opens: the gated flow finds
+    /// its path dead at open time and reroutes immediately (tables have
+    /// long converged).
+    #[test]
+    fn gate_onto_dead_link_reroutes() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let l = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let mut dag = StageDag::default();
+        let a = dag.push(Stage::new("warmup").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(2), NodeId(3)],
+            100e6,
+        )]));
+        dag.push(
+            Stage::new("xfer")
+                .with_flows(vec![FlowSpec::along(&t, &[NodeId(0), NodeId(1)], 100e6)])
+                .after(vec![a]),
+        );
+        // Link 0-1 dies during warmup, long before stage 2's gate.
+        let plan = FaultPlan::new()
+            .at(10.0, FaultEvent::LinkDown(l))
+            .with_recovery(RecoveryConfig::direct());
+        let r = run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(!r.is_stalled());
+        assert_eq!(r.reroutes, 1);
+        // The rerouted second stage drains 100 MB over a 2-hop detour.
+        let warmup = 100e6 / (50.0 * 1e3);
+        assert!(r.makespan_us >= 2.0 * warmup, "{}", r.makespan_us);
+    }
+
+    /// Review fix: a `LinkCapacity(l, 0.0)` rescale is a failure for
+    /// recovery purposes — the reroute must leave the zero-bandwidth
+    /// link (not re-select it forever), and without recovery the stall
+    /// report names it.
+    #[test]
+    fn zero_capacity_rescale_reroutes_off_the_dead_link() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let l = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1)],
+            500e6,
+        )]));
+        let faults = FaultPlan::new().at(4_000.0, FaultEvent::LinkCapacity(l, 0.0));
+        let rec = run_faulted(
+            &net,
+            &dag,
+            &SimConfig::default(),
+            &faults.clone().with_recovery(RecoveryConfig::direct()),
+        );
+        assert!(!rec.is_stalled());
+        assert_eq!(rec.reroutes, 1);
+        let stall = run_faulted(&net, &dag, &SimConfig::default(), &faults);
+        assert!(stall.is_stalled());
+        assert_eq!(stall.stalled[0].dead_links, vec![l]);
+    }
+
+    /// Review fix: backup substitution can collapse a flow's endpoints
+    /// (its destination is the very backup that replaces its dead
+    /// source) — the transfer becomes local and must complete, not
+    /// panic in `FlowSpec::along` on a hopless path.
+    #[test]
+    fn backup_collapse_to_local_delivery_completes() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1)],
+            100e6,
+        )]));
+        // NPU 0 dies mid-flow; its backup is NPU 1 — the flow's own
+        // destination.
+        let plan = FaultPlan::new()
+            .at(
+                500.0,
+                FaultEvent::NpuDown {
+                    npu: NodeId(0),
+                    backup: Some((NodeId(1), 50.0)),
+                },
+            )
+            .with_recovery(RecoveryConfig::direct());
+        let r = run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(!r.is_stalled(), "{:?}", r.stalled);
+        assert_eq!(r.reroutes, 1);
+        // Local delivery happens at backup activation (500 + 50).
+        assert!((r.makespan_us - 550.0).abs() < 1.0, "{}", r.makespan_us);
+    }
+
+    /// Review fix: a pending reroute from an earlier fault must not
+    /// fire before a *later* fault's slower convergence on the same
+    /// flow — the ready time is recomputed when the event fires and the
+    /// reroute is deferred to the latest notified table update.
+    #[test]
+    fn staggered_faults_defer_reroute_to_latest_convergence() {
+        use crate::routing::failure::{
+            direct_notification_convergence_us, RecoveryModel,
+        };
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let l01 = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let l12 = t.link_between(NodeId(1), NodeId(2)).unwrap();
+        let bytes = 500e6;
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1), NodeId(2)],
+            bytes,
+        )]));
+        let plan = FaultPlan::new()
+            .at(100.0, FaultEvent::LinkDown(l01))
+            .at(120.0, FaultEvent::LinkDown(l12))
+            .with_recovery(RecoveryConfig::direct());
+        let r = run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(!r.is_stalled());
+        assert_eq!(r.reroutes, 1);
+        // The source hears about the second failure at 120 + conv(l12);
+        // only then may it re-path, so the remaining ~495 MB cannot have
+        // started draining before that.
+        let conv_b =
+            direct_notification_convergence_us(&t, l12, &[NodeId(0)], &RecoveryModel::default());
+        let resume_floor = 120.0 + conv_b;
+        let remaining_time = (bytes - 100.0 * 50.0 * 1e3) / (50.0 * 1e3);
+        assert!(
+            r.makespan_us > resume_floor + remaining_time * 0.99,
+            "reroute fired before the later fault converged: {} vs floor {}",
+            r.makespan_us,
+            resume_floor + remaining_time
+        );
+    }
+
+    /// Review fix: a reroute that finds no live path gives up — but a
+    /// later restore that opens a detour *elsewhere* (not on the flow's
+    /// own channel list) must retry it, not strand it in a stall.
+    #[test]
+    fn restore_elsewhere_retries_a_failed_reroute() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let (l01, l02, l03) = (
+            t.link_between(NodeId(0), NodeId(1)).unwrap(),
+            t.link_between(NodeId(0), NodeId(2)).unwrap(),
+            t.link_between(NodeId(0), NodeId(3)).unwrap(),
+        );
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(
+            &t,
+            &[NodeId(0), NodeId(1)],
+            500e6,
+        )]));
+        // Node 0 is fully cut at t=100 (reroute finds nothing); at
+        // t=5000 the 0-2 link comes back, opening the 0→2→1 detour —
+        // which is NOT on the blocked flow's own path.
+        let plan = FaultPlan::new()
+            .at(100.0, FaultEvent::LinkDown(l01))
+            .at(100.0, FaultEvent::LinkDown(l02))
+            .at(100.0, FaultEvent::LinkDown(l03))
+            .at(5_000.0, FaultEvent::LinkUp(l02))
+            .with_recovery(RecoveryConfig::direct());
+        let r = run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(!r.is_stalled(), "restored detour must be retried");
+        assert_eq!(r.reroutes, 1);
+        assert!(r.makespan_us > 5_000.0);
+    }
+
+    /// Review fix: two reroute events for one flow can land in the same
+    /// batch (a second fault re-schedules the still-cut flow at a
+    /// convergence time dominated by the first fault's slower link);
+    /// the flow must be retired exactly once.
+    #[test]
+    fn coinciding_reroute_events_retire_the_flow_once() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+        use crate::topology::ndmesh::{nd_fullmesh, DimSpec};
+        let t = nd_fullmesh(
+            "m44",
+            &[
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+                DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+            ],
+        );
+        let node = |x: u32, y: u32| NodeId(y * 4 + x);
+        let net = SimNet::new(&t);
+        // X crosses l1 then l2; Y's last hop crosses l1 from a source 2
+        // BFS hops out, so l1's (hop-by-hop) convergence is slower than
+        // l2's — both of X's reroute events land at l1's table time.
+        let x = FlowSpec::along(&t, &[node(0, 0), node(1, 0), node(1, 1)], 100e6);
+        let y = FlowSpec::along(
+            &t,
+            &[node(2, 1), node(2, 0), node(1, 0), node(0, 0)],
+            100e6,
+        );
+        let l1 = t.link_between(node(0, 0), node(1, 0)).unwrap();
+        let l2 = t.link_between(node(1, 0), node(1, 1)).unwrap();
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("pair").with_flows(vec![x, y]));
+        let plan = FaultPlan::new()
+            .at(100.0, FaultEvent::LinkDown(l1))
+            .at(110.0, FaultEvent::LinkDown(l2))
+            .with_recovery(RecoveryConfig::hop_by_hop());
+        let r = run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(!r.is_stalled());
+        assert_eq!(r.reroutes, 2, "each cut flow reroutes exactly once");
+    }
+
+    /// Without recovery and without restore, the mid-run fault ends in
+    /// the structured stall report with the drained bytes accounted.
+    #[test]
+    fn midrun_fault_without_recovery_stalls_with_partial_progress() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        let t = k4();
+        let net = SimNet::new(&t);
+        let bytes = 500e6;
+        let l = t.link_between(NodeId(0), NodeId(1)).unwrap();
+        let spec = FlowSpec::along(&t, &[NodeId(0), NodeId(1)], bytes);
+        let gate = spec.latency_us;
+        let mut dag = StageDag::default();
+        dag.push(Stage::new("xfer").with_flows(vec![spec]));
+        let plan = FaultPlan::new().at(4_000.0, FaultEvent::LinkDown(l));
+        let r = run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(r.is_stalled());
+        assert_eq!(r.stalled.len(), 1);
+        assert_eq!(r.stalled[0].dead_links, vec![l]);
+        // Drained at 50 GB/s from the gate to the cut, no further.
+        let drained = (4_000.0 - gate) * 50.0 * 1e3;
+        assert!(
+            (r.stalled[0].remaining_bytes - (bytes - drained)).abs() < 1.0,
+            "{}",
+            r.stalled[0].remaining_bytes
+        );
+        assert!((r.byte_hops - drained).abs() < 1.0);
     }
 }

@@ -53,6 +53,42 @@ impl Topology {
         role: LinkRole,
         length_m: f64,
     ) -> LinkId {
+        let (id, prev) = self.push_link(a, b, lanes, class, role, length_m);
+        assert!(prev.is_none(), "duplicate link {a}-{b}");
+        id
+    }
+
+    /// Add a link that may parallel an existing `a`–`b` link (channel
+    /// multiplicity: bonded cables, plane-redundant uplinks). The
+    /// builders use [`Topology::add_link`], whose duplicate assert
+    /// guards against accidental re-wiring; multi-link topologies opt in
+    /// here. [`Topology::link_between`] keeps answering the first link
+    /// of the pair — use [`Topology::links_between`] for the full set.
+    pub fn add_parallel_link(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        lanes: u32,
+        class: CableClass,
+        role: LinkRole,
+        length_m: f64,
+    ) -> LinkId {
+        self.push_link(a, b, lanes, class, role, length_m).0
+    }
+
+    /// Shared wiring behind [`Topology::add_link`] /
+    /// [`Topology::add_parallel_link`]: push the link, extend both
+    /// adjacency lists, and record the pair's *first* link in the pair
+    /// index. Returns the new id and the pair's previous first link.
+    fn push_link(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        lanes: u32,
+        class: CableClass,
+        role: LinkRole,
+        length_m: f64,
+    ) -> (LinkId, Option<LinkId>) {
         assert_ne!(a, b, "self-link");
         assert!(lanes > 0, "zero-lane link");
         let id = LinkId(self.links.len() as u32);
@@ -67,9 +103,14 @@ impl Topology {
         self.adj[a.idx()].push((b, id));
         self.adj[b.idx()].push((a, id));
         let key = if a < b { (a, b) } else { (b, a) };
-        let prev = self.pair_index.insert(key, id);
-        assert!(prev.is_none(), "duplicate link {a}-{b}");
-        id
+        let prev = match self.pair_index.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => Some(*e.get()),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(id);
+                None
+            }
+        };
+        (id, prev)
     }
 
     #[inline]
@@ -87,10 +128,33 @@ impl Topology {
         &self.adj[n.idx()]
     }
 
-    /// The link between `a` and `b`, if directly connected.
+    /// The link between `a` and `b`, if directly connected. On a
+    /// multi-link pair (see [`Topology::add_parallel_link`]) this is the
+    /// first link wired; consumers that must see every parallel link
+    /// (e.g. failure-notification sets) use [`Topology::links_between`].
     pub fn link_between(&self, a: NodeId, b: NodeId) -> Option<LinkId> {
         let key = if a < b { (a, b) } else { (b, a) };
         self.pair_index.get(&key).copied()
+    }
+
+    /// Every link between `a` and `b` — the hop's full link set,
+    /// including parallel links.
+    pub fn links_between(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        self.neighbors(a)
+            .iter()
+            .filter(|&&(n, _)| n == b)
+            .map(|&(_, l)| l)
+            .collect()
+    }
+
+    /// True if the hop `a`–`b` exists and *some* link of the pair
+    /// satisfies `usable` — the shared multi-link hop-liveness predicate
+    /// behind APR path pruning and fault rerouting (one parallel alive
+    /// keeps the hop alive).
+    pub fn hop_usable(&self, a: NodeId, b: NodeId, usable: impl Fn(LinkId) -> bool) -> bool {
+        self.neighbors(a)
+            .iter()
+            .any(|&(n, l)| n == b && usable(l))
     }
 
     pub fn node_count(&self) -> usize {
@@ -168,6 +232,20 @@ impl Topology {
         dst: NodeId,
         npu_routable: bool,
     ) -> Option<Vec<NodeId>> {
+        self.shortest_path_filtered(src, dst, npu_routable, |_| true)
+    }
+
+    /// [`Topology::shortest_path`] restricted to links `accept` admits —
+    /// the shared BFS behind live-link rerouting
+    /// ([`crate::sim::fault::shortest_alive_path`] passes the up/down
+    /// state as the predicate).
+    pub fn shortest_path_filtered(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+        npu_routable: bool,
+        accept: impl Fn(LinkId) -> bool,
+    ) -> Option<Vec<NodeId>> {
         if src == dst {
             return Some(vec![src]);
         }
@@ -180,8 +258,8 @@ impl Topology {
             if u != src && !npu_routable && self.node(u).kind.is_npu() {
                 continue;
             }
-            for &(v, _) in self.neighbors(u) {
-                if !seen[v.idx()] {
+            for &(v, l) in self.neighbors(u) {
+                if !seen[v.idx()] && accept(l) {
                     seen[v.idx()] = true;
                     prev[v.idx()] = u;
                     if v == dst {
@@ -310,6 +388,28 @@ mod tests {
     fn duplicate_links_rejected() {
         let (mut t, a, b, _c) = tri();
         t.add_link(a, b, 1, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+    }
+
+    #[test]
+    fn parallel_links_are_allowed_and_enumerable() {
+        let (mut t, a, b, _c) = tri();
+        let first = t.link_between(a, b).unwrap();
+        let second =
+            t.add_parallel_link(a, b, 2, CableClass::PassiveElectrical, LinkRole::BoardX, 0.3);
+        assert_ne!(first, second);
+        // link_between stays stable on the first link of the pair…
+        assert_eq!(t.link_between(a, b), Some(first));
+        // …while links_between exposes the full set, both directions.
+        let all = t.links_between(a, b);
+        assert_eq!(all, vec![first, second]);
+        assert_eq!(t.links_between(b, a), vec![first, second]);
+        // Adjacency carries both parallels.
+        assert_eq!(t.neighbors(a).iter().filter(|&&(n, _)| n == b).count(), 2);
+        // Hop liveness: one alive parallel keeps the hop alive; a hop
+        // with no link at all is never usable.
+        assert!(t.hop_usable(a, b, |l| l == second));
+        assert!(!t.hop_usable(a, b, |_| false));
+        assert!(!t.hop_usable(a, NodeId(2), |_| true), "a–c are not adjacent");
     }
 
     #[test]

@@ -84,10 +84,17 @@ impl Rng {
         self.f64() < p
     }
 
-    /// Exponential variate with rate `lambda` (mean `1/lambda`).
+    /// Exponential variate with rate `lambda` (mean `1/lambda`). A zero
+    /// rate means the event never arrives, so `exp(0)` is `+∞` — not a
+    /// NaN-producing `0/0` — letting mission loops driven by a
+    /// zero-failure-rate process (e.g. `reliability::montecarlo` with
+    /// both AFRs at 0) terminate cleanly on their horizon check.
     #[inline]
     pub fn exp(&mut self, lambda: f64) -> f64 {
-        assert!(lambda > 0.0);
+        assert!(lambda >= 0.0, "negative rate {lambda}");
+        if lambda == 0.0 {
+            return f64::INFINITY;
+        }
         let u = 1.0 - self.f64(); // (0,1]
         -u.ln() / lambda
     }
@@ -156,6 +163,16 @@ mod tests {
         let lambda = 0.25;
         let mean: f64 = (0..n).map(|_| r.exp(lambda)).sum::<f64>() / n as f64;
         assert!((mean - 4.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn exp_zero_rate_is_infinite() {
+        let mut r = Rng::new(13);
+        let v = r.exp(0.0);
+        assert!(v.is_infinite() && v > 0.0, "exp(0) must be +inf, got {v}");
+        // And the generator state is untouched (no draw consumed).
+        let mut fresh = Rng::new(13);
+        assert_eq!(r.next_u64(), fresh.next_u64());
     }
 
     #[test]

@@ -213,6 +213,113 @@ fn bounded_strategies_match_oracles_on_randomized_interleavings() {
     );
 }
 
+/// PR 4 acceptance differential: randomized interleavings of flow
+/// adds/removes **and mid-run capacity changes** (link fail / restore /
+/// rescale through `links_changed`), all three strategies plus the
+/// naive oracle compared after every mutation. Failures here mean the
+/// capacity-change candidate seeding or an absorption trigger missed a
+/// chain set off by a constraint moving instead of a flow.
+#[test]
+fn capacity_changes_match_oracles_on_randomized_interleavings() {
+    forall(
+        "fault-event interleavings vs oracles",
+        96,
+        |rng: &mut Rng| {
+            let t = random_topology(rng);
+            let mut net = SimNet::new(&t);
+            let mut bounded = Rates::new();
+            let mut rise = Rates::with_strategy(ResolveStrategy::RiseOnly);
+            let mut bfs = Rates::with_strategy(ResolveStrategy::FullComponentBfs);
+
+            let mut specs: Vec<Vec<Channel>> = Vec::new();
+            let mut ids_bnd: Vec<usize> = Vec::new();
+            let mut ids_rise: Vec<usize> = Vec::new();
+            let mut ids_bfs: Vec<usize> = Vec::new();
+            let mut alive: Vec<usize> = Vec::new();
+
+            // Seed with an initial flow population so the first fault
+            // events land on a live allocation.
+            let initial = random_flows(rng, &t, 2, 12);
+            let refs: Vec<&[Channel]> = initial.iter().map(|f| f.as_slice()).collect();
+            let new_n = bounded.add_flows(&net, &refs);
+            let new_r = rise.add_flows(&net, &refs);
+            let new_b = bfs.add_flows(&net, &refs);
+            for (j, f) in initial.into_iter().enumerate() {
+                alive.push(specs.len());
+                specs.push(f);
+                ids_bnd.push(new_n[j]);
+                ids_rise.push(new_r[j]);
+                ids_bfs.push(new_b[j]);
+            }
+
+            let steps = rng.range(8, 20);
+            for _ in 0..steps {
+                let roll = rng.f64();
+                if roll < 0.5 {
+                    // Capacity change on a random link: fail, restore or
+                    // rescale — the mutation class under test.
+                    let l = LinkId(rng.range(0, t.link_count()) as u32);
+                    match rng.range(0, 3) {
+                        0 => net.fail_link(l),
+                        1 => net.restore_link(l),
+                        _ => {
+                            net.restore_link(l);
+                            net.set_link_capacity(l, 1.0 + 99.0 * rng.f64());
+                        }
+                    }
+                    bounded.links_changed(&net, &[l]);
+                    rise.links_changed(&net, &[l]);
+                    bfs.links_changed(&net, &[l]);
+                } else if roll < 0.75 && !alive.is_empty() {
+                    let k = alive.swap_remove(rng.range(0, alive.len()));
+                    bounded.remove_flows(&net, &[ids_bnd[k]]);
+                    rise.remove_flows(&net, &[ids_rise[k]]);
+                    bfs.remove_flows(&net, &[ids_bfs[k]]);
+                } else {
+                    let extra = random_flows(rng, &t, 1, 4);
+                    let refs: Vec<&[Channel]> =
+                        extra.iter().map(|f| f.as_slice()).collect();
+                    let new_n = bounded.add_flows(&net, &refs);
+                    let new_r = rise.add_flows(&net, &refs);
+                    let new_b = bfs.add_flows(&net, &refs);
+                    for (j, f) in extra.into_iter().enumerate() {
+                        alive.push(specs.len());
+                        specs.push(f);
+                        ids_bnd.push(new_n[j]);
+                        ids_rise.push(new_r[j]);
+                        ids_bfs.push(new_b[j]);
+                    }
+                }
+                // After EVERY mutation: all four agree on the alive set
+                // under the *current* capacities.
+                let alive_refs: Vec<&[Channel]> =
+                    alive.iter().map(|&k| specs[k].as_slice()).collect();
+                let oracle = naive_max_min_rates(&net, &alive_refs);
+                for (j, &k) in alive.iter().enumerate() {
+                    let rn = bounded.rate(ids_bnd[k]);
+                    let rr = rise.rate(ids_rise[k]);
+                    let rb = bfs.rate(ids_bfs[k]);
+                    assert!(
+                        (rn - oracle[j]).abs() <= 1e-6 * oracle[j].max(1.0),
+                        "bounded {rn} vs naive {} (flow {k})",
+                        oracle[j]
+                    );
+                    assert!(
+                        (rr - oracle[j]).abs() <= 1e-6 * oracle[j].max(1.0),
+                        "rise {rr} vs naive {} (flow {k})",
+                        oracle[j]
+                    );
+                    assert!(
+                        (rb - oracle[j]).abs() <= 1e-6 * oracle[j].max(1.0),
+                        "bfs {rb} vs naive {} (flow {k})",
+                        oracle[j]
+                    );
+                }
+            }
+        },
+    );
+}
+
 #[test]
 fn incremental_readdition_matches_oracle() {
     forall("incremental add vs naive", 64, |rng: &mut Rng| {

@@ -1,0 +1,205 @@
+//! End-to-end fault-injection integration tests (PR 4): mid-run
+//! `FaultPlan` events through the event loop, online APR recovery, the
+//! fig12 sim-vs-analytic consistency check, and the strategy
+//! differential under faults.
+
+use ubmesh::collectives::alltoall::{
+    hrs_reroute, multipath_alltoall_dag, superpod_hrs_alltoall_dag, Grid,
+};
+use ubmesh::routing::failure::{
+    direct_notification_convergence_us, hop_by_hop_convergence_us, RecoveryModel,
+};
+use ubmesh::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+use ubmesh::sim::{self, FlowSpec, ResolveStrategy, SimConfig, SimNet, Stage, StageDag};
+use ubmesh::topology::ndmesh::{nd_fullmesh, DimSpec};
+use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig, SuperPodHandles};
+use ubmesh::topology::{CableClass, NodeId, Topology};
+
+fn mesh_4x4() -> Topology {
+    nd_fullmesh(
+        "m44",
+        &[
+            DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+            DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+        ],
+    )
+}
+
+/// Fig 12, measured against analytic: with a single rerouted flow on
+/// the critical path, the makespan gap between hop-by-hop and direct
+/// notification equals the convergence-latency gap *exactly* — the
+/// simulator charges precisely the modeled control-plane delay, nothing
+/// else differs between the two runs.
+#[test]
+fn measured_notification_gap_matches_analytic_convergence_gap() {
+    let t = mesh_4x4();
+    let node = |x: usize, y: usize| NodeId((y * 4 + x) as u32);
+    let (a, b, c, d) = (node(0, 0), node(1, 0), node(1, 1), node(2, 1));
+    let failed = t.link_between(c, d).unwrap();
+    let net = SimNet::new(&t);
+    let bytes = 100e6;
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("xfer").with_flows(vec![FlowSpec::along(&t, &[a, b, c, d], bytes)]));
+
+    let t_fail = 1_000.0;
+    let run_mode = |rc: RecoveryConfig| {
+        let plan = FaultPlan::new()
+            .at(t_fail, FaultEvent::LinkDown(failed))
+            .with_recovery(rc);
+        let r = sim::schedule::run_faulted(&net, &dag, &SimConfig::default(), &plan);
+        assert!(!r.is_stalled());
+        assert_eq!(r.reroutes, 1);
+        r.makespan_us
+    };
+    let m_hbh = run_mode(RecoveryConfig::hop_by_hop());
+    let m_direct = run_mode(RecoveryConfig::direct());
+
+    // The affected source `a` is 2 hops from both link endpoints, the
+    // regime where direct notification wins (worst = 2 ⇒ flooding pays
+    // two per-router processing steps, direct pays one total).
+    let m = RecoveryModel::default();
+    let conv_hbh = hop_by_hop_convergence_us(&t, failed, &[a], &m);
+    let conv_direct = direct_notification_convergence_us(&t, failed, &[a], &m);
+    assert!(conv_direct < conv_hbh, "{conv_direct} vs {conv_hbh}");
+    assert!(m_direct < m_hbh, "direct {m_direct} vs hop-by-hop {m_hbh}");
+    let measured_gap = m_hbh - m_direct;
+    let analytic_gap = conv_hbh - conv_direct;
+    assert!(
+        (measured_gap - analytic_gap).abs() < 1e-6,
+        "measured gap {measured_gap} vs analytic {analytic_gap}"
+    );
+}
+
+/// A mid-run `LinkCapacity` rescale flows through the bounded
+/// capacity-change re-solve and lands on the closed-form makespan.
+#[test]
+fn midrun_rescale_matches_closed_form() {
+    let t = nd_fullmesh(
+        "k4",
+        &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+    );
+    let net = SimNet::new(&t);
+    let l = t.link_between(NodeId(0), NodeId(1)).unwrap();
+    let bytes = 500e6; // 10_000 µs at the x8 = 50 GB/s full rate
+    let spec = FlowSpec::along(&t, &[NodeId(0), NodeId(1)], bytes);
+    let gate = spec.latency_us;
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("xfer").with_flows(vec![spec]));
+
+    let t_change = 4_000.0;
+    let plan = FaultPlan::new().at(t_change, FaultEvent::LinkCapacity(l, 25.0));
+    let r = sim::schedule::run_faulted(&net, &dag, &SimConfig::default(), &plan);
+    assert!(!r.is_stalled());
+    assert_eq!(r.reroutes, 0, "a slower link is not a cut");
+    assert_eq!(r.solver.cap_resolves, 1);
+    assert!(r.solver.cap_rate_recomputes >= 1);
+    let drained = (t_change - gate) * 50.0 * 1e3;
+    let expect = t_change + (bytes - drained) / (25.0 * 1e3);
+    assert!(
+        (r.makespan_us - expect).abs() / expect < 1e-6,
+        "makespan {} vs closed form {expect}",
+        r.makespan_us
+    );
+}
+
+/// The full strategy differential under faults: an all-to-all with a
+/// mid-run link death, APR recovery and a later restore must produce
+/// identical reports under the bounded solver, the PR 2 rise-only
+/// solver and the PR 1 full-component oracle.
+#[test]
+fn faulted_runs_agree_across_strategies() {
+    let t = mesh_4x4();
+    let nodes = t.npus.clone();
+    let g = Grid::new(&nodes, 4, 4);
+    let net = SimNet::new(&t);
+    let dag = multipath_alltoall_dag(&t, &g, 4e6);
+    let healthy = sim::schedule::run(&net, &dag);
+    let failed = t.link_between(NodeId(0), NodeId(1)).unwrap();
+    let plan = FaultPlan::new()
+        .at(healthy.makespan_us * 0.3, FaultEvent::LinkDown(failed))
+        .at(healthy.makespan_us * 2.0, FaultEvent::LinkUp(failed))
+        .with_recovery(RecoveryConfig::direct());
+    let run = |strategy: ResolveStrategy| {
+        sim::schedule::run_faulted(&net, &dag, &SimConfig { strategy }, &plan)
+    };
+    let bounded = run(ResolveStrategy::Bounded);
+    let rise = run(ResolveStrategy::RiseOnly);
+    let bfs = run(ResolveStrategy::FullComponentBfs);
+    assert!(!bounded.is_stalled());
+    assert!(bounded.reroutes >= 1, "{} reroutes", bounded.reroutes);
+    for (name, r) in [("rise", &rise), ("bfs", &bfs)] {
+        assert!(
+            (bounded.makespan_us - r.makespan_us).abs() <= 1e-6 * r.makespan_us,
+            "{name}: {} vs bounded {}",
+            r.makespan_us,
+            bounded.makespan_us
+        );
+        assert!(
+            (bounded.byte_hops - r.byte_hops).abs() <= 1e-6 * r.byte_hops,
+            "{name} byte-hops"
+        );
+        assert_eq!(bounded.reroutes, r.reroutes, "{name} reroutes");
+        assert_eq!(bounded.fault_events, r.fault_events, "{name} fault events");
+    }
+    assert!(
+        bounded.makespan_us > healthy.makespan_us,
+        "the fault must cost something: {} vs {}",
+        bounded.makespan_us,
+        healthy.makespan_us
+    );
+}
+
+/// 2 pods × 2×2 racks = 512 NPUs over a real 4-HRS Clos tier.
+fn small_hrs_superpod() -> (Topology, SuperPodHandles) {
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = 2;
+    cfg.pod.rows = 2;
+    cfg.pod.cols = 2;
+    ubmesh_superpod(&cfg)
+}
+
+/// The SuperPod-tier rehearsal of the 32K acceptance scenario: an
+/// uplink dies mid-inter-pod-phase, `hrs_reroute` re-picks a surviving
+/// plane, the run completes, and the makespan sits strictly between the
+/// healthy run and the stall-until-restore bound.
+#[test]
+fn hrs_uplink_death_reroutes_and_bounds_makespan() {
+    let (t, h) = small_hrs_superpod();
+    let dag = superpod_hrs_alltoall_dag(&t, &h, 4e6, 0.0, 1);
+    let net = SimNet::new(&t);
+    let healthy = sim::schedule::run(&net, &dag);
+    assert!(!healthy.is_stalled());
+
+    // Kill the uplink-LRS → HRS hop of the first inter-pod flow,
+    // mid-phase.
+    let inter = dag.stages[2].materialize_flows(&t);
+    let failed = inter[0].channels[2].link;
+    let t_fail = (healthy.stage_done_us[1] + healthy.makespan_us) / 2.0;
+    let t_restore = healthy.makespan_us * 3.0;
+    let faults = FaultPlan::new()
+        .at(t_fail, FaultEvent::LinkDown(failed))
+        .at(t_restore, FaultEvent::LinkUp(failed));
+
+    let stall = sim::schedule::run_faulted(&net, &dag, &SimConfig::default(), &faults);
+    assert!(!stall.is_stalled(), "restore must revive the cut flows");
+    assert!(stall.makespan_us > t_restore);
+
+    let plan = faults
+        .clone()
+        .with_recovery(RecoveryConfig::direct().with_reroute(hrs_reroute(&h)));
+    let rec = sim::schedule::run_faulted(&net, &dag, &SimConfig::default(), &plan);
+    assert!(!rec.is_stalled());
+    assert!(rec.reroutes >= 1, "{} reroutes", rec.reroutes);
+    assert!(
+        rec.makespan_us > healthy.makespan_us,
+        "degraded {} vs healthy {}",
+        rec.makespan_us,
+        healthy.makespan_us
+    );
+    assert!(
+        rec.makespan_us < stall.makespan_us,
+        "degraded {} vs stall bound {}",
+        rec.makespan_us,
+        stall.makespan_us
+    );
+}

@@ -29,9 +29,10 @@
 //! one phase's flows instead of the whole DAG.
 
 use ubmesh::collectives::alltoall::{
-    dimwise_alltoall_dag, superpod_alltoall_dag, superpod_hrs_alltoall_dag,
+    dimwise_alltoall_dag, hrs_reroute, superpod_alltoall_dag, superpod_hrs_alltoall_dag,
 };
-use ubmesh::sim::{self, SimNet};
+use ubmesh::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+use ubmesh::sim::{self, SimConfig, SimNet};
 use ubmesh::topology::ndmesh::{expected_links, nd_fullmesh, DimSpec};
 use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
 use ubmesh::topology::ublink::LANE_GB_S;
@@ -263,5 +264,68 @@ fn superpod_hrs_32k_bounded_adds_and_oversubscription() {
     assert!(
         slowed > base * 1.5,
         "4:1 oversubscription must lengthen the inter-pod phase: {slowed} vs {base} µs"
+    );
+}
+
+/// PR 4 acceptance: the 32 768-NPU degraded run. An uplink-LRS → HRS
+/// link dies mid-inter-pod-phase; with online recovery the affected
+/// flows re-select a surviving uplink plane (`hrs_reroute`, the
+/// `hrs_plane_pair` rotation) after the direct-notification convergence
+/// latency, and the run **completes** with a makespan strictly between
+/// the healthy run and the naive stall-until-restore bound. Uniform
+/// payloads keep the three full-scale runs batched and affordable.
+#[test]
+fn superpod_hrs_32k_degraded_run_completes_via_apr_reroute() {
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = 32;
+    let (t, h) = ubmesh_superpod(&cfg);
+    assert_eq!(h.npus().len(), 32768);
+
+    let dag = superpod_hrs_alltoall_dag(&t, &h, 1e6, 0.0, 1);
+    let net = SimNet::new(&t);
+    let healthy = sim::schedule::run(&net, &dag);
+    assert!(!healthy.is_stalled());
+
+    // The failure site: the uplink-LRS → HRS hop of a live inter-pod
+    // flow, cut halfway through the inter-pod phase.
+    let inter = dag.stages[2].materialize_flows(&t);
+    let failed = inter[0].channels[2].link;
+    let t_fail = (healthy.stage_done_us[1] + healthy.makespan_us) / 2.0;
+    let t_restore = healthy.makespan_us * 3.0;
+    let faults = FaultPlan::new()
+        .at(t_fail, FaultEvent::LinkDown(failed))
+        .at(t_restore, FaultEvent::LinkUp(failed));
+
+    // Naive bound: no recovery — the cut flows wait for the restore.
+    let stall = sim::schedule::run_faulted(&net, &dag, &SimConfig::default(), &faults);
+    assert!(!stall.is_stalled(), "the restore must revive the cut flows");
+    assert!(stall.makespan_us > t_restore, "{}", stall.makespan_us);
+
+    // Degraded run: APR reroute onto surviving planes.
+    let plan = faults
+        .clone()
+        .with_recovery(RecoveryConfig::direct().with_reroute(hrs_reroute(&h)));
+    let rec = sim::schedule::run_faulted(&net, &dag, &SimConfig::default(), &plan);
+    assert!(!rec.is_stalled(), "degraded run must complete: {:?}", rec.stalled.len());
+    assert!(rec.reroutes >= 1, "{} reroutes", rec.reroutes);
+    assert!(rec.fault_events >= 1);
+    assert!(
+        rec.makespan_us > healthy.makespan_us,
+        "degraded {} vs healthy {}",
+        rec.makespan_us,
+        healthy.makespan_us
+    );
+    assert!(
+        rec.makespan_us < stall.makespan_us,
+        "degraded {} must beat the stall bound {}",
+        rec.makespan_us,
+        stall.makespan_us
+    );
+    // The capacity-change path did bounded work, not full components.
+    let s = &rec.solver;
+    assert!(s.cap_resolves >= 1);
+    assert!(
+        s.cap_rate_recomputes <= s.rate_recomputes,
+        "cap slice within aggregate"
     );
 }
