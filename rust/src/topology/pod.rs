@@ -74,8 +74,9 @@ impl PodHandles {
 }
 
 /// Index of neighbor `b` among the sorted peers of `a` in a group of
-/// `size` (used to pick which inter-rack LRS carries which bundle).
-fn neighbor_slot(a: usize, b: usize) -> usize {
+/// `size` (used to pick which inter-rack LRS carries which bundle; the
+/// workload-layer path builder mirrors the same slot arithmetic).
+pub(crate) fn neighbor_slot(a: usize, b: usize) -> usize {
     debug_assert_ne!(a, b);
     if b < a {
         b

@@ -1,0 +1,488 @@
+//! Concrete rank→NPU maps and multi-path route construction for the
+//! measured training iteration ([`super::step::iteration_dag`]).
+//!
+//! The analytic §5.2 cost model only needs to know which *tier* a
+//! parallelism group spans ([`super::placement::Placement`]); the DES
+//! iteration needs actual wire paths on the constructed topology. A
+//! [`ClusterMap`] captures the node-id tables of a rack / pod /
+//! SuperPod (or the Fig 16-d intra-rack Clos variant) and answers, for
+//! any ordered NPU pair, the APR path set a source would install:
+//!
+//! * **same rack** — the direct X/Y link **striped with the 2-hop
+//!   relays through dimension peers outside the communicating group**
+//!   (Fig 14-a's "at most one-hop forwarding" multipath): a 2-member
+//!   group inside an 8-way mesh dimension approaches the full
+//!   7-link-per-NPU tier bandwidth, while a group spanning the whole
+//!   dimension keeps the optimal direct exchange (relays through
+//!   equally-busy peers only amplify wire bytes); diagonal pairs split
+//!   over both X-then-Y and Y-then-X corners;
+//! * **same pod, different rack** — two plane-diverse 5-hop paths over
+//!   the Z/α rack bundles (`npu → board LRS → inter-rack LRS → peer
+//!   LRS → board LRS → npu`), 7 hops via a corner rack when the racks
+//!   share neither row nor column;
+//! * **different pod** — two uplink-plane-diverse 6-hop paths through
+//!   the HRS Clos tier, exactly the PR 3
+//!   [`crate::collectives::alltoall::superpod_hrs_alltoall_dag`] shape;
+//! * **intra-rack Clos** (Fig 16-d) — up to four HRS-diverse 2-hop
+//!   paths, so a striped pair approaches the x64-per-NPU fabric the
+//!   analytic [`super::placement::TierBandwidth::clos_intra_rack`]
+//!   model assumes.
+//!
+//! Path selection is a deterministic *balanced rotation* (not a hash):
+//! the PR 3 sweep showed hash-random plane choice lets balls-in-bins
+//! collisions on the thin backplane-mesh hop bind a phase and mask the
+//! economics being measured.
+
+use crate::routing::apr::hrs_plane_pair;
+use crate::topology::pod::{neighbor_slot, PodHandles};
+use crate::topology::rack::RackHandles;
+use crate::topology::superpod::SuperPodHandles;
+use crate::topology::variants::VariantHandles;
+use crate::topology::NodeId;
+
+#[derive(Clone, Debug)]
+enum Fabric {
+    /// The UB-Mesh hierarchy: one or more racks, optionally grouped
+    /// into pods with Z/α bundles, optionally uplinked into an HRS
+    /// Clos tier.
+    Mesh {
+        /// `[rack][plane][board]` board-attach LRS.
+        npu_lrs: Vec<Vec<Vec<NodeId>>>,
+        /// `[rack][plane][slot]` inter-rack LRS (slots 0–2 row, 3–5
+        /// column, 6–7 uplink).
+        ir_lrs: Vec<Vec<Vec<NodeId>>>,
+        /// `[rack][k = plane*2 + slot]` uplink LRS and its HRS targets
+        /// (`SuperPodHandles::rack_uplinks`); empty when the map has no
+        /// HRS tier.
+        uplinks: Vec<Vec<(NodeId, Vec<NodeId>)>>,
+        boards: usize,
+        slots: usize,
+        racks_per_pod: usize,
+        cols: usize,
+        planes: usize,
+    },
+    /// Fig 16-d: no direct NPU-NPU links, every pair routes through the
+    /// 16-HRS single-stage fabric.
+    ClosRack { hrs: Vec<NodeId> },
+}
+
+/// Node-id tables + path construction for one cluster (see module docs).
+#[derive(Clone, Debug)]
+pub struct ClusterMap {
+    /// NPUs in rank order (pod-major, rack-major, board-major).
+    npus: Vec<NodeId>,
+    fabric: Fabric,
+}
+
+impl ClusterMap {
+    /// A single 2D-FM rack (64 NPUs with the default config).
+    pub fn rack(h: &RackHandles) -> ClusterMap {
+        ClusterMap::from_racks(std::slice::from_ref(h), 1, 1, Vec::new())
+    }
+
+    /// One pod (16 racks / 1024 NPUs by default). Cross-pod pairs are
+    /// unreachable (no HRS tier in the map).
+    pub fn pod(h: &PodHandles) -> ClusterMap {
+        ClusterMap::from_racks(&h.racks, h.racks.len(), h.cols, Vec::new())
+    }
+
+    /// A SuperPod with its HRS Clos tier; all pair relations routable.
+    pub fn superpod(h: &SuperPodHandles) -> ClusterMap {
+        let racks: Vec<RackHandles> =
+            h.pods.iter().flat_map(|p| p.racks.clone()).collect();
+        ClusterMap::from_racks(
+            &racks,
+            h.pods[0].racks.len(),
+            h.pods[0].cols,
+            h.rack_uplinks.clone(),
+        )
+    }
+
+    /// The Fig 16-d intra-rack Clos variant
+    /// ([`crate::topology::variants::rack_clos`]).
+    pub fn clos_rack(h: &VariantHandles) -> ClusterMap {
+        assert!(!h.hrs.is_empty(), "Clos rack needs an HRS tier");
+        ClusterMap {
+            npus: h.npus.clone(),
+            fabric: Fabric::ClosRack { hrs: h.hrs.clone() },
+        }
+    }
+
+    fn from_racks(
+        racks: &[RackHandles],
+        racks_per_pod: usize,
+        cols: usize,
+        uplinks: Vec<Vec<(NodeId, Vec<NodeId>)>>,
+    ) -> ClusterMap {
+        let boards = racks[0].npu_lrs[0].len();
+        let slots = racks[0].npus.len() / boards;
+        let planes = racks[0].npu_lrs.len();
+        let rows = racks_per_pod / cols.max(1);
+        assert!(
+            racks_per_pod <= 1 || (rows <= 4 && cols <= 4),
+            "pod grids beyond 4×4 exceed the 3-neighbor inter-rack LRS slots"
+        );
+        ClusterMap {
+            npus: racks.iter().flat_map(|r| r.npus.clone()).collect(),
+            fabric: Fabric::Mesh {
+                npu_lrs: racks.iter().map(|r| r.npu_lrs.clone()).collect(),
+                ir_lrs: racks.iter().map(|r| r.ir_lrs.clone()).collect(),
+                uplinks,
+                boards,
+                slots,
+                racks_per_pod,
+                cols,
+                planes,
+            },
+        }
+    }
+
+    /// NPUs in rank order.
+    pub fn npus(&self) -> &[NodeId] {
+        &self.npus
+    }
+
+    pub fn npu_count(&self) -> usize {
+        self.npus.len()
+    }
+
+    /// How many parallel paths [`ClusterMap::pair_paths`] returns for
+    /// this pair — lazy-stage flow-count metadata relies on an exact
+    /// match. `within` is the communicating group (relays are only
+    /// drawn from dimension peers outside it).
+    pub fn pair_path_count(&self, a: usize, b: usize, within: &[usize]) -> usize {
+        match &self.fabric {
+            Fabric::ClosRack { hrs } => hrs.len().min(4),
+            Fabric::Mesh { boards, slots, .. } => {
+                let rs = boards * slots;
+                if a / rs != b / rs {
+                    return 2;
+                }
+                let (ra, ma, mb) = (a / rs, a % rs, b % rs);
+                let (ba, sa) = (ma / slots, ma % slots);
+                let (bb, sb) = (mb / slots, mb % slots);
+                if ba == bb {
+                    1 + (0..*slots)
+                        .filter(|&s| {
+                            s != sa && s != sb && !within.contains(&(ra * rs + ba * slots + s))
+                        })
+                        .count()
+                } else if sa == sb {
+                    1 + (0..*boards)
+                        .filter(|&bo| {
+                            bo != ba
+                                && bo != bb
+                                && !within.contains(&(ra * rs + bo * slots + sa))
+                        })
+                        .count()
+                } else {
+                    2
+                }
+            }
+        }
+    }
+
+    /// The APR path set for ordered pair `(a, b)` (rank-order NPU
+    /// indices). `within` is the communicating group: in-rack pairs
+    /// stripe over the direct link plus every same-dimension relay NOT
+    /// in the group (see module docs). `sel` drives the balanced
+    /// rotation of plane pairs (inter-rack) and HRS targets
+    /// (cross-pod / Clos). Paths are node lists consumable by
+    /// [`crate::sim::FlowSpec::split`].
+    pub fn pair_paths(&self, a: usize, b: usize, sel: u64, within: &[usize]) -> Vec<Vec<NodeId>> {
+        assert_ne!(a, b, "no path from an NPU to itself");
+        let (na, nb) = (self.npus[a], self.npus[b]);
+        match &self.fabric {
+            Fabric::ClosRack { hrs } => {
+                let n = hrs.len();
+                let npaths = n.min(4);
+                let stride = (n / npaths).max(1);
+                let base = a.wrapping_mul(7) + b + sel as usize;
+                (0..npaths)
+                    .map(|k| vec![na, hrs[(base + k * stride) % n], nb])
+                    .collect()
+            }
+            Fabric::Mesh {
+                npu_lrs,
+                ir_lrs,
+                uplinks,
+                boards,
+                slots,
+                racks_per_pod,
+                cols,
+                planes,
+            } => {
+                let rs = boards * slots;
+                let (ra, ma) = (a / rs, a % rs);
+                let (rb, mb) = (b / rs, b % rs);
+                let (ba, sa) = (ma / slots, ma % slots);
+                let (bb, sb) = (mb / slots, mb % slots);
+                if ra == rb {
+                    if ba == bb {
+                        // Same board: direct X link + relays through the
+                        // board's out-of-group slots.
+                        let mut paths = vec![vec![na, nb]];
+                        for s in 0..*slots {
+                            let v = ra * rs + ba * slots + s;
+                            if s != sa && s != sb && !within.contains(&v) {
+                                paths.push(vec![na, self.npus[v], nb]);
+                            }
+                        }
+                        return paths;
+                    }
+                    if sa == sb {
+                        // Same slot column: direct Y link + out-of-group
+                        // board relays.
+                        let mut paths = vec![vec![na, nb]];
+                        for bo in 0..*boards {
+                            let v = ra * rs + bo * slots + sa;
+                            if bo != ba && bo != bb && !within.contains(&v) {
+                                paths.push(vec![na, self.npus[v], nb]);
+                            }
+                        }
+                        return paths;
+                    }
+                    // Diagonal: both corner relays (Fig 14-a).
+                    return vec![
+                        vec![na, self.npus[ra * rs + ba * slots + sb], nb],
+                        vec![na, self.npus[ra * rs + bb * slots + sa], nb],
+                    ];
+                }
+                if ra / racks_per_pod == rb / racks_per_pod {
+                    let (p1, p2) = hrs_plane_pair(sel, *planes);
+                    return [p1, p2]
+                        .iter()
+                        .map(|&p| {
+                            intra_pod_path(
+                                npu_lrs,
+                                ir_lrs,
+                                (na, ra, ba),
+                                (nb, rb, bb),
+                                *racks_per_pod,
+                                *cols,
+                                p,
+                                sel,
+                            )
+                        })
+                        .collect();
+                }
+                assert!(
+                    !uplinks.is_empty(),
+                    "pair {a}-{b} crosses pods but the map has no HRS tier"
+                );
+                let nk = uplinks[ra].len();
+                let (k1, k2) = hrs_plane_pair(sel, nk);
+                [k1, k2]
+                    .iter()
+                    .map(|&k| {
+                        let (src_lrs, targets) = &uplinks[ra][k];
+                        let j = (sel as usize / nk + ba + bb) % targets.len();
+                        let hn = targets[j];
+                        let (dst_lrs, dst_targets) = &uplinks[rb][k];
+                        debug_assert_eq!(
+                            dst_targets[j], hn,
+                            "per-rack uplink wiring must repeat"
+                        );
+                        let p = k / 2;
+                        vec![
+                            na,
+                            npu_lrs[ra][p][ba],
+                            *src_lrs,
+                            hn,
+                            *dst_lrs,
+                            npu_lrs[rb][p][bb],
+                            nb,
+                        ]
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// One plane's intra-pod path between NPUs in different racks: Z or α
+/// bundle when the racks share a row/column, Z-then-α (or α-then-Z,
+/// `sel`-selected) through a corner rack otherwise.
+#[allow(clippy::too_many_arguments)]
+fn intra_pod_path(
+    npu_lrs: &[Vec<Vec<NodeId>>],
+    ir_lrs: &[Vec<Vec<NodeId>>],
+    (na, ra, ba): (NodeId, usize, usize),
+    (nb, rb, bb): (NodeId, usize, usize),
+    racks_per_pod: usize,
+    cols: usize,
+    p: usize,
+    sel: u64,
+) -> Vec<NodeId> {
+    let pod_base = (ra / racks_per_pod) * racks_per_pod;
+    let (rpa, rpb) = (ra % racks_per_pod, rb % racks_per_pod);
+    let (rowa, cola) = (rpa / cols, rpa % cols);
+    let (rowb, colb) = (rpb / cols, rpb % cols);
+    let mut path = vec![na, npu_lrs[ra][p][ba]];
+    if rowa == rowb {
+        path.push(ir_lrs[ra][p][neighbor_slot(cola, colb)]);
+        path.push(ir_lrs[rb][p][neighbor_slot(colb, cola)]);
+    } else if cola == colb {
+        path.push(ir_lrs[ra][p][3 + neighbor_slot(rowa, rowb)]);
+        path.push(ir_lrs[rb][p][3 + neighbor_slot(rowb, rowa)]);
+    } else if sel & 2 == 0 {
+        // Z then α via the (rowa, colb) corner rack.
+        let rc = pod_base + rowa * cols + colb;
+        path.push(ir_lrs[ra][p][neighbor_slot(cola, colb)]);
+        path.push(ir_lrs[rc][p][neighbor_slot(colb, cola)]);
+        path.push(ir_lrs[rc][p][3 + neighbor_slot(rowa, rowb)]);
+        path.push(ir_lrs[rb][p][3 + neighbor_slot(rowb, rowa)]);
+    } else {
+        // α then Z via the (rowb, cola) corner rack.
+        let rc = pod_base + rowb * cols + cola;
+        path.push(ir_lrs[ra][p][3 + neighbor_slot(rowa, rowb)]);
+        path.push(ir_lrs[rc][p][3 + neighbor_slot(rowb, rowa)]);
+        path.push(ir_lrs[rc][p][neighbor_slot(cola, colb)]);
+        path.push(ir_lrs[rb][p][neighbor_slot(colb, cola)]);
+    }
+    path.push(npu_lrs[rb][p][bb]);
+    path.push(nb);
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pod::{ubmesh_pod, PodConfig};
+    use crate::topology::rack::{ubmesh_rack, RackConfig};
+    use crate::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+    use crate::topology::variants::rack_clos;
+    use crate::topology::Topology;
+
+    /// Every hop of every returned path must be a physical link.
+    fn assert_paths_physical(t: &Topology, map: &ClusterMap, a: usize, b: usize, sel: u64) {
+        let paths = map.pair_paths(a, b, sel, &[]);
+        assert_eq!(paths.len(), map.pair_path_count(a, b, &[]));
+        for p in &paths {
+            assert!(p.len() >= 2);
+            assert_eq!(p[0], map.npus()[a]);
+            assert_eq!(*p.last().unwrap(), map.npus()[b]);
+            for w in p.windows(2) {
+                assert!(
+                    t.link_between(w[0], w[1]).is_some(),
+                    "hop {}-{} of path {:?} not adjacent",
+                    w[0],
+                    w[1],
+                    p
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rack_paths_stripe_over_out_of_group_relays() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let map = ClusterMap::rack(&h);
+        assert_eq!(map.npu_count(), 64);
+        // Free pair on a board: direct + 6 slot relays.
+        let p = map.pair_paths(0, 3, 0, &[]);
+        assert_eq!(p.len(), 7);
+        assert_eq!(p[0].len(), 2, "direct X link first");
+        assert!(p[1..].iter().all(|p| p.len() == 3), "2-hop relays");
+        // Same-slot pair: direct + 6 board relays.
+        assert_eq!(map.pair_paths(0, 8, 0, &[]).len(), 7);
+        // A full-dimension group strips every relay: direct only.
+        let board: Vec<usize> = (0..8).collect();
+        assert_eq!(map.pair_paths(0, 3, 0, &board).len(), 1);
+        // A 2-member group keeps all 6 relays.
+        assert_eq!(map.pair_paths(0, 3, 0, &[0, 3]).len(), 7);
+        // Half-dimension group: the 4 outside boards relay.
+        let half: Vec<usize> = vec![0, 8, 16, 24]; // boards 0-3, slot 0
+        assert_eq!(map.pair_paths(0, 8, 0, &half).len(), 1 + 4);
+        // Diagonal: both corner relays.
+        let diag = map.pair_paths(1, 18, 0, &[]); // (b0,s1) → (b2,s2)
+        assert_eq!(diag.len(), 2);
+        assert_ne!(diag[0][1], diag[1][1]);
+        for (a, b) in [(0, 1), (0, 9), (1, 18), (7, 56), (63, 5)] {
+            for sel in 0..4 {
+                assert_paths_physical(&t, &map, a, b, sel);
+            }
+        }
+    }
+
+    #[test]
+    fn pod_paths_plane_diverse_and_physical() {
+        let (t, h) = ubmesh_pod(&PodConfig::default());
+        let map = ClusterMap::pod(&h);
+        assert_eq!(map.npu_count(), 1024);
+        // Same row (racks 0,1), same col (racks 0,4), diagonal (0,5).
+        for (a, b) in [(0, 64), (0, 4 * 64), (0, 5 * 64 + 63), (70, 15 * 64 + 9)] {
+            for sel in 0..8 {
+                assert_paths_physical(&t, &map, a, b, sel);
+                let paths = map.pair_paths(a, b, sel, &[]);
+                assert_eq!(paths.len(), 2);
+                // Plane-diverse: the two board-LRS first hops differ.
+                assert_ne!(paths[0][1], paths[1][1]);
+            }
+        }
+        // Same-row path is 5 hops, diagonal 7 hops.
+        assert_eq!(map.pair_paths(0, 64, 0, &[])[0].len(), 6);
+        assert_eq!(map.pair_paths(0, 5 * 64, 0, &[])[0].len(), 8);
+    }
+
+    #[test]
+    fn superpod_cross_pod_goes_through_hrs() {
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        let (t, h) = ubmesh_superpod(&cfg);
+        let map = ClusterMap::superpod(&h);
+        assert_eq!(map.npu_count(), 512);
+        let pod_n = 256;
+        for (a, b) in [(0, pod_n), (63, pod_n + 200), (100, pod_n + 1)] {
+            for sel in 0..8 {
+                assert_paths_physical(&t, &map, a, b, sel);
+                let paths = map.pair_paths(a, b, sel, &[]);
+                assert_eq!(paths.len(), 2);
+                assert_eq!(paths[0].len(), 7, "6-hop HRS route");
+                assert!(h.hrs.contains(&paths[0][3]), "4th node must be the HRS");
+            }
+        }
+        // Intra-pod pairs still use the Z/α tiers.
+        assert_paths_physical(&t, &map, 0, 65, 3);
+    }
+
+    #[test]
+    fn clos_rack_paths_hrs_diverse() {
+        let (t, h) = rack_clos();
+        let map = ClusterMap::clos_rack(&h);
+        for (a, b) in [(0, 1), (0, 9), (5, 62)] {
+            assert_paths_physical(&t, &map, a, b, 0);
+            let paths = map.pair_paths(a, b, 0, &[]);
+            assert_eq!(paths.len(), 4);
+            let mids: std::collections::HashSet<NodeId> =
+                paths.iter().map(|p| p[1]).collect();
+            assert_eq!(mids.len(), 4, "four distinct HRS");
+        }
+    }
+
+    #[test]
+    fn path_counts_match_paths_everywhere() {
+        // The lazy-stage flow-count metadata leans on pair_path_count
+        // being exact for every relation the superpod map can produce.
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        let (_t, h) = ubmesh_superpod(&cfg);
+        let map = ClusterMap::superpod(&h);
+        for (a, b) in [(0, 1), (0, 8), (1, 10), (0, 64), (0, 192), (0, 256), (63, 400)] {
+            for sel in 0..6 {
+                for within in [vec![], vec![a, b], (0..16).map(|k| k * 4).collect::<Vec<_>>()]
+                {
+                    assert_eq!(
+                        map.pair_paths(a, b, sel, &within).len(),
+                        map.pair_path_count(a, b, &within),
+                        "pair {a}-{b} sel {sel}"
+                    );
+                }
+            }
+        }
+    }
+}

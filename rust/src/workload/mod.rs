@@ -1,12 +1,17 @@
 //! LLM training workloads: model zoo (Table 5), parallelism configs,
-//! traffic derivation (Table 1), rank placement and the training-step
-//! stage DAG.
+//! traffic derivation (Table 1), rank placement, and the training-step
+//! stage DAGs — the analytic §5.2 cost model plus the full measured
+//! TP/SP/EP/PP/DP iteration ([`step::iteration_dag`]) on the concrete
+//! rank→NPU maps of [`cluster::ClusterMap`].
 
+pub mod cluster;
 pub mod models;
 pub mod placement;
 pub mod step;
 pub mod traffic;
 
+pub use cluster::ClusterMap;
 pub use models::{ModelConfig, MODELS};
 pub use placement::{Placement, Tier, NTIERS};
+pub use step::{iteration_dag, IterationSpec, RankOrder};
 pub use traffic::{ParallelismConfig, TrafficTable};

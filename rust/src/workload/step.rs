@@ -1,12 +1,17 @@
 //! Training-iteration model: analytic iteration time (the calibrated
-//! cost model of §5.2) and a DES stage-DAG builder used to validate it
-//! at rack scale.
+//! cost model of §5.2) and the DES stage-DAG builders that measure the
+//! same iteration on the real topology — [`rack_iteration_dag`] (the
+//! original TP+SP rack validation) and [`iteration_dag`] (the full
+//! TP/SP/EP/PP/DP training step with emergent 1F1B pipelining).
 
-use crate::sim::{Stage, StageDag};
+use std::sync::Arc;
+
+use crate::sim::{FlowSpec, Stage, StageDag};
 use crate::topology::rack::RackHandles;
 use crate::topology::ublink::MESSAGE_ALPHA_US;
 use crate::topology::{NodeId, Topology};
 
+use super::cluster::ClusterMap;
 use super::models::ModelConfig;
 use super::placement::{Placement, TierBandwidth};
 use super::traffic::{analyze, ParallelismConfig};
@@ -164,6 +169,503 @@ pub fn rack_iteration_dag(
     StageDag::chain(stages)
 }
 
+// ---------------------------------------------------------------------
+// Full measured training iteration (TP/SP/EP/PP/DP, emergent 1F1B)
+// ---------------------------------------------------------------------
+
+/// Which rank→NPU assignment the DAG uses — the §5.2 contrast.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum RankOrder {
+    /// TP innermost, then SP, PP, DP outermost (the §5.2 heuristic):
+    /// rank `r` sits at physical NPU `r`, so TP groups land on boards
+    /// and SP groups on rack columns.
+    TopologyAware,
+    /// PP innermost, SP outermost — the "not optimally distributed"
+    /// contrast of §5: TP groups smear across racks.
+    Naive,
+}
+
+impl RankOrder {
+    /// Physical NPU index of logical coordinates (tp, sp, pp, dp).
+    fn phys(self, tp_i: usize, sp_i: usize, pp_i: usize, dp_i: usize, p: &ParallelismConfig) -> usize {
+        match self {
+            RankOrder::TopologyAware => {
+                tp_i + p.tp * (sp_i + p.sp * (pp_i + p.pp * dp_i))
+            }
+            RankOrder::Naive => {
+                pp_i + p.pp * (dp_i + p.dp * (tp_i + p.tp * sp_i))
+            }
+        }
+    }
+}
+
+/// Calibration knobs of the measured iteration. Defaults mirror the
+/// analytic model's §7 overlap fractions so the DES and `iteration_time`
+/// price the same exposed traffic (the paper's Clos baseline enjoys the
+/// same overlap, so the calibration cancels in ratios).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationSpec {
+    /// Fraction of TP/SP/EP wire bytes that reach the network; the rest
+    /// is hidden under compute by the CCU (= `1 - CCU_OVERLAP`).
+    pub ccu_exposed: f64,
+    /// Fraction of the DP gradient traffic exposed after overlap with
+    /// backward compute (= `1 - DP_OVERLAP`).
+    pub dp_exposed: f64,
+}
+
+impl Default for IterationSpec {
+    fn default() -> Self {
+        IterationSpec {
+            ccu_exposed: 1.0 - CCU_OVERLAP,
+            dp_exposed: 1.0 - DP_OVERLAP,
+        }
+    }
+}
+
+/// Collective group families the iteration schedules.
+#[derive(Copy, Clone, Debug)]
+enum GroupSpec {
+    /// TP groups of pipeline stage `s`: vary tp, fix (sp, dp).
+    Tp(usize),
+    /// SP groups of stage `s`: vary sp, fix (tp, dp).
+    Sp(usize),
+    /// EP groups of stage `s`: vary the flattened (sp, dp) coordinate in
+    /// blocks of `ep` (the paper's "SP×DP as an integer multiple of EP").
+    Ep(usize),
+    /// DP groups: vary dp, fix (tp, sp, pp).
+    Dp,
+}
+
+/// Materialize the physical-NPU index groups of one family.
+fn groups_for(p: &ParallelismConfig, order: RankOrder, spec: GroupSpec) -> Vec<Vec<usize>> {
+    let mut groups = Vec::new();
+    match spec {
+        GroupSpec::Tp(s) => {
+            for dp_i in 0..p.dp {
+                for sp_i in 0..p.sp {
+                    groups.push(
+                        (0..p.tp).map(|t| order.phys(t, sp_i, s, dp_i, p)).collect(),
+                    );
+                }
+            }
+        }
+        GroupSpec::Sp(s) => {
+            for dp_i in 0..p.dp {
+                for tp_i in 0..p.tp {
+                    groups.push(
+                        (0..p.sp).map(|y| order.phys(tp_i, y, s, dp_i, p)).collect(),
+                    );
+                }
+            }
+        }
+        GroupSpec::Ep(s) => {
+            let ext = p.sp * p.dp;
+            let ep = p.ep;
+            debug_assert!(ep >= 2 && ext % ep == 0);
+            for tp_i in 0..p.tp {
+                for blk in 0..ext / ep {
+                    groups.push(
+                        (0..ep)
+                            .map(|e| {
+                                let ee = blk * ep + e;
+                                order.phys(tp_i, ee % p.sp, s, ee / p.sp, p)
+                            })
+                            .collect(),
+                    );
+                }
+            }
+        }
+        GroupSpec::Dp => {
+            for pp_i in 0..p.pp {
+                for sp_i in 0..p.sp {
+                    for tp_i in 0..p.tp {
+                        groups.push(
+                            (0..p.dp).map(|d| order.phys(tp_i, sp_i, pp_i, d, p)).collect(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    groups
+}
+
+/// Deterministic per-pair path-rotation seed (balanced, not hashed —
+/// see the [`ClusterMap`] module docs for why that matters).
+#[inline]
+fn pair_sel(ai: usize, bi: usize) -> u64 {
+    (ai as u64).wrapping_mul(131).wrapping_add(bi as u64 * 7 + 3)
+}
+
+/// Flow vector of a direct shard exchange over `groups`: every ordered
+/// pair splits `per_rank_bytes / (n-1)` across its APR path set;
+/// `extra_alpha_us` serializes the per-transfer α overheads the fused
+/// stage represents.
+fn exchange_flows(
+    t: &Topology,
+    map: &ClusterMap,
+    groups: &[Vec<usize>],
+    per_rank_bytes: f64,
+    extra_alpha_us: f64,
+) -> Vec<FlowSpec> {
+    let mut flows = Vec::new();
+    for g in groups {
+        let n = g.len();
+        if n < 2 {
+            continue;
+        }
+        let per_pair = per_rank_bytes / (n - 1) as f64;
+        for (ai, &a) in g.iter().enumerate() {
+            for (bi, &b) in g.iter().enumerate() {
+                if ai == bi {
+                    continue;
+                }
+                let paths = map.pair_paths(a, b, pair_sel(ai, bi), g);
+                let w = vec![1.0; paths.len()];
+                for mut f in FlowSpec::split(t, &paths, &w, per_pair) {
+                    f.latency_us += extra_alpha_us;
+                    flows.push(f);
+                }
+            }
+        }
+    }
+    flows
+}
+
+/// Flow count `exchange_flows` will produce (no path construction).
+fn exchange_count(map: &ClusterMap, groups: &[Vec<usize>]) -> usize {
+    groups
+        .iter()
+        .filter(|g| g.len() >= 2)
+        .map(|g| {
+            let mut c = 0;
+            for (ai, &a) in g.iter().enumerate() {
+                for (bi, &b) in g.iter().enumerate() {
+                    if ai != bi {
+                        c += map.pair_path_count(a, b, g);
+                    }
+                }
+            }
+            c
+        })
+        .sum()
+}
+
+/// Lazily-materialized exchange stage for one group family.
+fn exchange_stage(
+    name: String,
+    map: &Arc<ClusterMap>,
+    p: ParallelismConfig,
+    order: RankOrder,
+    spec: GroupSpec,
+    per_rank_bytes: f64,
+    extra_alpha_us: f64,
+) -> Stage {
+    let groups = groups_for(&p, order, spec);
+    let count = exchange_count(map, &groups);
+    let bytes: f64 = groups
+        .iter()
+        .filter(|g| g.len() >= 2)
+        .map(|g| g.len() as f64 * per_rank_bytes)
+        .sum();
+    let mapc = map.clone();
+    Stage::new(name).with_lazy_flows(count, bytes, move |t| {
+        exchange_flows(t, &mapc, &groups, per_rank_bytes, extra_alpha_us)
+    })
+}
+
+/// Lazily-materialized PP boundary send: every (tp, sp, dp) rank of
+/// stage `s_from` sends its boundary-activation shard to its peer in
+/// `s_to`, split over the pair's APR paths.
+fn p2p_stage(
+    name: String,
+    map: &Arc<ClusterMap>,
+    p: ParallelismConfig,
+    order: RankOrder,
+    s_from: usize,
+    s_to: usize,
+    bytes_per_pair: f64,
+) -> Stage {
+    let mut pairs = Vec::with_capacity(p.tp * p.sp * p.dp);
+    for dp_i in 0..p.dp {
+        for sp_i in 0..p.sp {
+            for tp_i in 0..p.tp {
+                pairs.push((
+                    order.phys(tp_i, sp_i, s_from, dp_i, &p),
+                    order.phys(tp_i, sp_i, s_to, dp_i, &p),
+                ));
+            }
+        }
+    }
+    let count: usize = pairs
+        .iter()
+        .map(|&(a, b)| map.pair_path_count(a, b, &[]))
+        .sum();
+    let bytes = pairs.len() as f64 * bytes_per_pair;
+    let mapc = map.clone();
+    Stage::new(name).with_lazy_flows(count, bytes, move |t| {
+        let mut flows = Vec::new();
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let paths = mapc.pair_paths(a, b, pair_sel(i, s_to), &[]);
+            let w = vec![1.0; paths.len()];
+            flows.extend(FlowSpec::split(t, &paths, &w, bytes_per_pair));
+        }
+        flows
+    })
+}
+
+/// The per-device 1F1B unit order of pipeline stage `s`: warmup
+/// forwards, steady-state one-forward-one-backward, cooldown backwards.
+/// Returns `(is_forward, microbatch)` in execution order.
+fn one_f_one_b(pp: usize, s: usize, mb: usize) -> Vec<(bool, usize)> {
+    let w = (pp - 1 - s).min(mb);
+    let mut seq = Vec::with_capacity(2 * mb);
+    for j in 0..w {
+        seq.push((true, j));
+    }
+    let mut bj = 0;
+    for j in w..mb {
+        seq.push((true, j));
+        seq.push((false, bj));
+        bj += 1;
+    }
+    while bj < mb {
+        seq.push((false, bj));
+        bj += 1;
+    }
+    seq
+}
+
+/// Build the **full measured training iteration** as a lazy [`StageDag`]
+/// on the real topology: per-layer TP/SP shard exchanges and EP
+/// all-to-alls fused per (pipeline stage, microbatch) work unit, PP
+/// boundary activation sends crossing rack/pod tiers on APR paths,
+/// 1F1B microbatch pipelining with per-device in-order execution — so
+/// the pipeline bubble is *emergent*, not a formula — and the
+/// hierarchical DP gradient reduce-scatter/all-gather tail.
+///
+/// Work units are serialized `compute → TP → SP → EP` chains carrying
+/// the *exposed* fraction of each technique's Table 1 wire bytes
+/// ([`IterationSpec`]), which mirrors the additive structure of the
+/// analytic [`iteration_time`] — the differential oracle the tests and
+/// the fig22 bench compare against. TP/SP/EP/DP volumes come from the
+/// same [`analyze`] derivation, so any measured-vs-analytic gap in
+/// those terms is network structure (achievable bandwidth under
+/// contention, path latencies, pipelining) rather than bookkeeping.
+/// **One deliberate exception:** the PP boundary send is
+/// `act/(sp·tp)` per rank pair — the boundary tensor exists once per
+/// TP group (replicated across its tp ranks), so only one striped copy
+/// goes on the wire — whereas Table 1's PP row prices `act/sp` per
+/// participating NPU. PP is ~0.1% of traffic in every calibrated
+/// configuration; a PP-heavy config (large pp, small sp·tp, short
+/// sequences) would read DES-below-analytic on this term for that
+/// bookkeeping reason.
+///
+/// Constraints: `p.npus()` must equal `map.npu_count()`, and a MoE
+/// model with `ep > 1` needs `ep ≤ sp·dp` with `ep | sp·dp` (EP groups
+/// tile the flattened SP×DP extent, §5.2).
+pub fn iteration_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+) -> StageDag {
+    assert_eq!(
+        p.npus(),
+        map.npu_count(),
+        "parallelism ({}×{}×{}×{}) must cover the mapped cluster exactly",
+        p.tp,
+        p.sp,
+        p.pp,
+        p.dp
+    );
+    assert!(p.microbatches >= 1, "iteration needs at least one microbatch");
+    debug_assert!(map.npus().iter().all(|n| n.idx() < t.node_count()));
+    let traffic = analyze(m, p);
+    let mbn = p.microbatches;
+    let pp = p.pp;
+    let slice = pp as f64;
+
+    // Per-(F|B)-unit per-rank wire bytes + the serialized α overhead of
+    // the transfers the fused stage represents (one α is already inside
+    // every FlowSpec gate latency). The transfer count is scaled by the
+    // exposure fraction exactly like the analytic oracle scales its
+    // `transfers × α` term — the overlap hides whole transfers, not
+    // just their bytes.
+    let per_unit = |tech: &str, exposed: f64| -> (f64, f64) {
+        match traffic.row(tech) {
+            None => (0.0, 0.0),
+            Some(r) => {
+                let v = r.total / slice / (2.0 * mbn as f64) * exposed;
+                let k = r.transfers / slice / (2.0 * mbn as f64) * exposed;
+                (v, (k - 1.0).max(0.0) * MESSAGE_ALPHA_US)
+            }
+        }
+    };
+    let (v_tp, a_tp) = per_unit("TP", spec.ccu_exposed);
+    let (v_sp, a_sp) = per_unit("SP", spec.ccu_exposed);
+    let (v_ep, a_ep) = per_unit("EP", spec.ccu_exposed);
+    if v_ep > 0.0 {
+        assert!(
+            p.ep >= 2 && p.ep <= p.sp * p.dp && (p.sp * p.dp) % p.ep == 0,
+            "EP groups tile the SP×DP extent: need 2 ≤ ep ≤ sp·dp and ep | sp·dp \
+             (ep={}, sp·dp={})",
+            p.ep,
+            p.sp * p.dp
+        );
+    }
+
+    // Per-unit compute: forward one third, backward two thirds of the
+    // per-microbatch slice (standard fwd:bwd FLOP ratio).
+    let tokens_per_replica = p.tokens_per_microbatch * mbn as f64;
+    let flops_per_npu =
+        m.flops_per_token() * tokens_per_replica / (p.tp * p.sp * p.pp) as f64;
+    let comp_total = flops_per_npu / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+    let comp_f = comp_total / (3.0 * mbn as f64);
+    let comp_b = 2.0 * comp_f;
+
+    // Boundary activation: the microbatch act, sequence-sharded (sp)
+    // and striped across the tp ranks of the boundary.
+    let act = p.tokens_per_microbatch * m.hidden as f64 * super::traffic::BYTES_PER_ACT;
+    let p2p_bytes = act / (p.sp * p.tp) as f64;
+
+    let map = Arc::new(map.clone());
+    let mut dag = StageDag::default();
+    const NONE: usize = usize::MAX;
+    let mut f_first = vec![vec![NONE; mbn]; pp];
+    let mut f_last = vec![vec![NONE; mbn]; pp];
+    let mut b_first = vec![vec![NONE; mbn]; pp];
+    let mut b_last = vec![vec![NONE; mbn]; pp];
+    let mut p2p_f = vec![vec![NONE; mbn]; pp];
+    let mut p2p_b = vec![vec![NONE; mbn]; pp];
+
+    // Pass 1: create every work unit's serialized compute→TP→SP→EP
+    // chain and its boundary send, in per-device 1F1B order.
+    for s in 0..pp {
+        for (fwd, j) in one_f_one_b(pp, s, mbn) {
+            let tag = if fwd { 'f' } else { 'b' };
+            let comp = dag.push(
+                Stage::new(format!("s{s}-{tag}{j}-comp"))
+                    .with_compute(if fwd { comp_f } else { comp_b }),
+            );
+            let mut last = comp;
+            for (gspec, v, ea, nm) in [
+                (GroupSpec::Tp(s), v_tp, a_tp, "tp"),
+                (GroupSpec::Sp(s), v_sp, a_sp, "sp"),
+                (GroupSpec::Ep(s), v_ep, a_ep, "ep"),
+            ] {
+                if v > 0.0 {
+                    let st = exchange_stage(
+                        format!("s{s}-{tag}{j}-{nm}"),
+                        &map,
+                        *p,
+                        order,
+                        gspec,
+                        v,
+                        ea,
+                    )
+                    .after(vec![last]);
+                    last = dag.push(st);
+                }
+            }
+            if fwd {
+                f_first[s][j] = comp;
+                f_last[s][j] = last;
+                if s + 1 < pp {
+                    p2p_f[s][j] = dag.push(
+                        p2p_stage(
+                            format!("s{s}-f{j}-send"),
+                            &map,
+                            *p,
+                            order,
+                            s,
+                            s + 1,
+                            p2p_bytes,
+                        )
+                        .after(vec![last]),
+                    );
+                }
+            } else {
+                b_first[s][j] = comp;
+                b_last[s][j] = last;
+                if s > 0 {
+                    p2p_b[s][j] = dag.push(
+                        p2p_stage(
+                            format!("s{s}-b{j}-send"),
+                            &map,
+                            *p,
+                            order,
+                            s,
+                            s - 1,
+                            p2p_bytes,
+                        )
+                        .after(vec![last]),
+                    );
+                }
+            }
+        }
+    }
+
+    // Pass 2: cross-stage data dependencies (a unit starts only once
+    // its boundary activation/gradient has *arrived*) and per-device
+    // in-order execution — together these make the 1F1B bubble an
+    // emergent property of the schedule.
+    for s in 0..pp {
+        let mut prev: Option<usize> = None;
+        for (fwd, j) in one_f_one_b(pp, s, mbn) {
+            let first = if fwd { f_first[s][j] } else { b_first[s][j] };
+            if let Some(pl) = prev {
+                dag.stages[first].deps.push(pl);
+            }
+            if fwd && s > 0 {
+                dag.stages[first].deps.push(p2p_f[s - 1][j]);
+            }
+            if !fwd && s + 1 < pp {
+                dag.stages[first].deps.push(p2p_b[s + 1][j]);
+            }
+            prev = Some(if fwd { f_last[s][j] } else { b_last[s][j] });
+        }
+    }
+
+    // DP gradient tail: reduce-scatter + all-gather over the DP groups
+    // once every device has drained its backward queue.
+    if let Some(r) = traffic.row("DP") {
+        let v_dp = r.total * spec.dp_exposed;
+        if v_dp > 0.0 {
+            let ea =
+                ((r.transfers * spec.dp_exposed / 2.0) - 1.0).max(0.0) * MESSAGE_ALPHA_US;
+            let tails: Vec<usize> = (0..pp).map(|s| b_last[s][mbn - 1]).collect();
+            let rs = dag.push(
+                exchange_stage(
+                    "dp-rs".into(),
+                    &map,
+                    *p,
+                    order,
+                    GroupSpec::Dp,
+                    v_dp / 2.0,
+                    ea,
+                )
+                .after(tails),
+            );
+            dag.push(
+                exchange_stage(
+                    "dp-ag".into(),
+                    &map,
+                    *p,
+                    order,
+                    GroupSpec::Dp,
+                    v_dp / 2.0,
+                    ea,
+                )
+                .after(vec![rs]),
+            );
+        }
+    }
+    dag
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,23 +720,36 @@ mod tests {
     }
 
     #[test]
-    fn rack_des_within_2x_of_analytic() {
+    fn rack_des_within_25pct_of_analytic() {
         let (t, h) = ubmesh_rack(&RackConfig::default());
         let m = by_name("llama-70b").unwrap();
         let dag = rack_iteration_dag(&t, &h, &m, 8192.0, 2);
         let net = SimNet::new(&t);
         let r = sim::schedule::run(&net, &dag);
-        // Analytic equivalent: 2 layers of TP (board tier) + SP (rack).
+        // Calibrated analytic mirror of the DAG, per layer:
+        // * TP stage — the shard exchange released twice (RS + AG wire
+        //   patterns): per rank 2·(7/8)·(act/8) bytes draining at the
+        //   full 7-link board tier, overlapped with the layer compute
+        //   (the stage ends at max(comm, compute), like the DES stage).
+        // * SP stage — one whole-act column exchange: (7/8)·act at the
+        //   7-link Y tier. (The pre-calibration mirror scaled this by
+        //   8/7 — a per-link/per-rank bookkeeping slip that alone cost
+        //   ~14% and motivated the old (0.4, 2.5) band.)
+        // Residual gap after calibration (mirror-measured ratio 1.0004):
+        // the per-flow α gate (MESSAGE_ALPHA_US) and per-hop wire
+        // latency, ~2.3 µs per stage, and fp batching at stage
+        // boundaries — all ≪ 1% here, so (0.8, 1.25) holds with a wide
+        // deterministic margin.
         let act = 8192.0 * m.hidden as f64 * 2.0;
         let bw = TierBandwidth::ubmesh(16, 1.0);
-        let tp = 2.0 * (2.0 * 7.0 / 8.0 * act / 8.0) / (bw.gb_s[0] * 1e3);
-        let sp = 2.0 * (7.0 / 8.0 * act) / (bw.gb_s[1] * 1e3) * 8.0 / 7.0;
-        let flops = 6.0 * m.active_params() / m.layers as f64 * 8192.0 / 64.0 * 2.0;
-        let comp = flops / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
-        let analytic = tp.max(comp) + sp;
+        let tp_l = 2.0 * 7.0 / 8.0 * (act / 8.0) / (bw.gb_s[0] * 1e3);
+        let sp_l = 7.0 / 8.0 * act / (bw.gb_s[1] * 1e3);
+        let flops_l = 6.0 * m.active_params() / m.layers as f64 * 8192.0 / 64.0;
+        let comp_l = flops_l / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+        let analytic = 2.0 * (tp_l.max(comp_l) + sp_l);
         let ratio = r.makespan_us / analytic;
         assert!(
-            (0.4..2.5).contains(&ratio),
+            (0.8..1.25).contains(&ratio),
             "DES {} vs analytic {analytic} (ratio {ratio})",
             r.makespan_us
         );
@@ -257,5 +772,127 @@ mod tests {
     fn ccost_module_linked() {
         // collective closed forms feed the same units
         assert!(crate::collectives::cost::xfer_us(1e6, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn one_f_one_b_is_a_valid_schedule() {
+        for pp in [1usize, 2, 4, 8] {
+            for s in 0..pp {
+                for mb in [1usize, 2, 5, 13] {
+                    let seq = one_f_one_b(pp, s, mb);
+                    assert_eq!(seq.len(), 2 * mb);
+                    // Every microbatch appears once forward, once backward,
+                    // and its backward never precedes its forward.
+                    for j in 0..mb {
+                        let fi = seq.iter().position(|&u| u == (true, j)).unwrap();
+                        let bi = seq.iter().position(|&u| u == (false, j)).unwrap();
+                        assert!(fi < bi, "pp={pp} s={s} mb={mb} j={j}");
+                    }
+                    // Warmup depth: the first backward sits after exactly
+                    // min(pp-1-s, mb) + 1 forwards.
+                    let w = (pp - 1 - s).min(mb);
+                    let first_b = seq.iter().position(|&(f, _)| !f).unwrap();
+                    let expect = if w < mb { w + 1 } else { mb };
+                    assert_eq!(first_b, expect, "pp={pp} s={s} mb={mb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compute_only_iteration_matches_closed_form() {
+        // tp = sp = ep = 1 on a dense model kills every Table 1 comm row
+        // except DP; dp_exposed = 0 silences that too. What remains is
+        // the pure per-device compute chain, whose makespan is the
+        // analytic compute term exactly — the DES and the cost model
+        // share one definition of compute.
+        use crate::sim::{self, SimNet};
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+        use crate::workload::cluster::ClusterMap;
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let map = ClusterMap::rack(&h);
+        let m = by_name("llama-70b").unwrap();
+        let p = ParallelismConfig {
+            tp: 1,
+            sp: 1,
+            ep: 1,
+            pp: 1,
+            dp: 64,
+            microbatches: 3,
+            tokens_per_microbatch: 4096.0,
+        };
+        let spec = IterationSpec {
+            dp_exposed: 0.0,
+            ..IterationSpec::default()
+        };
+        let dag = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &spec);
+        assert_eq!(dag.stages.len(), 2 * p.microbatches); // F and B per microbatch
+        assert_eq!(dag.total_flow_count(), 0);
+        let r = sim::schedule::run(&SimNet::new(&t), &dag);
+        let flops = m.flops_per_token() * 4096.0 * 3.0;
+        let expect = flops / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
+        assert!(
+            (r.makespan_us - expect).abs() < 1e-6 * expect,
+            "{} vs {expect}",
+            r.makespan_us
+        );
+    }
+
+    #[test]
+    fn full_iteration_dag_builds_runs_and_matches_lazy_metadata() {
+        use crate::sim::{self, SimNet};
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+        use crate::workload::cluster::ClusterMap;
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let map = ClusterMap::rack(&h);
+        let m = by_name("gpt4-2t").unwrap();
+        let p = ParallelismConfig {
+            tp: 8,
+            sp: 2,
+            ep: 4,
+            pp: 2,
+            dp: 2,
+            microbatches: 2,
+            tokens_per_microbatch: 1024.0,
+        };
+        let dag = iteration_dag(
+            &t,
+            &map,
+            &m,
+            &p,
+            RankOrder::TopologyAware,
+            &IterationSpec::default(),
+        );
+        // 8 units × (comp, tp, sp, ep) + 4 boundary sends + dp rs/ag.
+        assert_eq!(dag.stages.len(), 8 * 4 + 4 + 2);
+        assert!(dag.stages.iter().any(|s| s.is_lazy()));
+        // materialized() re-checks every lazy count declaration.
+        let eager = dag.materialized(&t);
+        let net = SimNet::new(&t);
+        let r = sim::schedule::run(&net, &dag);
+        let re = sim::schedule::run(&net, &eager);
+        assert!(!r.is_stalled() && r.makespan_us > 0.0);
+        assert_eq!(r.makespan_us, re.makespan_us);
+        assert_eq!(r.byte_hops, re.byte_hops);
+        // The bubble is emergent: the same work with one microbatch
+        // (same per-unit sizes → tokens and volumes scale with mb, so
+        // compare per-token time) must be relatively slower.
+        let mut p1 = p;
+        p1.microbatches = 1;
+        let dag1 = iteration_dag(
+            &t,
+            &map,
+            &m,
+            &p1,
+            RankOrder::TopologyAware,
+            &IterationSpec::default(),
+        );
+        let r1 = sim::schedule::run(&net, &dag1);
+        assert!(
+            r1.makespan_us * 2.0 > r.makespan_us,
+            "mb=1 must be relatively slower than mb=2: {} vs {}",
+            r1.makespan_us,
+            r.makespan_us
+        );
     }
 }

@@ -149,6 +149,83 @@ fn faulted_runs_agree_across_strategies() {
     );
 }
 
+/// Fault under training (PR 5): a full measured iteration loses an
+/// intra-rack Y link mid-run and recovers online. The striped SP/DP
+/// exchanges put the pair's traffic on 7 paths, so losing the direct
+/// link is the fig12 *absorbed* regime — APR reroutes soak the failure
+/// wherever slack exists (mirror-measured degradation: exactly 0, with
+/// 16 reroutes as every later stage gates onto the dead link and
+/// re-paths) — while the no-recovery run must stall until the scripted
+/// restore, bounding the recovered run from above.
+#[test]
+fn training_iteration_survives_intra_rack_link_death() {
+    use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+    use ubmesh::workload::models::by_name;
+    use ubmesh::workload::step::{iteration_dag, IterationSpec, RankOrder};
+    use ubmesh::workload::{ClusterMap, ParallelismConfig};
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let map = ClusterMap::rack(&h);
+    let m = by_name("llama-70b").unwrap();
+    let p = ParallelismConfig {
+        tp: 8,
+        sp: 2,
+        ep: 1,
+        pp: 2,
+        dp: 2,
+        microbatches: 2,
+        tokens_per_microbatch: 8192.0,
+    };
+    let dag = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &IterationSpec::default());
+    let net = SimNet::new(&t);
+    let healthy = sim::schedule::run(&net, &dag);
+    assert!(!healthy.is_stalled());
+
+    // The Y link between ranks 0 and 8 (boards 0/1, slot 0) carries the
+    // direct seventh of their SP exchange in every layer-unit; kill it
+    // at 40% of the healthy makespan (the fig12 mid-run regime).
+    let failed = t
+        .link_between(map.npus()[0], map.npus()[8])
+        .expect("SP pair must be directly linked");
+    let t_fail = 0.4 * healthy.makespan_us;
+    let faults = FaultPlan::new().at(t_fail, FaultEvent::LinkDown(failed));
+
+    let rec = sim::schedule::run_faulted(
+        &net,
+        &dag,
+        &SimConfig::default(),
+        &faults.clone().with_recovery(RecoveryConfig::direct()),
+    );
+    assert!(!rec.is_stalled(), "recovery must complete the iteration");
+    assert!(rec.reroutes >= 1, "{} reroutes", rec.reroutes);
+    // Bounded degradation: the absorbed regime costs (near) nothing.
+    let deg = rec.makespan_us / healthy.makespan_us;
+    assert!(
+        (1.0 - 1e-9..1.10).contains(&deg),
+        "degradation {deg:.4} outside the absorbed-regime bound"
+    );
+
+    // Naive bound: no recovery — the cut flows stall until a restore at
+    // 1.5× the healthy makespan revives them (mirror: ratio 1.94).
+    let stall = sim::schedule::run_faulted(
+        &net,
+        &dag,
+        &SimConfig::default(),
+        &faults.at(1.5 * healthy.makespan_us, FaultEvent::LinkUp(failed)),
+    );
+    assert!(!stall.is_stalled(), "the restore must revive the run");
+    assert!(
+        stall.makespan_us > 1.5 * healthy.makespan_us,
+        "stall-until-restore {} must exceed the restore time",
+        stall.makespan_us
+    );
+    assert!(
+        rec.makespan_us < stall.makespan_us,
+        "recovered {} vs stall bound {}",
+        rec.makespan_us,
+        stall.makespan_us
+    );
+}
+
 /// 2 pods × 2×2 racks = 512 NPUs over a real 4-HRS Clos tier.
 fn small_hrs_superpod() -> (Topology, SuperPodHandles) {
     let mut cfg = SuperPodConfig::default();

@@ -1,0 +1,176 @@
+//! Measured-vs-analytic tests for the full training iteration
+//! (`workload::step::iteration_dag`, PR 5): the DES step on the real
+//! rack/pod/SuperPod topologies against the §5.2 analytic model as the
+//! differential oracle, the emergent 1F1B pipeline bubble, and the
+//! cross-pod (HRS-tier) iteration.
+//!
+//! Tolerances are calibrated from the statement-level Python mirror
+//! (see CHANGES.md): each band's expected value is quoted inline, and
+//! the band leaves ≥8% margin on the structural sources of gap —
+//! backplane-mesh ceilings on DP/EP traffic vs the analytic tier
+//! bandwidths, α gates, per-hop latencies, and 1F1B steady-state
+//! relay poaching.
+
+use ubmesh::sim::{self, SimNet};
+use ubmesh::topology::pod::{ubmesh_pod, PodConfig};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::placement::{Placement, TierBandwidth};
+use ubmesh::workload::step::{iteration_dag, iteration_time, IterationSpec, RankOrder};
+use ubmesh::workload::{ClusterMap, ParallelismConfig};
+
+fn pcfg(
+    tp: usize,
+    sp: usize,
+    ep: usize,
+    pp: usize,
+    dp: usize,
+    mb: usize,
+    tokens: f64,
+) -> ParallelismConfig {
+    ParallelismConfig {
+        tp,
+        sp,
+        ep,
+        pp,
+        dp,
+        microbatches: mb,
+        tokens_per_microbatch: tokens,
+    }
+}
+
+fn measure(
+    t: &ubmesh::topology::Topology,
+    map: &ClusterMap,
+    m: &ubmesh::workload::ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+) -> f64 {
+    let dag = iteration_dag(t, map, m, p, order, &IterationSpec::default());
+    let r = sim::schedule::run(&SimNet::new(t), &dag);
+    assert!(!r.is_stalled());
+    r.makespan_us
+}
+
+fn analytic(m: &ubmesh::workload::ModelConfig, p: &ParallelismConfig) -> f64 {
+    iteration_time(m, p, &Placement::topology_aware(p), &TierBandwidth::ubmesh(16, 1.0))
+        .total_us
+}
+
+/// The measured-vs-analytic grid: 2 models × 2 parallelisms × 2 scales
+/// (rack 64, pod 1024). Mirror-measured ratios: rack 1.036 / 1.021,
+/// pod 1.063 / 1.055 — the rack band is dominated by striping-relay
+/// contention in 1F1B steady state, the pod band adds the DP tail's
+/// backplane-mesh ceiling (the analytic Col tier assumes 37.5 GB/s per
+/// NPU; the mesh hop caps the measured exchange below that).
+#[test]
+fn measured_iteration_tracks_analytic_across_grid() {
+    let (rack_t, rack_h) = ubmesh_rack(&RackConfig::default());
+    let rack_map = ClusterMap::rack(&rack_h);
+    let (pod_t, pod_h) = ubmesh_pod(&PodConfig::default());
+    let pod_map = ClusterMap::pod(&pod_h);
+
+    // (model, parallelism, map, lo, hi, label)
+    let rack_band = (0.90, 1.15);
+    let pod_band = (0.95, 1.30);
+    let grid: Vec<(&str, ParallelismConfig, bool, (f64, f64))> = vec![
+        ("llama-70b", pcfg(8, 2, 1, 2, 2, 4, 8192.0), false, rack_band),
+        ("gpt4-2t", pcfg(8, 2, 4, 2, 2, 4, 8192.0), false, rack_band),
+        ("llama-70b", pcfg(8, 8, 1, 4, 4, 2, 32768.0), true, pod_band),
+        ("gpt4-2t", pcfg(8, 8, 8, 4, 4, 2, 32768.0), true, pod_band),
+    ];
+    for (name, p, is_pod, (lo, hi)) in grid {
+        let m = by_name(name).unwrap();
+        let (t, map) = if is_pod {
+            (&pod_t, &pod_map)
+        } else {
+            (&rack_t, &rack_map)
+        };
+        let des = measure(t, map, &m, &p, RankOrder::TopologyAware);
+        let an = analytic(&m, &p);
+        let ratio = des / an;
+        assert!(
+            (lo..hi).contains(&ratio),
+            "{name} {}: DES {des:.0} vs analytic {an:.0} — ratio {ratio:.3} \
+             outside calibrated ({lo}, {hi})",
+            if is_pod { "pod" } else { "rack" },
+        );
+    }
+}
+
+/// The pipeline bubble is *emergent* — nothing in `iteration_dag`
+/// computes (pp−1)/mb, yet the measured makespans reproduce it:
+/// M(mb) ≈ mb·u + (pp−1)·u for per-microbatch unit time u, so the
+/// measured bubble fraction M(mb)/(mb·u) − 1 must track (pp−1)/mb,
+/// grow with pp and shrink with mb. Mirror-measured relative error:
+/// −1.1% (pp=4), −11.7% (pp=2, the comm-tail share of the warmup
+/// units); asserted within ±25%.
+#[test]
+fn pipeline_bubble_is_emergent_and_tracks_pp_over_mb() {
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let map = ClusterMap::rack(&h);
+    let m = by_name("llama-70b").unwrap();
+    let mut fracs = Vec::new();
+    for (sp, pp) in [(4usize, 2usize), (2, 4)] {
+        let mk = |mb: usize| {
+            measure(
+                &t,
+                &map,
+                &m,
+                &pcfg(8, sp, 1, pp, 1, mb, 4096.0),
+                RankOrder::TopologyAware,
+            )
+        };
+        let (m2, m4, m8) = (mk(2), mk(4), mk(8));
+        // Per-unit time from the slope: adding 4 microbatches adds 4
+        // units to every device's serialized chain.
+        let u = (m8 - m4) / 4.0;
+        assert!(u > 0.0);
+        for (mb, ms) in [(2u32, m2), (4, m4), (8, m8)] {
+            let frac = ms / (mb as f64 * u) - 1.0;
+            let predict = (pp as f64 - 1.0) / mb as f64;
+            assert!(
+                (frac / predict - 1.0).abs() < 0.25,
+                "pp={pp} mb={mb}: measured bubble frac {frac:.4} vs (pp-1)/mb \
+                 {predict:.4}"
+            );
+        }
+        let f4 = m4 / (4.0 * u) - 1.0;
+        let f8 = m8 / (8.0 * u) - 1.0;
+        assert!(f8 < f4, "bubble must shrink with more microbatches");
+        fracs.push(m4 / (4.0 * u) - 1.0);
+    }
+    assert!(
+        fracs[1] > fracs[0] * 2.0,
+        "bubble at pp=4 ({:.3}) must dwarf pp=2 ({:.3}) at equal mb",
+        fracs[1],
+        fracs[0]
+    );
+}
+
+/// Full five-technique iteration crossing pods: EP tiles SP×DP across
+/// two pods and DP pairs ride the HRS Clos tier. The analytic model
+/// prices that traffic at the pod-tier 25 GB/s/NPU; the measured
+/// fabric pays the backplane-mesh + uplink-lane ceilings, so the
+/// measured iteration lands well above the oracle but inside one
+/// regime (mirror-measured ratio 1.843).
+#[test]
+fn cross_pod_iteration_completes_with_bounded_contention_excess() {
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = 2;
+    cfg.pod.rows = 2;
+    cfg.pod.cols = 2;
+    let (t, h) = ubmesh_superpod(&cfg);
+    let map = ClusterMap::superpod(&h);
+    let m = by_name("gpt4-2t").unwrap();
+    let p = pcfg(8, 8, 16, 2, 4, 2, 4096.0);
+    assert_eq!(p.npus(), 512);
+    let des = measure(&t, &map, &m, &p, RankOrder::TopologyAware);
+    let an = analytic(&m, &p);
+    let ratio = des / an;
+    assert!(
+        (1.0..2.5).contains(&ratio),
+        "cross-pod DES {des:.0} vs analytic {an:.0} — ratio {ratio:.3}"
+    );
+}
