@@ -40,6 +40,35 @@ def link_load(incidence, demand):
     return incidence.T @ demand
 
 
+#: GB/s per UB lane (rust/src/topology/ublink.rs::LANE_GB_S).
+LANE_GB_S = 6.25
+
+
+def tier_bandwidths(lanes, boost, mesh_lanes=2, oversub=1):
+    """Per-NPU tier bandwidths (GB/s) of the UB-Mesh hierarchy.
+
+    Mirrors ``rust/src/workload/placement.rs::TierBandwidth::ubmesh_mesh``:
+    each tier is the min over its physical hop chain (NPU plane attach,
+    board-LRS backplane-mesh lanes, inter-rack wire with the routing
+    boost, uplink-LRS lanes with oversubscription, HRS ports, DCN NIC).
+    Returns ``[board, rack, row, col, pod, dcn]``.
+    """
+    planes, boards, slots, npus = 4, 8, 8, 64.0
+    attach = planes * 4.0 * LANE_GB_S
+    board = (slots - 1) * 4.0 * LANE_GB_S
+    out = 2.0 * lanes  # out-facing lanes per inter-rack LRS
+    # Mesh exits usable per dimension: Shortest 3, Detour 6, Borrow 8.
+    dim_slots = 8 if boost >= 1.8 else (6 if boost > 1.0 else 3)
+    wire = 3.0 * out * planes / npus * LANE_GB_S * boost
+    mesh = planes * boards * dim_slots * mesh_lanes / npus * LANE_GB_S
+    row = min(attach, mesh, wire)
+    mesh_up = planes * boards * 2.0 * mesh_lanes / npus * LANE_GB_S
+    uplink = planes * 2.0 * (out / oversub) / npus * LANE_GB_S
+    hrs = planes * 2.0 * out / npus * LANE_GB_S
+    pod = min(attach, mesh_up, uplink, hrs)
+    return [board, board, row, row, pod, min(12.5, pod)]
+
+
 def cost_model(volumes, bandwidths, transfers, alphas, compute_us, exposure):
     """Batched α-β iteration-time model (§5.2 Step ②).
 

@@ -144,6 +144,21 @@ def test_costmodel_monotone_in_volume():
     assert np.all(np.asarray(hi) > np.asarray(lo))
 
 
+def test_tier_bandwidths_pinned():
+    # Hand-computed hop-chain minima, kept in lockstep with
+    # rust/src/workload/placement.rs tests (ubmesh_tiers_are_min_over_hops).
+    assert ref.tier_bandwidths(16, 1.0) == [175.0, 175.0, 18.75, 18.75, 12.5, 12.5]
+    assert ref.tier_bandwidths(16, 1.6) == [175.0, 175.0, 37.5, 37.5, 12.5, 12.5]
+    assert ref.tier_bandwidths(16, 1.85) == [175.0, 175.0, 50.0, 50.0, 12.5, 12.5]
+    # 4:1 uplink oversubscription halves the mesh-bound pod tier.
+    assert ref.tier_bandwidths(16, 1.0, oversub=4)[4] == 6.25
+    # x4 mesh at Detour: row moves to the wire stage, pod to the uplink.
+    assert ref.tier_bandwidths(16, 1.6, mesh_lanes=4)[2] == 60.0
+    assert ref.tier_bandwidths(16, 1.6, mesh_lanes=4)[4] == 25.0
+    # Provision is mesh-capped: x32 ties x16 on the row tier.
+    assert ref.tier_bandwidths(32, 1.6)[2] == ref.tier_bandwidths(16, 1.6)[2]
+
+
 def test_costmodel_zero_exposure_is_compute_only():
     b, t = 64, 6
     comp = jnp.arange(b, dtype=jnp.float32)

@@ -27,6 +27,8 @@ fn main() {
                 Arch::UbMesh {
                     inter_rack_lanes: 16,
                     routing,
+                    mesh_lanes: 2,
+                    uplink_oversub: 1,
                 },
             )
             .unwrap()

@@ -1,7 +1,11 @@
-//! Fig 21 — CapEx Comparison + the §6.4 cost-efficiency headline.
+//! Fig 21 — CapEx Comparison + the §6.4 cost-efficiency headline,
+//! plus the backplane-mesh-width CapEx deltas that feed the fig20
+//! cost-optimum (the widened LRS parts priced by `lrs_radix_surcharge`).
 
 use ubmesh::coordinator::{Arch, Job};
-use ubmesh::cost::capex::{capex_fm_clos, capex_full_clos, capex_ubmesh, savings};
+use ubmesh::cost::capex::{
+    capex_fm_clos, capex_full_clos, capex_ubmesh, lrs_radix_surcharge, savings,
+};
 use ubmesh::cost::efficiency::cost_efficiency;
 use ubmesh::cost::opex::{network_opex, opex};
 use ubmesh::reliability::afr::afr_of_capex;
@@ -58,6 +62,31 @@ fn main() {
         "network share of system cost: UB-Mesh {} vs Clos {} (paper: 20% vs 67%)",
         pct(ub.network_share(), 0),
         pct(clos.network_share(), 0)
+    );
+
+    // --- backplane-mesh width: what the fig20 optimum costs ---------------
+    let mut t = Table::with_title(
+        "mesh-width CapEx (widened LRS parts, 9216 LRS)",
+        vec!["mesh", "surcharge", "vs UB total"],
+    );
+    for mw in [1u32, 2, 4, 8] {
+        let s = lrs_radix_surcharge(ub.lrs, mw);
+        t.row(vec![
+            format!("x{mw}"),
+            fmt(s, 0),
+            pct(s / ub.total(), 1),
+        ]);
+    }
+    t.print();
+    // The fig20 cost-optimal x4 mesh must stay a small fraction of the
+    // system (otherwise the perf-per-CapEx argmax there is suspect),
+    // and the default x2 must be free (fits the x72 part exactly).
+    assert_eq!(lrs_radix_surcharge(ub.lrs, 2), 0.0);
+    let x4_share = lrs_radix_surcharge(ub.lrs, 4) / ub.total();
+    assert!(
+        x4_share < 0.03,
+        "x4-mesh surcharge is {} of system CapEx",
+        pct(x4_share, 1)
     );
 
     // --- OpEx + Eq. 1 cost-efficiency -------------------------------------

@@ -13,9 +13,10 @@
 //!    measured per-NPU throughput (rack 64 → pod 1024, DP×16), and the
 //!    measured iteration is asserted to agree with the analytic
 //!    `iteration_time` of the same configuration within the calibrated
-//!    band (mirror-measured ratios: rack ≈ 1.000, pod ≈ 1.02–1.04 —
-//!    the pod excess is the backplane-mesh ceiling on DP traffic, not
-//!    bookkeeping).
+//!    band (mirror-measured ratios: rack ≈ 1.000, pod ≈ 1.013 — the
+//!    hop-chain tier model now prices the backplane-mesh ceiling the
+//!    DES pays, so the pod band tightens from (0.90, 1.15) to
+//!    (0.92, 1.12); the band edges are emitted as `fig22.band.*`).
 //!
 //! A third section completes the acceptance criterion: a 4096-NPU
 //! 4-pod SuperPod iteration with **all five** parallelisms live
@@ -72,6 +73,12 @@ fn run_measured(
     assert!(!r.is_stalled());
     (r, wall)
 }
+
+/// Calibrated DES/analytic ratio bands (half-open). The rack tier was
+/// already exact; the pod tier tightened once the backplane-mesh hop
+/// entered the analytic chain (pre-fix band: (0.90, 1.15) on both).
+const RACK_BAND: (f64, f64) = (0.90, 1.15);
+const POD_BAND: (f64, f64) = (0.92, 1.12);
 
 fn main() {
     let mut json = JsonReport::new();
@@ -178,16 +185,19 @@ fn main() {
             "{name} measured linearity {lin:.3} below the paper's 95% band"
         );
         // Measured-vs-analytic agreement, calibrated: the rack iteration
-        // sits on the exact tier bandwidths (mirror 1.000); the pod adds
-        // the DP tail whose achievable bandwidth is backplane-mesh-bound
-        // (mirror 1.017–1.022).
+        // sits on the exact tier bandwidths (mirror 1.000). The pod adds
+        // the DP tail, whose backplane-mesh ceiling the hop-chain model
+        // now prices — the mirror ratios drop to 1.013 (both models)
+        // and the band tightens from the pre-fix (0.90, 1.15) to
+        // (0.92, 1.12); the residual ~1.3% is DES queueing/striping
+        // granularity, not a missing hop.
         assert!(
-            (0.90..1.15).contains(&ratio_r),
-            "{name} rack DES/analytic {ratio_r:.3} outside calibrated (0.90, 1.15)"
+            (RACK_BAND.0..RACK_BAND.1).contains(&ratio_r),
+            "{name} rack DES/analytic {ratio_r:.3} outside calibrated {RACK_BAND:?}"
         );
         assert!(
-            (0.90..1.15).contains(&ratio_p),
-            "{name} pod DES/analytic {ratio_p:.3} outside calibrated (0.90, 1.15)"
+            (POD_BAND.0..POD_BAND.1).contains(&ratio_p),
+            "{name} pod DES/analytic {ratio_p:.3} outside calibrated {POD_BAND:?}"
         );
 
         let key = name.replace('-', "_");
@@ -201,6 +211,10 @@ fn main() {
         json.metric(format!("fig22.{key}.rack_wall_s"), wall_r);
         json.metric(format!("fig22.{key}.pod_wall_s"), wall_p);
     }
+    json.metric("fig22.band.rack_lo", RACK_BAND.0);
+    json.metric("fig22.band.rack_hi", RACK_BAND.1);
+    json.metric("fig22.band.pod_lo", POD_BAND.0);
+    json.metric("fig22.band.pod_hi", POD_BAND.1);
     tbl.print();
 
     // ---- 3. 4096-NPU SuperPod iteration: all five parallelisms ----
@@ -256,15 +270,18 @@ fn main() {
         r.peak_flows,
         wall * 1e6 / r.events as f64
     );
-    // The analytic model prices DP/EP at the pod-tier bandwidth; the
-    // measured fabric pays the backplane-mesh and uplink-lane ceilings
-    // (PR 3's oversubscription finding), so the measured iteration can
-    // only be slower — but must stay within the same regime
-    // (mirror-measured ratio at this exact configuration: 1.203).
+    // The analytic model now pays the backplane-mesh and uplink-lane
+    // ceilings itself (PR 3's oversubscription finding, modeled in the
+    // hop chains), so the measured excess shrinks from the pre-fix 1.203
+    // to a mirror-measured 1.158 — the remaining gap is multi-phase
+    // contention the closed form cannot see. Accept (1.0, 1.6), down
+    // from (1.0, 2.0).
     assert!(
-        (1.0..2.0).contains(&ratio),
-        "4096-NPU DES/analytic {ratio:.3} out of regime (mirror: 1.203)"
+        (1.0..1.6).contains(&ratio),
+        "4096-NPU DES/analytic {ratio:.3} out of regime (mirror: 1.158)"
     );
+    json.metric("fig22.band.pod4096_lo", 1.0);
+    json.metric("fig22.band.pod4096_hi", 1.6);
     json.metric("iter.pod4096.npus", 4096.0);
     json.metric("iter.pod4096.makespan_us", r.makespan_us);
     json.metric("iter.pod4096.analytic_us", an.total_us);

@@ -39,10 +39,14 @@ impl Routing {
 /// Architectures under evaluation (Figs 16–21).
 #[derive(Copy, Clone, PartialEq, Eq, Debug)]
 pub enum Arch {
-    /// UB-Mesh 4D-FM with given inter-rack lanes/NPU and routing.
+    /// UB-Mesh 4D-FM with given inter-rack lanes/NPU, routing,
+    /// backplane-mesh width (lanes per LRS pair) and uplink
+    /// oversubscription — every knob the hop-chain tier model prices.
     UbMesh {
         inter_rack_lanes: u32,
         routing: Routing,
+        mesh_lanes: u32,
+        uplink_oversub: u32,
     },
     /// Intra-rack Clos (Fig 16-d) + 2D-FM inter-rack.
     ClosIntraRack,
@@ -60,7 +64,18 @@ impl Arch {
             Arch::UbMesh {
                 inter_rack_lanes,
                 routing,
-            } => format!("2D-FM x{inter_rack_lanes} {routing:?}"),
+                mesh_lanes,
+                uplink_oversub,
+            } => {
+                let mut n = format!("2D-FM x{inter_rack_lanes} {routing:?}");
+                if *mesh_lanes != 2 {
+                    n.push_str(&format!(" mesh{mesh_lanes}"));
+                }
+                if *uplink_oversub != 1 {
+                    n.push_str(&format!(" {uplink_oversub}:1"));
+                }
+                n
+            }
             Arch::ClosIntraRack => "Clos(intra-rack)".into(),
             Arch::Fm1dA => "1D-FM-A".into(),
             Arch::Fm1dB => "1D-FM-B".into(),
@@ -73,7 +88,14 @@ impl Arch {
             Arch::UbMesh {
                 inter_rack_lanes,
                 routing,
-            } => TierBandwidth::ubmesh(*inter_rack_lanes, routing.boost()),
+                mesh_lanes,
+                uplink_oversub,
+            } => TierBandwidth::ubmesh_mesh(
+                *inter_rack_lanes,
+                routing.boost(),
+                *mesh_lanes,
+                *uplink_oversub,
+            ),
             Arch::ClosIntraRack => TierBandwidth::clos_intra_rack(16),
             Arch::Fm1dA => TierBandwidth::fm1d_a(),
             Arch::Fm1dB => TierBandwidth::fm1d_b(),
@@ -81,11 +103,14 @@ impl Arch {
         }
     }
 
-    /// The paper's default UB-Mesh configuration.
+    /// The paper's default UB-Mesh configuration: x16 inter-rack,
+    /// Detour routing, x2 backplane mesh, 1:1 uplinks.
     pub fn ubmesh_default() -> Arch {
         Arch::UbMesh {
             inter_rack_lanes: 16,
             routing: Routing::Detour,
+            mesh_lanes: 2,
+            uplink_oversub: 1,
         }
     }
 }
@@ -198,6 +223,8 @@ mod tests {
                 Arch::UbMesh {
                     inter_rack_lanes: 16,
                     routing,
+                    mesh_lanes: 2,
+                    uplink_oversub: 1,
                 },
             )
             .unwrap()

@@ -135,6 +135,20 @@ pub fn capex_full_clos(name: &str, npus: usize, lanes_per_npu: u32) -> CapexRepo
     }
 }
 
+/// CapEx surcharge for widening the backplane-mesh lanes beyond the
+/// x72 LRS the census prices. A board-side LRS spends
+/// `17 × mesh_lanes + 32` lanes (17 full-mesh peers in its plane plus
+/// the x32 NPU/out attach): the default x2 mesh fits the x72 budget
+/// exactly (66), but the fig20 mesh sweep's wider widths need a larger
+/// (costlier) part — priced pro-rata over the base radix per LRS. Zero
+/// when the width still fits x72, so the default topology's census
+/// stays authoritative.
+pub fn lrs_radix_surcharge(lrs_count: usize, mesh_lanes: u32) -> f64 {
+    let base = NodeKind::Lrs.ub_lanes();
+    let radix = 17 * mesh_lanes + 32;
+    lrs_count as f64 * prices::LRS * f64::from(radix.saturating_sub(base)) / f64::from(base)
+}
+
 /// Switch / optical savings vs a baseline (the 98% / 93% claims).
 pub fn savings(ub: &CapexReport, clos: &CapexReport) -> (f64, f64) {
     let hrs_saved = 1.0 - ub.hrs as f64 / clos.hrs.max(1) as f64;
@@ -199,5 +213,18 @@ mod tests {
     #[test]
     fn optical_cable_lane_bundling_consistent() {
         assert_eq!(crate::topology::clos::OPTICAL_CABLE_LANES, 8);
+    }
+
+    #[test]
+    fn mesh_width_surcharge_prices_oversize_lrs_only() {
+        // x1 (49 lanes) and the default x2 (66) fit the x72 budget.
+        assert_eq!(lrs_radix_surcharge(9216, 1), 0.0);
+        assert_eq!(lrs_radix_surcharge(9216, 2), 0.0);
+        // x4 needs a 100-lane part: 28 excess / 72 × 0.04 per LRS over
+        // the 8K SuperPod's 9216 LRS.
+        let m4 = lrs_radix_surcharge(9216, 4);
+        assert!((m4 - 9216.0 * prices::LRS * 28.0 / 72.0).abs() < 1e-9);
+        // x8 (168 lanes) costs more than 3× the x4 surcharge.
+        assert!(lrs_radix_surcharge(9216, 8) > 3.0 * m4);
     }
 }

@@ -22,10 +22,14 @@ fn arch_of(name: &str) -> Arch {
         "ubmesh-shortest" => Arch::UbMesh {
             inter_rack_lanes: 16,
             routing: Routing::Shortest,
+            mesh_lanes: 2,
+            uplink_oversub: 1,
         },
         "ubmesh-borrow" => Arch::UbMesh {
             inter_rack_lanes: 16,
             routing: Routing::Borrow,
+            mesh_lanes: 2,
+            uplink_oversub: 1,
         },
         "clos" => Arch::ClosIntraRack,
         "clos-full" => Arch::FullClos,

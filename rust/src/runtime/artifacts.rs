@@ -1,5 +1,11 @@
 //! Typed wrappers over the AOT artifacts and the PJRT-backed batch cost
 //! evaluator used by the parallelization search.
+//!
+//! Tier bandwidths arrive pre-reduced ([`TierBandwidth`] is the min
+//! over each tier's physical hop chain — backplane mesh, uplink
+//! oversubscription, HRS ports), so the PJRT kernel and the pure-rust
+//! `iteration_time` price identical per-tier figures; nothing here
+//! re-derives wiring.
 
 use std::path::{Path, PathBuf};
 

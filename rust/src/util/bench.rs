@@ -152,7 +152,17 @@ impl JsonReport {
             ));
         }
         out.push_str("\n  ],\n  \"metrics\": {");
-        for (i, (k, v)) in self.metrics.iter().enumerate() {
+        // Last-wins dedupe preserving first-seen order, so metrics
+        // merged from a prior run ([`JsonReport::merge_metrics_from`])
+        // keep their place but re-recorded keys take the fresh value.
+        let mut ordered: Vec<(&str, f64)> = Vec::new();
+        for (k, v) in &self.metrics {
+            match ordered.iter_mut().find(|(ok, _)| ok == k) {
+                Some(e) => e.1 = *v,
+                None => ordered.push((k, *v)),
+            }
+        }
+        for (i, (k, v)) in ordered.iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
@@ -165,6 +175,40 @@ impl JsonReport {
     /// Write the document to `path`.
     pub fn write(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_json())
+    }
+
+    /// Pre-load the scalar metrics of an existing document written by
+    /// [`JsonReport::write`], so a second bench binary can append its
+    /// sections to the same artifact (e.g. fig20 merging `fig20.*` into
+    /// the `BENCH_workload.json` fig22 produced) instead of clobbering
+    /// it. Parses only our own writer's `"key": value` metric lines;
+    /// keys re-recorded later win ([`JsonReport::metric`] dedupes on
+    /// write order). Missing file is fine — nothing to merge.
+    pub fn merge_metrics_from(&mut self, path: &str) -> std::io::Result<()> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let metrics = match text.split("\"metrics\": {").nth(1) {
+            Some(m) => m,
+            None => return Ok(()),
+        };
+        let mut old = Vec::new();
+        for line in metrics.lines() {
+            let line = line.trim().trim_end_matches(',');
+            let Some((key, value)) = line.split_once("\": ") else {
+                continue;
+            };
+            let key = key.trim_start_matches('"');
+            if let Ok(v) = value.trim().parse::<f64>() {
+                old.push((key.to_string(), v));
+            }
+        }
+        // Prepend, so this run's metrics override same-key entries.
+        old.extend(std::mem::take(&mut self.metrics));
+        self.metrics = old;
+        Ok(())
     }
 }
 
@@ -202,5 +246,39 @@ mod tests {
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
         assert!(!s.contains(",\n  ]") && !s.contains(",\n  }"));
+    }
+
+    #[test]
+    fn merge_keeps_old_metrics_and_lets_new_keys_win() {
+        let dir = std::env::temp_dir().join("ubmesh_bench_merge_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merged.json");
+        let path = path.to_str().unwrap();
+
+        let mut first = JsonReport::new();
+        first.metric("fig22.rack.ratio", 1.01);
+        first.metric("fig22.pod.ratio", 1.02);
+        first.write(path).unwrap();
+
+        let mut second = JsonReport::new();
+        second.merge_metrics_from(path).unwrap();
+        second.metric("fig20.mesh.optimal_mesh_lanes", 4.0);
+        second.metric("fig22.pod.ratio", 1.03); // re-recorded: wins
+        let s = second.to_json();
+        assert!(s.contains("\"fig22.rack.ratio\": 1.01"), "{s}");
+        assert!(s.contains("\"fig22.pod.ratio\": 1.03"));
+        assert!(!s.contains("1.02"));
+        assert!(s.contains("\"fig20.mesh.optimal_mesh_lanes\": 4.0"));
+        // Round-trip: merging the merged file again loses nothing.
+        second.write(path).unwrap();
+        let mut third = JsonReport::new();
+        third.merge_metrics_from(path).unwrap();
+        assert_eq!(third.to_json().matches("fig2").count(), 3);
+
+        // A missing file is not an error.
+        let missing = dir.join("absent.json");
+        JsonReport::new()
+            .merge_metrics_from(missing.to_str().unwrap())
+            .unwrap();
     }
 }

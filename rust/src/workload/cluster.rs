@@ -36,9 +36,12 @@
 use crate::routing::apr::hrs_plane_pair;
 use crate::topology::pod::{neighbor_slot, PodHandles};
 use crate::topology::rack::RackHandles;
-use crate::topology::superpod::SuperPodHandles;
+use crate::topology::superpod::{SuperPodConfig, SuperPodHandles};
+use crate::topology::ublink::LANE_GB_S;
 use crate::topology::variants::VariantHandles;
 use crate::topology::NodeId;
+
+use super::placement::NTIERS;
 
 #[derive(Clone, Debug)]
 enum Fabric {
@@ -300,6 +303,128 @@ impl ClusterMap {
     }
 }
 
+/// One physical hop of a tier's bandwidth chain: the UB lanes *per NPU*
+/// this hop contributes once its aggregate capacity is divided over
+/// every NPU that shares it. A tier's usable per-NPU bandwidth is the
+/// min over its chain ([`TierBandwidth::from_chains`]); PR 5's
+/// oversubscription sweep showed the backplane-mesh hop (not the NPU
+/// provision) is the binding term for the Row/Col and Pod tiers, which
+/// the old per-NPU-provision-only model missed by ~1.5–2×.
+///
+/// [`TierBandwidth::from_chains`]: super::placement::TierBandwidth::from_chains
+#[derive(Clone, Copy, Debug)]
+pub struct HopCap {
+    /// Which physical stage binds (for diagnostics / bench labels).
+    pub label: &'static str,
+    /// Effective lanes per NPU after sharing (fractional once boosts
+    /// and oversubscription are applied).
+    pub lanes_per_npu: f64,
+}
+
+impl HopCap {
+    pub fn gb_s(&self) -> f64 {
+        self.lanes_per_npu * LANE_GB_S
+    }
+}
+
+/// Backplane-mesh exit slots one dimension's inter-rack traffic can
+/// traverse under each routing strategy: Shortest keeps traffic
+/// in-dimension (3 row or 3 column inter-rack LRS per plane), Detour
+/// also crosses the corner into the other dimension's 3 slots, Borrow
+/// additionally rides the 2 uplink slots (Fig 19's escalation).
+pub fn mesh_slots_for_boost(routing_boost: f64) -> u32 {
+    if routing_boost >= 1.8 {
+        8
+    } else if routing_boost > 1.0 {
+        6
+    } else {
+        3
+    }
+}
+
+/// The per-tier hop chains of a UB-Mesh SuperPod, derived from the same
+/// wiring knowledge [`ClusterMap`] builds paths from. Order matches
+/// [`super::placement::TIER_SPAN`]: Board, Rack, Row, Col, Pod, Dcn.
+///
+/// * Board/Rack: the X/Y passive full-mesh is the only stage.
+/// * Row/Col: NPU plane attach → board-LRS ↔ inter-rack-LRS
+///   backplane-mesh lanes (x`lrs_mesh_lanes` per pair, all planes) →
+///   the neighbor-rack wire bundles (scaled by the routing boost).
+/// * Pod: plane attach → the 2 uplink slots of the backplane mesh →
+///   uplink-LRS out lanes with [`SuperPodConfig::uplink_oversub`]
+///   applied → HRS ports.
+/// * Dcn: the Pod chain behind a 12.5 GB/s NIC.
+pub fn ubmesh_hop_chains(cfg: &SuperPodConfig, routing_boost: f64) -> [Vec<HopCap>; NTIERS] {
+    let rack = &cfg.pod.rack;
+    let npus = rack.npus() as f64;
+    let planes = rack.planes as f64;
+    let boards = rack.boards as f64;
+    let out = rack.ir_lrs_out_lanes as f64;
+    let mesh = rack.lrs_mesh_lanes as f64;
+
+    // Every backplane-bound tier first crosses the NPU → board-LRS
+    // attach (npu_plane_lanes per plane, unshared).
+    let attach = HopCap {
+        label: "npu-plane-attach",
+        lanes_per_npu: planes * rack.npu_plane_lanes as f64,
+    };
+
+    let board = vec![HopCap {
+        label: "board-x-mesh",
+        lanes_per_npu: (rack.slots - 1) as f64 * rack.x_lanes as f64,
+    }];
+    let rack_tier = vec![HopCap {
+        label: "rack-y-mesh",
+        lanes_per_npu: (rack.boards - 1) as f64 * rack.y_lanes as f64,
+    }];
+
+    // Row/Col: per plane, each of the `boards` board-LRS reaches the
+    // routing-dependent subset of the 8 inter-rack LRS over
+    // x`lrs_mesh_lanes` backplane links; the 3 in-dimension inter-rack
+    // LRS then carry `out` lanes each toward the neighbor racks, which
+    // the routing strategy multiplies (Detour/Borrow recover corner /
+    // uplink capacity on the wire stage, not the mesh stage).
+    let dim_slots = mesh_slots_for_boost(routing_boost) as f64;
+    let dim = vec![
+        attach,
+        HopCap {
+            label: "backplane-mesh",
+            lanes_per_npu: planes * boards * dim_slots * mesh / npus,
+        },
+        HopCap {
+            label: "inter-rack-wire",
+            lanes_per_npu: 3.0 * out * planes / npus * routing_boost,
+        },
+    ];
+
+    // Pod: the 2 uplink slots per plane, then the uplink-LRS out lanes
+    // (diluted by the configured oversubscription), then the HRS ports
+    // (wired 1:1 against the non-oversubscribed uplink provision).
+    let pod = vec![
+        attach,
+        HopCap {
+            label: "backplane-mesh-uplink",
+            lanes_per_npu: planes * boards * 2.0 * mesh / npus,
+        },
+        HopCap {
+            label: "uplink-lrs",
+            lanes_per_npu: planes * 2.0 * (out / cfg.uplink_oversub as f64) / npus,
+        },
+        HopCap {
+            label: "hrs-ports",
+            lanes_per_npu: planes * 2.0 * out / npus,
+        },
+    ];
+
+    let mut dcn = pod.clone();
+    dcn.push(HopCap {
+        label: "dcn-nic",
+        lanes_per_npu: 2.0, // 12.5 GB/s NIC
+    });
+
+    [board, rack_tier, dim.clone(), dim, pod, dcn]
+}
+
 /// One plane's intra-pod path between NPUs in different racks: Z or α
 /// bundle when the racks share a row/column, Z-then-α (or α-then-Z,
 /// `sel`-selected) through a corner rack otherwise.
@@ -460,6 +585,45 @@ mod tests {
                 paths.iter().map(|p| p[1]).collect();
             assert_eq!(mids.len(), 4, "four distinct HRS");
         }
+    }
+
+    #[test]
+    fn hop_chains_expose_backplane_mesh_ceiling() {
+        let cfg = SuperPodConfig::default();
+        let min_of = |chain: &[HopCap]| {
+            chain
+                .iter()
+                .map(HopCap::gb_s)
+                .fold(f64::INFINITY, f64::min)
+        };
+        // Shortest routing: the 3 in-dimension mesh slots bind the Row
+        // tier at 4 planes × 8 board-LRS × 3 slots × x2 / 64 NPUs =
+        // 3 lanes = 18.75 GB/s, below the x16 wire stage (37.5 GB/s).
+        let chains = ubmesh_hop_chains(&cfg, 1.0);
+        assert!((min_of(&chains[2]) - 18.75).abs() < 1e-9);
+        let binding = chains[2]
+            .iter()
+            .min_by(|a, b| a.gb_s().total_cmp(&b.gb_s()))
+            .unwrap();
+        assert_eq!(binding.label, "backplane-mesh");
+        // Detour opens the corner slots (6): mesh 37.5 = boosted wire
+        // stage 60 min → 37.5; Borrow opens all 8: 50.
+        assert!((min_of(&ubmesh_hop_chains(&cfg, 1.6)[2]) - 37.5).abs() < 1e-9);
+        assert!((min_of(&ubmesh_hop_chains(&cfg, 1.85)[2]) - 50.0).abs() < 1e-9);
+        // Pod tier: the 2 uplink mesh slots (12.5 GB/s) saturate before
+        // the 1:1 uplink-LRS lanes (25 GB/s) — PR 5's measured finding.
+        let pod = &chains[4];
+        assert!((min_of(pod) - 12.5).abs() < 1e-9);
+        assert!(pod.iter().any(|h| h.label == "uplink-lrs" && (h.gb_s() - 25.0).abs() < 1e-9));
+        // 4:1 oversubscription drops the uplink-LRS stage below the
+        // mesh: 6.25 GB/s becomes the Pod min.
+        let over = SuperPodConfig {
+            uplink_oversub: 4,
+            ..SuperPodConfig::default()
+        };
+        assert!((min_of(&ubmesh_hop_chains(&over, 1.0)[4]) - 6.25).abs() < 1e-9);
+        // DCN is NIC-capped at the same 12.5 GB/s here.
+        assert!((min_of(&chains[5]) - 12.5).abs() < 1e-9);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! involve high communication volumes, are prioritized for
 //! high-bandwidth domains, while PP and DP ... is the lowest priority."
 
+use crate::topology::superpod::SuperPodConfig;
 use crate::topology::ublink::LANE_GB_S;
+use crate::workload::cluster::{ubmesh_hop_chains, HopCap};
 
 /// Communication tiers of the UB-Mesh hierarchy, ordered by bandwidth.
 #[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -32,43 +34,81 @@ pub const NTIERS: usize = 6;
 pub const TIER_SPAN: [usize; NTIERS] = [8, 64, 256, 1024, 8192, usize::MAX];
 
 /// Per-NPU usable bandwidth (GB/s) when a collective spans exactly this
-/// tier, for a given inter-rack lane provision and routing strategy
-/// multiplier. Derived from the §3.3 lane budgets:
-/// * board: 7 neighbors × 4 lanes;
-/// * rack: 7 Y-neighbors × 4 lanes;
-/// * row/col: the rack's x128/neighbor bundles shared by 64 NPUs,
-///   3 reachable neighbor racks each → 6 lanes/NPU at x16 provision;
-/// * pod: x256 uplink per rack / 64;
-/// * DCN: NIC-limited.
+/// tier: the **min over the real hop chain** for that tier
+/// ([`ubmesh_hop_chains`]) — NPU plane attach, board-LRS ↔ inter-rack
+/// LRS backplane-mesh lanes, uplink-LRS lanes with
+/// `SuperPodConfig::uplink_oversub` applied, HRS ports. The pre-PR-6
+/// model priced Row/Col/Pod off the NPU's inter-rack provision alone
+/// and over-reported those tiers ~1.5–2× whenever the x2 backplane-mesh
+/// stage was the binding hop (it is, at every default provision).
 #[derive(Clone, Copy, Debug)]
 pub struct TierBandwidth {
     pub gb_s: [f64; NTIERS],
 }
 
 impl TierBandwidth {
-    /// Paper-default UB-Mesh with `inter_rack_lanes` per NPU (Fig 20
-    /// explores x4..x32; default x16) and a routing multiplier for the
-    /// Z/α tiers (Shortest = 1.0; Detour/Borrow > 1, Fig 19).
-    pub fn ubmesh(inter_rack_lanes_per_npu: u32, routing_boost: f64) -> TierBandwidth {
-        let board = 7.0 * 4.0 * LANE_GB_S;
-        let rack = 7.0 * 4.0 * LANE_GB_S;
-        // Of the NPU's inter-rack provision, 3/4 serves the two direct
-        // dims (row+col at 3 neighbors each), 1/4 the pod uplink.
-        let direct = inter_rack_lanes_per_npu as f64 * 0.75 * LANE_GB_S;
-        let row = direct / 2.0 * routing_boost;
-        let col = direct / 2.0 * routing_boost;
-        let pod = inter_rack_lanes_per_npu as f64 * 0.25 * LANE_GB_S;
-        let dcn = 12.5;
-        TierBandwidth {
-            gb_s: [board, rack, row, col, pod, dcn],
+    /// Min-over-hops reduction of per-tier chains (see
+    /// [`ubmesh_hop_chains`]).
+    pub fn from_chains(chains: &[Vec<HopCap>; NTIERS]) -> TierBandwidth {
+        let mut gb_s = [0.0; NTIERS];
+        for (g, chain) in gb_s.iter_mut().zip(chains) {
+            *g = chain
+                .iter()
+                .map(HopCap::gb_s)
+                .fold(f64::INFINITY, f64::min);
         }
+        TierBandwidth { gb_s }
     }
 
-    /// Non-oversubscribed Clos: full x64-per-NPU bandwidth at every tier
-    /// (the idealized upper bound).
+    /// Paper-default UB-Mesh with `inter_rack_lanes` per NPU (Fig 20
+    /// explores x4..x32; default x16) and a routing multiplier for the
+    /// Z/α tiers (Shortest = 1.0; Detour/Borrow > 1, Fig 19), at the
+    /// paper's x2 backplane-mesh width and 1:1 uplinks.
+    pub fn ubmesh(inter_rack_lanes_per_npu: u32, routing_boost: f64) -> TierBandwidth {
+        TierBandwidth::ubmesh_mesh(inter_rack_lanes_per_npu, routing_boost, 2, 1)
+    }
+
+    /// UB-Mesh with every provisioning knob exposed: inter-rack lanes
+    /// per NPU, routing boost, backplane-mesh width (lanes per LRS
+    /// pair; x2 default, swept by the fig20 mesh section), and uplink
+    /// oversubscription. Builds the corresponding [`SuperPodConfig`]
+    /// and reduces its hop chains, so the analytic tiers and the DES
+    /// wiring always read the same knowledge.
+    pub fn ubmesh_mesh(
+        inter_rack_lanes_per_npu: u32,
+        routing_boost: f64,
+        mesh_lanes: u32,
+        uplink_oversub: u32,
+    ) -> TierBandwidth {
+        let mut cfg = SuperPodConfig::default();
+        // x16 per NPU ↔ x32 out-facing lanes per inter-rack LRS (the
+        // rack exposes 4 planes × 8 IR-LRS over 64 NPUs).
+        cfg.pod.rack.ir_lrs_out_lanes = 2 * inter_rack_lanes_per_npu;
+        cfg.pod.row_lanes_per_plane = 2 * inter_rack_lanes_per_npu;
+        cfg.pod.col_lanes_per_plane = 2 * inter_rack_lanes_per_npu;
+        cfg.pod.rack.lrs_mesh_lanes = mesh_lanes;
+        cfg.uplink_oversub = uplink_oversub;
+        TierBandwidth::from_chains(&ubmesh_hop_chains(&cfg, routing_boost))
+    }
+
+    /// Non-oversubscribed Clos: the leaf tier runs the full per-NPU
+    /// provision; everything past the rack crosses the aggregation
+    /// layer ([`TierBandwidth::clos_oversub`] with 1:1), and the DCN
+    /// tier stays NIC-limited like every other architecture.
     pub fn clos(lanes_per_npu: u32) -> TierBandwidth {
+        TierBandwidth::clos_oversub(lanes_per_npu, 1)
+    }
+
+    /// Clos with an oversubscribed aggregation layer: tiers above the
+    /// rack drain through the spine at `leaf / oversub`. The old model
+    /// filled all six tiers with the flat leaf figure, exempting Clos
+    /// from the hop accounting UB-Mesh pays.
+    pub fn clos_oversub(lanes_per_npu: u32, oversub: u32) -> TierBandwidth {
+        let leaf = lanes_per_npu as f64 * LANE_GB_S;
+        let agg = leaf / oversub as f64;
+        let dcn = agg.min(12.5);
         TierBandwidth {
-            gb_s: [lanes_per_npu as f64 * LANE_GB_S; NTIERS],
+            gb_s: [leaf, leaf, agg, agg, agg, dcn],
         }
     }
 
@@ -102,8 +142,9 @@ impl TierBandwidth {
     }
 
     /// 1D-FM-B (Fig 16-c): board mesh + 8 HRS cross-board (x32 per NPU)
-    /// with x32 inter-rack provision ("thanks to higher inter-rack
-    /// bandwidth" it lands slightly above 2D-FM, Fig 17).
+    /// with x32 inter-rack provision. Under the hop-chain model the
+    /// extra inter-rack lanes are backplane-mesh-capped (x32 ties x16),
+    /// so its edge over 2D-FM comes from the rack tier alone.
     pub fn fm1d_b() -> TierBandwidth {
         let board = 7.0 * 4.0 * LANE_GB_S;
         let rack = 32.0 * LANE_GB_S;
@@ -187,10 +228,86 @@ mod tests {
         assert!(bw.gb_s[4] >= bw.gb_s[5]);
     }
 
+    fn assert_tiers(bw: &TierBandwidth, want: [f64; NTIERS]) {
+        for (i, (&got, &w)) in bw.gb_s.iter().zip(&want).enumerate() {
+            assert!((got - w).abs() < 1e-9, "tier {i}: got {got}, want {w}");
+        }
+    }
+
     #[test]
-    fn clos_is_flat() {
-        let bw = TierBandwidth::clos(64);
-        assert!(bw.gb_s.iter().all(|&b| (b - 400.0).abs() < 1e-9));
+    fn clos_pays_its_aggregation_hop() {
+        // Leaf tiers run the full x64 provision; the DCN tier is
+        // NIC-capped like every architecture (min over leaf, agg, NIC).
+        assert_tiers(
+            &TierBandwidth::clos(64),
+            [400.0, 400.0, 400.0, 400.0, 400.0, 12.5],
+        );
+        // 4:1 aggregation oversubscription: past-rack tiers drain at
+        // leaf/4 = 100 GB/s; DCN min(100, 12.5) stays NIC-bound.
+        assert_tiers(
+            &TierBandwidth::clos_oversub(64, 4),
+            [400.0, 400.0, 100.0, 100.0, 100.0, 12.5],
+        );
+    }
+
+    #[test]
+    fn ubmesh_tiers_are_min_over_hops() {
+        // x16 Shortest, hand-computed per tier:
+        //   board/rack: 7 neighbors × x4          = 175
+        //   row/col:  min(attach 4×4 = 100,
+        //                 mesh 4p × 8LRS × 3slots × x2 / 64 = 3 → 18.75,
+        //                 wire 3 × x32 × 4p / 64 = 6 → 37.5)  = 18.75
+        //   pod:      min(attach 100,
+        //                 mesh-up 4p × 8LRS × 2slots × x2 / 64 = 2 → 12.5,
+        //                 uplink 4p × 2 × x32 / 64 = 4 → 25,
+        //                 hrs 25)                              = 12.5
+        //   dcn:      min(pod chain, NIC 12.5)                 = 12.5
+        assert_tiers(
+            &TierBandwidth::ubmesh(16, 1.0),
+            [175.0, 175.0, 18.75, 18.75, 12.5, 12.5],
+        );
+        // Detour (1.6): 6 mesh slots → 37.5; the boosted wire stage
+        // (60) no longer binds. Borrow (1.85): all 8 slots → 50.
+        assert_tiers(
+            &TierBandwidth::ubmesh(16, 1.6),
+            [175.0, 175.0, 37.5, 37.5, 12.5, 12.5],
+        );
+        assert_tiers(
+            &TierBandwidth::ubmesh(16, 1.85),
+            [175.0, 175.0, 50.0, 50.0, 12.5, 12.5],
+        );
+    }
+
+    #[test]
+    fn uplink_oversub_reaches_the_analytic_pod_tier() {
+        // 1:1 and 2:1 both leave the x2 backplane-mesh uplink slots
+        // (12.5 GB/s) binding; 4:1 drops the uplink-LRS stage to 6.25.
+        for (oversub, pod) in [(1, 12.5), (2, 12.5), (4, 6.25)] {
+            let bw = TierBandwidth::ubmesh_mesh(16, 1.0, 2, oversub);
+            assert!(
+                (bw.gb_s[4] - pod).abs() < 1e-9,
+                "oversub {oversub}: pod {} want {pod}",
+                bw.gb_s[4]
+            );
+            assert!((bw.gb_s[5] - pod.min(12.5)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mesh_width_lifts_the_backplane_ceiling() {
+        // Widening the LRS-pair mesh lanes raises the mesh-bound tiers
+        // until the next hop binds: at x16 Detour, x4 mesh moves Row to
+        // the wire stage (60) and Pod to the uplink stage (25); x8 mesh
+        // leaves them there (Row attach-capped only from x32 provision).
+        let m4 = TierBandwidth::ubmesh_mesh(16, 1.6, 4, 1);
+        assert_tiers(&m4, [175.0, 175.0, 60.0, 60.0, 25.0, 12.5]);
+        let m8 = TierBandwidth::ubmesh_mesh(16, 1.6, 8, 1);
+        assert!((m8.gb_s[2] - 60.0).abs() < 1e-9, "wire stage binds");
+        assert!((m8.gb_s[4] - 25.0).abs() < 1e-9, "uplink stage binds");
+        // x32 provision + x8 mesh: Row hits the NPU plane attach (100).
+        let wide = TierBandwidth::ubmesh_mesh(32, 1.6, 8, 1);
+        assert!((wide.gb_s[2] - 100.0).abs() < 1e-9);
+        assert!((wide.gb_s[4] - 50.0).abs() < 1e-9);
     }
 
     #[test]
@@ -211,9 +328,15 @@ mod tests {
     }
 
     #[test]
-    fn fig20_bandwidth_scales_with_lanes() {
-        let x4 = TierBandwidth::ubmesh(4, 1.0);
-        let x32 = TierBandwidth::ubmesh(32, 1.0);
-        assert!(x32.gb_s[2] > x4.gb_s[2] * 7.0);
+    fn fig20_lanes_scale_until_the_mesh_caps() {
+        // Under the corrected model the inter-rack provision only pays
+        // off while the wire stage is the binding hop: x4 → x8 doubles
+        // the Detour Row tier (15 → 30), but from x16 up the x2
+        // backplane mesh (37.5 GB/s) is the ceiling — x32 buys nothing.
+        let row = |lanes| TierBandwidth::ubmesh(lanes, 1.6).gb_s[2];
+        assert!((row(4) - 15.0).abs() < 1e-9);
+        assert!((row(8) - 30.0).abs() < 1e-9);
+        assert!((row(16) - 37.5).abs() < 1e-9);
+        assert!((row(32) - row(16)).abs() < 1e-9, "mesh-capped");
     }
 }

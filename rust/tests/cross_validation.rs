@@ -120,6 +120,62 @@ fn check(name: &str, got_us: f64, expect_us: f64) {
     );
 }
 
+/// The corrected tier formula must agree between
+/// `TierBandwidth::ubmesh_mesh` (min over [`ubmesh_hop_chains`]) and
+/// the Python mirror `ref.tier_bandwidths` at 1e-3 over every knob:
+/// lanes, routing boost, mesh width, uplink oversubscription.
+#[test]
+fn corrected_tier_formula_matches_python_reference() {
+    use ubmesh::workload::placement::TierBandwidth;
+    let cases: [(u32, f64, u32, u32); 6] = [
+        (16, 1.0, 2, 1),  // paper default, Shortest
+        (16, 1.6, 2, 1),  // Detour
+        (4, 1.85, 1, 2),  // thin provision, Borrow, narrow mesh, 2:1
+        (16, 1.0, 2, 4),  // the measured 4:1 sweep
+        (32, 1.6, 4, 1),  // fig20 mesh-sweep corner
+        (8, 1.6, 8, 1),   // wide mesh on thin provision
+    ];
+    for (lanes, boost, mesh, oversub) in cases {
+        let rust = TierBandwidth::ubmesh_mesh(lanes, boost, mesh, oversub);
+        let script = format!(
+            "import sys; sys.path.insert(0, {root:?} + '/python')\n\
+             from compile.kernels import ref\n\
+             print(','.join(repr(b) for b in \
+             ref.tier_bandwidths({lanes}, {boost}, {mesh}, {oversub})))\n",
+            root = env!("CARGO_MANIFEST_DIR"),
+        );
+        let reference: Vec<f64> = match Command::new("python3").arg("-c").arg(&script).output() {
+            Ok(out) if out.status.success() => String::from_utf8_lossy(&out.stdout)
+                .trim()
+                .split(',')
+                .map(|v| v.parse().expect("ref.tier_bandwidths printed a non-number"))
+                .collect(),
+            Ok(out) => {
+                let stderr = String::from_utf8_lossy(&out.stderr);
+                assert!(
+                    stderr.contains("ModuleNotFoundError") || stderr.contains("ImportError"),
+                    "python ref.tier_bandwidths raised:\n{stderr}"
+                );
+                eprintln!("python unavailable — skipping tier cross-check");
+                return;
+            }
+            Err(_) => {
+                eprintln!("no python3 — skipping tier cross-check");
+                return;
+            }
+        };
+        assert_eq!(reference.len(), rust.gb_s.len());
+        for (tier, (&r, &p)) in rust.gb_s.iter().zip(&reference).enumerate() {
+            let rel = (r - p).abs() / p.max(1e-12);
+            assert!(
+                rel < TOLERANCE,
+                "x{lanes} boost {boost} mesh {mesh} {oversub}:1 tier {tier}: \
+                 rust {r} vs ref {p} (rel {rel:.2e})"
+            );
+        }
+    }
+}
+
 #[test]
 fn canned_dag_single_transfer() {
     // DAG A: one 500 MB flow over one 50 GB/s hop.

@@ -45,6 +45,8 @@ fn fig19_shape_routing_strategies_ordered() {
             Arch::UbMesh {
                 inter_rack_lanes: 16,
                 routing,
+                mesh_lanes: 2,
+                uplink_oversub: 1,
             },
         )
         .unwrap()
@@ -62,11 +64,14 @@ fn fig19_shape_routing_strategies_ordered() {
 }
 
 #[test]
-fn fig20_shape_bandwidth_matters_more_at_long_seq() {
-    // Fig 20's mechanism: with long sequences, SP groups outgrow the
-    // rack ("a portion of the TP and SP traffic inevitably traverses the
-    // inter-rack link"), so inter-rack lanes help; with short sequences
-    // TP/SP stay inside the rack and extra lanes barely matter.
+fn fig20_shape_mesh_width_matters_more_at_long_seq() {
+    // Fig 20's mechanism under the hop-chain model: the binding
+    // provision knob is the backplane-mesh width, not the inter-rack
+    // lanes (those are mesh-capped from x16 up). With long sequences,
+    // SP groups outgrow the rack ("a portion of the TP and SP traffic
+    // inevitably traverses the inter-rack link"), so widening the
+    // x2 → x8 LRS mesh pays off; with short sequences TP/SP stay inside
+    // the rack and the wider mesh barely matters.
     use ubmesh::workload::models::by_name;
     use ubmesh::workload::placement::{Placement, TierBandwidth};
     use ubmesh::workload::step::iteration_time;
@@ -83,20 +88,20 @@ fn fig20_shape_bandwidth_matters_more_at_long_seq() {
             tokens_per_microbatch: seq,
         };
         let place = Placement::topology_aware(&p);
-        let t8 =
-            iteration_time(&m, &p, &place, &TierBandwidth::ubmesh(8, 1.0)).total_us;
-        let t32 =
-            iteration_time(&m, &p, &place, &TierBandwidth::ubmesh(32, 1.0)).total_us;
-        t8 / t32
+        let m2 = iteration_time(&m, &p, &place, &TierBandwidth::ubmesh_mesh(32, 1.0, 2, 1))
+            .total_us;
+        let m8 = iteration_time(&m, &p, &place, &TierBandwidth::ubmesh_mesh(32, 1.0, 8, 1))
+            .total_us;
+        m2 / m8
     };
     let short = gain(2, 8192.0); // SP span 16 → intra-rack
     let long = gain(16, 1_048_576.0); // SP span 128 → crosses racks
     assert!(
         long > short + 0.01,
-        "x32 gain: 1M-seq {long:.4} vs 8K-seq {short:.4}"
+        "x8-mesh gain: 1M-seq {long:.4} vs 8K-seq {short:.4}"
     );
-    // Residual short-seq gain comes from the DP tier (pod uplinks also
-    // scale with the provision); the TP/SP-driven gain is the long-seq one.
+    // Residual short-seq gain comes from the DP tier (the uplink mesh
+    // slots also widen); the TP/SP-driven gain is the long-seq one.
     assert!(short < 1.10, "short-seq gain {short:.4} suspiciously large");
 }
 

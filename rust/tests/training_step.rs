@@ -60,10 +60,14 @@ fn analytic(m: &ubmesh::workload::ModelConfig, p: &ParallelismConfig) -> f64 {
 
 /// The measured-vs-analytic grid: 2 models × 2 parallelisms × 2 scales
 /// (rack 64, pod 1024). Mirror-measured ratios: rack 1.036 / 1.021,
-/// pod 1.063 / 1.055 — the rack band is dominated by striping-relay
-/// contention in 1F1B steady state, the pod band adds the DP tail's
-/// backplane-mesh ceiling (the analytic Col tier assumes 37.5 GB/s per
-/// NPU; the mesh hop caps the measured exchange below that).
+/// pod 1.038 / 1.028 — the rack band is dominated by striping-relay
+/// contention in 1F1B steady state. The pod cases sat at 1.063 / 1.055
+/// while the analytic Col tier ignored the board-LRS backplane-mesh
+/// hop; with the hop-chain model pricing it (Shortest Col: 18.75 GB/s,
+/// not the wire-stage 37.5) the pod band tightens from the pre-fix
+/// (0.95, 1.30) to (0.93, 1.18). The residual ~3–4% on both scales is
+/// 1F1B relay poaching and α-gate serialization, which the closed form
+/// does not model.
 #[test]
 fn measured_iteration_tracks_analytic_across_grid() {
     let (rack_t, rack_h) = ubmesh_rack(&RackConfig::default());
@@ -73,7 +77,7 @@ fn measured_iteration_tracks_analytic_across_grid() {
 
     // (model, parallelism, map, lo, hi, label)
     let rack_band = (0.90, 1.15);
-    let pod_band = (0.95, 1.30);
+    let pod_band = (0.93, 1.18);
     let grid: Vec<(&str, ParallelismConfig, bool, (f64, f64))> = vec![
         ("llama-70b", pcfg(8, 2, 1, 2, 2, 4, 8192.0), false, rack_band),
         ("gpt4-2t", pcfg(8, 2, 4, 2, 2, 4, 8192.0), false, rack_band),
@@ -150,11 +154,12 @@ fn pipeline_bubble_is_emergent_and_tracks_pp_over_mb() {
 }
 
 /// Full five-technique iteration crossing pods: EP tiles SP×DP across
-/// two pods and DP pairs ride the HRS Clos tier. The analytic model
-/// prices that traffic at the pod-tier 25 GB/s/NPU; the measured
-/// fabric pays the backplane-mesh + uplink-lane ceilings, so the
-/// measured iteration lands well above the oracle but inside one
-/// regime (mirror-measured ratio 1.843).
+/// two pods and DP pairs ride the HRS Clos tier. The hop-chain model
+/// prices that traffic at the uplink-mesh-bound 12.5 GB/s/NPU (the old
+/// model's 25 GB/s uplink figure skipped the mesh hop, putting the
+/// ratio at 1.843); what remains above the oracle is genuine multi-
+/// phase HRS contention the closed form cannot see — mirror-measured
+/// ratio 1.639, asserted inside (1.3, 2.0), down from (1.0, 2.5).
 #[test]
 fn cross_pod_iteration_completes_with_bounded_contention_excess() {
     let mut cfg = SuperPodConfig::default();
@@ -170,7 +175,40 @@ fn cross_pod_iteration_completes_with_bounded_contention_excess() {
     let an = analytic(&m, &p);
     let ratio = des / an;
     assert!(
-        (1.0..2.5).contains(&ratio),
-        "cross-pod DES {des:.0} vs analytic {an:.0} — ratio {ratio:.3}"
+        (1.3..2.0).contains(&ratio),
+        "cross-pod DES {des:.0} vs analytic {an:.0} — ratio {ratio:.3} \
+         outside calibrated (1.3, 2.0), mirror 1.639"
+    );
+}
+
+/// `SuperPodConfig::uplink_oversub` must degrade the *analytic* plan
+/// the way the measured 4:1 sweep degrades the DES phase
+/// (`oversub.rN.interpod_us` ≈ 325 / 325 / 645 µs): 2:1 is free because
+/// the x2 uplink mesh slots (12.5 GB/s/NPU) saturate before the halved
+/// uplink-LRS lanes, and 4:1 halves the Pod tier (6.25 GB/s). The
+/// analytic DP-phase ratio t(4:1)/t(1:1) = 2.000 must agree with the
+/// measured 645/325 = 1.985 within 10%.
+#[test]
+fn analytic_oversub_degrades_like_the_measured_sweep() {
+    let m = by_name("gpt4-2t").unwrap();
+    // DP spans all 4096 NPUs → the Pod tier prices the DP tail.
+    let p = pcfg(8, 8, 16, 8, 8, 4, 8192.0);
+    assert_eq!(p.npus(), 4096);
+    let dp_us = |oversub| {
+        let bw = TierBandwidth::ubmesh_mesh(16, 1.0, 2, oversub);
+        assert!(
+            (bw.gb_s[4] - if oversub == 4 { 6.25 } else { 12.5 }).abs() < 1e-9,
+            "{oversub}:1 pod tier {}",
+            bw.gb_s[4]
+        );
+        iteration_time(&m, &p, &Placement::topology_aware(&p), &bw).dp_us
+    };
+    let (r1, r2, r4) = (dp_us(1), dp_us(2), dp_us(4));
+    assert_eq!(r1, r2, "2:1 oversubscription must be free (mesh-bound)");
+    let analytic_ratio = r4 / r1;
+    let measured_ratio = 645.0 / 325.0; // oversub.r4/r1.interpod_us
+    assert!(
+        (analytic_ratio / measured_ratio - 1.0).abs() < 0.10,
+        "4:1/1:1 analytic {analytic_ratio:.3} vs measured {measured_ratio:.3}"
     );
 }
