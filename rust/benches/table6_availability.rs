@@ -1,0 +1,338 @@
+//! Table 6 / §6.6 as a **DES experiment** (ROADMAP item 4): the paper's
+//! +7.2% availability headline rests on Eq. 3 closed-form MTBF
+//! arithmetic that charges every failure one flat MTTR. Here the same
+//! AFR census instead drives a correlated FaultPlan sampler
+//! (`reliability::faultgen`) whose blast-radius groups are replayed
+//! against the *measured* training iteration
+//! (`workload::step::iteration_dag`) on the real rack fabrics, and a
+//! mission-length Monte-Carlo turns the measured per-class outcomes
+//! into availability / effective-training-time distributions
+//! (`reliability::montecarlo::measured_availability`), with checkpoint
+//! economics (`reliability::checkpoint`) priced by real DCN flows.
+//!
+//! Emits `BENCH_avail.json` (`BENCH_SIM_JSON` overrides the path). CI
+//! asserts the closed-form-vs-measured differential-oracle band, the
+//! interior checkpoint-interval optimum, and a positive measured
+//! UB-Mesh-vs-Clos delta — see `benches/README.md` for the key schema.
+
+use ubmesh::cost::capex::{capex_full_clos, capex_ubmesh};
+use ubmesh::reliability::afr::afr_of_capex;
+use ubmesh::reliability::availability::{availability, mtbf_hours, mttr};
+use ubmesh::reliability::checkpoint::{
+    state_bytes_per_rank, young_optimum_hours, CheckpointConfig,
+};
+use ubmesh::reliability::faultgen::{
+    BlastClass, FaultDomains, FaultGen, FaultGenConfig, HOURS_PER_YEAR,
+};
+use ubmesh::reliability::montecarlo::{
+    measured_availability, measured_class_costs, ClassCosts, MeasureConfig, MissionConfig,
+    NPU_AFR_PER_UNIT,
+};
+use ubmesh::sim::{self, RecoveryConfig, SimNet};
+use ubmesh::topology::dcn::{add_dcn_layer, DcnAttach};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::superpod::SuperPodConfig;
+use ubmesh::topology::variants::rack_clos;
+use ubmesh::util::bench::JsonReport;
+use ubmesh::util::table::{fmt, pct, Table};
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::step::{
+    checkpoint_flow_dag, iteration_dag, iteration_with_readmission, IterationSpec, RankOrder,
+};
+use ubmesh::workload::{ClusterMap, ParallelismConfig};
+
+/// The modeled fleet: the paper's 8K SuperPod (128 racks × 64 NPUs).
+const FLEET: usize = 8192;
+const RACKS: usize = FLEET / 64;
+/// Power-domain AFR per rack (failures/year) — PSU/busbar class.
+const RACK_POWER_AFR: f64 = 0.02;
+/// Scheduler readmission floor after an abort (§4.2 fault localization
+/// + task re-placement), on top of the measured checkpoint read-back.
+const SCHEDULER_RESTART_HOURS: f64 = 5.0 / 60.0;
+
+fn fleet_gen(domains: FaultDomains, afr: &ubmesh::reliability::AfrBreakdown) -> FaultGen {
+    // Domains are rack-scale (the DES replay arena); rates are scaled to
+    // the full 8K fleet so mission arrivals match the paper's census.
+    FaultGen::new(
+        domains,
+        afr,
+        FaultGenConfig {
+            npu_fleet_afr: FLEET as f64 * NPU_AFR_PER_UNIT,
+            rack_power_afr: RACK_POWER_AFR * RACKS as f64,
+            ..FaultGenConfig::default()
+        },
+    )
+}
+
+fn abort_rate_per_year(gen: &FaultGen, costs: &ClassCosts) -> f64 {
+    BlastClass::ALL
+        .iter()
+        .map(|&c| gen.rates.of(c) * costs.abort_fraction(c))
+        .sum()
+}
+
+fn main() {
+    let mut json = JsonReport::new();
+
+    // --- censuses + Eq. 3 closed forms (the Table 6 numbers) ------------
+    let ub_afr = afr_of_capex(&capex_ubmesh(&SuperPodConfig::default()));
+    let clos_afr = afr_of_capex(&capex_full_clos("x64T Clos", FLEET, 64));
+    let ub_cf = availability(mtbf_hours(ub_afr.total()), mttr::BASELINE_HOURS);
+    let clos_cf = availability(mtbf_hours(clos_afr.total()), mttr::BASELINE_HOURS);
+    json.metric("avail.ub.afr_total", ub_afr.total());
+    json.metric("avail.clos.afr_total", clos_afr.total());
+    json.metric("avail.ub.closed_form", ub_cf);
+    json.metric("avail.clos.closed_form", clos_cf);
+    json.metric("avail.closed_form.delta", ub_cf - clos_cf);
+    println!(
+        "closed form (Eq. 3, flat {:.0}-min MTTR): UB-Mesh {} vs Clos {} → +{}",
+        mttr::BASELINE_HOURS * 60.0,
+        pct(ub_cf, 1),
+        pct(clos_cf, 1),
+        pct(ub_cf - clos_cf, 1)
+    );
+
+    // --- the measured training iteration on both rack fabrics ----------
+    let m = by_name("llama-70b").unwrap();
+    let p = ParallelismConfig {
+        tp: 8,
+        sp: 8,
+        ep: 1,
+        pp: 1,
+        dp: 1,
+        microbatches: 2,
+        tokens_per_microbatch: 8192.0,
+    };
+    let spec = IterationSpec::default();
+
+    let (mut ub_t, ub_h) = ubmesh_rack(&RackConfig::default());
+    let storage = add_dcn_layer(
+        &mut ub_t,
+        std::slice::from_ref(&ub_h),
+        2,
+        DcnAttach::UbSwitch { lanes_per_rack: 8 },
+    );
+    let ub_map = ClusterMap::rack(&ub_h);
+    let ub_dag = iteration_dag(&ub_t, &ub_map, &m, &p, RankOrder::TopologyAware, &spec);
+
+    let (cl_t, cl_h) = rack_clos();
+    let cl_map = ClusterMap::clos_rack(&cl_h);
+    let cl_dag = iteration_dag(&cl_t, &cl_map, &m, &p, RankOrder::TopologyAware, &spec);
+
+    // --- checkpoint economics as real DCN flows -------------------------
+    // Fleet-sharded state: every rank owns params × 18 B / 8192. The
+    // write and read-back contend for the rack's 8 DCN uplink lanes —
+    // the measured makespan, not a per-rank bandwidth guess, prices W.
+    let fleet_p = ParallelismConfig {
+        tp: 8,
+        sp: 8,
+        ep: 1,
+        pp: 128,
+        dp: 1,
+        microbatches: 2,
+        tokens_per_microbatch: 8192.0,
+    };
+    let bytes_per_rank = state_bytes_per_rank(&m, &fleet_p);
+    let ub_net = SimNet::new(&ub_t);
+    let write_dag = checkpoint_flow_dag(&ub_t, &ub_map, &storage, bytes_per_rank, true);
+    let write_run = sim::schedule::run(&ub_net, &write_dag);
+    assert!(!write_run.is_stalled());
+    let write_hours = write_run.makespan_us / 3.6e9;
+
+    let healthy_iter = sim::schedule::run(&ub_net, &ub_dag);
+    assert!(!healthy_iter.is_stalled());
+    let restart_dag = iteration_with_readmission(
+        &ub_t, &ub_map, &m, &p, RankOrder::TopologyAware, &spec, &storage, bytes_per_rank,
+    );
+    let restart_run = sim::schedule::run(&ub_net, &restart_dag);
+    assert!(!restart_run.is_stalled());
+    // The readmission surcharge: first-iteration-after-restart minus a
+    // normal iteration, plus the scheduler floor.
+    let readmission_hours =
+        (restart_run.makespan_us - healthy_iter.makespan_us).max(0.0) / 3.6e9;
+    let restart_hours = SCHEDULER_RESTART_HOURS + readmission_hours;
+    json.metric("avail.ckpt.state_bytes_per_rank", bytes_per_rank);
+    json.metric("avail.ckpt.write_hours", write_hours);
+    json.metric("avail.ckpt.readmission_hours", readmission_hours);
+    json.metric("avail.ckpt.restart_hours", restart_hours);
+    println!(
+        "\ncheckpoint flows: {:.0} MB/rank, write {:.2} s (measured over 8 DCN lanes), \
+         restart readmission +{:.2} s on the first iteration",
+        bytes_per_rank / 1e6,
+        write_hours * 3600.0,
+        readmission_hours * 3600.0
+    );
+
+    // --- measured per-class costs: blast radii replayed in the DES -----
+    let mcfg = MeasureConfig {
+        trials_per_class: 4,
+        ..MeasureConfig::default()
+    };
+    let ub_gen = fleet_gen(FaultDomains::rack(&ub_t, &ub_h), &ub_afr);
+    let cl_gen = fleet_gen(FaultDomains::flat(&cl_t, &cl_h.npus, &cl_h.hrs), &clos_afr);
+    let ub_costs =
+        measured_class_costs(&ub_t, &ub_gen, &ub_dag, &RecoveryConfig::direct(), &mcfg, 11);
+    let cl_costs =
+        measured_class_costs(&cl_t, &cl_gen, &cl_dag, &RecoveryConfig::direct(), &mcfg, 13);
+
+    let mut tbl = Table::with_title(
+        "measured blast-radius outcomes (fraction aborting | mean slowdown)",
+        vec!["class", "UB-Mesh", "Clos"],
+    );
+    for c in BlastClass::ALL {
+        tbl.row(vec![
+            c.label().into(),
+            format!(
+                "{} | {}",
+                fmt(ub_costs.abort_fraction(c), 2),
+                pct(ub_costs.mean_slowdown(c), 1)
+            ),
+            format!(
+                "{} | {}",
+                fmt(cl_costs.abort_fraction(c), 2),
+                pct(cl_costs.mean_slowdown(c), 1)
+            ),
+        ]);
+    }
+    tbl.print();
+    // The architectural asymmetry the closed form can't see: the 64+1
+    // backup absorbs UB-Mesh NPU deaths, the Clos rack has no backup.
+    assert_eq!(ub_costs.abort_fraction(BlastClass::NpuDeath), 0.0);
+    assert_eq!(cl_costs.abort_fraction(BlastClass::NpuDeath), 1.0);
+    assert_eq!(ub_costs.abort_fraction(BlastClass::SingleLink), 0.0);
+    assert_eq!(cl_costs.abort_fraction(BlastClass::SingleLink), 0.0);
+
+    let ub_abort_yr = abort_rate_per_year(&ub_gen, &ub_costs);
+    let cl_abort_yr = abort_rate_per_year(&cl_gen, &cl_costs);
+    json.metric("avail.ub.abort_per_year", ub_abort_yr);
+    json.metric("avail.clos.abort_per_year", cl_abort_yr);
+
+    // --- checkpoint-interval sweep (Clos: abort-dominated, the classic
+    // optimum) — common random numbers across intervals, so the curve is
+    // noise-free in the interval and the interior optimum is exact.
+    let mission = MissionConfig::default();
+    let cl_young = young_optimum_hours(write_hours, HOURS_PER_YEAR / cl_abort_yr);
+    let intervals = [0.01, 0.02, 0.04, 0.08, 0.16, 0.32, 0.64, 1.28];
+    let mut best = (0usize, f64::MIN);
+    let mut tbl = Table::with_title(
+        "checkpoint-interval sweep (Clos fleet, measured costs, CRN seed)",
+        vec!["interval (h)", "effective training time"],
+    );
+    for (i, &t_h) in intervals.iter().enumerate() {
+        let ck = CheckpointConfig::new(t_h, write_hours, restart_hours);
+        let r = measured_availability(&cl_gen, &cl_costs, &ck, &mission, 96, 2026);
+        let eff = r.effective.mean();
+        if eff > best.1 {
+            best = (i, eff);
+        }
+        tbl.row(vec![fmt(t_h, 2), pct(eff, 2)]);
+    }
+    tbl.print();
+    let interior = best.0 > 0 && best.0 + 1 < intervals.len();
+    println!(
+        "optimum {} h (Young/Daly closed form: {} h) — interior: {interior}",
+        fmt(intervals[best.0], 2),
+        fmt(cl_young, 3)
+    );
+    assert!(interior, "sweep optimum pinned to a grid end");
+    assert!(
+        intervals[best.0] >= cl_young / 4.0 && intervals[best.0] <= cl_young * 4.0,
+        "grid optimum {} vs Young {}",
+        intervals[best.0],
+        cl_young
+    );
+    json.metric("avail.ckpt.optimal_interval_hours", intervals[best.0]);
+    json.metric("avail.ckpt.young_optimum_hours", cl_young);
+    json.metric("avail.ckpt.best_effective", best.1);
+    json.metric("avail.ckpt.interior", f64::from(interior));
+
+    // --- differential oracle: the uncorrelated limit must reproduce
+    // Eq. 3 (network-only rates, flat MTTR, no aborts, no checkpoint
+    // overhead). This is the measured-vs-closed-form boundary: beyond
+    // it, APR absorption and abort economics move the answer.
+    let oracle_gen = FaultGen::new(
+        FaultDomains::rack(&ub_t, &ub_h),
+        &ub_afr,
+        FaultGenConfig {
+            npu_fleet_afr: 0.0,
+            rack_power_afr: 0.0,
+            ..FaultGenConfig::default()
+        },
+    );
+    let oracle_costs = ClassCosts::uncorrelated_limit(mttr::BASELINE_HOURS);
+    let no_ckpt = CheckpointConfig::new(1e12, 0.0, 0.0);
+    let oracle = measured_availability(&oracle_gen, &oracle_costs, &no_ckpt, &mission, 256, 7);
+    let oracle_err = (oracle.availability.mean() - ub_cf).abs();
+    println!(
+        "\ndifferential oracle (uncorrelated limit): measured {} vs Eq. 3 {} \
+         (|err| = {:.4})",
+        pct(oracle.availability.mean(), 2),
+        pct(ub_cf, 2),
+        oracle_err
+    );
+    json.metric("avail.oracle.measured_uncorrelated", oracle.availability.mean());
+    json.metric("avail.oracle.closed_form", ub_cf);
+    json.metric("avail.oracle.abs_err", oracle_err);
+    assert!(oracle_err < 0.01, "oracle drift: {oracle_err}");
+
+    // --- mission-length measured availability, UB-Mesh vs Clos ----------
+    let ub_ck = CheckpointConfig::new(
+        young_optimum_hours(write_hours, HOURS_PER_YEAR / ub_abort_yr),
+        write_hours,
+        restart_hours,
+    );
+    let cl_ck = CheckpointConfig::new(intervals[best.0], write_hours, restart_hours);
+    let ub_m = measured_availability(&ub_gen, &ub_costs, &ub_ck, &mission, 256, 21);
+    let cl_m = measured_availability(&cl_gen, &cl_costs, &cl_ck, &mission, 256, 22);
+    let delta = ub_m.availability.mean() - cl_m.availability.mean();
+    let eff_delta = ub_m.effective.mean() - cl_m.effective.mean();
+
+    let mut tbl = Table::with_title(
+        "measured mission availability (720 h, correlated faults, measured costs)",
+        vec!["arch", "avail p50", "avail p99", "effective p50", "aborts"],
+    );
+    for (name, r) in [("UB-Mesh", &ub_m), ("Clos", &cl_m)] {
+        tbl.row(vec![
+            name.into(),
+            pct(r.availability.p50(), 2),
+            pct(r.availability.p99(), 2),
+            pct(r.effective.p50(), 2),
+            format!("{}", r.aborts),
+        ]);
+    }
+    tbl.print();
+    println!(
+        "measured delta: availability +{} (closed form says +{}), \
+         effective training time +{}",
+        pct(delta, 2),
+        pct(ub_cf - clos_cf, 1),
+        pct(eff_delta, 2)
+    );
+    json.metric("avail.ub.measured_p50", ub_m.availability.p50());
+    json.metric("avail.ub.measured_p99", ub_m.availability.p99());
+    json.metric("avail.ub.effective_p50", ub_m.effective.p50());
+    json.metric("avail.clos.measured_p50", cl_m.availability.p50());
+    json.metric("avail.clos.measured_p99", cl_m.availability.p99());
+    json.metric("avail.clos.effective_p50", cl_m.effective.p50());
+    json.metric("avail.ubmesh_minus_clos", delta);
+    json.metric("avail.effective.ubmesh_minus_clos", eff_delta);
+    // The measured experiment *confirms the sign* of the paper's +7.2%
+    // but attributes it differently: APR + 64+1 absorb most UB-Mesh
+    // failures into degraded-mode slowdown (availability stays near
+    // 100%), while the backup-less Clos fleet aborts on every NPU death
+    // and pays restart + lost work. The closed form's flat-MTTR
+    // arithmetic overstates both architectures' downtime — the
+    // availability gap survives (asserted), while the effective-time
+    // delta is emitted *unasserted*: it hinges on the measured
+    // degraded-mode slowdown of backup substitution, which frequent
+    // cheap checkpointing on the Clos side can out-compete.
+    assert!(delta > 0.0, "measured UB-Mesh delta must stay positive");
+    assert!(eff_delta.is_finite());
+
+    let path = std::env::var("BENCH_SIM_JSON").unwrap_or_else(|_| "BENCH_avail.json".into());
+    match json.write(&path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+    println!("\ntable6_availability OK");
+}

@@ -1,0 +1,150 @@
+//! Checkpoint/restart economics for the measured-availability pipeline
+//! (ROADMAP item 4; "99 Problems But FLOPS Ain't One", arXiv
+//! 2407.12819).
+//!
+//! The Eq. 3 closed form prices every failure at one MTTR; real jobs
+//! also pay a *recompute* tax — work since the last checkpoint is lost
+//! whenever a failure aborts the job (an NPU death without a backup, a
+//! rack power trip) — plus a standing *overhead* tax for writing the
+//! checkpoints at all. Both depend on the checkpoint interval `T`:
+//! short intervals waste time writing, long intervals lose more work
+//! per abort. This module holds the interval economics; the traffic
+//! itself — checkpoint writes and restart readmission as real DCN
+//! flows — is built by [`crate::workload::step::checkpoint_flow_dag`]
+//! and [`crate::workload::step::iteration_with_readmission`] and
+//! *measured* in the fluid simulator, so `write_hours`/`restart_hours`
+//! here can come from DES runs instead of guesses
+//! ([`CheckpointConfig::with_measured_write`]).
+
+use crate::workload::models::ModelConfig;
+use crate::workload::traffic::ParallelismConfig;
+
+/// Bytes of persistent training state per parameter under mixed
+/// precision + Adam: fp16 weights (2) + fp32 master copy (4) + fp32
+/// momentum (4) + fp32 variance (4) + fp16 gradients (2) are live, but
+/// only weights-master + optimizer moments must be checkpointed:
+/// 4 + 4 + 4 + 2 = 14, padded to 18 with the framework/RNG/dataloader
+/// state the Megatron-style stacks serialize alongside.
+pub const STATE_BYTES_PER_PARAM: f64 = 18.0;
+
+/// Checkpointed state one rank owns: the model's parameter census
+/// sharded over the model-parallel axes (tp·sp·pp); data-parallel
+/// replicas hold copies and only one writes.
+pub fn state_bytes_per_rank(m: &ModelConfig, p: &ParallelismConfig) -> f64 {
+    m.params() * STATE_BYTES_PER_PARAM / (p.tp * p.sp * p.pp) as f64
+}
+
+/// Interval economics of periodic checkpointing.
+#[derive(Copy, Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Hours of training between checkpoint writes.
+    pub interval_hours: f64,
+    /// Wall-clock cost of one checkpoint write (hours) — ideally the
+    /// *measured* makespan of the write flow DAG.
+    pub write_hours: f64,
+    /// Restart cost after an abort (hours): scheduler readmission +
+    /// checkpoint read-back + the readmission collective, again ideally
+    /// measured.
+    pub restart_hours: f64,
+}
+
+impl CheckpointConfig {
+    pub fn new(interval_hours: f64, write_hours: f64, restart_hours: f64) -> CheckpointConfig {
+        assert!(interval_hours > 0.0 && write_hours >= 0.0 && restart_hours >= 0.0);
+        CheckpointConfig {
+            interval_hours,
+            write_hours,
+            restart_hours,
+        }
+    }
+
+    /// Replace the write/restart guesses with DES-measured makespans
+    /// (µs → hours).
+    pub fn with_measured_write(mut self, write_us: f64, restart_us: f64) -> CheckpointConfig {
+        self.write_hours = write_us / 3.6e9;
+        self.restart_hours = restart_us / 3.6e9;
+        self
+    }
+
+    /// Standing fraction of wall-clock spent writing checkpoints.
+    pub fn overhead_fraction(&self) -> f64 {
+        (self.write_hours / self.interval_hours).min(1.0)
+    }
+
+    /// Expected hours of lost work per abort: uniformly half an
+    /// interval back to the last durable checkpoint, plus the write in
+    /// flight.
+    pub fn expected_lost_hours(&self) -> f64 {
+        self.interval_hours / 2.0 + self.write_hours
+    }
+
+    /// First-order expected goodput fraction under abort rate
+    /// `lambda_per_hour`: `1 − W/T − λ·(T/2 + R)`. The interior optimum
+    /// of this expression in `T` is [`young_optimum_hours`].
+    pub fn expected_goodput(&self, lambda_per_hour: f64) -> f64 {
+        (1.0 - self.overhead_fraction()
+            - lambda_per_hour * (self.interval_hours / 2.0 + self.restart_hours))
+            .max(0.0)
+    }
+}
+
+/// Young/Daly first-order optimal checkpoint interval:
+/// `T* = sqrt(2 · W · MTBF_abort)`. Only *aborting* failures count —
+/// UB-Mesh's APR/backup absorb most classes online, which is exactly
+/// why its optimal interval stretches relative to a Clos fleet.
+pub fn young_optimum_hours(write_hours: f64, mtbf_abort_hours: f64) -> f64 {
+    assert!(write_hours >= 0.0 && mtbf_abort_hours > 0.0);
+    (2.0 * write_hours * mtbf_abort_hours).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::by_name;
+
+    #[test]
+    fn state_shards_over_model_axes() {
+        let m = by_name("llama-70b").unwrap();
+        let p = ParallelismConfig {
+            tp: 8,
+            sp: 8,
+            ep: 1,
+            pp: 1,
+            dp: 1,
+            microbatches: 2,
+            tokens_per_microbatch: 8192.0,
+        };
+        let per_rank = state_bytes_per_rank(&m, &p);
+        assert!((per_rank - m.params() * 18.0 / 64.0).abs() < 1.0);
+        // Doubling pp halves the shard.
+        let p2 = ParallelismConfig { pp: 2, ..p };
+        assert!((state_bytes_per_rank(&m, &p2) - per_rank / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn goodput_tradeoff_and_young_optimum() {
+        let write = 0.01; // 36 s
+        let mtbf = 20.0;
+        let t_star = young_optimum_hours(write, mtbf);
+        assert!((t_star - (2.0 * write * mtbf).sqrt()).abs() < 1e-12);
+        // The closed-form goodput peaks at the Young point: both a much
+        // shorter and a much longer interval do worse.
+        let g = |t: f64| CheckpointConfig::new(t, write, 0.2).expected_goodput(1.0 / mtbf);
+        assert!(g(t_star) > g(t_star / 8.0));
+        assert!(g(t_star) > g(t_star * 8.0));
+        // Degenerate interval saturates at zero, not negative.
+        assert_eq!(
+            CheckpointConfig::new(0.001, write, 0.2).expected_goodput(10.0),
+            0.0
+        );
+    }
+
+    #[test]
+    fn measured_write_overrides_hours() {
+        let c = CheckpointConfig::new(1.0, 0.5, 0.5).with_measured_write(3.6e9, 7.2e9);
+        assert!((c.write_hours - 1.0).abs() < 1e-12);
+        assert!((c.restart_hours - 2.0).abs() < 1e-12);
+        assert!((c.overhead_fraction() - 1.0).abs() < 1e-12);
+        assert!((c.expected_lost_hours() - 1.5).abs() < 1e-12);
+    }
+}

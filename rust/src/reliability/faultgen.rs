@@ -1,0 +1,687 @@
+//! Correlated [`FaultPlan`] sampling from the AFR census (ROADMAP item
+//! 4): real fleets fail in *bursts*, not independent link cuts.
+//!
+//! The closed-form availability model (Eq. 3, [`super::montecarlo`])
+//! charges every failure an identical MTTR, which hides two things the
+//! fluid simulator can measure: the *blast radius* of a failure (an LRS
+//! death takes every link on the switch — including its HRS uplinks —
+//! in the same instant; a power-domain trip takes a whole rack) and the
+//! *recovery relation* (APR absorbs a link cut at degraded speed, the
+//! 64+1 backup absorbs an NPU death after an activation pause, an NPU
+//! death *without* a backup aborts the job back to its last
+//! checkpoint). This module samples those correlated groups from the
+//! same [`AfrBreakdown`] census Table 6 is built from, as same-instant
+//! [`FaultPlan`] event groups ([`FaultPlan::group_at`]) over the *real*
+//! constructed topology, so
+//! [`super::montecarlo::measured_class_costs`] can replay them against
+//! the measured training iteration.
+//!
+//! Blast classes:
+//!
+//! * [`BlastClass::SingleLink`] — one cable dies (the uncorrelated
+//!   baseline, and the Eq. 3 limit).
+//! * [`BlastClass::SwitchDeath`] — an LRS/HRS dies: every incident link
+//!   goes down together. At SuperPod scale the uplink LRS come from
+//!   [`SuperPodHandles::rack_uplinks`], so one death severs the rack's
+//!   uplinks to its 8 HRS neighbors at once.
+//! * [`BlastClass::BackplanePartition`] — the backplane-mesh links
+//!   joining one board pair's attach LRS die across all planes (a
+//!   connector/trace domain failure), partitioning the pair's switch
+//!   path while the X/Y NPU mesh survives.
+//! * [`BlastClass::RackPower`] — a power domain trips: every NPU of the
+//!   rack (64+1 *including* the backup, which shares the domain) plus
+//!   every link of its switch planes, as one group. Never absorbable.
+//! * [`BlastClass::NpuDeath`] — one NPU dies. With a rack backup the
+//!   group carries the 64+1 substitution (`NpuDown { backup: Some }`);
+//!   without one it is the abort-to-checkpoint case
+//!   ([`FaultGroup::aborts`]).
+
+use crate::sim::fault::{FaultEvent, FaultPlan, RecoveryConfig};
+use crate::topology::rack::RackHandles;
+use crate::topology::superpod::SuperPodHandles;
+use crate::topology::{LinkId, NodeId, Topology};
+use crate::util::rng::Rng;
+
+use super::afr::AfrBreakdown;
+
+pub const HOURS_PER_YEAR: f64 = 365.0 * 24.0;
+
+/// Number of blast classes (array-indexed by [`BlastClass::index`]).
+pub const NCLASSES: usize = 5;
+
+/// Correlated failure classes with distinct blast radii.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum BlastClass {
+    SingleLink,
+    SwitchDeath,
+    BackplanePartition,
+    RackPower,
+    NpuDeath,
+}
+
+impl BlastClass {
+    pub const ALL: [BlastClass; NCLASSES] = [
+        BlastClass::SingleLink,
+        BlastClass::SwitchDeath,
+        BlastClass::BackplanePartition,
+        BlastClass::RackPower,
+        BlastClass::NpuDeath,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            BlastClass::SingleLink => 0,
+            BlastClass::SwitchDeath => 1,
+            BlastClass::BackplanePartition => 2,
+            BlastClass::RackPower => 3,
+            BlastClass::NpuDeath => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BlastClass::SingleLink => "single-link",
+            BlastClass::SwitchDeath => "switch-death",
+            BlastClass::BackplanePartition => "backplane-partition",
+            BlastClass::RackPower => "rack-power",
+            BlastClass::NpuDeath => "npu-death",
+        }
+    }
+}
+
+/// One sampled correlated failure: a same-instant event group plus the
+/// recovery relation it implies.
+#[derive(Clone, Debug)]
+pub struct FaultGroup {
+    pub class: BlastClass,
+    /// The blast radius, in application order (same-instant fault
+    /// events apply in FaultPlan order).
+    pub events: Vec<FaultEvent>,
+    /// No online mechanism can absorb this group (an NPU death with no
+    /// live backup, a whole power domain): the job aborts to its last
+    /// checkpoint instead of degrading.
+    pub aborts: bool,
+}
+
+impl FaultGroup {
+    /// The group as a one-shot [`FaultPlan`] firing at `t_us`: every
+    /// event shares the timestamp and applies in blast order.
+    pub fn plan_at(&self, t_us: f64, recovery: Option<RecoveryConfig>) -> FaultPlan {
+        let mut plan = FaultPlan::new().group_at(t_us, self.events.clone());
+        if let Some(rc) = recovery {
+            plan = plan.with_recovery(rc);
+        }
+        plan
+    }
+}
+
+/// One rack's power/blast domain.
+#[derive(Clone, Debug)]
+struct RackDomain {
+    npus: Vec<NodeId>,
+    backup: Option<NodeId>,
+    /// Links of the rack's switch planes (attach + mesh + uplinks); the
+    /// NPUs' own links die through their `NpuDown` events.
+    switch_links: Vec<LinkId>,
+}
+
+/// The topology wiring the sampler draws blast radii from. Built once
+/// per cluster from the construction handles — the same node tables the
+/// workload maps use — so every sampled event names a real link/NPU of
+/// the target topology (the property the tests pin).
+#[derive(Clone, Debug)]
+pub struct FaultDomains {
+    /// Every link, for the single-cable class.
+    links: Vec<LinkId>,
+    /// Switch nodes with their incident links (death takes all).
+    switches: Vec<(NodeId, Vec<LinkId>)>,
+    /// Board-pair backplane partitions: the LRS-mesh links joining one
+    /// board pair's attach LRS, across all planes.
+    partitions: Vec<Vec<LinkId>>,
+    /// Per-rack power domains.
+    racks: Vec<RackDomain>,
+}
+
+fn incident_links(t: &Topology, n: NodeId) -> Vec<LinkId> {
+    t.neighbors(n).iter().map(|&(_, l)| l).collect()
+}
+
+fn rack_switch_nodes(h: &RackHandles) -> Vec<NodeId> {
+    h.npu_lrs
+        .iter()
+        .flatten()
+        .chain(h.ir_lrs.iter().flatten())
+        .chain(h.cpu_lrs.iter())
+        .chain(h.bk_lrs.iter())
+        .copied()
+        .collect()
+}
+
+fn rack_partitions(t: &Topology, h: &RackHandles) -> Vec<Vec<LinkId>> {
+    let boards = h.npu_lrs[0].len();
+    let mut parts = Vec::new();
+    for b1 in 0..boards {
+        for b2 in (b1 + 1)..boards {
+            let mut links = Vec::new();
+            for plane in &h.npu_lrs {
+                links.extend(t.links_between(plane[b1], plane[b2]));
+            }
+            if !links.is_empty() {
+                parts.push(links);
+            }
+        }
+    }
+    parts
+}
+
+fn rack_domain(t: &Topology, h: &RackHandles) -> RackDomain {
+    let mut switch_links = Vec::new();
+    for n in rack_switch_nodes(h) {
+        for l in incident_links(t, n) {
+            if !switch_links.contains(&l) {
+                switch_links.push(l);
+            }
+        }
+    }
+    RackDomain {
+        npus: h.npus.clone(),
+        backup: h.backup,
+        switch_links,
+    }
+}
+
+impl FaultDomains {
+    /// Domains of a single UB-Mesh rack ([`RackHandles`]): every LRS is
+    /// a switch-death candidate, every board pair a partition candidate,
+    /// the rack one power domain (which at this scale is the whole
+    /// cluster — a guaranteed abort).
+    pub fn rack(t: &Topology, h: &RackHandles) -> FaultDomains {
+        FaultDomains {
+            links: (0..t.link_count()).map(|i| LinkId(i as u32)).collect(),
+            switches: rack_switch_nodes(h)
+                .into_iter()
+                .map(|n| (n, incident_links(t, n)))
+                .collect(),
+            partitions: rack_partitions(t, h),
+            racks: vec![rack_domain(t, h)],
+        }
+    }
+
+    /// Domains of a full SuperPod ([`SuperPodHandles`]): switch deaths
+    /// cover every rack's LRS planes, the uplink LRS named by
+    /// [`SuperPodHandles::rack_uplinks`] (one death severs the rack's
+    /// HRS uplinks as a group), and the HRS tier itself; each rack is a
+    /// power domain.
+    pub fn superpod(t: &Topology, h: &SuperPodHandles) -> FaultDomains {
+        let mut switches: Vec<(NodeId, Vec<LinkId>)> = Vec::new();
+        let mut partitions = Vec::new();
+        let mut racks = Vec::new();
+        for pod in &h.pods {
+            for r in &pod.racks {
+                switches.extend(
+                    rack_switch_nodes(r)
+                        .into_iter()
+                        .map(|n| (n, incident_links(t, n))),
+                );
+                partitions.extend(rack_partitions(t, r));
+                racks.push(rack_domain(t, r));
+            }
+        }
+        // The uplink LRS are already in each rack's ir_lrs planes;
+        // assert the wiring map agrees rather than double-inserting.
+        for per_rack in &h.rack_uplinks {
+            for (lrs, _) in per_rack {
+                debug_assert!(
+                    switches.iter().any(|(n, _)| n == lrs),
+                    "uplink LRS {lrs} missing from the rack switch census"
+                );
+            }
+        }
+        switches.extend(h.hrs.iter().map(|&n| (n, incident_links(t, n))));
+        FaultDomains {
+            links: (0..t.link_count()).map(|i| LinkId(i as u32)).collect(),
+            switches,
+            partitions,
+            racks,
+        }
+    }
+
+    /// Domains of a flat switched fabric (e.g. the Fig 16-d intra-rack
+    /// Clos, [`crate::topology::variants::VariantHandles`]): single
+    /// links, switch deaths, one power domain, NPU deaths with no 64+1
+    /// backup, no backplane partitions.
+    pub fn flat(t: &Topology, npus: &[NodeId], switches: &[NodeId]) -> FaultDomains {
+        let mut switch_links = Vec::new();
+        for &n in switches {
+            for l in incident_links(t, n) {
+                if !switch_links.contains(&l) {
+                    switch_links.push(l);
+                }
+            }
+        }
+        FaultDomains {
+            links: (0..t.link_count()).map(|i| LinkId(i as u32)).collect(),
+            switches: switches
+                .iter()
+                .map(|&n| (n, incident_links(t, n)))
+                .collect(),
+            partitions: Vec::new(),
+            racks: vec![RackDomain {
+                npus: npus.to_vec(),
+                backup: None,
+                switch_links,
+            }],
+        }
+    }
+
+    pub fn rack_count(&self) -> usize {
+        self.racks.len()
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len()
+    }
+}
+
+/// Arrival-rate knobs not covered by the network component census.
+#[derive(Clone, Debug)]
+pub struct FaultGenConfig {
+    /// NPU fleet AFR (failures/year over the whole fleet), e.g.
+    /// `fleet × 0.05` ([`super::montecarlo::NPU_AFR_PER_UNIT`]).
+    pub npu_fleet_afr: f64,
+    /// Power-domain AFR per rack (failures/year) — PSU/busbar trips,
+    /// which the link/switch census doesn't see.
+    pub rack_power_afr: f64,
+    /// Fraction of backplane-trace failures that manifest as a
+    /// board-pair partition instead of a single-lane cut.
+    pub backplane_partition_share: f64,
+    /// 64+1 backup activation delay scripted into sampled `NpuDown`
+    /// events (µs) — minutes in the paper (§3.3.2); DES class-cost
+    /// measurement shrinks it and charges the pause analytically.
+    pub backup_activation_us: f64,
+}
+
+impl Default for FaultGenConfig {
+    fn default() -> Self {
+        FaultGenConfig {
+            npu_fleet_afr: 0.0,
+            rack_power_afr: 0.02,
+            backplane_partition_share: 0.1,
+            backup_activation_us: 3.0 * 60.0 * 1e6,
+        }
+    }
+}
+
+/// Per-class arrival rates (failures/year): the census apportioned over
+/// blast classes.
+#[derive(Clone, Debug, Default)]
+pub struct ClassRates {
+    pub per_class: [f64; NCLASSES],
+}
+
+impl ClassRates {
+    pub fn of(&self, c: BlastClass) -> f64 {
+        self.per_class[c.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.per_class.iter().sum()
+    }
+
+    pub fn total_per_hour(&self) -> f64 {
+        self.total() / HOURS_PER_YEAR
+    }
+}
+
+/// The correlated-fault sampler: domains + census-derived class rates.
+#[derive(Clone, Debug)]
+pub struct FaultGen {
+    domains: FaultDomains,
+    pub rates: ClassRates,
+    cfg: FaultGenConfig,
+}
+
+impl FaultGen {
+    /// Apportion the census over the blast classes: cables feed
+    /// single-link cuts (a configurable share of them escalating to
+    /// backplane partitions where partition domains exist), LRS + HRS
+    /// feed switch deaths, and the fleet/power knobs of `cfg` feed the
+    /// NPU and rack classes.
+    pub fn new(domains: FaultDomains, afr: &AfrBreakdown, cfg: FaultGenConfig) -> FaultGen {
+        let cables = afr.electrical_cables + afr.optical;
+        let part_share = if domains.partitions.is_empty() {
+            0.0
+        } else {
+            cfg.backplane_partition_share
+        };
+        let switch = if domains.switches.is_empty() {
+            0.0
+        } else {
+            afr.lrs + afr.hrs
+        };
+        let mut per_class = [0.0; NCLASSES];
+        per_class[BlastClass::SingleLink.index()] = cables * (1.0 - part_share);
+        per_class[BlastClass::SwitchDeath.index()] = switch;
+        per_class[BlastClass::BackplanePartition.index()] = cables * part_share;
+        per_class[BlastClass::RackPower.index()] =
+            cfg.rack_power_afr * domains.racks.len() as f64;
+        per_class[BlastClass::NpuDeath.index()] = cfg.npu_fleet_afr;
+        FaultGen {
+            domains,
+            rates: ClassRates { per_class },
+            cfg,
+        }
+    }
+
+    pub fn domains(&self) -> &FaultDomains {
+        &self.domains
+    }
+
+    /// Draw the class of one failure, proportional to the class rates.
+    pub fn sample_class(&self, rng: &mut Rng) -> BlastClass {
+        let total = self.rates.total();
+        assert!(total > 0.0, "sampler has no failure sources");
+        let mut u = rng.f64() * total;
+        for c in BlastClass::ALL {
+            u -= self.rates.of(c);
+            if u <= 0.0 {
+                return c;
+            }
+        }
+        // Float round-off on the last subtraction.
+        BlastClass::NpuDeath
+    }
+
+    /// Sample one correlated blast-radius group of `class`.
+    pub fn sample_group(&self, class: BlastClass, rng: &mut Rng) -> FaultGroup {
+        let d = &self.domains;
+        match class {
+            BlastClass::SingleLink => FaultGroup {
+                class,
+                events: vec![FaultEvent::LinkDown(*rng.choose(&d.links))],
+                aborts: false,
+            },
+            BlastClass::SwitchDeath => {
+                let (_, incident) = rng.choose(&d.switches);
+                FaultGroup {
+                    class,
+                    events: incident.iter().map(|&l| FaultEvent::LinkDown(l)).collect(),
+                    aborts: false,
+                }
+            }
+            BlastClass::BackplanePartition => {
+                let part = rng.choose(&d.partitions);
+                FaultGroup {
+                    class,
+                    events: part.iter().map(|&l| FaultEvent::LinkDown(l)).collect(),
+                    aborts: false,
+                }
+            }
+            BlastClass::RackPower => {
+                let rack = rng.choose(&d.racks);
+                // The backup NPU shares the power domain: no
+                // substitution is possible, every NPU dies plain.
+                let mut events: Vec<FaultEvent> = rack
+                    .npus
+                    .iter()
+                    .chain(rack.backup.iter())
+                    .map(|&npu| FaultEvent::NpuDown { npu, backup: None })
+                    .collect();
+                events.extend(rack.switch_links.iter().map(|&l| FaultEvent::LinkDown(l)));
+                FaultGroup {
+                    class,
+                    events,
+                    aborts: true,
+                }
+            }
+            BlastClass::NpuDeath => {
+                let rack = rng.choose(&d.racks);
+                let npu = *rng.choose(&rack.npus);
+                let backup = rack.backup.map(|b| (b, self.cfg.backup_activation_us));
+                FaultGroup {
+                    class,
+                    aborts: backup.is_none(),
+                    events: vec![FaultEvent::NpuDown { npu, backup }],
+                }
+            }
+        }
+    }
+
+    /// A Poisson mission timeline: `(arrival hour, group)` over
+    /// `horizon_hours`, arrivals at the census total rate, classes and
+    /// blast radii drawn per arrival. Deterministic in the `rng` stream.
+    pub fn sample_mission(&self, horizon_hours: f64, rng: &mut Rng) -> Vec<(f64, FaultGroup)> {
+        let rate = self.rates.total_per_hour();
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate);
+            if t >= horizon_hours {
+                return out;
+            }
+            let class = self.sample_class(rng);
+            out.push((t, self.sample_group(class, rng)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::rack::{ubmesh_rack, RackConfig};
+    use crate::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+    use crate::topology::variants::rack_clos;
+    use crate::topology::NodeKind;
+
+    fn small_superpod() -> SuperPodConfig {
+        let mut cfg = SuperPodConfig::default();
+        cfg.pods = 2;
+        cfg.pod.rows = 2;
+        cfg.pod.cols = 2;
+        cfg
+    }
+
+    fn gen_for(t: &Topology, h: &SuperPodHandles) -> FaultGen {
+        let cfg = FaultGenConfig {
+            npu_fleet_afr: t.npus.len() as f64 * 0.05,
+            ..FaultGenConfig::default()
+        };
+        let afr = AfrBreakdown {
+            electrical_cables: 20.0,
+            optical: 30.0,
+            lrs: 25.0,
+            hrs: 14.0,
+        };
+        FaultGen::new(FaultDomains::superpod(t, h), &afr, cfg)
+    }
+
+    /// Property (satellite): every sampled blast-radius event names a
+    /// live link / NPU of the target topology.
+    #[test]
+    fn sampled_events_name_live_components() {
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        let mut rng = Rng::new(7);
+        for class in BlastClass::ALL {
+            for _ in 0..32 {
+                let g = gen.sample_group(class, &mut rng);
+                assert!(!g.events.is_empty(), "{class:?}: empty blast radius");
+                for ev in &g.events {
+                    match ev {
+                        FaultEvent::LinkDown(l) => {
+                            assert!(
+                                (l.0 as usize) < t.link_count(),
+                                "{class:?} names dead link {l}"
+                            );
+                        }
+                        FaultEvent::NpuDown { npu, backup } => {
+                            let kind = t.node(*npu).kind;
+                            assert!(
+                                kind == NodeKind::Npu || kind == NodeKind::BackupNpu,
+                                "{class:?} kills a non-NPU node {npu}"
+                            );
+                            if let Some((b, act)) = backup {
+                                assert_eq!(t.node(*b).kind, NodeKind::BackupNpu);
+                                assert!(act.is_finite() && *act >= 0.0);
+                            }
+                        }
+                        other => panic!("{class:?} sampled unexpected event {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property (satellite): plans are deterministic in `(seed, trials)`.
+    #[test]
+    fn mission_plans_deterministic_in_seed() {
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        for seed in [1u64, 42, 99] {
+            let a = gen.sample_mission(24.0 * 30.0, &mut Rng::new(seed));
+            let b = gen.sample_mission(24.0 * 30.0, &mut Rng::new(seed));
+            assert_eq!(a.len(), b.len());
+            for ((ta, ga), (tb, gb)) in a.iter().zip(&b) {
+                assert_eq!(ta, tb);
+                assert_eq!(ga.class, gb.class);
+                assert_eq!(ga.aborts, gb.aborts);
+                assert_eq!(format!("{:?}", ga.events), format!("{:?}", gb.events));
+            }
+        }
+        // And different seeds draw different timelines.
+        let a = gen.sample_mission(24.0 * 30.0, &mut Rng::new(1));
+        let b = gen.sample_mission(24.0 * 30.0, &mut Rng::new(2));
+        assert_ne!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "distinct seeds must not collide"
+        );
+    }
+
+    /// Property (satellite): a group's events share one timestamp in the
+    /// emitted plan, in blast order — exercising the same-instant
+    /// FaultPlan-order rule.
+    #[test]
+    fn group_events_share_one_timestamp() {
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        let mut rng = Rng::new(11);
+        for class in [
+            BlastClass::SwitchDeath,
+            BlastClass::BackplanePartition,
+            BlastClass::RackPower,
+        ] {
+            let g = gen.sample_group(class, &mut rng);
+            let plan = g.plan_at(123.5, Some(RecoveryConfig::direct()));
+            assert!(g.events.len() > 1, "{class:?} should be correlated");
+            assert_eq!(plan.len(), g.events.len());
+            assert!(plan.events.iter().all(|(t, _)| *t == 123.5));
+            // Blast order is preserved.
+            for (scripted, sampled) in plan.events.iter().zip(&g.events) {
+                assert_eq!(format!("{:?}", scripted.1), format!("{sampled:?}"));
+            }
+        }
+    }
+
+    /// An uplink-LRS death severs the rack's HRS uplinks as one group
+    /// (the ISSUE's "LRS death expanding to its 8 uplinks").
+    #[test]
+    fn uplink_lrs_death_covers_hrs_links() {
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        let (lrs, targets) = &h.rack_uplinks[0][0];
+        let (_, incident) = gen
+            .domains
+            .switches
+            .iter()
+            .find(|(n, _)| n == lrs)
+            .expect("uplink LRS must be a switch-death candidate");
+        for hrs in targets {
+            for l in t.links_between(*lrs, *hrs) {
+                assert!(
+                    incident.contains(&l),
+                    "uplink {l} to {hrs} missing from the LRS blast radius"
+                );
+            }
+        }
+        assert!(incident.len() >= targets.len());
+    }
+
+    #[test]
+    fn class_rates_follow_census_and_domains() {
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        let r = &gen.rates;
+        // Cables split 90/10 into single links vs partitions.
+        assert!((r.of(BlastClass::SingleLink) - 45.0).abs() < 1e-9);
+        assert!((r.of(BlastClass::BackplanePartition) - 5.0).abs() < 1e-9);
+        assert!((r.of(BlastClass::SwitchDeath) - 39.0).abs() < 1e-9);
+        // 8 racks × 0.02.
+        assert!((r.of(BlastClass::RackPower) - 0.16).abs() < 1e-9);
+        assert!((r.of(BlastClass::NpuDeath) - t.npus.len() as f64 * 0.05).abs() < 1e-9);
+        assert!(r.total_per_hour() > 0.0);
+
+        // Rack-scale domains: one power domain, partitions present.
+        let (rt, rh) = ubmesh_rack(&RackConfig::default());
+        let d = FaultDomains::rack(&rt, &rh);
+        assert_eq!(d.rack_count(), 1);
+        assert_eq!(d.partition_count(), 8 * 7 / 2);
+
+        // Flat (Clos) domains: no partitions — their rate share folds
+        // back into single links.
+        let (ct, ch) = rack_clos();
+        let flat = FaultDomains::flat(&ct, &ch.npus, &ch.hrs);
+        let cg = FaultGen::new(
+            flat,
+            &AfrBreakdown {
+                electrical_cables: 50.0,
+                optical: 0.0,
+                lrs: 0.0,
+                hrs: 10.0,
+            },
+            FaultGenConfig::default(),
+        );
+        assert!((cg.rates.of(BlastClass::SingleLink) - 50.0).abs() < 1e-9);
+        assert_eq!(cg.rates.of(BlastClass::BackplanePartition), 0.0);
+        // No backup in the flat domain: NPU deaths abort.
+        let g = cg.sample_group(BlastClass::NpuDeath, &mut Rng::new(3));
+        assert!(g.aborts);
+    }
+
+    /// Rack power loss takes the 64+1 backup with it — no substitution
+    /// from inside the blast radius.
+    #[test]
+    fn rack_power_kills_backup_too() {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let gen = FaultGen::new(
+            FaultDomains::rack(&t, &h),
+            &AfrBreakdown::default(),
+            FaultGenConfig {
+                npu_fleet_afr: 3.2,
+                ..FaultGenConfig::default()
+            },
+        );
+        let g = gen.sample_group(BlastClass::RackPower, &mut Rng::new(5));
+        assert!(g.aborts);
+        let killed: Vec<NodeId> = g
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::NpuDown { npu, backup } => {
+                    assert!(backup.is_none(), "no substitution inside the domain");
+                    Some(*npu)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(killed.len(), 65, "64 NPUs + the backup");
+        assert!(killed.contains(&h.backup.unwrap()));
+        // …while a plain NPU death in the same rack does substitute.
+        let g = gen.sample_group(BlastClass::NpuDeath, &mut Rng::new(5));
+        assert!(!g.aborts);
+        assert!(matches!(
+            g.events[0],
+            FaultEvent::NpuDown { backup: Some(_), .. }
+        ));
+    }
+}

@@ -4,7 +4,11 @@
 pub mod afr;
 pub mod availability;
 pub mod backup;
+pub mod checkpoint;
+pub mod faultgen;
 pub mod montecarlo;
 
 pub use afr::{afr_of_capex, AfrBreakdown};
 pub use availability::{availability, mtbf_hours};
+pub use checkpoint::CheckpointConfig;
+pub use faultgen::{BlastClass, FaultDomains, FaultGen, FaultGenConfig, FaultGroup};

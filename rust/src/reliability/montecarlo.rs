@@ -216,19 +216,311 @@ pub fn measured_fault_cost(
     }
 }
 
+/// Fleet-typical per-NPU annualized failure rate (5%/year).
+pub const NPU_AFR_PER_UNIT: f64 = 0.05;
+
 impl McConfig {
-    /// The paper's 8K UB-Mesh setting (network AFR from Table 6-style
-    /// census, 75-min MTTR, 3-min backup activation).
-    pub fn ubmesh_8k(afr: &AfrBreakdown, use_backup: bool) -> McConfig {
+    /// A UB-Mesh fleet of `fleet` NPUs: network AFR from a Table
+    /// 6-style census, NPU fleet AFR derived as
+    /// `fleet × per_npu_afr`, 75-min MTTR, 3-min backup activation.
+    pub fn ubmesh(
+        afr: &AfrBreakdown,
+        fleet: usize,
+        per_npu_afr: f64,
+        use_backup: bool,
+    ) -> McConfig {
         McConfig {
             mission_hours: 24.0 * 30.0,
             network_afr: afr.total(),
-            npu_afr: 8192.0 * 0.05, // 5% NPU AFR — fleet-typical
+            npu_afr: fleet as f64 * per_npu_afr,
             network_mttr_hours: 75.0 / 60.0,
             npu_mttr_hours: 75.0 / 60.0,
             backup_activation_hours: 3.0 / 60.0,
             use_backup,
         }
+    }
+
+    /// The paper's 8K setting: [`McConfig::ubmesh`] at 8192 NPUs and
+    /// the fleet-typical [`NPU_AFR_PER_UNIT`].
+    pub fn ubmesh_8k(afr: &AfrBreakdown, use_backup: bool) -> McConfig {
+        McConfig::ubmesh(afr, 8192, NPU_AFR_PER_UNIT, use_backup)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mission-length measured availability: correlated FaultPlans replayed
+// against the measured training iteration (ROADMAP item 4).
+// ---------------------------------------------------------------------------
+
+use super::checkpoint::CheckpointConfig;
+use super::faultgen::{BlastClass, FaultGen, NCLASSES};
+
+/// One measured consequence of a correlated failure group.
+#[derive(Clone, Copy, Debug)]
+pub struct FailureOutcome {
+    /// Cluster-wide pause the group forces before training resumes
+    /// (fault localization, backup activation) — downtime.
+    pub pause_hours: f64,
+    /// Fractional iteration-time degradation while the component is
+    /// awaiting repair (APR rerouted around it): 0.08 means iterations
+    /// run 8% long — effective-time loss, not downtime.
+    pub slowdown: f64,
+    /// The group could not be absorbed online: abort to the last
+    /// checkpoint.
+    pub aborts: bool,
+}
+
+/// Per-class empirical outcome distributions, sampled by replaying
+/// blast-radius groups through the fluid simulator. The mission
+/// Monte-Carlo resamples these instead of re-running the DES per
+/// arrival, which keeps mission trials cheap while every cost in them
+/// is a *measured* quantity.
+#[derive(Clone, Debug, Default)]
+pub struct ClassCosts {
+    pub samples: [Vec<FailureOutcome>; NCLASSES],
+}
+
+impl ClassCosts {
+    /// The Eq. 3 limit: every class, regardless of blast radius, costs
+    /// one flat `mttr_hours` pause and nothing else. Feeding this to
+    /// [`measured_availability`] must reproduce the closed form — the
+    /// differential oracle the CI band pins.
+    pub fn uncorrelated_limit(mttr_hours: f64) -> ClassCosts {
+        let one = vec![FailureOutcome {
+            pause_hours: mttr_hours,
+            slowdown: 0.0,
+            aborts: false,
+        }];
+        ClassCosts {
+            samples: std::array::from_fn(|_| one.clone()),
+        }
+    }
+
+    /// Draw one measured outcome of `class` (uniform over its samples).
+    pub fn sample(&self, class: BlastClass, rng: &mut Rng) -> FailureOutcome {
+        let v = &self.samples[class.index()];
+        assert!(!v.is_empty(), "no measured samples for {class:?}");
+        v[rng.below(v.len() as u64) as usize]
+    }
+
+    pub fn mean_slowdown(&self, class: BlastClass) -> f64 {
+        let v = &self.samples[class.index()];
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().map(|o| o.slowdown).sum::<f64>() / v.len() as f64
+    }
+
+    pub fn abort_fraction(&self, class: BlastClass) -> f64 {
+        let v = &self.samples[class.index()];
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().filter(|o| o.aborts).count() as f64 / v.len() as f64
+    }
+}
+
+/// Knobs for [`measured_class_costs`].
+#[derive(Clone, Debug)]
+pub struct MeasureConfig {
+    /// Fluid-sim replays per blast class.
+    pub trials_per_class: u32,
+    /// Pause charged to an absorbed NPU death (64+1 backup activation,
+    /// §3.3.2 — minutes). Charged analytically; the DES replay itself
+    /// runs the substitution with zero activation so the makespan delta
+    /// isolates the *traffic* cost of the redirected rank.
+    pub npu_swap_pause_hours: f64,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        MeasureConfig {
+            trials_per_class: 8,
+            npu_swap_pause_hours: 3.0 / 60.0,
+        }
+    }
+}
+
+/// Replay sampled blast-radius groups of every active class against
+/// `dag` on `t` and measure each group's consequence: completed runs
+/// yield a fractional slowdown vs the healthy makespan, stalled runs
+/// (no surviving path / dead rank without backup) become aborts, and
+/// groups the sampler already marks unabsorbable
+/// ([`super::faultgen::FaultGroup::aborts`]) are charged as aborts
+/// without a replay. Deterministic in `seed`.
+pub fn measured_class_costs(
+    t: &crate::topology::Topology,
+    gen: &FaultGen,
+    dag: &crate::sim::StageDag,
+    recovery: &crate::sim::RecoveryConfig,
+    mcfg: &MeasureConfig,
+    seed: u64,
+) -> ClassCosts {
+    use crate::sim::fault::FaultEvent;
+    use crate::sim::{self, SimNet};
+
+    let net = SimNet::new(t);
+    let healthy = sim::schedule::run(&net, dag);
+    assert!(
+        healthy.makespan_us.is_finite() && healthy.makespan_us > 0.0,
+        "class-cost measurement needs a completing healthy DAG"
+    );
+
+    let mut costs = ClassCosts::default();
+    let mut rng = Rng::new(seed);
+    for class in BlastClass::ALL {
+        if gen.rates.of(class) == 0.0 {
+            continue;
+        }
+        for _ in 0..mcfg.trials_per_class {
+            let group = gen.sample_group(class, &mut rng);
+            let t_fail = rng.f64() * healthy.makespan_us;
+            let out = if group.aborts {
+                FailureOutcome {
+                    pause_hours: 0.0,
+                    slowdown: 0.0,
+                    aborts: true,
+                }
+            } else {
+                // Run the substitution with zero activation delay: the
+                // pause is charged analytically below, the replay
+                // isolates the redirected traffic's cost.
+                let mut group = group;
+                for ev in &mut group.events {
+                    if let FaultEvent::NpuDown {
+                        backup: Some((_, act)),
+                        ..
+                    } = ev
+                    {
+                        *act = 0.0;
+                    }
+                }
+                let plan = group.plan_at(t_fail, Some(recovery.clone()));
+                let r =
+                    sim::schedule::run_faulted(&net, dag, &sim::SimConfig::default(), &plan);
+                if r.is_stalled() {
+                    FailureOutcome {
+                        pause_hours: 0.0,
+                        slowdown: 0.0,
+                        aborts: true,
+                    }
+                } else {
+                    let pause = if class == BlastClass::NpuDeath {
+                        mcfg.npu_swap_pause_hours
+                    } else {
+                        0.0
+                    };
+                    FailureOutcome {
+                        pause_hours: pause,
+                        slowdown: ((r.makespan_us - healthy.makespan_us)
+                            / healthy.makespan_us)
+                            .max(0.0),
+                        aborts: false,
+                    }
+                }
+            };
+            costs.samples[class.index()].push(out);
+        }
+    }
+    costs
+}
+
+/// Mission horizon + repair economics for [`measured_availability`].
+#[derive(Clone, Debug)]
+pub struct MissionConfig {
+    pub mission_hours: f64,
+    /// Hours a degraded (APR-rerouted) component waits for hot-swap
+    /// repair — the window its measured slowdown applies over.
+    pub repair_hours: f64,
+}
+
+impl Default for MissionConfig {
+    fn default() -> Self {
+        MissionConfig {
+            mission_hours: 24.0 * 30.0,
+            repair_hours: 75.0 / 60.0,
+        }
+    }
+}
+
+/// Measured availability / effective-training-time distributions over
+/// `trials` missions.
+#[derive(Clone, Debug)]
+pub struct MeasuredAvailability {
+    /// Per-mission availability (1 − downtime/mission).
+    pub availability: crate::sim::OnlineStats,
+    /// Per-mission effective training time: uptime net of checkpoint
+    /// overhead, degraded-mode slowdown, and lost work replayed after
+    /// aborts, as a fraction of the mission.
+    pub effective: crate::sim::OnlineStats,
+    pub failures: u64,
+    pub aborts: u64,
+}
+
+/// Mission-length Monte-Carlo over correlated failures with *measured*
+/// per-class costs: arrivals are Poisson at the census total rate,
+/// classes draw by rate share, and each arrival's consequence resamples
+/// the DES-measured [`ClassCosts`]. Downtime counts pauses and restart
+/// readmissions (truncated at the horizon, like [`run_trials`]);
+/// effective time additionally pays the checkpoint-write overhead, the
+/// degraded-mode slowdown over each repair window, and the
+/// half-interval of lost work behind every abort. With
+/// [`ClassCosts::uncorrelated_limit`] and zero checkpoint overhead this
+/// reduces to the Eq. 3 closed form. Deterministic in `(trials, seed)`.
+pub fn measured_availability(
+    gen: &FaultGen,
+    costs: &ClassCosts,
+    ckpt: &CheckpointConfig,
+    mission: &MissionConfig,
+    trials: u32,
+    seed: u64,
+) -> MeasuredAvailability {
+    use crate::sim::OnlineStats;
+
+    let rate = gen.rates.total_per_hour();
+    let mut availability = OnlineStats::default();
+    let mut effective = OnlineStats::default();
+    let mut failures = 0u64;
+    let mut aborts = 0u64;
+    let mut rng = Rng::new(seed);
+    for _ in 0..trials {
+        let mut t = 0.0;
+        let mut down = 0.0;
+        let mut lost = 0.0;
+        while t < mission.mission_hours {
+            t += rng.exp(rate);
+            if t >= mission.mission_hours {
+                break;
+            }
+            failures += 1;
+            let class = gen.sample_class(&mut rng);
+            let o = costs.sample(class, &mut rng);
+            let mut pause = o.pause_hours;
+            if o.aborts {
+                aborts += 1;
+                // Restart readmission pauses the fleet; the work since
+                // the last checkpoint (uniform over the interval) is
+                // redone, costing effective time but not availability.
+                pause += ckpt.restart_hours;
+                lost += rng.f64() * ckpt.interval_hours;
+            } else if o.slowdown > 0.0 {
+                let window = mission.repair_hours.min(mission.mission_hours - t);
+                lost += o.slowdown * window;
+            }
+            down += pause.min(mission.mission_hours - t);
+            t += pause;
+        }
+        let up = mission.mission_hours - down;
+        availability.push(up / mission.mission_hours);
+        effective.push(
+            (up * (1.0 - ckpt.overhead_fraction()) - lost).max(0.0) / mission.mission_hours,
+        );
+    }
+    MeasuredAvailability {
+        availability,
+        effective,
+        failures,
+        aborts,
     }
 }
 
@@ -374,6 +666,118 @@ mod tests {
         let fc2 = measured_fault_cost(4, 8e6, 8, 42, &RecoveryConfig::direct());
         assert_eq!(fc.degradation_us.mean(), fc2.degradation_us.mean());
         assert_eq!(fc.reroutes, fc2.reroutes);
+    }
+
+    /// Satellite: the fleet AFR is parameterized — 4K/32K configs derive
+    /// their own rate instead of inheriting the 8K constant.
+    #[test]
+    fn fleet_parameterized_npu_afr() {
+        let a = afr(88.9);
+        let c4k = McConfig::ubmesh(&a, 4096, 0.08, true);
+        assert_eq!(c4k.npu_afr, 4096.0 * 0.08);
+        let c32k = McConfig::ubmesh(&a, 32768, NPU_AFR_PER_UNIT, true);
+        assert_eq!(c32k.npu_afr, 32768.0 * NPU_AFR_PER_UNIT);
+        let c8k = McConfig::ubmesh_8k(&a, true);
+        assert_eq!(c8k.npu_afr, 8192.0 * NPU_AFR_PER_UNIT);
+        assert_eq!(c8k.network_afr, 88.9);
+    }
+
+    /// Differential oracle: with [`ClassCosts::uncorrelated_limit`]
+    /// (flat MTTR, no aborts, no slowdown) and zero checkpoint
+    /// overhead, [`measured_availability`] must reproduce the Eq. 3
+    /// closed form.
+    #[test]
+    fn uncorrelated_limit_reproduces_eq3() {
+        use super::super::faultgen::{FaultDomains, FaultGen, FaultGenConfig};
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let gen = FaultGen::new(
+            FaultDomains::rack(&t, &h),
+            &afr(88.9),
+            FaultGenConfig {
+                npu_fleet_afr: 0.0,
+                rack_power_afr: 0.0,
+                ..FaultGenConfig::default()
+            },
+        );
+        assert!((gen.rates.total() - 88.9).abs() < 1e-9);
+        let mttr = 75.0 / 60.0;
+        let costs = ClassCosts::uncorrelated_limit(mttr);
+        let ckpt = CheckpointConfig::new(1e9, 0.0, 0.0);
+        let m = measured_availability(&gen, &costs, &ckpt, &MissionConfig::default(), 512, 42);
+        let mtbf = super::super::availability::mtbf_hours(88.9);
+        let expect = super::super::availability::availability(mtbf, mttr);
+        assert!(
+            (m.availability.mean() - expect).abs() < 0.01,
+            "measured {} vs Eq3 {expect}",
+            m.availability.mean()
+        );
+        assert_eq!(m.aborts, 0);
+        // No checkpoint overhead, no slowdown: effective == availability.
+        assert!((m.effective.mean() - m.availability.mean()).abs() < 1e-12);
+        // Deterministic in (trials, seed).
+        let m2 =
+            measured_availability(&gen, &costs, &ckpt, &MissionConfig::default(), 512, 42);
+        assert_eq!(m.availability.mean(), m2.availability.mean());
+        assert_eq!(m.failures, m2.failures);
+    }
+
+    /// Tentpole: correlated blast radii replayed against a live DAG on
+    /// the real rack classify as the architecture promises — single
+    /// links and switch deaths absorbed by APR, NPU death absorbed by
+    /// the 64+1 backup at an activation pause, rack power loss an
+    /// abort.
+    #[test]
+    fn measured_costs_classify_rack_blast_radii() {
+        use super::super::faultgen::{
+            BlastClass, FaultDomains, FaultGen, FaultGenConfig,
+        };
+        use crate::sim::{FlowSpec, RecoveryConfig, Stage, StageDag};
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let gen = FaultGen::new(
+            FaultDomains::rack(&t, &h),
+            &afr(88.9),
+            FaultGenConfig {
+                npu_fleet_afr: 64.0 * NPU_AFR_PER_UNIT,
+                ..FaultGenConfig::default()
+            },
+        );
+        let mut flows = Vec::new();
+        for (a, b) in [(0usize, 63usize), (17, 42)] {
+            let path = t.shortest_path(h.npus[a], h.npus[b], true).unwrap();
+            flows.push(FlowSpec::along(&t, &path, 4e6));
+        }
+        let dag = StageDag::chain(vec![Stage::new("probe").with_flows(flows)]);
+        let mcfg = MeasureConfig {
+            trials_per_class: 3,
+            ..MeasureConfig::default()
+        };
+        let costs =
+            measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), &mcfg, 7);
+        for class in [BlastClass::SingleLink, BlastClass::SwitchDeath] {
+            assert_eq!(
+                costs.abort_fraction(class),
+                0.0,
+                "{class:?} should be APR-absorbed"
+            );
+            assert_eq!(costs.samples[class.index()].len(), 3);
+        }
+        assert_eq!(costs.abort_fraction(BlastClass::RackPower), 1.0);
+        assert_eq!(costs.abort_fraction(BlastClass::NpuDeath), 0.0);
+        for o in &costs.samples[BlastClass::NpuDeath.index()] {
+            assert_eq!(o.pause_hours, mcfg.npu_swap_pause_hours);
+            assert!(o.slowdown >= 0.0 && o.slowdown.is_finite());
+        }
+        // Deterministic in seed.
+        let again =
+            measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), &mcfg, 7);
+        assert_eq!(
+            costs.mean_slowdown(BlastClass::SingleLink),
+            again.mean_slowdown(BlastClass::SingleLink)
+        );
     }
 
     #[test]

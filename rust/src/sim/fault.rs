@@ -216,6 +216,22 @@ impl FaultPlan {
         self
     }
 
+    /// Append a correlated blast-radius *group*: every event lands at the
+    /// same `t_us`, in the given order. Same-instant fault events apply
+    /// in FaultPlan order (not heap tie order), so a group models one
+    /// physical failure with a multi-component blast radius — an LRS
+    /// death takes its uplinks in the same instant, a power domain takes
+    /// a whole rack — with deterministic intra-group semantics (e.g. a
+    /// `NpuDown` backup redirect sees every link of the group already
+    /// dead). [`crate::reliability::faultgen`] is the sampler that
+    /// produces these groups from the AFR census.
+    pub fn group_at(mut self, t_us: f64, events: Vec<FaultEvent>) -> FaultPlan {
+        for ev in events {
+            self = self.at(t_us, ev);
+        }
+        self
+    }
+
     pub fn with_recovery(mut self, recovery: RecoveryConfig) -> FaultPlan {
         self.recovery = Some(recovery);
         self
@@ -223,6 +239,11 @@ impl FaultPlan {
 
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
+    }
+
+    /// Number of scripted events.
+    pub fn len(&self) -> usize {
+        self.events.len()
     }
 }
 
@@ -285,6 +306,35 @@ mod tests {
         let slow = rc_slow.convergence_us(&t, l, &affected);
         let fast = rc_fast.convergence_us(&t, l, &affected);
         assert!(slow >= fast, "hop-by-hop {slow} vs direct {fast}");
+    }
+
+    #[test]
+    fn group_at_shares_one_timestamp_in_plan_order() {
+        let plan = FaultPlan::new()
+            .at(5.0, FaultEvent::LinkDown(LinkId(0)))
+            .group_at(
+                20.0,
+                vec![
+                    FaultEvent::LinkDown(LinkId(1)),
+                    FaultEvent::LinkDown(LinkId(2)),
+                    FaultEvent::NpuDown {
+                        npu: NodeId(0),
+                        backup: None,
+                    },
+                ],
+            );
+        assert_eq!(plan.len(), 4);
+        let group: Vec<_> = plan
+            .events
+            .iter()
+            .filter(|(t, _)| *t == 20.0)
+            .collect();
+        assert_eq!(group.len(), 3);
+        // Plan order is preserved within the group — the same-instant
+        // application rule makes this the execution order.
+        assert!(matches!(group[0].1, FaultEvent::LinkDown(LinkId(1))));
+        assert!(matches!(group[1].1, FaultEvent::LinkDown(LinkId(2))));
+        assert!(matches!(group[2].1, FaultEvent::NpuDown { .. }));
     }
 
     #[test]

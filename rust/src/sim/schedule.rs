@@ -315,6 +315,13 @@ pub struct SimReport {
     /// Flows blocked on dead channels when the event queue drained with
     /// stages outstanding; empty on a completed run.
     pub stalled: Vec<StalledFlow>,
+    /// The instant progress stopped, µs — equals [`SimReport::makespan_us`]
+    /// on a completed run; on a stalled run it is the (finite) event-loop
+    /// time when the queue drained. An NPU death *without* a backup ends
+    /// here: checkpoint/restart accounting
+    /// ([`crate::reliability::checkpoint`]) charges the abort from this
+    /// instant, not from the `+∞` makespan.
+    pub stalled_at_us: f64,
     /// Mid-flight APR reroutes performed (fault plans with recovery).
     pub reroutes: u64,
     /// Fault-plan events executed before the run ended.
@@ -1023,6 +1030,7 @@ pub fn run_faulted(
     }
     SimReport {
         makespan_us: if stalled.is_empty() { now } else { f64::INFINITY },
+        stalled_at_us: now,
         stage_done_us: stage_done,
         byte_hops,
         events,

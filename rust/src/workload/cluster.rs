@@ -67,6 +67,12 @@ enum Fabric {
     /// Fig 16-d: no direct NPU-NPU links, every pair routes through the
     /// 16-HRS single-stage fabric.
     ClosRack { hrs: Vec<NodeId> },
+    /// Fig 16-b: 1D-FM-A — on-board X mesh; cross-board pairs route
+    /// through the 32-LRS full mesh (NPU `i` attaches `lrs[i/2]`).
+    Fm1dA { lrs: Vec<NodeId>, slots: usize },
+    /// Fig 16-c: 1D-FM-B — on-board X mesh; cross-board pairs route
+    /// through the 8-HRS single-stage fabric.
+    Fm1dB { hrs: Vec<NodeId>, slots: usize },
 }
 
 /// Node-id tables + path construction for one cluster (see module docs).
@@ -111,6 +117,38 @@ impl ClusterMap {
         }
     }
 
+    /// The Fig 16-b 1D-FM-A variant
+    /// ([`crate::topology::variants::rack_1dfm_a`]): X mesh on board,
+    /// 32-LRS full mesh across boards.
+    pub fn fm1d_a(h: &VariantHandles) -> ClusterMap {
+        assert_eq!(
+            h.lrs.len() * 2,
+            h.npus.len(),
+            "1D-FM-A attaches two NPUs per cross-board LRS"
+        );
+        ClusterMap {
+            npus: h.npus.clone(),
+            fabric: Fabric::Fm1dA {
+                lrs: h.lrs.clone(),
+                slots: 8,
+            },
+        }
+    }
+
+    /// The Fig 16-c 1D-FM-B variant
+    /// ([`crate::topology::variants::rack_1dfm_b`]): X mesh on board,
+    /// 8-HRS fabric across boards.
+    pub fn fm1d_b(h: &VariantHandles) -> ClusterMap {
+        assert_eq!(h.hrs.len(), 8, "1D-FM-B carries cross-board on 8 HRS");
+        ClusterMap {
+            npus: h.npus.clone(),
+            fabric: Fabric::Fm1dB {
+                hrs: h.hrs.clone(),
+                slots: 8,
+            },
+        }
+    }
+
     fn from_racks(
         racks: &[RackHandles],
         racks_per_pod: usize,
@@ -149,6 +187,33 @@ impl ClusterMap {
         self.npus.len()
     }
 
+    /// Same-board path set shared by the 1D-FM variants: the direct X
+    /// link striped with the board's out-of-group slot relays (the
+    /// Mesh fabric's same-board rule). `None` when the pair crosses
+    /// boards.
+    fn board_x_paths(
+        &self,
+        a: usize,
+        b: usize,
+        slots: usize,
+        within: &[usize],
+    ) -> Option<Vec<Vec<NodeId>>> {
+        let (ba, sa) = (a / slots, a % slots);
+        let (bb, sb) = (b / slots, b % slots);
+        if ba != bb {
+            return None;
+        }
+        let (na, nb) = (self.npus[a], self.npus[b]);
+        let mut paths = vec![vec![na, nb]];
+        for s in 0..slots {
+            let v = ba * slots + s;
+            if s != sa && s != sb && !within.contains(&v) {
+                paths.push(vec![na, self.npus[v], nb]);
+            }
+        }
+        Some(paths)
+    }
+
     /// How many parallel paths [`ClusterMap::pair_paths`] returns for
     /// this pair — lazy-stage flow-count metadata relies on an exact
     /// match. `within` is the communicating group (relays are only
@@ -156,6 +221,18 @@ impl ClusterMap {
     pub fn pair_path_count(&self, a: usize, b: usize, within: &[usize]) -> usize {
         match &self.fabric {
             Fabric::ClosRack { hrs } => hrs.len().min(4),
+            Fabric::Fm1dA { slots, .. } | Fabric::Fm1dB { slots, .. } => {
+                if a / slots == b / slots {
+                    let (ba, sa, sb) = (a / slots, a % slots, b % slots);
+                    1 + (0..*slots)
+                        .filter(|&s| {
+                            s != sa && s != sb && !within.contains(&(ba * slots + s))
+                        })
+                        .count()
+                } else {
+                    4
+                }
+            }
             Fabric::Mesh { boards, slots, .. } => {
                 let rs = boards * slots;
                 if a / rs != b / rs {
@@ -204,6 +281,39 @@ impl ClusterMap {
                 (0..npaths)
                     .map(|k| vec![na, hrs[(base + k * stride) % n], nb])
                     .collect()
+            }
+            Fabric::Fm1dA { lrs, slots } => {
+                if let Some(paths) = self.board_x_paths(a, b, *slots, within) {
+                    return paths;
+                }
+                // Cross-board: the pair's attach LRS over the LRS full
+                // mesh, direct plus three rotation-selected LRS relays
+                // (stride 5 is coprime with 32, so residues never
+                // repeat before the relay quota fills).
+                let (la, lb) = (a / 2, b / 2);
+                let n = lrs.len();
+                let base = a.wrapping_mul(7) + b + sel as usize;
+                let mut paths = vec![vec![na, lrs[la], lrs[lb], nb]];
+                let mut k = 0;
+                while paths.len() < 4 {
+                    let r = (base + k * 5) % n;
+                    k += 1;
+                    if r == la || r == lb {
+                        continue;
+                    }
+                    paths.push(vec![na, lrs[la], lrs[r], lrs[lb], nb]);
+                }
+                paths
+            }
+            Fabric::Fm1dB { hrs, slots } => {
+                if let Some(paths) = self.board_x_paths(a, b, *slots, within) {
+                    return paths;
+                }
+                // Cross-board: four of the eight HRS, balanced rotation
+                // (the Fig 16-d Clos selection at half the radix).
+                let n = hrs.len();
+                let base = a.wrapping_mul(7) + b + sel as usize;
+                (0..4).map(|k| vec![na, hrs[(base + k * 2) % n], nb]).collect()
             }
             Fabric::Mesh {
                 npu_lrs,
@@ -584,6 +694,51 @@ mod tests {
             let mids: std::collections::HashSet<NodeId> =
                 paths.iter().map(|p| p[1]).collect();
             assert_eq!(mids.len(), 4, "four distinct HRS");
+        }
+    }
+
+    #[test]
+    fn fm1d_a_paths_lrs_diverse() {
+        use crate::topology::variants::rack_1dfm_a;
+        let (t, h) = rack_1dfm_a();
+        let map = ClusterMap::fm1d_a(&h);
+        // Same board keeps the X-mesh striping rules.
+        assert_eq!(map.pair_paths(0, 3, 0, &[]).len(), 7);
+        assert_eq!(map.pair_paths(0, 3, 0, &(0..8).collect::<Vec<_>>()).len(), 1);
+        // Cross-board: direct LRS route + 3 relay-LRS routes, all
+        // distinct relays, physical, and count-exact for the lazy
+        // metadata.
+        for (a, b) in [(0, 9), (0, 62), (17, 42), (63, 2)] {
+            for sel in 0..4 {
+                assert_paths_physical(&t, &map, a, b, sel);
+                let paths = map.pair_paths(a, b, sel, &[]);
+                assert_eq!(paths.len(), 4);
+                assert_eq!(paths[0].len(), 4, "direct attach-LRS pair route");
+                let mids: std::collections::HashSet<NodeId> =
+                    paths[1..].iter().map(|p| p[2]).collect();
+                assert_eq!(mids.len(), 3, "three distinct relay LRS");
+                assert!(!mids.contains(&h.lrs[a / 2]));
+                assert!(!mids.contains(&h.lrs[b / 2]));
+            }
+        }
+    }
+
+    #[test]
+    fn fm1d_b_paths_hrs_diverse() {
+        use crate::topology::variants::rack_1dfm_b;
+        let (t, h) = rack_1dfm_b();
+        let map = ClusterMap::fm1d_b(&h);
+        assert_eq!(map.pair_paths(8, 10, 0, &[]).len(), 7);
+        for (a, b) in [(0, 9), (5, 62), (17, 40)] {
+            for sel in 0..4 {
+                assert_paths_physical(&t, &map, a, b, sel);
+                let paths = map.pair_paths(a, b, sel, &[]);
+                assert_eq!(paths.len(), 4);
+                let mids: std::collections::HashSet<NodeId> =
+                    paths.iter().map(|p| p[1]).collect();
+                assert_eq!(mids.len(), 4, "four distinct HRS");
+                assert!(mids.iter().all(|m| h.hrs.contains(m)));
+            }
         }
     }
 

@@ -666,6 +666,68 @@ pub fn iteration_dag(
     dag
 }
 
+/// Checkpoint traffic as real DCN flows: every rank ships (or, with
+/// `to_storage = false`, reads back) its
+/// [`crate::reliability::checkpoint::state_bytes_per_rank`] shard to a
+/// storage node, round-robin over `storage`. All writes share one
+/// stage, so the measured makespan prices the contention on the
+/// rack-to-DCN uplinks — the quantity
+/// [`crate::reliability::checkpoint::CheckpointConfig::with_measured_write`]
+/// wants — instead of an idealized per-rank bandwidth.
+pub fn checkpoint_flow_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    storage: &[NodeId],
+    bytes_per_rank: f64,
+    to_storage: bool,
+) -> StageDag {
+    assert!(!storage.is_empty(), "checkpoint traffic needs storage nodes");
+    let mut flows = Vec::with_capacity(map.npu_count());
+    for (i, &npu) in map.npus().iter().enumerate() {
+        let st = storage[i % storage.len()];
+        let (src, dst) = if to_storage { (npu, st) } else { (st, npu) };
+        let path = t
+            .shortest_path(src, dst, false)
+            .unwrap_or_else(|| panic!("no switch path {src} → {dst} for checkpoint flow"));
+        flows.push(FlowSpec::along(t, &path, bytes_per_rank));
+    }
+    let name = if to_storage { "ckpt-write" } else { "ckpt-read" };
+    StageDag::chain(vec![Stage::new(name).with_flows(flows)])
+}
+
+/// The restart iteration: checkpoint read-back from `storage` plus the
+/// readmission all-gather (every rank re-seeds its DP replicas'
+/// optimizer shards) gating the first training iteration. Built by
+/// prefixing [`iteration_dag`] with the read-back stage and re-rooting:
+/// stages that had no dependencies — the pipeline's first compute units
+/// — now wait on readmission, so the measured makespan is the true
+/// back-to-work latency after an abort.
+pub fn iteration_with_readmission(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+    storage: &[NodeId],
+    bytes_per_rank: f64,
+) -> StageDag {
+    let readback = checkpoint_flow_dag(t, map, storage, bytes_per_rank, false);
+    let iter = iteration_dag(t, map, m, p, order, spec);
+    let mut dag = StageDag::default();
+    let root = dag.push(readback.stages.into_iter().next().unwrap());
+    for mut st in iter.stages {
+        for d in st.deps.iter_mut() {
+            *d += 1;
+        }
+        if st.deps.is_empty() {
+            st.deps.push(root);
+        }
+        dag.push(st);
+    }
+    dag
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

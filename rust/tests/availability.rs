@@ -1,0 +1,265 @@
+//! End-to-end tests of the measured-availability pipeline (ROADMAP item
+//! 4): correlated FaultPlan sampling (`reliability::faultgen`) →
+//! DES-measured per-class costs → mission-length availability
+//! distributions (`reliability::montecarlo`), plus the checkpoint /
+//! restart traffic builders (`workload::step::{checkpoint_flow_dag,
+//! iteration_with_readmission}`) that price the abort economics.
+
+use ubmesh::reliability::checkpoint::CheckpointConfig;
+use ubmesh::reliability::faultgen::{BlastClass, FaultDomains, FaultGen, FaultGenConfig};
+use ubmesh::reliability::montecarlo::{
+    measured_availability, measured_class_costs, ClassCosts, MeasureConfig, MissionConfig,
+};
+use ubmesh::reliability::{availability, AfrBreakdown};
+use ubmesh::sim::{self, FlowSpec, RecoveryConfig, SimNet, Stage, StageDag};
+use ubmesh::topology::dcn::{add_dcn_layer, DcnAttach};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::ublink::LANE_GB_S;
+use ubmesh::topology::{NodeId, Topology};
+use ubmesh::util::rng::Rng;
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::step::{
+    checkpoint_flow_dag, iteration_dag, iteration_with_readmission, IterationSpec, RankOrder,
+};
+use ubmesh::workload::{ClusterMap, ParallelismConfig};
+
+fn rack_with_dcn() -> (Topology, ubmesh::topology::rack::RackHandles, Vec<NodeId>) {
+    let (mut t, h) = ubmesh_rack(&RackConfig::default());
+    let dcn = add_dcn_layer(
+        &mut t,
+        std::slice::from_ref(&h),
+        2,
+        DcnAttach::UbSwitch { lanes_per_rack: 8 },
+    );
+    (t, h, dcn)
+}
+
+fn census() -> AfrBreakdown {
+    AfrBreakdown {
+        electrical_cables: 30.0,
+        optical: 30.0,
+        lrs: 20.0,
+        hrs: 8.9,
+    }
+}
+
+/// Checkpoint writes are real flows: 64 ranks × 10 MB funneled through
+/// the rack's 8 DCN uplink lanes drain at the uplink ceiling (50 GB/s),
+/// not at some per-rank fiction — and the read-back direction costs the
+/// same.
+#[test]
+fn checkpoint_write_prices_dcn_contention() {
+    let (t, h, dcn) = rack_with_dcn();
+    let map = ClusterMap::rack(&h);
+    let bytes = 10e6;
+    let net = SimNet::new(&t);
+    let write = checkpoint_flow_dag(&t, &map, &dcn, bytes, true);
+    assert_eq!(write.total_flow_count(), 64);
+    assert_eq!(write.total_bytes(), 64.0 * bytes);
+    let r = sim::schedule::run(&net, &write);
+    assert!(!r.is_stalled());
+    // 640 MB over 8 × 6.25 GB/s of DCN lanes ≈ 12.8 ms ideal.
+    let ideal_us = 64.0 * bytes / (8.0 * LANE_GB_S * 1e9) * 1e6;
+    assert!(
+        r.makespan_us > 0.95 * ideal_us && r.makespan_us < 2.0 * ideal_us,
+        "write makespan {} vs uplink-bound ideal {}",
+        r.makespan_us,
+        ideal_us
+    );
+    let read = checkpoint_flow_dag(&t, &map, &dcn, bytes, false);
+    let rr = sim::schedule::run(&net, &read);
+    assert!(!rr.is_stalled());
+    assert!((rr.makespan_us - r.makespan_us).abs() < 0.1 * r.makespan_us);
+}
+
+/// The restart iteration is the read-back *gating* the training step:
+/// every original root of the iteration DAG now depends on the
+/// readmission stage, so the measured makespan exceeds a healthy
+/// iteration by at least the read-back time.
+#[test]
+fn readmission_gates_the_first_iteration() {
+    let (t, h, dcn) = rack_with_dcn();
+    let map = ClusterMap::rack(&h);
+    let m = by_name("llama-70b").unwrap();
+    let p = ParallelismConfig {
+        tp: 8,
+        sp: 8,
+        ep: 1,
+        pp: 1,
+        dp: 1,
+        microbatches: 2,
+        tokens_per_microbatch: 8192.0,
+    };
+    let spec = IterationSpec::default();
+    let iter = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &spec);
+    let restart = iteration_with_readmission(
+        &t,
+        &map,
+        &m,
+        &p,
+        RankOrder::TopologyAware,
+        &spec,
+        &dcn,
+        10e6,
+    );
+    assert_eq!(restart.stages.len(), iter.stages.len() + 1);
+    assert!(restart.stages[0].deps.is_empty(), "read-back is the sole root");
+    for (i, st) in restart.stages.iter().enumerate().skip(1) {
+        assert!(!st.deps.is_empty(), "stage {i} lost its root gating");
+        assert!(st.deps.iter().all(|&d| d < i));
+    }
+    // Former roots now wait on stage 0.
+    let orig_roots = iter.stages.iter().filter(|s| s.deps.is_empty()).count();
+    let gated = restart.stages[1..]
+        .iter()
+        .filter(|s| s.deps == vec![0])
+        .count();
+    assert_eq!(gated, orig_roots);
+
+    let net = SimNet::new(&t);
+    let healthy = sim::schedule::run(&net, &iter);
+    let readback = sim::schedule::run(
+        &net,
+        &checkpoint_flow_dag(&t, &map, &dcn, 10e6, false),
+    );
+    let restarted = sim::schedule::run(&net, &restart);
+    assert!(!restarted.is_stalled());
+    assert!(
+        restarted.makespan_us >= healthy.makespan_us + 0.9 * readback.makespan_us,
+        "restart {} vs healthy {} + readback {}",
+        restarted.makespan_us,
+        healthy.makespan_us,
+        readback.makespan_us
+    );
+}
+
+/// The full pipeline on the real rack: sampler → DES class costs →
+/// mission distributions. Sampled single links and switch deaths are
+/// APR-absorbed, rack power loss aborts, and the resulting mission
+/// availability is a proper distribution (deterministic in seed,
+/// effective ≤ availability).
+#[test]
+fn mission_pipeline_end_to_end() {
+    let (t, h, _dcn) = rack_with_dcn();
+    let gen = FaultGen::new(
+        FaultDomains::rack(&t, &h),
+        &census(),
+        FaultGenConfig {
+            npu_fleet_afr: 64.0 * 0.05,
+            ..FaultGenConfig::default()
+        },
+    );
+    // A light probe DAG keeps the replay fast while still exercising
+    // reroute-vs-stall classification on the real fabric.
+    let mut flows = Vec::new();
+    for (a, b) in [(0usize, 63usize), (9, 36)] {
+        let path = t.shortest_path(h.npus[a], h.npus[b], true).unwrap();
+        flows.push(FlowSpec::along(&t, &path, 2e6));
+    }
+    let dag = StageDag::chain(vec![Stage::new("probe").with_flows(flows)]);
+    let mcfg = MeasureConfig {
+        trials_per_class: 3,
+        ..MeasureConfig::default()
+    };
+    let costs = measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), &mcfg, 5);
+    assert_eq!(costs.abort_fraction(BlastClass::SingleLink), 0.0);
+    assert_eq!(costs.abort_fraction(BlastClass::SwitchDeath), 0.0);
+    assert_eq!(costs.abort_fraction(BlastClass::RackPower), 1.0);
+    assert_eq!(costs.abort_fraction(BlastClass::NpuDeath), 0.0, "64+1 absorbs");
+
+    let ck = CheckpointConfig::new(0.5, 1e-4, 0.1);
+    let mission = MissionConfig::default();
+    let r1 = measured_availability(&gen, &costs, &ck, &mission, 64, 9);
+    let r2 = measured_availability(&gen, &costs, &ck, &mission, 64, 9);
+    assert_eq!(r1.availability.mean(), r2.availability.mean());
+    assert_eq!(r1.failures, r2.failures);
+    assert!(r1.availability.mean() > 0.9 && r1.availability.mean() <= 1.0);
+    assert!(r1.effective.mean() <= r1.availability.mean() + 1e-12);
+    assert!(r1.availability.p99() <= 1.0 && r1.availability.p50() >= r1.availability.min());
+    assert!(r1.failures > 0, "the census must produce arrivals over 720 h");
+}
+
+/// Differential oracle at integration scope: the uncorrelated limit
+/// reproduces Eq. 3, and the measured correlated run — where APR
+/// absorbs network failures into slowdown instead of downtime — sits
+/// *above* the closed form, which is exactly the boundary recorded in
+/// the ROADMAP.
+#[test]
+fn oracle_band_and_absorption_boundary() {
+    let (t, h, _dcn) = rack_with_dcn();
+    let net_only = FaultGen::new(
+        FaultDomains::rack(&t, &h),
+        &census(),
+        FaultGenConfig {
+            npu_fleet_afr: 0.0,
+            rack_power_afr: 0.0,
+            ..FaultGenConfig::default()
+        },
+    );
+    let mttr = 75.0 / 60.0;
+    let no_ckpt = CheckpointConfig::new(1e12, 0.0, 0.0);
+    let mission = MissionConfig::default();
+    let oracle = measured_availability(
+        &net_only,
+        &ClassCosts::uncorrelated_limit(mttr),
+        &no_ckpt,
+        &mission,
+        256,
+        17,
+    );
+    let expect = availability(
+        ubmesh::reliability::mtbf_hours(net_only.rates.total()),
+        mttr,
+    );
+    assert!(
+        (oracle.availability.mean() - expect).abs() < 0.01,
+        "oracle {} vs Eq3 {expect}",
+        oracle.availability.mean()
+    );
+
+    // Correlated + absorbed: network failures cost slowdown, not pause.
+    let absorbed = ClassCosts {
+        samples: std::array::from_fn(|_| {
+            vec![ubmesh::reliability::montecarlo::FailureOutcome {
+                pause_hours: 0.0,
+                slowdown: 0.05,
+                aborts: false,
+            }]
+        }),
+    };
+    let measured =
+        measured_availability(&net_only, &absorbed, &no_ckpt, &mission, 256, 17);
+    assert!(
+        measured.availability.mean() > expect,
+        "absorption must beat the flat-MTTR closed form ({} vs {expect})",
+        measured.availability.mean()
+    );
+    // …but not for free: the slowdown shows up in effective time.
+    assert!(measured.effective.mean() < measured.availability.mean());
+}
+
+/// Mission plans stay inside the horizon and inherit the sampler's
+/// determinism through the whole faultgen → FaultPlan path.
+#[test]
+fn mission_plans_replayable_as_fault_plans() {
+    let (t, h, _dcn) = rack_with_dcn();
+    let gen = FaultGen::new(
+        FaultDomains::rack(&t, &h),
+        &census(),
+        FaultGenConfig {
+            npu_fleet_afr: 64.0 * 0.05,
+            ..FaultGenConfig::default()
+        },
+    );
+    let mission = gen.sample_mission(720.0, &mut Rng::new(3));
+    assert!(!mission.is_empty());
+    for (t_h, group) in &mission {
+        assert!(*t_h >= 0.0 && *t_h < 720.0);
+        let plan = group.plan_at(t_h * 3.6e9, Some(RecoveryConfig::direct()));
+        assert_eq!(plan.len(), group.events.len());
+        assert!(plan
+            .events
+            .iter()
+            .all(|(at, _)| (*at - t_h * 3.6e9).abs() < 1e-6));
+    }
+}
