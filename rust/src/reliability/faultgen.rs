@@ -43,6 +43,7 @@ use crate::topology::{LinkId, NodeId, Topology};
 use crate::util::rng::Rng;
 
 use super::afr::AfrBreakdown;
+use super::repair::{CrewQueue, RepairConfig};
 
 pub const HOURS_PER_YEAR: f64 = 365.0 * 24.0;
 
@@ -112,6 +113,64 @@ impl FaultGroup {
             plan = plan.with_recovery(rc);
         }
         plan
+    }
+
+    /// The events that undo this blast radius once its repair completes
+    /// (the ISSUE-8 satellite: mission plans previously left every
+    /// fault down forever). `LinkDown` → `LinkUp`; a capacity rescale →
+    /// a rescale back to the link's configured capacity (`LinkUp` does
+    /// not clear rescales); `NpuDown` → `LinkUp` on every incident link
+    /// (the repaired module returns with its wiring). Deduplicated —
+    /// a rack-power group's switch links overlap its NPUs' attach
+    /// links — so replaying fault + restore is idempotent per link.
+    pub fn restore_events(&self, t: &Topology) -> Vec<FaultEvent> {
+        let mut seen: Vec<LinkId> = Vec::new();
+        let mut out = Vec::new();
+        let mut up = |l: LinkId, out: &mut Vec<FaultEvent>, seen: &mut Vec<LinkId>| {
+            if !seen.contains(&l) {
+                seen.push(l);
+                out.push(FaultEvent::LinkUp(l));
+            }
+        };
+        for ev in &self.events {
+            match ev {
+                FaultEvent::LinkDown(l) => up(*l, &mut out, &mut seen),
+                FaultEvent::LinkUp(_) => {}
+                FaultEvent::LinkCapacity(l, _) => {
+                    if !seen.contains(l) {
+                        seen.push(*l);
+                        out.push(FaultEvent::LinkCapacity(
+                            *l,
+                            t.link(*l).capacity_gb_s(),
+                        ));
+                    }
+                }
+                FaultEvent::NpuDown { npu, .. } => {
+                    for &(_, l) in t.neighbors(*npu) {
+                        up(l, &mut out, &mut seen);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One repair-aware mission entry: a correlated fault group arriving at
+/// `t_hours`, its repair completing at `restore_hours` (crew-queue
+/// scheduled, possibly past the mission horizon — the window a
+/// mission-loop charges is truncated by the caller).
+#[derive(Clone, Debug)]
+pub struct MissionEvent {
+    pub t_hours: f64,
+    pub restore_hours: f64,
+    pub group: FaultGroup,
+}
+
+impl MissionEvent {
+    /// Degraded-window length in hours, truncated at `horizon_hours`.
+    pub fn window_hours(&self, horizon_hours: f64) -> f64 {
+        (self.restore_hours.min(horizon_hours) - self.t_hours).max(0.0)
     }
 }
 
@@ -463,6 +522,68 @@ impl FaultGen {
             out.push((t, self.sample_group(class, rng)));
         }
     }
+
+    /// [`FaultGen::sample_mission`] with repair: each arrival draws a
+    /// repair duration from its class distribution and is scheduled
+    /// onto the finite crew pool, yielding a finite (possibly queued)
+    /// restore time per fault. The arrival stream is identical to
+    /// `sample_mission` for the same rng seed *when every class uses
+    /// [`super::repair::RepairDist::Fixed`]* (fixed repairs consume no
+    /// draws) — the property the uncorrelated-limit oracle test leans
+    /// on.
+    pub fn sample_mission_with_repair(
+        &self,
+        horizon_hours: f64,
+        repair: &RepairConfig,
+        rng: &mut Rng,
+    ) -> Vec<MissionEvent> {
+        let rate = self.rates.total_per_hour();
+        let mut crews = CrewQueue::new(repair.crews);
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate);
+            if t >= horizon_hours {
+                return out;
+            }
+            let class = self.sample_class(rng);
+            let group = self.sample_group(class, rng);
+            let dur = repair.per_class[class.index()].sample(rng);
+            let restore_hours = crews.schedule(t, dur);
+            out.push(MissionEvent {
+                t_hours: t,
+                restore_hours,
+                group,
+            });
+        }
+    }
+
+    /// The whole mission as one replayable [`FaultPlan`]: each group's
+    /// blast events at its arrival instant and its restore events at
+    /// the sampled repair completion, in µs (1 h = 3.6e9 µs). Every
+    /// fault the plan injects is undone by a scripted restore, so a
+    /// replay that runs past the last restore ends on a fully-healthy
+    /// network (the regression property `tests/availability.rs` pins).
+    pub fn mission_fault_plan(
+        &self,
+        t: &Topology,
+        mission: &[MissionEvent],
+        recovery: Option<RecoveryConfig>,
+    ) -> FaultPlan {
+        const US_PER_HOUR: f64 = 3600.0 * 1e6;
+        let mut plan = FaultPlan::new();
+        for me in mission {
+            plan = plan.group_at(me.t_hours * US_PER_HOUR, me.group.events.clone());
+            plan = plan.group_at(
+                me.restore_hours * US_PER_HOUR,
+                me.group.restore_events(t),
+            );
+        }
+        if let Some(rc) = recovery {
+            plan = plan.with_recovery(rc);
+        }
+        plan
+    }
 }
 
 #[cfg(test)]
@@ -646,6 +767,99 @@ mod tests {
         // No backup in the flat domain: NPU deaths abort.
         let g = cg.sample_group(BlastClass::NpuDeath, &mut Rng::new(3));
         assert!(g.aborts);
+    }
+
+    /// Restore events exactly undo the blast radius: every link a group
+    /// takes down comes back up, once, and nothing else is touched.
+    #[test]
+    fn restore_events_cover_the_blast_radius() {
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        let mut rng = Rng::new(31);
+        for class in BlastClass::ALL {
+            for _ in 0..16 {
+                let g = gen.sample_group(class, &mut rng);
+                // The links the group kills (NpuDown = incident links).
+                let mut killed: Vec<LinkId> = Vec::new();
+                for ev in &g.events {
+                    match ev {
+                        FaultEvent::LinkDown(l) => killed.push(*l),
+                        FaultEvent::NpuDown { npu, .. } => {
+                            killed.extend(t.neighbors(*npu).iter().map(|&(_, l)| l));
+                        }
+                        _ => {}
+                    }
+                }
+                killed.sort_unstable();
+                killed.dedup();
+                let mut restored: Vec<LinkId> = g
+                    .restore_events(&t)
+                    .iter()
+                    .map(|ev| match ev {
+                        FaultEvent::LinkUp(l) => *l,
+                        other => panic!("{class:?} restore emitted {other:?}"),
+                    })
+                    .collect();
+                restored.sort_unstable();
+                assert_eq!(killed, restored, "{class:?} restore mismatch");
+            }
+        }
+    }
+
+    /// Repair-aware missions: every fault gets a finite restore time at
+    /// or after its arrival; with a finite crew pool, overlapping
+    /// repairs queue (restore times respect crew capacity); and with
+    /// all-Fixed repairs the arrival stream matches `sample_mission`
+    /// draw-for-draw.
+    #[test]
+    fn mission_with_repair_schedules_finite_restores() {
+        use crate::reliability::repair::{RepairConfig, RepairDist};
+        let (t, h) = ubmesh_superpod(&small_superpod());
+        let gen = gen_for(&t, &h);
+        let horizon = 24.0 * 30.0;
+
+        // Fixed repairs consume no draws: arrivals match sample_mission.
+        let flat = RepairConfig::flat(1.25);
+        let plain = gen.sample_mission(horizon, &mut Rng::new(42));
+        let with_rep =
+            gen.sample_mission_with_repair(horizon, &flat, &mut Rng::new(42));
+        assert_eq!(plain.len(), with_rep.len());
+        for ((ta, ga), me) in plain.iter().zip(&with_rep) {
+            assert_eq!(*ta, me.t_hours);
+            assert_eq!(ga.class, me.group.class);
+            assert!(me.restore_hours >= me.t_hours);
+            assert!(me.restore_hours.is_finite());
+        }
+        // Unbounded crews + fixed duration: restore = arrival + 1.25 h.
+        assert!(with_rep
+            .iter()
+            .all(|me| (me.restore_hours - me.t_hours - 1.25).abs() < 1e-9));
+
+        // Sampled distributions + one crew: durations vary and queued
+        // repairs never overlap (each starts at or after the previous
+        // finish).
+        let field = RepairConfig {
+            per_class: [RepairDist::lognormal_mean(4.0, 0.8); NCLASSES],
+            crews: 1,
+        };
+        let queued =
+            gen.sample_mission_with_repair(horizon, &field, &mut Rng::new(42));
+        assert!(!queued.is_empty());
+        // A single crew serves FIFO: completion times are non-decreasing
+        // and each repair starts no earlier than the previous finish.
+        let mut busy_until = 0.0;
+        for me in &queued {
+            let start = me.t_hours.max(busy_until);
+            assert!(
+                me.restore_hours > start,
+                "repair must take positive time after the crew frees"
+            );
+            busy_until = me.restore_hours;
+        }
+        // Determinism in the seed.
+        let again =
+            gen.sample_mission_with_repair(horizon, &field, &mut Rng::new(42));
+        assert_eq!(format!("{queued:?}"), format!("{again:?}"));
     }
 
     /// Rack power loss takes the 64+1 backup with it — no substitution

@@ -7,8 +7,10 @@ pub mod backup;
 pub mod checkpoint;
 pub mod faultgen;
 pub mod montecarlo;
+pub mod repair;
 
 pub use afr::{afr_of_capex, AfrBreakdown};
 pub use availability::{availability, mtbf_hours};
 pub use checkpoint::CheckpointConfig;
 pub use faultgen::{BlastClass, FaultDomains, FaultGen, FaultGenConfig, FaultGroup};
+pub use repair::{CrewQueue, RepairConfig, RepairDist};

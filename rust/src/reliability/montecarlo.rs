@@ -254,20 +254,73 @@ impl McConfig {
 
 use super::checkpoint::CheckpointConfig;
 use super::faultgen::{BlastClass, FaultGen, NCLASSES};
+use super::repair::{CrewQueue, RepairConfig};
+
+/// How the fleet responds to a failure that kills ranks (PR 8 — the
+/// graceful-degradation policy knob of the ISSUE-8 tentpole).
+///
+/// Network blast radii (links, switches, partitions) are always APR
+/// business; the policy governs what happens when *compute* dies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// No online substitution at all: any dead NPU aborts the job back
+    /// to its last checkpoint (the classic fleet behavior, and the
+    /// Clos baseline's only option before elastic shrink).
+    AbortToCheckpoint,
+    /// The paper's 64+1 backup: a dead NPU with a live rack backup is
+    /// absorbed at an activation pause; without one, abort. The PR 7
+    /// behavior and the default.
+    #[default]
+    BackupSwap,
+    /// Graceful degradation: backup swap where a backup exists, and
+    /// when a blast kills exactly one DP replica's worth of ranks
+    /// (backup-less NPU death, rack power domain at pod scale), the
+    /// job *shrinks* to DP−1 — re-shards the lost replica's optimizer
+    /// state to the survivors, keeps training at measured reduced
+    /// throughput, and rejoins after repair — instead of aborting.
+    ElasticShrink,
+}
 
 /// One measured consequence of a correlated failure group.
-#[derive(Clone, Copy, Debug)]
-pub struct FailureOutcome {
-    /// Cluster-wide pause the group forces before training resumes
-    /// (fault localization, backup activation) — downtime.
-    pub pause_hours: f64,
-    /// Fractional iteration-time degradation while the component is
-    /// awaiting repair (APR rerouted around it): 0.08 means iterations
-    /// run 8% long — effective-time loss, not downtime.
-    pub slowdown: f64,
-    /// The group could not be absorbed online: abort to the last
-    /// checkpoint.
-    pub aborts: bool,
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FailureOutcome {
+    /// Absorbed online (APR reroute / 64+1 backup swap): a cluster-wide
+    /// `pause_hours` before training resumes (fault localization,
+    /// backup activation — downtime), then a fractional iteration-time
+    /// degradation `slowdown` while the component awaits repair (0.08
+    /// means iterations run 8% long — effective-time loss, not
+    /// downtime).
+    Absorbed { pause_hours: f64, slowdown: f64 },
+    /// Not absorbable: abort to the last checkpoint.
+    Abort,
+    /// One DP replica lost; the job degrades to DP−1 under
+    /// [`RecoveryPolicy::ElasticShrink`]. The mission loop prices it
+    /// from [`ShrinkCosts`].
+    Shrink,
+}
+
+impl FailureOutcome {
+    pub fn aborts(&self) -> bool {
+        matches!(self, FailureOutcome::Abort)
+    }
+
+    pub fn shrinks(&self) -> bool {
+        matches!(self, FailureOutcome::Shrink)
+    }
+
+    pub fn pause_hours(&self) -> f64 {
+        match self {
+            FailureOutcome::Absorbed { pause_hours, .. } => *pause_hours,
+            _ => 0.0,
+        }
+    }
+
+    pub fn slowdown(&self) -> f64 {
+        match self {
+            FailureOutcome::Absorbed { slowdown, .. } => *slowdown,
+            _ => 0.0,
+        }
+    }
 }
 
 /// Per-class empirical outcome distributions, sampled by replaying
@@ -286,10 +339,9 @@ impl ClassCosts {
     /// [`measured_availability`] must reproduce the closed form — the
     /// differential oracle the CI band pins.
     pub fn uncorrelated_limit(mttr_hours: f64) -> ClassCosts {
-        let one = vec![FailureOutcome {
+        let one = vec![FailureOutcome::Absorbed {
             pause_hours: mttr_hours,
             slowdown: 0.0,
-            aborts: false,
         }];
         ClassCosts {
             samples: std::array::from_fn(|_| one.clone()),
@@ -308,7 +360,7 @@ impl ClassCosts {
         if v.is_empty() {
             return 0.0;
         }
-        v.iter().map(|o| o.slowdown).sum::<f64>() / v.len() as f64
+        v.iter().map(|o| o.slowdown()).sum::<f64>() / v.len() as f64
     }
 
     pub fn abort_fraction(&self, class: BlastClass) -> f64 {
@@ -316,7 +368,71 @@ impl ClassCosts {
         if v.is_empty() {
             return 0.0;
         }
-        v.iter().filter(|o| o.aborts).count() as f64 / v.len() as f64
+        v.iter().filter(|o| o.aborts()).count() as f64 / v.len() as f64
+    }
+
+    pub fn shrink_fraction(&self, class: BlastClass) -> f64 {
+        let v = &self.samples[class.index()];
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().filter(|o| o.shrinks()).count() as f64 / v.len() as f64
+    }
+}
+
+/// Which DP replica each workload NPU belongs to — the lookup
+/// [`measured_class_costs`] consults to decide whether a blast radius is
+/// *shrinkable*: does it kill ranks of exactly one replica?
+///
+/// Built from the same `(ParallelismConfig, RankOrder)` that laid the
+/// ranks out, so the notion of "replica" matches the iteration DAG's
+/// group structure exactly. Nodes outside the workload (backup NPUs,
+/// switches) are simply absent and never veto a shrink.
+#[derive(Clone, Debug)]
+pub struct ReplicaMap {
+    by_node: std::collections::HashMap<crate::topology::NodeId, usize>,
+    pub dp: usize,
+}
+
+impl ReplicaMap {
+    pub fn new(
+        map: &crate::workload::ClusterMap,
+        p: &crate::workload::ParallelismConfig,
+        order: crate::workload::RankOrder,
+    ) -> ReplicaMap {
+        assert_eq!(p.npus(), map.npu_count(), "parallelism does not fill the map");
+        let mut by_node = std::collections::HashMap::new();
+        for dp_i in 0..p.dp {
+            for pp_i in 0..p.pp {
+                for sp_i in 0..p.sp {
+                    for tp_i in 0..p.tp {
+                        let phys = order.phys(tp_i, sp_i, pp_i, dp_i, p);
+                        by_node.insert(map.npus()[phys], dp_i);
+                    }
+                }
+            }
+        }
+        ReplicaMap { by_node, dp: p.dp }
+    }
+
+    /// `Some(replica)` iff every dead workload NPU belongs to the same
+    /// single replica (and at least one does), with DP ≥ 2 so survivors
+    /// exist. Blasts spanning replicas (rack power over the whole
+    /// arena) or killing nothing in the workload return `None`.
+    pub fn lone_replica(&self, dead: &[crate::topology::NodeId]) -> Option<usize> {
+        if self.dp < 2 {
+            return None;
+        }
+        let mut hit: Option<usize> = None;
+        for n in dead {
+            match (self.by_node.get(n), hit) {
+                (None, _) => {}
+                (Some(&r), None) => hit = Some(r),
+                (Some(&r), Some(prev)) if r == prev => {}
+                _ => return None,
+            }
+        }
+        hit
     }
 }
 
@@ -330,6 +446,8 @@ pub struct MeasureConfig {
     /// runs the substitution with zero activation so the makespan delta
     /// isolates the *traffic* cost of the redirected rank.
     pub npu_swap_pause_hours: f64,
+    /// What happens when ranks die (see [`RecoveryPolicy`]).
+    pub policy: RecoveryPolicy,
 }
 
 impl Default for MeasureConfig {
@@ -337,22 +455,29 @@ impl Default for MeasureConfig {
         MeasureConfig {
             trials_per_class: 8,
             npu_swap_pause_hours: 3.0 / 60.0,
+            policy: RecoveryPolicy::BackupSwap,
         }
     }
 }
 
 /// Replay sampled blast-radius groups of every active class against
-/// `dag` on `t` and measure each group's consequence: completed runs
-/// yield a fractional slowdown vs the healthy makespan, stalled runs
-/// (no surviving path / dead rank without backup) become aborts, and
-/// groups the sampler already marks unabsorbable
-/// ([`super::faultgen::FaultGroup::aborts`]) are charged as aborts
-/// without a replay. Deterministic in `seed`.
+/// `dag` on `t` and measure each group's consequence under
+/// [`MeasureConfig::policy`]: completed runs yield a fractional
+/// slowdown vs the healthy makespan; runs that cannot continue (no
+/// surviving path / dead rank the policy cannot substitute) become
+/// aborts — or [`FailureOutcome::Shrink`] under
+/// [`RecoveryPolicy::ElasticShrink`] when the dead ranks all belong to
+/// one DP replica of `replica`. Groups the sampler already marks
+/// unabsorbable ([`super::faultgen::FaultGroup::aborts`]) skip the
+/// replay. Deterministic in `seed`; the rng stream is policy-
+/// independent (classification never draws), so policies see identical
+/// sampled blast radii.
 pub fn measured_class_costs(
     t: &crate::topology::Topology,
     gen: &FaultGen,
     dag: &crate::sim::StageDag,
     recovery: &crate::sim::RecoveryConfig,
+    replica: Option<&ReplicaMap>,
     mcfg: &MeasureConfig,
     seed: u64,
 ) -> ClassCosts {
@@ -366,6 +491,18 @@ pub fn measured_class_costs(
         "class-cost measurement needs a completing healthy DAG"
     );
 
+    // Abort — unless the policy is elastic and the kill is confined to
+    // a single DP replica, in which case the job shrinks around it.
+    let dead_end = |dead: &[crate::topology::NodeId]| {
+        let shrinkable = mcfg.policy == RecoveryPolicy::ElasticShrink
+            && replica.map_or(false, |m| m.lone_replica(dead).is_some());
+        if shrinkable {
+            FailureOutcome::Shrink
+        } else {
+            FailureOutcome::Abort
+        }
+    };
+
     let mut costs = ClassCosts::default();
     let mut rng = Rng::new(seed);
     for class in BlastClass::ALL {
@@ -375,12 +512,18 @@ pub fn measured_class_costs(
         for _ in 0..mcfg.trials_per_class {
             let group = gen.sample_group(class, &mut rng);
             let t_fail = rng.f64() * healthy.makespan_us;
-            let out = if group.aborts {
-                FailureOutcome {
-                    pause_hours: 0.0,
-                    slowdown: 0.0,
-                    aborts: true,
-                }
+            let dead: Vec<crate::topology::NodeId> = group
+                .events
+                .iter()
+                .filter_map(|ev| match ev {
+                    FaultEvent::NpuDown { npu, .. } => Some(*npu),
+                    _ => None,
+                })
+                .collect();
+            let no_swap =
+                mcfg.policy == RecoveryPolicy::AbortToCheckpoint && !dead.is_empty();
+            let out = if group.aborts || no_swap {
+                dead_end(&dead)
             } else {
                 // Run the substitution with zero activation delay: the
                 // pause is charged analytically below, the replay
@@ -399,23 +542,18 @@ pub fn measured_class_costs(
                 let r =
                     sim::schedule::run_faulted(&net, dag, &sim::SimConfig::default(), &plan);
                 if r.is_stalled() {
-                    FailureOutcome {
-                        pause_hours: 0.0,
-                        slowdown: 0.0,
-                        aborts: true,
-                    }
+                    dead_end(&dead)
                 } else {
                     let pause = if class == BlastClass::NpuDeath {
                         mcfg.npu_swap_pause_hours
                     } else {
                         0.0
                     };
-                    FailureOutcome {
+                    FailureOutcome::Absorbed {
                         pause_hours: pause,
                         slowdown: ((r.makespan_us - healthy.makespan_us)
                             / healthy.makespan_us)
                             .max(0.0),
-                        aborts: false,
                     }
                 }
             };
@@ -425,20 +563,48 @@ pub fn measured_class_costs(
     costs
 }
 
+/// Measured price of the elastic-shrink path (see
+/// [`measured_shrink_costs`]): what one Shrink outcome costs the
+/// mission loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ShrinkCosts {
+    /// Training pause while survivors re-shard the lost replica's
+    /// optimizer state (hours) — downtime.
+    pub reshard_hours: f64,
+    /// Fraction of healthy *throughput* lost while running at DP−1 on
+    /// the same global batch: `1 − T_healthy / T_shrunk`. Distinct from
+    /// the Absorbed `slowdown` convention (iteration stretch) because a
+    /// shrink's stretch is large — charging `slowdown × window` there
+    /// would overcount the loss.
+    pub degraded_loss: f64,
+    /// Training pause while the repaired replica reads its shard back
+    /// and rejoins (hours) — downtime at repair completion.
+    pub rejoin_hours: f64,
+}
+
 /// Mission horizon + repair economics for [`measured_availability`].
 #[derive(Clone, Debug)]
 pub struct MissionConfig {
     pub mission_hours: f64,
-    /// Hours a degraded (APR-rerouted) component waits for hot-swap
-    /// repair — the window its measured slowdown applies over.
-    pub repair_hours: f64,
+    /// Per-class repair-time distributions and crew capacity: a
+    /// degraded (APR-rerouted or shrunken) window lasts until the
+    /// arrival's sampled repair completes, queued behind earlier
+    /// repairs when crews saturate. The default —
+    /// [`RepairConfig::flat`] at the 75-minute fleet MTTR — reproduces
+    /// the fixed-window behavior draw-for-draw (Fixed sampling consumes
+    /// no rng).
+    pub repair: RepairConfig,
+    /// Prices for [`FailureOutcome::Shrink`]; must be `Some` if the
+    /// sampled [`ClassCosts`] contain any shrink outcomes.
+    pub shrink: Option<ShrinkCosts>,
 }
 
 impl Default for MissionConfig {
     fn default() -> Self {
         MissionConfig {
             mission_hours: 24.0 * 30.0,
-            repair_hours: 75.0 / 60.0,
+            repair: RepairConfig::flat(75.0 / 60.0),
+            shrink: None,
         }
     }
 }
@@ -455,6 +621,8 @@ pub struct MeasuredAvailability {
     pub effective: crate::sim::OnlineStats,
     pub failures: u64,
     pub aborts: u64,
+    /// Arrivals absorbed by shrinking to DP−1 instead of aborting.
+    pub shrinks: u64,
 }
 
 /// Mission-length Monte-Carlo over correlated failures with *measured*
@@ -463,10 +631,13 @@ pub struct MeasuredAvailability {
 /// the DES-measured [`ClassCosts`]. Downtime counts pauses and restart
 /// readmissions (truncated at the horizon, like [`run_trials`]);
 /// effective time additionally pays the checkpoint-write overhead, the
-/// degraded-mode slowdown over each repair window, and the
-/// half-interval of lost work behind every abort. With
-/// [`ClassCosts::uncorrelated_limit`] and zero checkpoint overhead this
-/// reduces to the Eq. 3 closed form. Deterministic in `(trials, seed)`.
+/// degraded-mode loss over each *sampled* repair window
+/// ([`MissionConfig::repair`], queued on the finite crew pool), and the
+/// half-interval of lost work behind every abort. Shrink outcomes pause
+/// for re-shard + rejoin and run degraded until their repair completes.
+/// With [`ClassCosts::uncorrelated_limit`] and zero checkpoint overhead
+/// this reduces to the Eq. 3 closed form. Deterministic in
+/// `(trials, seed)`.
 pub fn measured_availability(
     gen: &FaultGen,
     costs: &ClassCosts,
@@ -482,11 +653,23 @@ pub fn measured_availability(
     let mut effective = OnlineStats::default();
     let mut failures = 0u64;
     let mut aborts = 0u64;
+    let mut shrinks = 0u64;
     let mut rng = Rng::new(seed);
     for _ in 0..trials {
         let mut t = 0.0;
         let mut down = 0.0;
         let mut lost = 0.0;
+        let mut crews = CrewQueue::new(mission.repair.crews);
+        // Degraded window of one arrival: from now until its sampled
+        // repair completes (crew-queued), truncated at the horizon.
+        let repair_window = |t: f64,
+                             class: BlastClass,
+                             crews: &mut CrewQueue,
+                             rng: &mut Rng| {
+            let dur = mission.repair.per_class[class.index()].sample(rng);
+            let done = crews.schedule(t, dur);
+            (done.min(mission.mission_hours) - t).max(0.0)
+        };
         while t < mission.mission_hours {
             t += rng.exp(rate);
             if t >= mission.mission_hours {
@@ -495,17 +678,35 @@ pub fn measured_availability(
             failures += 1;
             let class = gen.sample_class(&mut rng);
             let o = costs.sample(class, &mut rng);
-            let mut pause = o.pause_hours;
-            if o.aborts {
-                aborts += 1;
-                // Restart readmission pauses the fleet; the work since
-                // the last checkpoint (uniform over the interval) is
-                // redone, costing effective time but not availability.
-                pause += ckpt.restart_hours;
-                lost += rng.f64() * ckpt.interval_hours;
-            } else if o.slowdown > 0.0 {
-                let window = mission.repair_hours.min(mission.mission_hours - t);
-                lost += o.slowdown * window;
+            let pause;
+            match o {
+                FailureOutcome::Abort => {
+                    aborts += 1;
+                    // Restart readmission pauses the fleet; the work
+                    // since the last checkpoint (uniform over the
+                    // interval) is redone, costing effective time but
+                    // not availability.
+                    pause = ckpt.restart_hours;
+                    lost += rng.f64() * ckpt.interval_hours;
+                }
+                FailureOutcome::Absorbed {
+                    pause_hours,
+                    slowdown,
+                } => {
+                    pause = pause_hours;
+                    if slowdown > 0.0 {
+                        lost += slowdown * repair_window(t, class, &mut crews, &mut rng);
+                    }
+                }
+                FailureOutcome::Shrink => {
+                    shrinks += 1;
+                    let sc = mission
+                        .shrink
+                        .expect("sampled a Shrink outcome but MissionConfig::shrink is None");
+                    lost +=
+                        sc.degraded_loss * repair_window(t, class, &mut crews, &mut rng);
+                    pause = sc.reshard_hours + sc.rejoin_hours;
+                }
             }
             down += pause.min(mission.mission_hours - t);
             t += pause;
@@ -521,6 +722,56 @@ pub fn measured_availability(
         effective,
         failures,
         aborts,
+        shrinks,
+    }
+}
+
+/// Run the four shrink-path DAGs on `t` and price the elastic policy:
+/// the re-shard and rejoin pauses are flow-DAG makespans over real
+/// HRS/DCN paths, and the degraded loss compares the healthy iteration
+/// against [`crate::workload::step::shrunk_iteration_dag`] at DP−1 on
+/// the same global batch. Replica 0 stands in for the dead replica —
+/// the layout is replica-symmetric.
+pub fn measured_shrink_costs(
+    t: &crate::topology::Topology,
+    map: &std::sync::Arc<crate::workload::ClusterMap>,
+    m: &crate::workload::ModelConfig,
+    p: &crate::workload::ParallelismConfig,
+    order: crate::workload::RankOrder,
+    spec: &crate::workload::IterationSpec,
+    storage: &[crate::topology::NodeId],
+    state_bytes_per_rank: f64,
+) -> ShrinkCosts {
+    use crate::sim::{self, SimNet};
+    use crate::workload::step;
+
+    const US_PER_HOUR: f64 = 3600.0 * 1e6;
+    let net = SimNet::new(t);
+    let hours = |dag: &crate::sim::StageDag| {
+        let r = sim::schedule::run(&net, dag);
+        assert!(
+            r.makespan_us.is_finite() && r.makespan_us > 0.0,
+            "shrink-path DAG must complete"
+        );
+        r.makespan_us / US_PER_HOUR
+    };
+
+    let healthy = hours(&step::iteration_dag(t, map, m, p, order, spec));
+    let shrunk = hours(&step::shrunk_iteration_dag(t, map, m, p, order, spec, 0));
+    let reshard = hours(&step::elastic_reshard_dag(
+        t,
+        map,
+        p,
+        order,
+        0,
+        storage,
+        state_bytes_per_rank,
+    ));
+    let rejoin = hours(&step::rejoin_catchup_dag(t, map, p, order, 0, state_bytes_per_rank));
+    ShrinkCosts {
+        reshard_hours: reshard,
+        degraded_loss: (1.0 - healthy / shrunk).max(0.0),
+        rejoin_hours: rejoin,
     }
 }
 
@@ -756,7 +1007,7 @@ mod tests {
             ..MeasureConfig::default()
         };
         let costs =
-            measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), &mcfg, 7);
+            measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), None, &mcfg, 7);
         for class in [BlastClass::SingleLink, BlastClass::SwitchDeath] {
             assert_eq!(
                 costs.abort_fraction(class),
@@ -768,16 +1019,241 @@ mod tests {
         assert_eq!(costs.abort_fraction(BlastClass::RackPower), 1.0);
         assert_eq!(costs.abort_fraction(BlastClass::NpuDeath), 0.0);
         for o in &costs.samples[BlastClass::NpuDeath.index()] {
-            assert_eq!(o.pause_hours, mcfg.npu_swap_pause_hours);
-            assert!(o.slowdown >= 0.0 && o.slowdown.is_finite());
+            assert_eq!(o.pause_hours(), mcfg.npu_swap_pause_hours);
+            assert!(o.slowdown() >= 0.0 && o.slowdown().is_finite());
         }
         // Deterministic in seed.
         let again =
-            measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), &mcfg, 7);
+            measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), None, &mcfg, 7);
         assert_eq!(
             costs.mean_slowdown(BlastClass::SingleLink),
             again.mean_slowdown(BlastClass::SingleLink)
         );
+    }
+
+    fn dp4_config() -> crate::workload::ParallelismConfig {
+        crate::workload::ParallelismConfig {
+            tp: 8,
+            sp: 2,
+            ep: 1,
+            pp: 1,
+            dp: 4,
+            microbatches: 2,
+            tokens_per_microbatch: 2048.0,
+        }
+    }
+
+    /// The replica map reproduces the DAG builders' layout: kills inside
+    /// one DP replica are shrinkable, kills spanning replicas (or
+    /// touching nothing in the workload) are not.
+    #[test]
+    fn replica_map_classifies_lone_replica_kills() {
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+        use crate::workload::{ClusterMap, RankOrder};
+        let (_t, h) = ubmesh_rack(&RackConfig::default());
+        let map = ClusterMap::rack(&h);
+        let p = dp4_config();
+        let order = RankOrder::TopologyAware;
+        let rm = ReplicaMap::new(&map, &p, order);
+        assert_eq!(rm.dp, 4);
+        let at = |tp, sp, dp| map.npus()[order.phys(tp, sp, 0, dp, &p)];
+        assert_eq!(rm.lone_replica(&[at(3, 1, 2)]), Some(2));
+        assert_eq!(rm.lone_replica(&[at(3, 1, 2), at(0, 0, 2)]), Some(2));
+        assert_eq!(rm.lone_replica(&[at(3, 1, 2), at(0, 0, 0)]), None);
+        // Non-workload nodes (the 64+1 backup) neither veto nor count.
+        let bk = h.backup.unwrap();
+        assert_eq!(rm.lone_replica(&[bk]), None);
+        assert_eq!(rm.lone_replica(&[bk, at(5, 0, 1)]), Some(1));
+        assert_eq!(rm.lone_replica(&[]), None);
+    }
+
+    /// Tentpole classification: on the backup-less Clos arena an NPU
+    /// death aborts under BackupSwap but *shrinks* under ElasticShrink
+    /// (one rank = one replica's loss), while rack power — killing every
+    /// replica — stays an abort under every policy. On the UB rack,
+    /// AbortToCheckpoint refuses the 64+1 substitution it would
+    /// otherwise use.
+    #[test]
+    fn policy_decides_between_shrink_and_abort() {
+        use super::super::faultgen::{FaultDomains, FaultGen, FaultGenConfig};
+        use crate::sim::{FlowSpec, RecoveryConfig, Stage, StageDag};
+        use crate::topology::variants::rack_clos;
+        use crate::workload::{ClusterMap, RankOrder};
+
+        let (t, h) = rack_clos();
+        let map = ClusterMap::clos_rack(&h);
+        let p = dp4_config();
+        let rm = ReplicaMap::new(&map, &p, RankOrder::TopologyAware);
+        let gen = FaultGen::new(
+            FaultDomains::flat(&t, &h.npus, &h.hrs),
+            &afr(88.9),
+            FaultGenConfig {
+                npu_fleet_afr: 64.0 * NPU_AFR_PER_UNIT,
+                ..FaultGenConfig::default()
+            },
+        );
+        let mut flows = Vec::new();
+        for (a, b) in [(0usize, 63usize), (17, 42)] {
+            let path = t.shortest_path(h.npus[a], h.npus[b], true).unwrap();
+            flows.push(FlowSpec::along(&t, &path, 4e6));
+        }
+        let dag = StageDag::chain(vec![Stage::new("probe").with_flows(flows)]);
+
+        let swap = MeasureConfig {
+            trials_per_class: 3,
+            ..MeasureConfig::default()
+        };
+        let elastic = MeasureConfig {
+            policy: RecoveryPolicy::ElasticShrink,
+            ..swap.clone()
+        };
+        let cb = measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), None, &swap, 7);
+        assert_eq!(cb.abort_fraction(BlastClass::NpuDeath), 1.0, "no backup on Clos");
+        assert_eq!(cb.shrink_fraction(BlastClass::NpuDeath), 0.0);
+
+        let ce = measured_class_costs(
+            &t,
+            &gen,
+            &dag,
+            &RecoveryConfig::direct(),
+            Some(&rm),
+            &elastic,
+            7,
+        );
+        assert_eq!(ce.shrink_fraction(BlastClass::NpuDeath), 1.0);
+        assert_eq!(ce.abort_fraction(BlastClass::NpuDeath), 0.0);
+        assert_eq!(ce.abort_fraction(BlastClass::RackPower), 1.0, "kills all replicas");
+        assert_eq!(ce.shrink_fraction(BlastClass::RackPower), 0.0);
+        // Network classes are untouched by the policy.
+        assert_eq!(
+            ce.mean_slowdown(BlastClass::SingleLink),
+            cb.mean_slowdown(BlastClass::SingleLink)
+        );
+
+        // AbortToCheckpoint on the UB rack: the backup exists but the
+        // policy refuses it.
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+        let (ut, uh) = ubmesh_rack(&RackConfig::default());
+        let ugen = FaultGen::new(
+            FaultDomains::rack(&ut, &uh),
+            &afr(88.9),
+            FaultGenConfig {
+                npu_fleet_afr: 64.0 * NPU_AFR_PER_UNIT,
+                ..FaultGenConfig::default()
+            },
+        );
+        let mut uflows = Vec::new();
+        for (a, b) in [(0usize, 63usize), (17, 42)] {
+            let path = ut.shortest_path(uh.npus[a], uh.npus[b], true).unwrap();
+            uflows.push(FlowSpec::along(&ut, &path, 4e6));
+        }
+        let udag = StageDag::chain(vec![Stage::new("probe").with_flows(uflows)]);
+        let strict = MeasureConfig {
+            policy: RecoveryPolicy::AbortToCheckpoint,
+            ..swap
+        };
+        let cu =
+            measured_class_costs(&ut, &ugen, &udag, &RecoveryConfig::direct(), None, &strict, 7);
+        assert_eq!(cu.abort_fraction(BlastClass::NpuDeath), 1.0);
+        assert_eq!(cu.abort_fraction(BlastClass::SingleLink), 0.0, "APR still absorbs");
+    }
+
+    /// Mission economics of the shrink path: identical arrival streams,
+    /// but every rank-killing failure shrinks instead of aborting — the
+    /// shrink run counts shrinks (not aborts) and delivers more
+    /// effective training time than restart + lost work.
+    #[test]
+    fn shrink_missions_beat_abort_missions() {
+        use super::super::faultgen::{FaultDomains, FaultGen, FaultGenConfig};
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let gen = FaultGen::new(
+            FaultDomains::rack(&t, &h),
+            &afr(200.0),
+            FaultGenConfig {
+                npu_fleet_afr: 0.0,
+                rack_power_afr: 0.0,
+                ..FaultGenConfig::default()
+            },
+        );
+        let all = |o: FailureOutcome| ClassCosts {
+            samples: std::array::from_fn(|_| vec![o]),
+        };
+        let ck = CheckpointConfig::new(1.0, 0.01, 0.25);
+        let mission = MissionConfig {
+            shrink: Some(ShrinkCosts {
+                reshard_hours: 0.05,
+                degraded_loss: 0.25,
+                rejoin_hours: 0.05,
+            }),
+            ..MissionConfig::default()
+        };
+        let ab = measured_availability(&gen, &all(FailureOutcome::Abort), &ck, &mission, 128, 77);
+        let sh =
+            measured_availability(&gen, &all(FailureOutcome::Shrink), &ck, &mission, 128, 77);
+        assert!(ab.failures > 0);
+        assert_eq!(ab.aborts, ab.failures);
+        assert_eq!(ab.shrinks, 0);
+        assert_eq!(sh.shrinks, sh.failures);
+        assert_eq!(sh.aborts, 0);
+        assert!(
+            sh.effective.mean() > ab.effective.mean(),
+            "shrink {} must beat abort {}",
+            sh.effective.mean(),
+            ab.effective.mean()
+        );
+        assert!(sh.availability.mean() > ab.availability.mean());
+    }
+
+    /// Repair-aware windows: with one crew and long repairs, overlapping
+    /// degraded windows queue and cost more effective time than an
+    /// unbounded crew pool — and the run stays deterministic.
+    #[test]
+    fn crew_saturation_extends_degraded_windows() {
+        use super::super::faultgen::{FaultDomains, FaultGen, FaultGenConfig};
+        use super::super::repair::RepairDist;
+        use crate::topology::rack::{ubmesh_rack, RackConfig};
+
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let gen = FaultGen::new(
+            FaultDomains::rack(&t, &h),
+            &afr(4000.0), // ~0.46 arrivals/hour: 10 h repairs overlap
+            FaultGenConfig {
+                npu_fleet_afr: 0.0,
+                rack_power_afr: 0.0,
+                ..FaultGenConfig::default()
+            },
+        );
+        let costs = ClassCosts {
+            samples: std::array::from_fn(|_| {
+                vec![FailureOutcome::Absorbed {
+                    pause_hours: 0.0,
+                    slowdown: 0.5,
+                }]
+            }),
+        };
+        let ck = CheckpointConfig::new(1e12, 0.0, 0.0);
+        let mc = |crews: usize| MissionConfig {
+            mission_hours: 100.0,
+            repair: RepairConfig {
+                per_class: [RepairDist::Fixed(10.0); NCLASSES],
+                crews,
+            },
+            shrink: None,
+        };
+        let pool = measured_availability(&gen, &costs, &ck, &mc(0), 64, 5);
+        let lone = measured_availability(&gen, &costs, &ck, &mc(1), 64, 5);
+        // Fixed repairs draw nothing: both runs see identical arrivals.
+        assert_eq!(pool.failures, lone.failures);
+        assert!(
+            lone.effective.mean() < pool.effective.mean(),
+            "queued repairs must cost more: {} vs {}",
+            lone.effective.mean(),
+            pool.effective.mean()
+        );
+        let again = measured_availability(&gen, &costs, &ck, &mc(1), 64, 5);
+        assert_eq!(lone.effective.mean(), again.effective.mean());
     }
 
     #[test]

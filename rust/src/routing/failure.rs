@@ -108,6 +108,55 @@ pub fn direct_notification_convergence_us(
     m.detect_us + m.process_us + worst * m.wire_us + m.update_us
 }
 
+/// Flap-damping state: which links went down recently.
+///
+/// A marginal connector produces a *train* of short down/up cycles, and
+/// every `LinkUp` makes the flapping link look attractive to shortest-
+/// path reselection again — so each cycle cuts the flows that just
+/// rerouted onto it, churning reroutes at the flap frequency. The
+/// damper records each link's last down instant; path selection asks
+/// [`FlapDamper::suppressed`] and avoids links still inside the
+/// hysteresis window. Suppression is advisory (callers fall back to the
+/// undamped path when avoidance disconnects the pair), mirroring BGP
+/// route-flap damping's penalty window rather than hard withdrawal.
+#[derive(Clone, Debug, Default)]
+pub struct FlapDamper {
+    last_down_us: std::collections::HashMap<LinkId, f64>,
+}
+
+impl FlapDamper {
+    pub fn new() -> FlapDamper {
+        FlapDamper::default()
+    }
+
+    /// Record that `l` went down (or lost all capacity) at `now_us`.
+    pub fn record_down(&mut self, l: LinkId, now_us: f64) {
+        let e = self.last_down_us.entry(l).or_insert(f64::NEG_INFINITY);
+        *e = e.max(now_us);
+    }
+
+    /// True if `l` went down within the trailing `hysteresis_us` window
+    /// ending at `now_us`. A zero window suppresses nothing.
+    pub fn suppressed(&self, l: LinkId, now_us: f64, hysteresis_us: f64) -> bool {
+        if hysteresis_us <= 0.0 {
+            return false;
+        }
+        match self.last_down_us.get(&l) {
+            Some(&t) => now_us - t < hysteresis_us,
+            None => false,
+        }
+    }
+
+    /// Number of links with a recorded down event.
+    pub fn len(&self) -> usize {
+        self.last_down_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.last_down_us.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +253,25 @@ mod tests {
             let affected = affected_sources(&t, &paths, failed);
             assert_eq!(affected, vec![a, b], "failed {failed:?}");
         }
+    }
+
+    #[test]
+    fn flap_damper_window_semantics() {
+        let mut d = FlapDamper::new();
+        assert!(d.is_empty());
+        d.record_down(LinkId(3), 100.0);
+        assert_eq!(d.len(), 1);
+        // Inside the window: suppressed; at/after expiry: clear.
+        assert!(d.suppressed(LinkId(3), 150.0, 100.0));
+        assert!(!d.suppressed(LinkId(3), 200.0, 100.0));
+        // Unknown links and zero windows never suppress.
+        assert!(!d.suppressed(LinkId(4), 150.0, 100.0));
+        assert!(!d.suppressed(LinkId(3), 150.0, 0.0));
+        // A later down refreshes the window monotonically.
+        d.record_down(LinkId(3), 400.0);
+        d.record_down(LinkId(3), 300.0); // stale record must not rewind
+        assert!(d.suppressed(LinkId(3), 450.0, 100.0));
+        assert!(!d.suppressed(LinkId(3), 501.0, 100.0));
     }
 
     #[test]

@@ -102,6 +102,16 @@ pub struct RecoveryConfig {
     /// `hrs_reroute` always routes through the switch tier and uses an
     /// NPU-routable BFS as last resort).
     pub npu_routable: bool,
+    /// Flap-damping hysteresis window (µs). When > 0, reroute path
+    /// selection first tries to avoid links that went down within the
+    /// last `flap_hysteresis_us` — a link that just flapped is likely
+    /// to flap again, and rerouting onto it churns the whole fan-out
+    /// every cycle ([`crate::routing::failure::FlapDamper`]). Damping
+    /// is *advisory*: if no path avoids recently-flapped links, the
+    /// undamped selection is used, so damping can never disconnect a
+    /// pair the raw policy could route. `0.0` (the default) disables
+    /// it.
+    pub flap_hysteresis_us: f64,
 }
 
 impl Default for RecoveryConfig {
@@ -111,6 +121,7 @@ impl Default for RecoveryConfig {
             mode: NotifyMode::Direct,
             reroute: Reroute::Shortest,
             npu_routable: true,
+            flap_hysteresis_us: 0.0,
         }
     }
 }
@@ -129,6 +140,16 @@ impl RecoveryConfig {
 
     pub fn with_reroute(mut self, reroute: Reroute) -> RecoveryConfig {
         self.reroute = reroute;
+        self
+    }
+
+    /// Enable flap damping with the given hysteresis window (µs).
+    pub fn with_flap_damping(mut self, hysteresis_us: f64) -> RecoveryConfig {
+        assert!(
+            hysteresis_us.is_finite() && hysteresis_us >= 0.0,
+            "hysteresis {hysteresis_us}"
+        );
+        self.flap_hysteresis_us = hysteresis_us;
         self
     }
 
@@ -228,6 +249,33 @@ impl FaultPlan {
     pub fn group_at(mut self, t_us: f64, events: Vec<FaultEvent>) -> FaultPlan {
         for ev in events {
             self = self.at(t_us, ev);
+        }
+        self
+    }
+
+    /// Append a flap train on `link`: `cycles` down/up pairs starting
+    /// at `t0_us`, each cycle `down_us` dead then `up_us` alive — the
+    /// marginal-connector fault shape (a cable that bounces instead of
+    /// dying clean). The final cycle's `LinkUp` is still emitted, so a
+    /// replayed train always ends restored.
+    pub fn flap_train(
+        mut self,
+        link: LinkId,
+        t0_us: f64,
+        cycles: usize,
+        down_us: f64,
+        up_us: f64,
+    ) -> FaultPlan {
+        assert!(cycles > 0, "empty flap train");
+        assert!(
+            down_us > 0.0 && up_us > 0.0,
+            "degenerate flap cycle ({down_us}, {up_us})"
+        );
+        let mut t = t0_us;
+        for _ in 0..cycles {
+            self = self.at(t, FaultEvent::LinkDown(link));
+            self = self.at(t + down_us, FaultEvent::LinkUp(link));
+            t += down_us + up_us;
         }
         self
     }
@@ -335,6 +383,32 @@ mod tests {
         assert!(matches!(group[0].1, FaultEvent::LinkDown(LinkId(1))));
         assert!(matches!(group[1].1, FaultEvent::LinkDown(LinkId(2))));
         assert!(matches!(group[2].1, FaultEvent::NpuDown { .. }));
+    }
+
+    #[test]
+    fn flap_train_alternates_and_ends_up() {
+        let plan = FaultPlan::new().flap_train(LinkId(7), 10.0, 3, 5.0, 20.0);
+        assert_eq!(plan.len(), 6);
+        for (i, (t, ev)) in plan.events.iter().enumerate() {
+            let cycle = (i / 2) as f64;
+            if i % 2 == 0 {
+                assert!(matches!(ev, FaultEvent::LinkDown(LinkId(7))));
+                assert_eq!(*t, 10.0 + cycle * 25.0);
+            } else {
+                assert!(matches!(ev, FaultEvent::LinkUp(LinkId(7))));
+                assert_eq!(*t, 15.0 + cycle * 25.0);
+            }
+        }
+        // The train ends restored.
+        assert!(matches!(plan.events.last().unwrap().1, FaultEvent::LinkUp(_)));
+    }
+
+    #[test]
+    fn flap_damping_knob_round_trips() {
+        let rc = RecoveryConfig::direct();
+        assert_eq!(rc.flap_hysteresis_us, 0.0);
+        let rc = rc.with_flap_damping(500.0);
+        assert_eq!(rc.flap_hysteresis_us, 500.0);
     }
 
     #[test]

@@ -64,6 +64,7 @@
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
+use crate::routing::failure::FlapDamper;
 use crate::topology::{Channel, LinkId, NodeId, Topology};
 
 use super::fair::{FlowId, Rates, ResolveStrategy, SolverStats};
@@ -512,6 +513,10 @@ pub fn run_faulted(
     // dead-NPU → (backup, activation time) substitutions.
     let mut table_at: HashMap<LinkId, f64> = HashMap::new();
     let mut npu_backup: HashMap<NodeId, (NodeId, f64)> = HashMap::new();
+    // Flap-damping memory: every link-down instant is recorded; reroute
+    // path selection consults it only when the plan's RecoveryConfig
+    // enables a hysteresis window.
+    let mut flap = FlapDamper::new();
     let mut reroutes_done = 0u64;
     let mut fault_count = 0u64;
     for (k, ev) in plan.events.iter().enumerate() {
@@ -795,6 +800,7 @@ pub fn run_faulted(
                 match &plan.events[k].1 {
                     FaultEvent::LinkDown(l) => {
                         net.to_mut().fail_link(*l);
+                        flap.record_down(*l, now);
                         changed.push(*l);
                     }
                     FaultEvent::LinkUp(l) => {
@@ -803,12 +809,16 @@ pub fn run_faulted(
                     }
                     FaultEvent::LinkCapacity(l, gb_s) => {
                         net.to_mut().set_link_capacity(*l, *gb_s);
+                        if *gb_s == 0.0 {
+                            flap.record_down(*l, now);
+                        }
                         changed.push(*l);
                     }
                     FaultEvent::NpuDown { npu, backup } => {
                         for &(_, l) in topo.neighbors(*npu) {
                             if !net.is_down(l) {
                                 net.to_mut().fail_link(l);
+                                flap.record_down(l, now);
                                 changed.push(l);
                             }
                         }
@@ -951,7 +961,24 @@ pub fn run_faulted(
                     reroutes_done += 1;
                     continue;
                 }
-                let Some(path) = rc.reroute.path(topo, &net, src, dst, rc.npu_routable) else {
+                // Flap damping: when a hysteresis window is configured,
+                // first try a path avoiding links that went down inside
+                // the window (a recently-flapped link is likely to flap
+                // again and cut this flow right back). The avoidance
+                // pass is the built-in live-link BFS; the configured
+                // policy (Shortest or Custom) remains the authoritative
+                // fallback, so damping never blocks a pair the raw
+                // policy could route.
+                let hyst = rc.flap_hysteresis_us;
+                let picked = if hyst > 0.0 {
+                    topo.shortest_path_filtered(src, dst, rc.npu_routable, |l| {
+                        net.is_usable(l) && !flap.suppressed(l, now, hyst)
+                    })
+                    .or_else(|| rc.reroute.path(topo, &net, src, dst, rc.npu_routable))
+                } else {
+                    rc.reroute.path(topo, &net, src, dst, rc.npu_routable)
+                };
+                let Some(path) = picked else {
                     // Disconnected: leave the flow blocked — a later
                     // LinkUp may revive it, else the stall report names
                     // it.

@@ -99,6 +99,38 @@ impl Rng {
         -u.ln() / lambda
     }
 
+    /// Standard normal variate via Box–Muller. Draws two uniforms and
+    /// returns one deviate per call (the sibling is discarded — keeping
+    /// the generator stateless is worth the extra draw: replay /
+    /// common-random-numbers code can reason about draw counts without
+    /// a hidden cache flag).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64(); // (0,1] so ln() is finite
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Lognormal variate: `exp(mu + sigma·Z)`. Mean is
+    /// `exp(mu + sigma²/2)`, not `exp(mu)` — callers parameterizing by
+    /// a target mean must invert that (see `reliability::repair`).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        assert!(sigma >= 0.0, "negative sigma {sigma}");
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Weibull variate with shape `k` and scale `lambda`, by inverting
+    /// the CDF: `lambda·(−ln(1−U))^(1/k)`. Shape 1 degenerates to
+    /// `exp(1/lambda)`; shape >1 gives the wear-out hump used for
+    /// hardware repair times.
+    #[inline]
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "weibull({shape}, {scale})");
+        let u = 1.0 - self.f64(); // (0,1]
+        scale * (-u.ln()).powf(1.0 / shape)
+    }
+
     /// Pick a uniformly random element of `xs`.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.range(0, xs.len())]
@@ -173,6 +205,69 @@ mod tests {
         // And the generator state is untouched (no draw consumed).
         let mut fresh = Rng::new(13);
         assert_eq!(r.next_u64(), fresh.next_u64());
+    }
+
+    /// Sample mean/variance helpers for the distribution tests.
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_matches_standard_moments() {
+        let mut r = Rng::new(17);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_matches_closed_form_moments() {
+        // mean = exp(mu + s²/2), var = (exp(s²) − 1)·exp(2mu + s²).
+        let (mu, sigma) = (0.3_f64, 0.5_f64);
+        let mut r = Rng::new(19);
+        let xs: Vec<f64> = (0..400_000).map(|_| r.lognormal(mu, sigma)).collect();
+        let (mean, var) = moments(&xs);
+        let want_mean = (mu + sigma * sigma / 2.0).exp();
+        let want_var =
+            ((sigma * sigma).exp() - 1.0) * (2.0 * mu + sigma * sigma).exp();
+        assert!((mean - want_mean).abs() / want_mean < 0.01, "mean={mean}");
+        assert!((var - want_var).abs() / want_var < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn weibull_matches_closed_form_moments() {
+        // Shapes with radical-only moments (no gamma-function eval):
+        // k=1 → exponential (mean λ, var λ²);
+        // k=2 → Rayleigh-like (mean λ√π/2, var λ²(1 − π/4)).
+        let mut r = Rng::new(23);
+        let lam = 3.0_f64;
+
+        let xs: Vec<f64> = (0..300_000).map(|_| r.weibull(1.0, lam)).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - lam).abs() / lam < 0.01, "k=1 mean={mean}");
+        assert!((var - lam * lam).abs() / (lam * lam) < 0.05, "k=1 var={var}");
+
+        let xs: Vec<f64> = (0..300_000).map(|_| r.weibull(2.0, lam)).collect();
+        let (mean, var) = moments(&xs);
+        let want_mean = lam * std::f64::consts::PI.sqrt() / 2.0;
+        let want_var = lam * lam * (1.0 - std::f64::consts::PI / 4.0);
+        assert!((mean - want_mean).abs() / want_mean < 0.01, "k=2 mean={mean}");
+        assert!((var - want_var).abs() / want_var < 0.05, "k=2 var={var}");
+    }
+
+    #[test]
+    fn samplers_are_positive_and_finite() {
+        let mut r = Rng::new(29);
+        for _ in 0..10_000 {
+            let l = r.lognormal(-1.0, 1.5);
+            let w = r.weibull(0.7, 2.0);
+            assert!(l > 0.0 && l.is_finite());
+            assert!(w > 0.0 && w.is_finite());
+        }
     }
 
     #[test]

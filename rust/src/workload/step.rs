@@ -187,7 +187,17 @@ pub enum RankOrder {
 
 impl RankOrder {
     /// Physical NPU index of logical coordinates (tp, sp, pp, dp).
-    fn phys(self, tp_i: usize, sp_i: usize, pp_i: usize, dp_i: usize, p: &ParallelismConfig) -> usize {
+    /// Public so reliability-side consumers (e.g. the DP-replica map
+    /// behind elastic shrink) can reproduce the exact layout the DAG
+    /// builders use.
+    pub fn phys(
+        self,
+        tp_i: usize,
+        sp_i: usize,
+        pp_i: usize,
+        dp_i: usize,
+        p: &ParallelismConfig,
+    ) -> usize {
         match self {
             RankOrder::TopologyAware => {
                 tp_i + p.tp * (sp_i + p.sp * (pp_i + p.pp * dp_i))
@@ -290,6 +300,20 @@ fn groups_for(p: &ParallelismConfig, order: RankOrder, spec: GroupSpec) -> Vec<V
     groups
 }
 
+/// Physical NPU indices of DP replica `dp_i` — the ranks an elastic
+/// shrink removes from every collective group.
+fn replica_members(p: &ParallelismConfig, order: RankOrder, dp_i: usize) -> Vec<usize> {
+    let mut members = Vec::with_capacity(p.tp * p.sp * p.pp);
+    for pp_i in 0..p.pp {
+        for sp_i in 0..p.sp {
+            for tp_i in 0..p.tp {
+                members.push(order.phys(tp_i, sp_i, pp_i, dp_i, p));
+            }
+        }
+    }
+    members
+}
+
 /// Deterministic per-pair path-rotation seed (balanced, not hashed —
 /// see the [`ClusterMap`] module docs for why that matters).
 #[inline]
@@ -351,17 +375,25 @@ fn exchange_count(map: &ClusterMap, groups: &[Vec<usize>]) -> usize {
         .sum()
 }
 
-/// Lazily-materialized exchange stage for one group family.
+/// Lazily-materialized exchange stage for one group family. `dead`
+/// lists physical NPU indices removed from every group (an elastic
+/// shrink's lost replica); groups left with < 2 members fall out.
 fn exchange_stage(
     name: String,
     map: &Arc<ClusterMap>,
     p: ParallelismConfig,
     order: RankOrder,
     spec: GroupSpec,
+    dead: &[usize],
     per_rank_bytes: f64,
     extra_alpha_us: f64,
 ) -> Stage {
-    let groups = groups_for(&p, order, spec);
+    let mut groups = groups_for(&p, order, spec);
+    if !dead.is_empty() {
+        for g in &mut groups {
+            g.retain(|i| !dead.contains(i));
+        }
+    }
     let count = exchange_count(map, &groups);
     let bytes: f64 = groups
         .iter()
@@ -384,6 +416,7 @@ fn p2p_stage(
     order: RankOrder,
     s_from: usize,
     s_to: usize,
+    dead: &[usize],
     bytes_per_pair: f64,
 ) -> Stage {
     let mut pairs = Vec::with_capacity(p.tp * p.sp * p.dp);
@@ -396,6 +429,11 @@ fn p2p_stage(
                 ));
             }
         }
+    }
+    if !dead.is_empty() {
+        // Both endpoints share a dp index, so a dead replica drops the
+        // whole pair.
+        pairs.retain(|&(a, b)| !dead.contains(&a) && !dead.contains(&b));
     }
     let count: usize = pairs
         .iter()
@@ -472,6 +510,43 @@ pub fn iteration_dag(
     order: RankOrder,
     spec: &IterationSpec,
 ) -> StageDag {
+    build_iteration_dag(t, map, m, p, order, spec, None)
+}
+
+/// The iteration after an **elastic DP shrink**: replica `dead_dp`'s
+/// ranks are gone, every collective group drops them (DP groups shrink
+/// to dp−1 members; TP/SP/EP groups and PP sends of the dead replica
+/// vanish), and — the job keeping its global batch — the survivors'
+/// per-microbatch tokens scale by `dp/(dp−1)`, so compute and the
+/// token-proportional TP/SP/EP volumes grow accordingly. The measured
+/// makespan against [`iteration_dag`]'s prices the degraded-mode
+/// throughput of [`crate::reliability::montecarlo::RecoveryPolicy::ElasticShrink`].
+pub fn shrunk_iteration_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+    dead_dp: usize,
+) -> StageDag {
+    assert!(
+        p.dp >= 2 && dead_dp < p.dp,
+        "shrink needs a surviving replica: dp={}, dead={dead_dp}",
+        p.dp
+    );
+    build_iteration_dag(t, map, m, p, order, spec, Some(dead_dp))
+}
+
+fn build_iteration_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+    shrink: Option<usize>,
+) -> StageDag {
     assert_eq!(
         p.npus(),
         map.npu_count(),
@@ -483,7 +558,19 @@ pub fn iteration_dag(
     );
     assert!(p.microbatches >= 1, "iteration needs at least one microbatch");
     debug_assert!(map.npus().iter().all(|n| n.idx() < t.node_count()));
-    let traffic = analyze(m, p);
+    // Geometry (groups, pairs, phys layout) always comes from `p`; the
+    // shrunken iteration re-prices volumes and compute from a config
+    // whose per-microbatch tokens absorb the dead replica's share of
+    // the (constant) global batch.
+    let dead: Vec<usize> = match shrink {
+        Some(d) => replica_members(p, order, d),
+        None => Vec::new(),
+    };
+    let mut pv = *p;
+    if shrink.is_some() {
+        pv.tokens_per_microbatch *= p.dp as f64 / (p.dp - 1) as f64;
+    }
+    let traffic = analyze(m, &pv);
     let mbn = p.microbatches;
     let pp = p.pp;
     let slice = pp as f64;
@@ -519,7 +606,7 @@ pub fn iteration_dag(
 
     // Per-unit compute: forward one third, backward two thirds of the
     // per-microbatch slice (standard fwd:bwd FLOP ratio).
-    let tokens_per_replica = p.tokens_per_microbatch * mbn as f64;
+    let tokens_per_replica = pv.tokens_per_microbatch * mbn as f64;
     let flops_per_npu =
         m.flops_per_token() * tokens_per_replica / (p.tp * p.sp * p.pp) as f64;
     let comp_total = flops_per_npu / (NPU_PEAK_TFLOPS * 1e12 * COMPUTE_EFFICIENCY) * 1e6;
@@ -528,7 +615,7 @@ pub fn iteration_dag(
 
     // Boundary activation: the microbatch act, sequence-sharded (sp)
     // and striped across the tp ranks of the boundary.
-    let act = p.tokens_per_microbatch * m.hidden as f64 * super::traffic::BYTES_PER_ACT;
+    let act = pv.tokens_per_microbatch * m.hidden as f64 * super::traffic::BYTES_PER_ACT;
     let p2p_bytes = act / (p.sp * p.tp) as f64;
 
     let map = Arc::new(map.clone());
@@ -563,6 +650,7 @@ pub fn iteration_dag(
                         *p,
                         order,
                         gspec,
+                        &dead,
                         v,
                         ea,
                     )
@@ -582,6 +670,7 @@ pub fn iteration_dag(
                             order,
                             s,
                             s + 1,
+                            &dead,
                             p2p_bytes,
                         )
                         .after(vec![last]),
@@ -599,6 +688,7 @@ pub fn iteration_dag(
                             order,
                             s,
                             s - 1,
+                            &dead,
                             p2p_bytes,
                         )
                         .after(vec![last]),
@@ -644,6 +734,7 @@ pub fn iteration_dag(
                     *p,
                     order,
                     GroupSpec::Dp,
+                    &dead,
                     v_dp / 2.0,
                     ea,
                 )
@@ -656,6 +747,7 @@ pub fn iteration_dag(
                     *p,
                     order,
                     GroupSpec::Dp,
+                    &dead,
                     v_dp / 2.0,
                     ea,
                 )
@@ -726,6 +818,121 @@ pub fn iteration_with_readmission(
         dag.push(st);
     }
     dag
+}
+
+/// The **re-shard** flow DAG an elastic shrink runs before resuming at
+/// DP−1: the lost replica's optimizer-state shard is redistributed to
+/// the survivors over real paths.
+///
+/// Stage `reshard-fetch`: at every (tp, sp, pp) position each of the
+/// dp−1 surviving ranks pulls a `1/(dp−1)` slice of the dead rank's
+/// `state_bytes_per_rank` — from `storage` over the switch/DCN path
+/// (the checkpointed shard, round-robin like [`checkpoint_flow_dag`])
+/// when storage nodes exist, otherwise from the next surviving DP peer
+/// (a redundant in-memory copy) over the pair's APR paths. Peer mode
+/// with dp = 2 has a lone survivor and no peer to pull from — it
+/// produces no wire traffic (the local redundant copy).
+///
+/// Stage `reshard-shuffle`: the survivors re-balance shard boundaries
+/// among themselves — a `state_bytes_per_rank / dp` exchange over each
+/// surviving DP group (the fraction of boundaries that moved).
+pub fn elastic_reshard_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    dead_dp: usize,
+    storage: &[NodeId],
+    state_bytes_per_rank: f64,
+) -> StageDag {
+    assert!(
+        p.dp >= 2 && dead_dp < p.dp,
+        "re-shard needs a surviving replica: dp={}, dead={dead_dp}",
+        p.dp
+    );
+    assert_eq!(p.npus(), map.npu_count(), "parallelism does not fill the map");
+    let slice = state_bytes_per_rank / (p.dp - 1) as f64;
+    let mut fetch = Vec::new();
+    let mut nth = 0usize;
+    for pp_i in 0..p.pp {
+        for sp_i in 0..p.sp {
+            for tp_i in 0..p.tp {
+                for d in (0..p.dp).filter(|&d| d != dead_dp) {
+                    let dst_i = order.phys(tp_i, sp_i, pp_i, d, p);
+                    if storage.is_empty() {
+                        let mut dn = (d + 1) % p.dp;
+                        if dn == dead_dp {
+                            dn = (dn + 1) % p.dp;
+                        }
+                        if dn == d {
+                            continue; // dp = 2: no surviving peer
+                        }
+                        let src_i = order.phys(tp_i, sp_i, pp_i, dn, p);
+                        let paths =
+                            map.pair_paths(src_i, dst_i, pair_sel(src_i, dst_i), &[]);
+                        let w = vec![1.0; paths.len()];
+                        fetch.extend(FlowSpec::split(t, &paths, &w, slice));
+                    } else {
+                        let st = storage[nth % storage.len()];
+                        let dst = map.npus()[dst_i];
+                        let path = t.shortest_path(st, dst, false).unwrap_or_else(|| {
+                            panic!("no switch path {st} → {dst} for re-shard fetch")
+                        });
+                        fetch.push(FlowSpec::along(t, &path, slice));
+                    }
+                    nth += 1;
+                }
+            }
+        }
+    }
+    let dead = replica_members(p, order, dead_dp);
+    let mut groups = groups_for(p, order, GroupSpec::Dp);
+    for g in &mut groups {
+        g.retain(|i| !dead.contains(i));
+    }
+    let shuffle = exchange_flows(t, map, &groups, state_bytes_per_rank / p.dp as f64, 0.0);
+    StageDag::chain(vec![
+        Stage::new("reshard-fetch").with_flows(fetch),
+        Stage::new("reshard-shuffle").with_flows(shuffle),
+    ])
+}
+
+/// The **rejoin catch-up** DAG run once the dead replica is repaired:
+/// each returning rank reads the now-current optimizer state back from
+/// its surviving DP peers — an equal `1/(dp−1)` slice from every
+/// survivor, so the incast onto the repaired hardware is priced on the
+/// real paths. The measured makespan is the pause the mission loop
+/// charges at repair completion.
+pub fn rejoin_catchup_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    rejoin_dp: usize,
+    state_bytes_per_rank: f64,
+) -> StageDag {
+    assert!(
+        p.dp >= 2 && rejoin_dp < p.dp,
+        "rejoin needs surviving peers: dp={}, rejoining={rejoin_dp}",
+        p.dp
+    );
+    assert_eq!(p.npus(), map.npu_count(), "parallelism does not fill the map");
+    let slice = state_bytes_per_rank / (p.dp - 1) as f64;
+    let mut flows = Vec::new();
+    for pp_i in 0..p.pp {
+        for sp_i in 0..p.sp {
+            for tp_i in 0..p.tp {
+                let dst_i = order.phys(tp_i, sp_i, pp_i, rejoin_dp, p);
+                for d in (0..p.dp).filter(|&d| d != rejoin_dp) {
+                    let src_i = order.phys(tp_i, sp_i, pp_i, d, p);
+                    let paths = map.pair_paths(src_i, dst_i, pair_sel(src_i, dst_i), &[]);
+                    let w = vec![1.0; paths.len()];
+                    flows.extend(FlowSpec::split(t, &paths, &w, slice));
+                }
+            }
+        }
+    }
+    StageDag::chain(vec![Stage::new("rejoin-catchup").with_flows(flows)])
 }
 
 #[cfg(test)]
@@ -956,5 +1163,121 @@ mod tests {
             r1.makespan_us,
             r.makespan_us
         );
+    }
+
+    fn dp4_rack() -> (Topology, crate::topology::rack::RackHandles, ParallelismConfig) {
+        let (t, h) = ubmesh_rack(&RackConfig::default());
+        let p = ParallelismConfig {
+            tp: 8,
+            sp: 2,
+            ep: 1,
+            pp: 1,
+            dp: 4,
+            microbatches: 2,
+            tokens_per_microbatch: 2048.0,
+        };
+        (t, h, p)
+    }
+
+    /// The shrunken iteration excludes the dead replica's ranks from
+    /// every flow endpoint, carries strictly fewer flows, and — same
+    /// global batch on dp−1 replicas — runs measurably slower than the
+    /// healthy iteration. That slowdown is the degraded-mode price the
+    /// elastic policy pays instead of aborting.
+    #[test]
+    fn shrunk_iteration_excludes_dead_replica_and_slows_down() {
+        use crate::workload::cluster::ClusterMap;
+        let (t, h, p) = dp4_rack();
+        let map = ClusterMap::rack(&h);
+        let m = by_name("llama-70b").unwrap();
+        let spec = IterationSpec::default();
+        let healthy = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &spec);
+        let shrunk =
+            shrunk_iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &spec, 0);
+        assert_eq!(shrunk.stages.len(), healthy.stages.len());
+        assert!(shrunk.total_flow_count() < healthy.total_flow_count());
+
+        let dead: Vec<_> = replica_members(&p, RankOrder::TopologyAware, 0)
+            .into_iter()
+            .map(|i| map.npus()[i])
+            .collect();
+        assert_eq!(dead.len(), 16);
+        for st in &shrunk.materialized(&t).stages {
+            for f in st.eager_flows().unwrap() {
+                assert!(
+                    !dead.contains(&f.src) && !dead.contains(&f.dst),
+                    "stage {} still talks to the dead replica",
+                    st.name
+                );
+            }
+        }
+
+        let net = SimNet::new(&t);
+        let rh = sim::schedule::run(&net, &healthy);
+        let rs = sim::schedule::run(&net, &shrunk);
+        assert!(!rh.is_stalled() && !rs.is_stalled());
+        assert!(
+            rs.makespan_us > rh.makespan_us,
+            "DP−1 on the same global batch must be slower: {} vs {}",
+            rs.makespan_us,
+            rh.makespan_us
+        );
+        // And by at least the compute-scaling floor (×4/3 per token, the
+        // comm terms scale with it): a sanity band, not a calibration.
+        assert!(rs.makespan_us < 2.0 * rh.makespan_us);
+    }
+
+    /// The re-shard fetch reads the lost shard from storage (or DP
+    /// peers) and the rejoin incast pulls it back — all as real flows
+    /// that complete on the rack fabric.
+    #[test]
+    fn reshard_and_rejoin_dags_run_on_real_paths() {
+        use crate::topology::dcn::{add_dcn_layer, DcnAttach};
+        use crate::workload::cluster::ClusterMap;
+        let (mut t, h, p) = dp4_rack();
+        let storage = add_dcn_layer(
+            &mut t,
+            std::slice::from_ref(&h),
+            2,
+            DcnAttach::UbSwitch { lanes_per_rack: 8 },
+        );
+        let map = ClusterMap::rack(&h);
+        let bytes = 10e6;
+        let net = SimNet::new(&t);
+
+        // Storage-sourced: one slice per (position, survivor).
+        let rs = elastic_reshard_dag(&t, &map, &p, RankOrder::TopologyAware, 0, &storage, bytes);
+        assert_eq!(rs.stages.len(), 2);
+        assert_eq!(rs.stages[0].flow_count(), 16 * 3);
+        for f in rs.stages[0].eager_flows().unwrap() {
+            assert!(storage.contains(&f.src), "fetch must come from storage");
+        }
+        let r = sim::schedule::run(&net, &rs);
+        assert!(!r.is_stalled() && r.makespan_us > 0.0);
+
+        // Peer-sourced (no storage): survivors still recover the shard.
+        let rp = elastic_reshard_dag(&t, &map, &p, RankOrder::TopologyAware, 0, &[], bytes);
+        assert!(rp.stages[0].flow_count() > 0);
+        let rr = sim::schedule::run(&net, &rp);
+        assert!(!rr.is_stalled() && rr.makespan_us > 0.0);
+
+        // Rejoin: the repaired replica's 16 ranks each pull a slice from
+        // all 3 survivors.
+        let rj = rejoin_catchup_dag(&t, &map, &p, RankOrder::TopologyAware, 0, bytes);
+        let rejoiners: Vec<_> = replica_members(&p, RankOrder::TopologyAware, 0)
+            .into_iter()
+            .map(|i| map.npus()[i])
+            .collect();
+        let flows = rj.stages[0].eager_flows().unwrap();
+        assert!(flows.iter().all(|f| rejoiners.contains(&f.dst)));
+        let rr = sim::schedule::run(&net, &rj);
+        assert!(!rr.is_stalled() && rr.makespan_us > 0.0);
+
+        // dp = 2 peer mode has a lone survivor: the shard is a local
+        // redundant copy, no wire traffic.
+        let p2 = ParallelismConfig { sp: 4, dp: 2, ..p };
+        let rp2 = elastic_reshard_dag(&t, &map, &p2, RankOrder::TopologyAware, 1, &[], bytes);
+        assert_eq!(rp2.total_flow_count(), 0);
+        assert!(!sim::schedule::run(&net, &rp2).is_stalled());
     }
 }

@@ -161,7 +161,8 @@ fn mission_pipeline_end_to_end() {
         trials_per_class: 3,
         ..MeasureConfig::default()
     };
-    let costs = measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), &mcfg, 5);
+    let costs =
+        measured_class_costs(&t, &gen, &dag, &RecoveryConfig::direct(), None, &mcfg, 5);
     assert_eq!(costs.abort_fraction(BlastClass::SingleLink), 0.0);
     assert_eq!(costs.abort_fraction(BlastClass::SwitchDeath), 0.0);
     assert_eq!(costs.abort_fraction(BlastClass::RackPower), 1.0);
@@ -220,10 +221,9 @@ fn oracle_band_and_absorption_boundary() {
     // Correlated + absorbed: network failures cost slowdown, not pause.
     let absorbed = ClassCosts {
         samples: std::array::from_fn(|_| {
-            vec![ubmesh::reliability::montecarlo::FailureOutcome {
+            vec![ubmesh::reliability::montecarlo::FailureOutcome::Absorbed {
                 pause_hours: 0.0,
                 slowdown: 0.05,
-                aborts: false,
             }]
         }),
     };
@@ -236,6 +236,88 @@ fn oracle_band_and_absorption_boundary() {
     );
     // …but not for free: the slowdown shows up in effective time.
     assert!(measured.effective.mean() < measured.availability.mean());
+}
+
+/// Satellite (PR 8): repair-aware mission plans emit a matching restore
+/// for every fault, honoring the sampled (crew-queued) repair time —
+/// and folding the whole replayable plan through the link state machine
+/// leaves the fabric fully healthy: no link still down, no capacity
+/// still rescaled.
+#[test]
+fn mission_repair_plans_fully_restore_the_fabric() {
+    use std::collections::{HashMap, HashSet};
+    use ubmesh::reliability::repair::RepairConfig;
+    use ubmesh::sim::fault::FaultEvent;
+    use ubmesh::topology::LinkId;
+
+    let (t, h, _dcn) = rack_with_dcn();
+    let gen = FaultGen::new(
+        FaultDomains::rack(&t, &h),
+        &census(),
+        FaultGenConfig {
+            npu_fleet_afr: 64.0 * 0.05,
+            ..FaultGenConfig::default()
+        },
+    );
+    let repair = RepairConfig::field_default();
+    let mission = gen.sample_mission_with_repair(720.0, &repair, &mut Rng::new(11));
+    assert!(!mission.is_empty());
+    for me in &mission {
+        assert!(me.t_hours >= 0.0 && me.t_hours < 720.0);
+        assert!(me.restore_hours.is_finite() && me.restore_hours > me.t_hours);
+        assert!(me.window_hours(720.0) >= 0.0);
+    }
+    // Deterministic in seed, through the sampled repair durations.
+    let again = gen.sample_mission_with_repair(720.0, &repair, &mut Rng::new(11));
+    assert_eq!(mission.len(), again.len());
+    for (a, b) in mission.iter().zip(&again) {
+        assert_eq!(a.t_hours, b.t_hours);
+        assert_eq!(a.restore_hours, b.restore_hours);
+    }
+
+    // The replayable plan carries fault + restore for every group…
+    let plan = gen.mission_fault_plan(&t, &mission, Some(RecoveryConfig::direct()));
+    let expect: usize = mission
+        .iter()
+        .map(|me| me.group.events.len() + me.group.restore_events(&t).len())
+        .sum();
+    assert_eq!(plan.len(), expect);
+
+    // …and replaying it through the link state machine ends healthy.
+    let mut evs: Vec<(f64, FaultEvent)> = plan.events.clone();
+    evs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut down: HashSet<u32> = HashSet::new();
+    let mut rescaled: HashMap<u32, f64> = HashMap::new();
+    for (_, ev) in &evs {
+        match ev {
+            FaultEvent::LinkDown(l) => {
+                down.insert(l.0);
+            }
+            FaultEvent::LinkUp(l) => {
+                down.remove(&l.0);
+            }
+            FaultEvent::LinkCapacity(l, gb_s) => {
+                rescaled.insert(l.0, *gb_s);
+            }
+            FaultEvent::NpuDown { npu, .. } => {
+                for &(_, l) in t.neighbors(*npu) {
+                    down.insert(l.0);
+                }
+            }
+        }
+    }
+    assert!(
+        down.is_empty(),
+        "{} links still down after the last restore",
+        down.len()
+    );
+    for (l, gb_s) in &rescaled {
+        assert_eq!(
+            *gb_s,
+            t.link(LinkId(*l)).capacity_gb_s(),
+            "link {l} left at a degraded capacity"
+        );
+    }
 }
 
 /// Mission plans stay inside the horizon and inherit the sampler's

@@ -1,0 +1,233 @@
+//! Chaos fuzz for the fault runner (ISSUE-8 satellite): randomized
+//! fault storms — overlapping flap trains, same-instant blast groups,
+//! capacity dips — replayed against a live all-to-all under every
+//! solver strategy ([`ResolveStrategy::Bounded`] / `RiseOnly` /
+//! `FullComponentBfs`), with flap damping off and on.
+//!
+//! Properties pinned per storm:
+//! * every run **completes** (storms always restore what they break, so
+//!   a stall would be a recovery bug, not a scripted disconnection);
+//! * the three strategies agree on makespan and byte-hops (the PR 1–3
+//!   differential oracle, now under fault churn) and perform the exact
+//!   same reroutes;
+//! * the whole pipeline is deterministic in the storm seed;
+//! * the event count stays bounded — a reroute livelock (flows
+//!   endlessly re-selecting flapping links) would blow through the
+//!   ceiling long before wall-clock timeouts trip.
+
+use ubmesh::collectives::alltoall::dimwise_alltoall_dag;
+use ubmesh::sim::fault::{FaultEvent, FaultPlan};
+use ubmesh::sim::{self, RecoveryConfig, ResolveStrategy, SimConfig, SimNet};
+use ubmesh::topology::ndmesh::{nd_fullmesh, DimSpec};
+use ubmesh::topology::{CableClass, LinkId, Topology};
+use ubmesh::util::rng::Rng;
+
+fn mesh() -> Topology {
+    nd_fullmesh(
+        "chaos",
+        &[
+            DimSpec::new(4, 4, CableClass::PassiveElectrical, 0.3),
+            DimSpec::new(4, 4, CableClass::PassiveElectrical, 1.0),
+        ],
+    )
+}
+
+/// A randomized storm: two flap trains, one 3-link same-instant blast
+/// group (restored as a group), one capacity dip-and-recover — all on
+/// distinct links, all timed inside the healthy makespan so the DAG is
+/// live when they hit. Every fault is eventually undone.
+fn storm(t: &Topology, healthy_us: f64, seed: u64) -> FaultPlan {
+    let mut rng = Rng::new(seed);
+    let nlinks = t.link_count();
+    let mut picked: Vec<u32> = Vec::new();
+    let mut pick = |rng: &mut Rng, picked: &mut Vec<u32>| -> LinkId {
+        loop {
+            let l = rng.range(0, nlinks) as u32;
+            if !picked.contains(&l) {
+                picked.push(l);
+                return LinkId(l);
+            }
+        }
+    };
+    let mut plan = FaultPlan::new();
+    for _ in 0..2 {
+        let l = pick(&mut rng, &mut picked);
+        let t0 = rng.f64() * 0.5 * healthy_us;
+        let cycles = 2 + rng.range(0, 3);
+        let down = 20.0 + rng.f64() * 100.0;
+        let up = 20.0 + rng.f64() * 100.0;
+        plan = plan.flap_train(l, t0, cycles, down, up);
+    }
+    let gt = rng.f64() * 0.5 * healthy_us;
+    let group: Vec<LinkId> = (0..3).map(|_| pick(&mut rng, &mut picked)).collect();
+    plan = plan.group_at(gt, group.iter().map(|&l| FaultEvent::LinkDown(l)).collect());
+    let restore_at = gt + 50.0 + rng.f64() * 200.0;
+    plan = plan.group_at(
+        restore_at,
+        group.iter().map(|&l| FaultEvent::LinkUp(l)).collect(),
+    );
+    let l = pick(&mut rng, &mut picked);
+    let full = t.link(l).capacity_gb_s();
+    let td = rng.f64() * 0.5 * healthy_us;
+    plan = plan.at(td, FaultEvent::LinkCapacity(l, full * 0.25));
+    plan = plan.at(td + 100.0 + rng.f64() * 200.0, FaultEvent::LinkCapacity(l, full));
+    plan
+}
+
+const STRATEGIES: [ResolveStrategy; 3] = [
+    ResolveStrategy::Bounded,
+    ResolveStrategy::RiseOnly,
+    ResolveStrategy::FullComponentBfs,
+];
+
+/// Run one storm under one recovery config across all three strategies,
+/// asserting completion, agreement, and the livelock bound; returns the
+/// Bounded run for cross-config assertions.
+fn run_storm(
+    net: &SimNet,
+    dag: &ubmesh::sim::StageDag,
+    plan_base: &FaultPlan,
+    rc: &RecoveryConfig,
+) -> sim::schedule::SimReport {
+    let plan = FaultPlan {
+        events: plan_base.events.clone(),
+        recovery: Some(rc.clone()),
+    };
+    let runs: Vec<_> = STRATEGIES
+        .iter()
+        .map(|&strategy| {
+            sim::schedule::run_faulted(net, dag, &SimConfig { strategy }, &plan)
+        })
+        .collect();
+    for (s, r) in STRATEGIES.iter().zip(&runs) {
+        assert!(!r.is_stalled(), "{s:?}: stalled under a fully-restored storm");
+        assert!(r.makespan_us.is_finite() && r.makespan_us > 0.0);
+        // Livelock bound: a reroute loop on a flapping link would spin
+        // the event count far beyond anything this DAG legitimately
+        // needs (healthy runs take a few thousand events).
+        assert!(r.events < 1_000_000, "{s:?}: {} events — livelock?", r.events);
+        assert!(r.fault_events <= plan.len() as u64);
+    }
+    let b = runs[0].clone();
+    for (s, r) in STRATEGIES.iter().zip(&runs).skip(1) {
+        assert!(
+            (r.makespan_us - b.makespan_us).abs() < 1e-6 * b.makespan_us,
+            "{s:?} makespan {} vs Bounded {}",
+            r.makespan_us,
+            b.makespan_us
+        );
+        assert!(
+            (r.byte_hops - b.byte_hops).abs() < 1e-6 * b.byte_hops,
+            "{s:?} byte-hops {} vs Bounded {}",
+            r.byte_hops,
+            b.byte_hops
+        );
+        assert_eq!(r.reroutes, b.reroutes, "{s:?} reroute count diverged");
+    }
+    b
+}
+
+#[test]
+fn fault_storms_agree_across_strategies_and_damping() {
+    let t = mesh();
+    let net = SimNet::new(&t);
+    let dag = dimwise_alltoall_dag(&t, &[4, 4], 4e6);
+    let healthy = sim::schedule::run(&net, &dag);
+    assert!(!healthy.is_stalled());
+
+    for seed in 0..6u64 {
+        let plan = storm(&t, healthy.makespan_us, seed);
+        let raw = run_storm(&net, &dag, &plan, &RecoveryConfig::direct());
+        let damped = run_storm(
+            &net,
+            &dag,
+            &plan,
+            &RecoveryConfig::direct().with_flap_damping(500.0),
+        );
+        // Damping is advisory path-steering: it must never break the
+        // run or lose traffic, only change which links reroutes pick.
+        assert!(damped.makespan_us.is_finite());
+        assert!(raw.makespan_us >= healthy.makespan_us * (1.0 - 1e-9));
+    }
+}
+
+/// The exact same storm seed reproduces the exact same run,
+/// bit-for-bit, including reroute and event counts — the replay
+/// property every measured-availability experiment leans on.
+#[test]
+fn storm_replay_is_deterministic_in_seed() {
+    let t = mesh();
+    let net = SimNet::new(&t);
+    let dag = dimwise_alltoall_dag(&t, &[4, 4], 4e6);
+    let healthy = sim::schedule::run(&net, &dag);
+
+    for &hyst in &[0.0, 500.0] {
+        let rc = RecoveryConfig::direct().with_flap_damping(hyst);
+        for seed in [3u64, 4] {
+            let p1 = storm(&t, healthy.makespan_us, seed);
+            let p2 = storm(&t, healthy.makespan_us, seed);
+            assert_eq!(p1.len(), p2.len(), "storm builder must be deterministic");
+            let cfg = SimConfig::default();
+            let r1 = sim::schedule::run_faulted(
+                &net,
+                &dag,
+                &cfg,
+                &FaultPlan {
+                    events: p1.events,
+                    recovery: Some(rc.clone()),
+                },
+            );
+            let r2 = sim::schedule::run_faulted(
+                &net,
+                &dag,
+                &cfg,
+                &FaultPlan {
+                    events: p2.events,
+                    recovery: Some(rc.clone()),
+                },
+            );
+            assert_eq!(r1.makespan_us.to_bits(), r2.makespan_us.to_bits());
+            assert_eq!(r1.byte_hops.to_bits(), r2.byte_hops.to_bits());
+            assert_eq!(r1.reroutes, r2.reroutes);
+            assert_eq!(r1.events, r2.events);
+            assert_eq!(r1.fault_events, r2.fault_events);
+        }
+    }
+}
+
+/// Same-instant groups apply atomically: a three-link blast fired as
+/// one group gives the same end state as the same events scripted as
+/// three `at()` calls at the same timestamp (FaultPlan order is the
+/// tiebreak, and it is identical here).
+#[test]
+fn same_instant_groups_match_sequential_scripting() {
+    let t = mesh();
+    let net = SimNet::new(&t);
+    let dag = dimwise_alltoall_dag(&t, &[4, 4], 4e6);
+    let healthy = sim::schedule::run(&net, &dag);
+    let at = 0.25 * healthy.makespan_us;
+    let links = [LinkId(0), LinkId(7), LinkId(19)];
+
+    let grouped = FaultPlan::new()
+        .group_at(at, links.iter().map(|&l| FaultEvent::LinkDown(l)).collect())
+        .group_at(
+            at + 400.0,
+            links.iter().map(|&l| FaultEvent::LinkUp(l)).collect(),
+        )
+        .with_recovery(RecoveryConfig::direct());
+    let mut seq = FaultPlan::new();
+    for &l in &links {
+        seq = seq.at(at, FaultEvent::LinkDown(l));
+    }
+    for &l in &links {
+        seq = seq.at(at + 400.0, FaultEvent::LinkUp(l));
+    }
+    let seq = seq.with_recovery(RecoveryConfig::direct());
+
+    let cfg = SimConfig::default();
+    let rg = sim::schedule::run_faulted(&net, &dag, &cfg, &grouped);
+    let rs = sim::schedule::run_faulted(&net, &dag, &cfg, &seq);
+    assert!(!rg.is_stalled() && !rs.is_stalled());
+    assert_eq!(rg.makespan_us.to_bits(), rs.makespan_us.to_bits());
+    assert_eq!(rg.reroutes, rs.reroutes);
+}
