@@ -1,0 +1,124 @@
+//! Audit smoke: run the static model auditor (`verify::audit`) over
+//! every built-in fabric and the seeded-mutation matrix
+//! (`verify::mutate`), then emit `BENCH_audit.json` (schema
+//! `ubmesh.bench_sim.v1`, path override `BENCH_SIM_JSON`) so CI can
+//! assert the auditor's two ends of the contract in one artifact:
+//! zero findings on clean models, and every planted defect caught by
+//! its declared `AUD0xx` code. The timed sections track the cost of
+//! the bake-off eligibility gate itself (`audit_fabric` is what every
+//! ROADMAP item-3 candidate pays on entry).
+//!
+//! Metric keys (`audit.*`): `rules_checked` (distinct catalog rules
+//! exercised across all fabrics), `fabrics_total` / `fabrics_clean`,
+//! `findings` (total violations on built-ins — must be 0),
+//! `mutations_seeded` / `mutations_caught` (caught = report contains
+//! the expected code and nothing else).
+
+use ubmesh::topology::pod::{ubmesh_pod, PodConfig};
+use ubmesh::topology::rack::{ubmesh_rack, RackConfig};
+use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+use ubmesh::topology::variants::{rack_1dfm_a, rack_1dfm_b, rack_clos};
+use ubmesh::util::bench::{bench, black_box, section, JsonReport};
+use ubmesh::verify::mutate::seeded_mutations;
+use ubmesh::verify::{audit_fabric, AuditConfig, AuditReport, CATALOG};
+use ubmesh::workload::ClusterMap;
+
+fn main() {
+    let mut json = JsonReport::new();
+    let cfg = AuditConfig::default();
+
+    section("audit_fabric over the built-in fabrics");
+    let fabrics: Vec<(&str, ubmesh::topology::Topology, ClusterMap)> = {
+        let (t_rack, h_rack) = ubmesh_rack(&RackConfig::default());
+        let map_rack = ClusterMap::rack(&h_rack);
+        let (t_a, h_a) = rack_1dfm_a();
+        let (t_b, h_b) = rack_1dfm_b();
+        let (t_c, h_c) = rack_clos();
+        let (t_pod, h_pod) = ubmesh_pod(&PodConfig::default());
+        let map_pod = ClusterMap::pod(&h_pod);
+        let (t_sp, h_sp) = ubmesh_superpod(&SuperPodConfig {
+            pods: 4,
+            ..SuperPodConfig::default()
+        });
+        let map_sp = ClusterMap::superpod(&h_sp);
+        vec![
+            ("rack_2dfm", t_rack, map_rack),
+            ("rack_1dfm_a", t_a, ClusterMap::fm1d_a(&h_a)),
+            ("rack_1dfm_b", t_b, ClusterMap::fm1d_b(&h_b)),
+            ("rack_clos", t_c, ClusterMap::clos_rack(&h_c)),
+            ("pod_4dfm", t_pod, map_pod),
+            ("superpod_4pod", t_sp, map_sp),
+        ]
+    };
+
+    let mut merged = AuditReport::new();
+    let mut clean = 0usize;
+    for (name, t, map) in &fabrics {
+        let r = audit_fabric(t, map, &cfg);
+        println!(
+            "  {name:<14} {:>2} rules  {:>3} findings{}",
+            r.rules_checked(),
+            r.findings().len(),
+            if r.is_clean() { "" } else { "  ← NOT CLEAN" }
+        );
+        if !r.is_clean() {
+            print!("{}", r.render());
+        } else {
+            clean += 1;
+        }
+        merged.merge(r);
+    }
+    json.metric("audit.rules_checked", merged.rules_checked() as f64);
+    json.metric("audit.catalog_rules", CATALOG.len() as f64);
+    json.metric("audit.fabrics_total", fabrics.len() as f64);
+    json.metric("audit.fabrics_clean", clean as f64);
+    json.metric("audit.findings", merged.findings().len() as f64);
+
+    // The gate's price of entry, timed on the two extremes of scale.
+    let (name, t_rack, map_rack) = &fabrics[0];
+    assert_eq!(*name, "rack_2dfm");
+    let r = bench("audit_fabric(rack, 64 pairs)", || {
+        black_box(audit_fabric(t_rack, map_rack, &cfg));
+    });
+    json.push(&r);
+    let (name, t_sp, map_sp) = &fabrics[5];
+    assert_eq!(*name, "superpod_4pod");
+    let r = bench("audit_fabric(superpod_4pod, 64 pairs)", || {
+        black_box(audit_fabric(t_sp, map_sp, &cfg));
+    });
+    json.push(&r);
+
+    section("seeded-mutation matrix");
+    let muts = seeded_mutations();
+    let mut caught = 0usize;
+    for m in &muts {
+        let report = (m.run)();
+        let hit = report.has(m.expect);
+        let collateral = report.findings().iter().any(|f| f.code != m.expect);
+        println!(
+            "  {:<22} expect {}  {}",
+            m.name,
+            m.expect,
+            match (hit, collateral) {
+                (true, false) => "caught",
+                (true, true) => "caught WITH COLLATERAL",
+                (false, _) => "MISSED",
+            }
+        );
+        if hit && !collateral {
+            caught += 1;
+        }
+    }
+    json.metric("audit.mutations_seeded", muts.len() as f64);
+    json.metric("audit.mutations_caught", caught as f64);
+
+    let path = std::env::var("BENCH_SIM_JSON").unwrap_or_else(|_| "BENCH_audit.json".into());
+    json.write(&path).expect("write bench json");
+    println!(
+        "\n{clean}/{} fabrics clean, {caught}/{} mutations caught → {path}",
+        fabrics.len(),
+        muts.len()
+    );
+    assert_eq!(clean, fabrics.len(), "built-in fabric failed the audit");
+    assert_eq!(caught, muts.len(), "a seeded mutation escaped its code");
+}

@@ -27,6 +27,10 @@
 //! Emits `BENCH_workload.json` (`BENCH_SIM_JSON` overrides the path;
 //! keys documented in rust/benches/README.md).
 
+// Benches measure wall-clock by definition; the Instant::now
+// determinism lint (clippy.toml) is for the sim core, not harnesses.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use ubmesh::coordinator::{linearity, Arch, Job};

@@ -724,7 +724,7 @@ fn hrs_interpod_flows(
 /// detour.
 pub fn hrs_reroute(h: &SuperPodHandles) -> crate::sim::fault::Reroute {
     use crate::sim::fault::{shortest_alive_path, Reroute};
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     let rack_npus: Vec<Vec<NodeId>> = h
         .pods
         .iter()
@@ -741,7 +741,7 @@ pub fn hrs_reroute(h: &SuperPodHandles) -> crate::sim::fault::Reroute {
         h.pods[0].racks[0].npus.len() / boards
     };
     // NPU → (rack index, index within the rack).
-    let mut loc: HashMap<NodeId, (usize, usize)> = HashMap::new();
+    let mut loc: BTreeMap<NodeId, (usize, usize)> = BTreeMap::new();
     for (r, rack) in rack_npus.iter().enumerate() {
         for (m, &npu) in rack.iter().enumerate() {
             loc.insert(npu, (r, m));

@@ -159,7 +159,7 @@ mod tests {
         for n in [4usize, 6, 8, 10] {
             let cycles = walecki_cycles(n);
             assert_eq!(cycles.len(), (n - 2) / 2);
-            let mut used = std::collections::HashSet::new();
+            let mut used = std::collections::BTreeSet::new();
             for c in &cycles {
                 assert_eq!(c.len(), n);
                 // Hamiltonian: all vertices once.

@@ -29,4 +29,5 @@ pub mod runtime;
 pub mod sim;
 pub mod topology;
 pub mod util;
+pub mod verify;
 pub mod workload;

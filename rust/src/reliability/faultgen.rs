@@ -340,6 +340,28 @@ impl FaultDomains {
     pub fn partition_count(&self) -> usize {
         self.partitions.len()
     }
+
+    /// Links of the single-cable class (read-only view for
+    /// `verify::audit` rule AUD031).
+    pub fn links(&self) -> &[LinkId] {
+        &self.links
+    }
+
+    /// Switch-death candidates with their incident links.
+    pub fn switches(&self) -> &[(NodeId, Vec<LinkId>)] {
+        &self.switches
+    }
+
+    /// Backplane-partition candidates (one link set each).
+    pub fn partitions(&self) -> &[Vec<LinkId>] {
+        &self.partitions
+    }
+
+    /// Rack power domain `i`: `(npus, backup, switch_links)`.
+    pub fn rack_domain(&self, i: usize) -> (&[NodeId], Option<NodeId>, &[LinkId]) {
+        let r = &self.racks[i];
+        (&r.npus, r.backup, &r.switch_links)
+    }
 }
 
 /// Arrival-rate knobs not covered by the network component census.

@@ -390,7 +390,7 @@ impl ClassCosts {
 /// switches) are simply absent and never veto a shrink.
 #[derive(Clone, Debug)]
 pub struct ReplicaMap {
-    by_node: std::collections::HashMap<crate::topology::NodeId, usize>,
+    by_node: std::collections::BTreeMap<crate::topology::NodeId, usize>,
     pub dp: usize,
 }
 
@@ -401,7 +401,7 @@ impl ReplicaMap {
         order: crate::workload::RankOrder,
     ) -> ReplicaMap {
         assert_eq!(p.npus(), map.npu_count(), "parallelism does not fill the map");
-        let mut by_node = std::collections::HashMap::new();
+        let mut by_node = std::collections::BTreeMap::new();
         for dp_i in 0..p.dp {
             for pp_i in 0..p.pp {
                 for sp_i in 0..p.sp {
@@ -413,6 +413,20 @@ impl ReplicaMap {
             }
         }
         ReplicaMap { by_node, dp: p.dp }
+    }
+
+    /// The DP replica holding workload NPU `n`, if any.
+    pub fn replica_of(&self, n: crate::topology::NodeId) -> Option<usize> {
+        self.by_node.get(&n).copied()
+    }
+
+    /// Workload NPUs covered by the map.
+    pub fn len(&self) -> usize {
+        self.by_node.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_node.is_empty()
     }
 
     /// `Some(replica)` iff every dead workload NPU belongs to the same

@@ -321,7 +321,7 @@ mod tests {
                 assert_eq!(*p.coords.first().unwrap(), src);
                 assert_eq!(*p.coords.last().unwrap(), dst);
                 // loop-free
-                let mut seen = std::collections::HashSet::new();
+                let mut seen = std::collections::BTreeSet::new();
                 for c in &p.coords {
                     assert!(seen.insert(*c), "repeated coord in {:?}", p.coords);
                 }
@@ -383,7 +383,7 @@ mod tests {
     #[test]
     fn hrs_plane_pairs_are_distinct_and_cover_all() {
         for planes in [2usize, 3, 4, 8] {
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             for seed in 0..(planes * (planes - 1) * 4) as u64 {
                 let (a, b) = hrs_plane_pair(seed, planes);
                 assert!(a < planes && b < planes);

@@ -121,7 +121,7 @@ pub fn direct_notification_convergence_us(
 /// route-flap damping's penalty window rather than hard withdrawal.
 #[derive(Clone, Debug, Default)]
 pub struct FlapDamper {
-    last_down_us: std::collections::HashMap<LinkId, f64>,
+    last_down_us: std::collections::BTreeMap<LinkId, f64>,
 }
 
 impl FlapDamper {

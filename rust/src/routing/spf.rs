@@ -85,8 +85,8 @@ pub fn k_disjoint_paths(
     k: usize,
     npu_routable: bool,
 ) -> Vec<Vec<NodeId>> {
-    let mut banned: std::collections::HashSet<crate::topology::LinkId> =
-        std::collections::HashSet::new();
+    let mut banned: std::collections::BTreeSet<crate::topology::LinkId> =
+        std::collections::BTreeSet::new();
     let mut out = Vec::new();
     for _ in 0..k {
         // BFS avoiding banned links.
@@ -176,7 +176,7 @@ mod tests {
         let t = mesh();
         let paths = k_disjoint_paths(&t, NodeId(0), NodeId(5), 4, true);
         assert!(paths.len() >= 2);
-        let mut used = std::collections::HashSet::new();
+        let mut used = std::collections::BTreeSet::new();
         for p in &paths {
             for w in p.windows(2) {
                 let l = t.link_between(w[0], w[1]).unwrap();

@@ -21,7 +21,7 @@
 //!    classes are acyclic because strict dimension order induces a
 //!    topological order on channels, and VL transitions only go 0 → 1.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::topology::{Channel, NodeId, NodeKind, Topology};
 
@@ -94,7 +94,7 @@ pub fn routing_dims(t: &Topology, nodes: &[NodeId]) -> Vec<u8> {
 #[derive(Default, Debug)]
 pub struct Cdg {
     /// vertex -> outgoing dependency edges.
-    edges: HashMap<(Channel, Vl), Vec<(Channel, Vl)>>,
+    edges: BTreeMap<(Channel, Vl), Vec<(Channel, Vl)>>,
 }
 
 impl Cdg {
@@ -134,7 +134,7 @@ impl Cdg {
             Black,
         }
         let keys: Vec<_> = self.edges.keys().copied().collect();
-        let mut color: HashMap<(Channel, Vl), Color> =
+        let mut color: BTreeMap<(Channel, Vl), Color> =
             keys.iter().map(|&k| (k, Color::White)).collect();
         for &start in &keys {
             if color[&start] != Color::White {

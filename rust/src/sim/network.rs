@@ -21,8 +21,12 @@ pub struct SimNet<'a> {
 impl<'a> SimNet<'a> {
     pub fn new(topo: &'a Topology) -> SimNet<'a> {
         let mut cap = Vec::with_capacity(topo.link_count() * 2);
-        for l in &topo.links {
+        for (i, l) in topo.links.iter().enumerate() {
             let c = l.capacity_gb_s();
+            assert!(
+                c.is_finite() && c >= 0.0,
+                "link {i} capacity {c} GB/s must be finite and ≥ 0"
+            );
             cap.push(c);
             cap.push(c);
         }
@@ -81,6 +85,10 @@ impl<'a> SimNet<'a> {
     /// Scale a single link's capacity (e.g. backup NPU attach with fewer
     /// lanes, degraded links).
     pub fn set_link_capacity(&mut self, l: LinkId, gb_s: f64) {
+        assert!(
+            gb_s.is_finite() && gb_s >= 0.0,
+            "link {l} capacity {gb_s} GB/s must be finite and ≥ 0"
+        );
         self.cap[l.idx() * 2] = gb_s;
         self.cap[l.idx() * 2 + 1] = gb_s;
     }
@@ -122,5 +130,27 @@ mod tests {
         assert!(!net.is_usable(LinkId(0)), "zero-capacity link is dead");
         net.set_link_capacity(LinkId(0), 10.0);
         assert!(net.is_usable(LinkId(0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite")]
+    fn nan_capacity_rejected() {
+        let t = nd_fullmesh(
+            "m4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        );
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite")]
+    fn negative_capacity_rejected() {
+        let t = nd_fullmesh(
+            "m4",
+            &[DimSpec::new(4, 8, CableClass::PassiveElectrical, 0.3)],
+        );
+        let mut net = SimNet::new(&t);
+        net.set_link_capacity(LinkId(0), -5.0);
     }
 }

@@ -61,7 +61,7 @@
 //! differential tests can pit the PR 1 full-component solver against the
 //! rise-only solver on identical workloads ([`run`] uses the default).
 
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::Arc;
 
 use crate::routing::failure::FlapDamper;
@@ -213,6 +213,28 @@ impl Stage {
                     v.len()
                 );
                 v
+            }
+        }
+    }
+
+    /// Non-panicking [`Stage::materialize_flows`]: a lazy builder whose
+    /// output disagrees with the declared count is an `Err`, so the
+    /// static auditor (`verify::audit`, rule AUD022) can report the
+    /// defect instead of aborting mid-audit.
+    pub fn try_materialize_flows(&self, t: &Topology) -> Result<Vec<FlowSpec>, String> {
+        match &self.flows {
+            StageFlows::Empty => Ok(Vec::new()),
+            StageFlows::Eager(v) => Ok(v.clone()),
+            StageFlows::Lazy { build, count, .. } => {
+                let v = build(t);
+                if v.len() != *count {
+                    return Err(format!(
+                        "lazy stage '{}' declared {count} flows but built {}",
+                        self.name,
+                        v.len()
+                    ));
+                }
+                Ok(v)
             }
         }
     }
@@ -426,6 +448,11 @@ pub fn run(net: &SimNet, dag: &StageDag) -> SimReport {
 
 /// Execute the DAG with an explicit [`SimConfig`].
 pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
+    debug_assert!(
+        crate::verify::audit::stage_dag_check(dag).is_ok(),
+        "defective stage DAG: {}",
+        crate::verify::audit::stage_dag_check(dag).unwrap_err()
+    );
     run_faulted(net, dag, cfg, &FaultPlan::default())
 }
 
@@ -438,8 +465,8 @@ fn reroute_ready_at(
     active: &[ActiveFlow],
     rates: &Rates,
     net: &SimNet,
-    table_at: &HashMap<LinkId, f64>,
-    npu_backup: &HashMap<NodeId, (NodeId, f64)>,
+    table_at: &BTreeMap<LinkId, f64>,
+    npu_backup: &BTreeMap<NodeId, (NodeId, f64)>,
 ) -> f64 {
     let mut at = now;
     let chans: &[Channel] = match (&active[i].channels, active[i].solver_id) {
@@ -511,8 +538,8 @@ pub fn run_faulted(
     let mut peak = 0usize;
     // Fault-plan state: per-link routing-table convergence times and
     // dead-NPU → (backup, activation time) substitutions.
-    let mut table_at: HashMap<LinkId, f64> = HashMap::new();
-    let mut npu_backup: HashMap<NodeId, (NodeId, f64)> = HashMap::new();
+    let mut table_at: BTreeMap<LinkId, f64> = BTreeMap::new();
+    let mut npu_backup: BTreeMap<NodeId, (NodeId, f64)> = BTreeMap::new();
     // Flap-damping memory: every link-down instant is recorded; reroute
     // path selection consults it only when the plan's RecoveryConfig
     // enables a hysteresis window.
@@ -837,7 +864,7 @@ pub fn run_faulted(
                 // channel), grouped by dead link for the §4.2
                 // notification model: the affected sources determine
                 // each link's convergence latency.
-                let mut affected_by_link: HashMap<LinkId, Vec<NodeId>> = HashMap::new();
+                let mut affected_by_link: BTreeMap<LinkId, Vec<NodeId>> = BTreeMap::new();
                 let mut cut: Vec<usize> = Vec::new();
                 for &fid in rates.touched() {
                     let i = sid_to_active.get(fid).copied().unwrap_or(usize::MAX);
@@ -1365,12 +1392,13 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "cyclic deps")]
+    #[should_panic(expected = "defective stage DAG")]
     fn cyclic_deps_still_panic() {
         let t = k4();
         let net = SimNet::new(&t);
         let mut dag = StageDag::default();
-        // 0 depends on 1 and 1 on 0: neither ever starts.
+        // 0 depends on 1 and 1 on 0: neither ever starts. The
+        // verify::audit self-check in run_with rejects it up front.
         dag.push(Stage::new("a").with_compute(1.0).after(vec![1]));
         dag.push(Stage::new("b").with_compute(1.0).after(vec![0]));
         run(&net, &dag);

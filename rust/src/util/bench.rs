@@ -5,6 +5,10 @@
 //! [`super::table`]. The harness does warmup, adaptive iteration counts
 //! and reports mean / p50 / p99 wall-clock.
 
+// Wall-clock timing is this module's whole job; the determinism
+// lint on Instant::now (clippy.toml) does not apply to the harness.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 /// Result of a timed section.

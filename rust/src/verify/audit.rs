@@ -1,0 +1,1006 @@
+//! The static invariant checker: a catalog of `AUD0xx` rules over the
+//! constructed model, producing a structured [`AuditReport`].
+//!
+//! Four rule families (see [`CATALOG`] and `docs/AUDIT.md`):
+//!
+//! * **topology** (`AUD00x`) — every claimed path hop is a live link,
+//!   lane budgets / port radix hold, parallel-link multiplicity is
+//!   consistent, link parameters are finite;
+//! * **path set** (`AUD01x`) — weights normalized, plane/HRS selection
+//!   is a balanced rotation (the PR 3 lesson as a lint), families are
+//!   diverse, switched fabrics relay through switches only, sampled
+//!   families are 2-VL deadlock-free, lazy path-count metadata exact;
+//! * **DAG** (`AUD02x`) — acyclic, deps valid, lazy/eager metadata
+//!   agree, iteration / checkpoint / shrunk DAGs conserve the Table 1
+//!   analytic byte volumes;
+//! * **fault/replica** (`AUD03x`) — fault timelines well-ordered and
+//!   finite, blast groups inside their declared domains, replica maps
+//!   partition the workload exactly once.
+//!
+//! Rules never panic on a defective model — they record findings — so
+//! the seeded-mutation harness ([`super::mutate`]) can assert each
+//! defect class maps to its specific code.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::reliability::faultgen::{BlastClass, FaultDomains, FaultGroup};
+use crate::reliability::montecarlo::ReplicaMap;
+use crate::routing::apr::{hrs_plane_pair, PathSet, RoutedPath};
+use crate::routing::tfc::verify_deadlock_free;
+use crate::sim::fault::{FaultEvent, FaultPlan};
+use crate::sim::schedule::StageDag;
+use crate::topology::{NodeId, Topology};
+use crate::workload::step::IterationSpec;
+use crate::workload::traffic::{analyze, BYTES_PER_ACT};
+use crate::workload::{ClusterMap, ModelConfig, ParallelismConfig};
+
+/// Every rule the auditor knows, `(code, one-line description)`. The
+/// single source of truth for `docs/AUDIT.md` and the
+/// `audit.rules_checked` bench metric.
+pub const CATALOG: &[(&str, &str)] = &[
+    ("AUD001", "every hop of every claimed path is a live link of the topology"),
+    ("AUD002", "paths are loop-free with the declared endpoints"),
+    ("AUD003", "no node exceeds its Table 3 UB lane budget (NPU/LRS/HRS port radix)"),
+    ("AUD004", "parallel-link multiplicity is consistent between adjacency and links_between"),
+    ("AUD005", "every link's lanes, capacity and length are finite and non-negative"),
+    ("AUD010", "path-set weights are non-negative, finite and normalized"),
+    ("AUD011", "plane/HRS selection is a balanced rotation, not a collision-prone hash"),
+    ("AUD012", "multi-path families are diverse: no duplicate paths, a middle-disjoint pair exists"),
+    ("AUD013", "on switched fabrics (no NPU-NPU links) paths relay only through switches"),
+    ("AUD014", "sampled path families are deadlock-free with 2 VLs under TFC"),
+    ("AUD015", "pair_paths families match the lazy pair_path_count metadata exactly"),
+    ("AUD020", "stage DAGs are acyclic"),
+    ("AUD021", "stage deps are in-range, non-self, and a root stage exists"),
+    ("AUD022", "lazy stage metadata (flow count, bytes) agrees with materialized flows"),
+    ("AUD023", "iteration DAG wire bytes conserve the Table 1 analytic volumes"),
+    ("AUD024", "checkpoint DAG ships exactly bytes_per_rank per workload NPU to storage"),
+    ("AUD025", "shrunk iteration DAGs never terminate a flow at a dead-replica NPU"),
+    ("AUD030", "fault timelines are well-ordered with finite, in-range parameters"),
+    ("AUD031", "blast groups stay inside their declared fault-domain radius"),
+    ("AUD032", "a replica map partitions the workload NPUs into dp equal replicas exactly once"),
+];
+
+/// One rule violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Stable diagnostic code (`AUD0xx`, see [`CATALOG`]).
+    pub code: &'static str,
+    /// What was being audited (fabric name, stage name, pair, …).
+    pub subject: String,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+/// Structured result of an audit run: which rules were exercised and
+/// every violation found. Clean ⇔ no findings.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    findings: Vec<Finding>,
+    checked: BTreeSet<&'static str>,
+}
+
+impl AuditReport {
+    pub fn new() -> AuditReport {
+        AuditReport::default()
+    }
+
+    /// Record that a rule ran (even if it found nothing).
+    fn mark(&mut self, code: &'static str) {
+        debug_assert!(
+            CATALOG.iter().any(|&(c, _)| c == code),
+            "unknown audit code {code}"
+        );
+        self.checked.insert(code);
+    }
+
+    fn fail(&mut self, code: &'static str, subject: &str, detail: String) {
+        self.mark(code);
+        self.findings.push(Finding {
+            code,
+            subject: subject.to_string(),
+            detail,
+        });
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// True if any finding carries `code`.
+    pub fn has(&self, code: &str) -> bool {
+        self.findings.iter().any(|f| f.code == code)
+    }
+
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+
+    /// Distinct rule codes exercised by this report.
+    pub fn rules_checked(&self) -> usize {
+        self.checked.len()
+    }
+
+    /// Codes exercised (sorted, deduplicated).
+    pub fn checked_codes(&self) -> Vec<&'static str> {
+        self.checked.iter().copied().collect()
+    }
+
+    /// Fold another report into this one (union of checked rules,
+    /// concatenated findings) — the suite/bench aggregate.
+    pub fn merge(&mut self, other: AuditReport) {
+        self.checked.extend(other.checked);
+        self.findings.extend(other.findings);
+    }
+
+    /// Render findings grouped by code, one line each.
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return format!("clean ({} rules checked)", self.rules_checked());
+        }
+        let mut by_code: BTreeMap<&str, Vec<&Finding>> = BTreeMap::new();
+        for f in &self.findings {
+            by_code.entry(f.code).or_default().push(f);
+        }
+        let mut out = String::new();
+        for (code, fs) in by_code {
+            for f in fs {
+                out.push_str(&format!("{code} [{}]: {}\n", f.subject, f.detail));
+            }
+        }
+        out
+    }
+}
+
+/// Knobs for the sampled rules (pair selection in
+/// [`audit_cluster_map`], selector seeds in [`audit_plane_selector`]).
+/// Sampling is deterministic — same config, same pairs.
+#[derive(Clone, Copy, Debug)]
+pub struct AuditConfig {
+    /// Ordered NPU pairs sampled per cluster map.
+    pub max_pairs: usize,
+    /// Rotation seeds audited per sampled pair.
+    pub sels: u64,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig {
+            max_pairs: 64,
+            sels: 4,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Topology rules (AUD003/004/005)
+// ---------------------------------------------------------------------
+
+/// AUD003 + AUD004 + AUD005 over the whole graph.
+pub fn audit_topology(r: &mut AuditReport, t: &Topology) {
+    let sub = &t.name;
+
+    r.mark("AUD003");
+    if let Err(e) = t.check_lane_budgets() {
+        r.fail("AUD003", sub, e);
+    }
+
+    r.mark("AUD005");
+    for (i, l) in t.links.iter().enumerate() {
+        if l.lanes == 0 {
+            r.fail("AUD005", sub, format!("link {i} has zero lanes"));
+        }
+        if !(l.length_m.is_finite() && l.length_m >= 0.0) {
+            r.fail(
+                "AUD005",
+                sub,
+                format!("link {i} length {} must be finite and ≥ 0", l.length_m),
+            );
+        }
+        let cap = l.capacity_gb_s();
+        if !(cap.is_finite() && cap >= 0.0) {
+            r.fail("AUD005", sub, format!("link {i} capacity {cap} invalid"));
+        }
+    }
+
+    r.mark("AUD004");
+    // Adjacency, links_between and link_between must describe the same
+    // multigraph: every adjacency entry names a link whose endpoints
+    // are the pair, each link appears exactly twice across adjacency
+    // (once per side), and the pair's first link is what link_between
+    // answers.
+    let mut seen_per_link = vec![0usize; t.link_count()];
+    for n in 0..t.node_count() {
+        let n = NodeId(n as u32);
+        for &(peer, l) in t.neighbors(n) {
+            seen_per_link[l.idx()] += 1;
+            let link = t.link(l);
+            if !((link.a == n && link.b == peer) || (link.b == n && link.a == peer)) {
+                r.fail(
+                    "AUD004",
+                    sub,
+                    format!("adjacency {n}→{peer} names link {l} with endpoints {}-{}",
+                        link.a, link.b),
+                );
+            }
+        }
+    }
+    for (i, &c) in seen_per_link.iter().enumerate() {
+        if c != 2 {
+            r.fail(
+                "AUD004",
+                sub,
+                format!("link {i} appears {c} times in adjacency (expected 2)"),
+            );
+        }
+    }
+    for (i, l) in t.links.iter().enumerate() {
+        let set = t.links_between(l.a, l.b);
+        if !set.contains(&crate::topology::LinkId(i as u32)) {
+            r.fail(
+                "AUD004",
+                sub,
+                format!("link {i} missing from links_between({}, {})", l.a, l.b),
+            );
+        }
+        match t.link_between(l.a, l.b) {
+            Some(first) => {
+                if !set.contains(&first) {
+                    r.fail(
+                        "AUD004",
+                        sub,
+                        format!("link_between({}, {}) = {first} not in the pair's set", l.a, l.b),
+                    );
+                }
+            }
+            None => r.fail(
+                "AUD004",
+                sub,
+                format!("link_between({}, {}) is None but link {i} joins them", l.a, l.b),
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Path rules (AUD001/002/012/013)
+// ---------------------------------------------------------------------
+
+/// AUD001 + AUD002 for one claimed path with declared endpoints.
+pub fn audit_path(r: &mut AuditReport, t: &Topology, sub: &str, path: &[NodeId], a: NodeId, b: NodeId) {
+    r.mark("AUD001");
+    r.mark("AUD002");
+    if path.len() < 2 {
+        r.fail("AUD002", sub, format!("path {path:?} has < 2 nodes"));
+        return;
+    }
+    if path[0] != a || *path.last().unwrap() != b {
+        r.fail(
+            "AUD002",
+            sub,
+            format!("path {path:?} does not run {a} → {b}"),
+        );
+    }
+    let mut seen = BTreeSet::new();
+    for n in path {
+        if n.idx() >= t.node_count() {
+            r.fail("AUD001", sub, format!("path node {n} outside topology"));
+            return;
+        }
+        if !seen.insert(*n) {
+            r.fail("AUD002", sub, format!("path {path:?} repeats node {n}"));
+        }
+    }
+    for w in path.windows(2) {
+        if t.link_between(w[0], w[1]).is_none() {
+            r.fail(
+                "AUD001",
+                sub,
+                format!("hop {}-{} of path {path:?} is not a link", w[0], w[1]),
+            );
+        }
+    }
+}
+
+/// AUD001/002 per path plus the family-level diversity (AUD012) and
+/// switched-relay (AUD013) rules for one APR path family of `a → b`.
+///
+/// `switched_only` says the topology has no NPU-NPU links (Fig 16-d
+/// Clos rack), so every interior hop must be a switch.
+pub fn audit_path_family(
+    r: &mut AuditReport,
+    t: &Topology,
+    sub: &str,
+    paths: &[Vec<NodeId>],
+    a: NodeId,
+    b: NodeId,
+    switched_only: bool,
+) {
+    for p in paths {
+        audit_path(r, t, sub, p, a, b);
+    }
+
+    r.mark("AUD013");
+    if switched_only {
+        for p in paths {
+            for n in p.iter().skip(1).rev().skip(1) {
+                if n.idx() < t.node_count() && t.node(*n).kind.is_npu() {
+                    r.fail(
+                        "AUD013",
+                        sub,
+                        format!("switched fabric relays through NPU {n} in {p:?}"),
+                    );
+                }
+            }
+        }
+    }
+
+    r.mark("AUD012");
+    let distinct: BTreeSet<&[NodeId]> = paths.iter().map(|p| p.as_slice()).collect();
+    if distinct.len() != paths.len() {
+        r.fail(
+            "AUD012",
+            sub,
+            format!("family of {} paths has only {} distinct", paths.len(), distinct.len()),
+        );
+    }
+    if paths.len() >= 2 {
+        // "Middle" links: hops not incident to either endpoint. Plane /
+        // HRS / relay diversity means at least one pair of paths shares
+        // no middle link (endpoint attach hops may legitimately be
+        // shared — a 1D-FM-A NPU has exactly one attach LRS).
+        let middles: Vec<BTreeSet<(NodeId, NodeId)>> = paths
+            .iter()
+            .map(|p| {
+                p.windows(2)
+                    .filter(|w| w[0] != a && w[0] != b && w[1] != a && w[1] != b)
+                    .map(|w| if w[0] < w[1] { (w[0], w[1]) } else { (w[1], w[0]) })
+                    .collect()
+            })
+            .collect();
+        let disjoint_pair = (0..middles.len()).any(|i| {
+            (i + 1..middles.len()).any(|j| middles[i].is_disjoint(&middles[j]))
+        });
+        if !disjoint_pair {
+            r.fail(
+                "AUD012",
+                sub,
+                format!("no two of the {} paths are middle-link-disjoint", paths.len()),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Path-set rules (AUD010/011/014/015)
+// ---------------------------------------------------------------------
+
+/// AUD010 (weights) plus per-path AUD001/002 for a weighted
+/// [`PathSet`].
+pub fn audit_path_set(r: &mut AuditReport, t: &Topology, sub: &str, ps: &PathSet) {
+    r.mark("AUD010");
+    if ps.weights.len() != ps.paths.len() {
+        r.fail(
+            "AUD010",
+            sub,
+            format!("{} weights for {} paths", ps.weights.len(), ps.paths.len()),
+        );
+    }
+    let mut sum = 0.0;
+    for (i, &w) in ps.weights.iter().enumerate() {
+        if !(w.is_finite() && w >= 0.0) {
+            r.fail("AUD010", sub, format!("weight[{i}] = {w} invalid"));
+        } else {
+            sum += w;
+        }
+    }
+    if !ps.weights.is_empty() && (sum - 1.0).abs() > 1e-9 {
+        r.fail("AUD010", sub, format!("weights sum to {sum}, not 1"));
+    }
+    for p in &ps.paths {
+        if let (Some(&a), Some(&b)) = (p.nodes.first(), p.nodes.last()) {
+            audit_path(r, t, sub, &p.nodes, a, b);
+        }
+    }
+}
+
+/// AUD011: the plane/HRS selector must be a *balanced rotation* —
+/// deterministic, never the same plane twice, covering every ordered
+/// plane pair, and picking each plane as first choice equally often
+/// over a full rotation period. A collision-prone hash (the PR 3 bug)
+/// fails the exact-balance check.
+pub fn audit_plane_selector(
+    r: &mut AuditReport,
+    sub: &str,
+    planes: usize,
+    sel: &dyn Fn(u64) -> (usize, usize),
+) {
+    r.mark("AUD011");
+    if planes < 2 {
+        return;
+    }
+    let rounds = (planes * (planes - 1) * 4) as u64;
+    let mut first = vec![0usize; planes];
+    let mut pairs = BTreeSet::new();
+    for seed in 0..rounds {
+        let (a, b) = sel(seed);
+        if a >= planes || b >= planes {
+            r.fail("AUD011", sub, format!("seed {seed}: plane ({a}, {b}) out of range"));
+            continue;
+        }
+        if a == b {
+            r.fail("AUD011", sub, format!("seed {seed}: both paths on plane {a}"));
+        }
+        if sel(seed) != (a, b) {
+            r.fail("AUD011", sub, format!("seed {seed}: selector is not deterministic"));
+        }
+        first[a] += 1;
+        pairs.insert((a, b));
+    }
+    let (min, max) = (
+        first.iter().copied().min().unwrap_or(0),
+        first.iter().copied().max().unwrap_or(0),
+    );
+    if min != max {
+        r.fail(
+            "AUD011",
+            sub,
+            format!("first-plane counts {first:?} are skewed (balanced rotation picks each exactly {} times)",
+                rounds as usize / planes),
+        );
+    }
+    if pairs.len() != planes * (planes - 1) {
+        r.fail(
+            "AUD011",
+            sub,
+            format!("only {}/{} ordered plane pairs ever selected", pairs.len(),
+                planes * (planes - 1)),
+        );
+    }
+}
+
+/// AUD014: the joint TFC check over a sampled set of routed paths —
+/// 2-VL assignable and an acyclic channel-dependency graph.
+pub fn audit_tfc(r: &mut AuditReport, t: &Topology, sub: &str, paths: &[RoutedPath]) {
+    r.mark("AUD014");
+    if let Err(e) = verify_deadlock_free(t, paths) {
+        r.fail("AUD014", sub, e);
+    }
+}
+
+/// Sampled audit of a [`ClusterMap`]'s APR path construction: AUD001,
+/// AUD002, AUD012, AUD013 and AUD015 over a deterministic pair sample.
+pub fn audit_cluster_map(
+    r: &mut AuditReport,
+    t: &Topology,
+    map: &ClusterMap,
+    cfg: &AuditConfig,
+) {
+    let n = map.npu_count();
+    if n < 2 {
+        return;
+    }
+    let switched_only = !t
+        .links
+        .iter()
+        .any(|l| t.node(l.a).kind.is_npu() && t.node(l.b).kind.is_npu());
+    r.mark("AUD015");
+
+    // Deterministic stride walk over ordered pairs: anchors spread
+    // across the rank space, partners at coprime-ish offsets so the
+    // sample hits same-board, cross-board, cross-rack and cross-pod
+    // relations on every fabric size.
+    let mut pairs: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut i = 0usize;
+    while pairs.len() < cfg.max_pairs && i < cfg.max_pairs * 4 {
+        let a = (i * 13) % n;
+        let b = (a + 1 + (i * 29) % (n - 1)) % n;
+        if a != b {
+            pairs.insert((a, b));
+        }
+        i += 1;
+    }
+    for &(a, b) in &pairs {
+        let (na, nb) = (map.npus()[a], map.npus()[b]);
+        for sel in 0..cfg.sels {
+            let paths = map.pair_paths(a, b, sel, &[]);
+            let declared = map.pair_path_count(a, b, &[]);
+            if paths.len() != declared {
+                r.fail(
+                    "AUD015",
+                    &t.name,
+                    format!("pair {a}-{b} sel {sel}: {} paths but pair_path_count says {declared}",
+                        paths.len()),
+                );
+            }
+            let sub = format!("{} pair {a}-{b} sel {sel}", t.name);
+            audit_path_family(r, t, &sub, &paths, na, nb, switched_only);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// DAG rules (AUD020/021/022/023/024/025)
+// ---------------------------------------------------------------------
+
+/// Structural DAG check shared by [`audit_stage_dag`] and the
+/// `debug_assert!` self-audit in [`crate::sim::schedule::run_with`]:
+/// deps in-range and non-self, a root exists, no cycle.
+pub fn stage_dag_check(dag: &StageDag) -> Result<(), String> {
+    let n = dag.stages.len();
+    for (i, s) in dag.stages.iter().enumerate() {
+        for &d in &s.deps {
+            if d >= n {
+                return Err(format!("stage {i} ('{}') dep {d} out of range (n={n})", s.name));
+            }
+            if d == i {
+                return Err(format!("stage {i} ('{}') depends on itself", s.name));
+            }
+        }
+    }
+    if n > 0 && !dag.stages.iter().any(|s| s.deps.is_empty()) {
+        return Err("no root stage (every stage has deps)".into());
+    }
+    // Kahn's algorithm; dep edges run d → dependent.
+    let mut indeg = vec![0usize; n];
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, s) in dag.stages.iter().enumerate() {
+        indeg[i] = s.deps.len();
+        for &d in &s.deps {
+            out[d].push(i);
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut done = 0;
+    while let Some(v) = queue.pop() {
+        done += 1;
+        for &w in &out[v] {
+            indeg[w] -= 1;
+            if indeg[w] == 0 {
+                queue.push(w);
+            }
+        }
+    }
+    if done != n {
+        return Err(format!("cycle among {} stages (topo-sorted only {done})", n));
+    }
+    Ok(())
+}
+
+/// AUD020 + AUD021 for a [`StageDag`].
+pub fn audit_stage_dag(r: &mut AuditReport, sub: &str, dag: &StageDag) {
+    r.mark("AUD020");
+    r.mark("AUD021");
+    let n = dag.stages.len();
+    let mut structural_ok = true;
+    for (i, s) in dag.stages.iter().enumerate() {
+        for &d in &s.deps {
+            if d >= n {
+                r.fail("AUD021", sub, format!("stage {i} ('{}') dep {d} out of range", s.name));
+                structural_ok = false;
+            } else if d == i {
+                r.fail("AUD021", sub, format!("stage {i} ('{}') depends on itself", s.name));
+                structural_ok = false;
+            }
+        }
+    }
+    if n > 0 && !dag.stages.iter().any(|s| s.deps.is_empty()) {
+        r.fail("AUD021", sub, "no root stage (every stage has deps)".into());
+        return;
+    }
+    if !structural_ok {
+        // Out-of-range / self deps make the cycle check unreliable;
+        // AUD021 already flagged the DAG.
+        return;
+    }
+    if let Err(e) = stage_dag_check(dag) {
+        r.fail("AUD020", sub, e);
+    }
+}
+
+/// AUD022: every lazy stage's declared metadata must agree with what
+/// its builder actually produces (flow count exactly, payload bytes to
+/// relative 1e-6).
+pub fn audit_stage_dag_flows(r: &mut AuditReport, t: &Topology, sub: &str, dag: &StageDag) {
+    r.mark("AUD022");
+    for (i, s) in dag.stages.iter().enumerate() {
+        if !s.is_lazy() {
+            continue;
+        }
+        match s.try_materialize_flows(t) {
+            Err(e) => r.fail("AUD022", sub, format!("stage {i}: {e}")),
+            Ok(flows) => {
+                let built: f64 = flows.iter().map(|f| f.bytes).sum();
+                let declared = s.flow_bytes();
+                if (built - declared).abs() > 1e-6 * declared.abs().max(1.0) {
+                    r.fail(
+                        "AUD022",
+                        sub,
+                        format!("stage {i} ('{}') declares {declared} B but builds {built} B",
+                            s.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// AUD023: the iteration DAG's declared wire bytes, grouped by stage
+/// family, must equal the Table 1 analytic volumes — computed here
+/// *independently* from [`analyze`] rather than by re-running the DAG
+/// builder's arithmetic.
+///
+/// Expected totals (per-iteration, whole cluster):
+/// * TP/SP/EP: `npus × row.total × ccu_exposed / pp` — Table 1 prices
+///   the full model per participating NPU; each NPU holds `1/pp` of
+///   the layers.
+/// * DP: `npus × row.total × dp_exposed` (reduce-scatter + all-gather
+///   halves).
+/// * PP: `2 · microbatches · (pp − 1) · dp · act` where
+///   `act = tokens_per_microbatch × hidden × BYTES_PER_ACT` — the
+///   boundary tensor goes once per TP group (the documented deliberate
+///   `act/(sp·tp)`-per-pair exception to Table 1's `act/sp`).
+/// * compute stages carry zero wire bytes; no other stage names may
+///   appear.
+pub fn audit_iteration_bytes(
+    r: &mut AuditReport,
+    sub: &str,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    spec: &IterationSpec,
+    dag: &StageDag,
+) {
+    r.mark("AUD023");
+    let traffic = analyze(m, p);
+    let npus = p.npus() as f64;
+    let pp = p.pp as f64;
+    let expect_sliced = |tech: &str, fan: usize| -> f64 {
+        if fan < 2 {
+            return 0.0;
+        }
+        traffic
+            .row(tech)
+            .map_or(0.0, |row| npus / pp * row.total * spec.ccu_exposed)
+    };
+    let mut want: BTreeMap<&str, f64> = BTreeMap::new();
+    want.insert("tp", expect_sliced("TP", p.tp));
+    want.insert("sp", expect_sliced("SP", p.sp));
+    want.insert("ep", expect_sliced("EP", p.ep));
+    want.insert(
+        "dp",
+        if p.dp >= 2 {
+            traffic
+                .row("DP")
+                .map_or(0.0, |row| npus * row.total * spec.dp_exposed)
+        } else {
+            0.0
+        },
+    );
+    let act = p.tokens_per_microbatch * m.hidden as f64 * BYTES_PER_ACT;
+    want.insert(
+        "pp",
+        2.0 * p.microbatches as f64 * (p.pp - 1) as f64 * p.dp as f64 * act,
+    );
+
+    let mut got: BTreeMap<&str, f64> = BTreeMap::new();
+    for s in &dag.stages {
+        let b = s.flow_bytes();
+        let family = if s.name == "dp-rs" || s.name == "dp-ag" {
+            "dp"
+        } else if s.name.ends_with("-tp") {
+            "tp"
+        } else if s.name.ends_with("-sp") {
+            "sp"
+        } else if s.name.ends_with("-ep") {
+            "ep"
+        } else if s.name.ends_with("-send") {
+            "pp"
+        } else if s.name.ends_with("-comp") {
+            if b != 0.0 {
+                r.fail("AUD023", sub, format!("compute stage '{}' carries {b} wire bytes", s.name));
+            }
+            continue;
+        } else {
+            r.fail("AUD023", sub, format!("unrecognized stage '{}' in iteration DAG", s.name));
+            continue;
+        };
+        *got.entry(family).or_insert(0.0) += b;
+    }
+    for (family, &w) in &want {
+        let g = got.get(family).copied().unwrap_or(0.0);
+        if (g - w).abs() > 1e-6 * w.abs().max(1.0) {
+            r.fail(
+                "AUD023",
+                sub,
+                format!("{family} bytes: DAG carries {g:.3e}, Table 1 implies {w:.3e}"),
+            );
+        }
+    }
+}
+
+/// AUD024: the checkpoint flow DAG must be one stage shipping exactly
+/// `bytes_per_rank` per workload NPU, every flow running NPU ↔ storage.
+pub fn audit_checkpoint_dag(
+    r: &mut AuditReport,
+    t: &Topology,
+    sub: &str,
+    map: &ClusterMap,
+    storage: &[NodeId],
+    bytes_per_rank: f64,
+    to_storage: bool,
+    dag: &StageDag,
+) {
+    r.mark("AUD024");
+    if dag.stages.len() != 1 {
+        r.fail("AUD024", sub, format!("{} stages (expected 1)", dag.stages.len()));
+        return;
+    }
+    let flows = match dag.stages[0].try_materialize_flows(t) {
+        Ok(f) => f,
+        Err(e) => {
+            r.fail("AUD024", sub, e);
+            return;
+        }
+    };
+    if flows.len() != map.npu_count() {
+        r.fail(
+            "AUD024",
+            sub,
+            format!("{} flows for {} workload NPUs", flows.len(), map.npu_count()),
+        );
+    }
+    let npus: BTreeSet<NodeId> = map.npus().iter().copied().collect();
+    let stores: BTreeSet<NodeId> = storage.iter().copied().collect();
+    let mut seen_rank: BTreeSet<NodeId> = BTreeSet::new();
+    for f in &flows {
+        if (f.bytes - bytes_per_rank).abs() > 1e-6 * bytes_per_rank.abs().max(1.0) {
+            r.fail(
+                "AUD024",
+                sub,
+                format!("flow {} → {} carries {} B, not bytes_per_rank {}", f.src, f.dst,
+                    f.bytes, bytes_per_rank),
+            );
+        }
+        let (rank, store) = if to_storage { (f.src, f.dst) } else { (f.dst, f.src) };
+        if !npus.contains(&rank) {
+            r.fail("AUD024", sub, format!("flow endpoint {rank} is not a workload NPU"));
+        } else if !seen_rank.insert(rank) {
+            r.fail("AUD024", sub, format!("NPU {rank} checkpoints twice"));
+        }
+        if !stores.contains(&store) {
+            r.fail("AUD024", sub, format!("flow endpoint {store} is not a storage node"));
+        }
+    }
+}
+
+/// AUD025: no flow of a shrunk iteration DAG may *terminate* at a
+/// dead-replica NPU (dead nodes may still relay — APR draws relays
+/// from outside the communicating group).
+pub fn audit_shrunk_dag(
+    r: &mut AuditReport,
+    t: &Topology,
+    sub: &str,
+    dag: &StageDag,
+    dead: &BTreeSet<NodeId>,
+) {
+    r.mark("AUD025");
+    for (i, s) in dag.stages.iter().enumerate() {
+        match s.try_materialize_flows(t) {
+            Err(e) => r.fail("AUD025", sub, format!("stage {i}: {e}")),
+            Ok(flows) => {
+                for f in flows {
+                    if dead.contains(&f.src) || dead.contains(&f.dst) {
+                        r.fail(
+                            "AUD025",
+                            sub,
+                            format!("stage {i} ('{}') flow {} → {} touches a dead replica",
+                                s.name, f.src, f.dst),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault / replica rules (AUD030/031/032)
+// ---------------------------------------------------------------------
+
+/// AUD030: fault timeline well-ordered (non-decreasing timestamps — the
+/// same-instant group semantics depend on plan order, so an unsorted
+/// plan silently reorders blast radii through the event heap), with
+/// finite parameters and in-range link/node ids.
+pub fn audit_fault_plan(r: &mut AuditReport, t: &Topology, sub: &str, plan: &FaultPlan) {
+    r.mark("AUD030");
+    let mut last = 0.0f64;
+    for (i, (at, ev)) in plan.events.iter().enumerate() {
+        if !(at.is_finite() && *at >= 0.0) {
+            r.fail("AUD030", sub, format!("event {i} at t={at}"));
+        } else if *at < last {
+            r.fail(
+                "AUD030",
+                sub,
+                format!("event {i} at t={at} after t={last} (timeline not sorted)"),
+            );
+        } else {
+            last = *at;
+        }
+        let check_link = |r: &mut AuditReport, l: crate::topology::LinkId| {
+            if l.idx() >= t.link_count() {
+                r.fail("AUD030", sub, format!("event {i} names link {l} outside topology"));
+            }
+        };
+        match ev {
+            FaultEvent::LinkDown(l) | FaultEvent::LinkUp(l) => check_link(r, *l),
+            FaultEvent::LinkCapacity(l, gb_s) => {
+                check_link(r, *l);
+                if !(gb_s.is_finite() && *gb_s >= 0.0) {
+                    r.fail("AUD030", sub, format!("event {i} capacity {gb_s}"));
+                }
+            }
+            FaultEvent::NpuDown { npu, backup } => {
+                if npu.idx() >= t.node_count() {
+                    r.fail("AUD030", sub, format!("event {i} names node {npu} outside topology"));
+                }
+                if let Some((b, act)) = backup {
+                    if b.idx() >= t.node_count() {
+                        r.fail("AUD030", sub, format!("event {i} backup {b} outside topology"));
+                    }
+                    if !(act.is_finite() && *act >= 0.0) {
+                        r.fail("AUD030", sub, format!("event {i} activation {act}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// AUD031: a sampled blast group must stay inside its declared
+/// [`FaultDomains`] radius — some single domain element of the group's
+/// class contains every event.
+pub fn audit_fault_group(
+    r: &mut AuditReport,
+    sub: &str,
+    d: &FaultDomains,
+    g: &FaultGroup,
+) {
+    r.mark("AUD031");
+    let links: Vec<crate::topology::LinkId> = g
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            FaultEvent::LinkDown(l) | FaultEvent::LinkUp(l) | FaultEvent::LinkCapacity(l, _) => {
+                Some(*l)
+            }
+            FaultEvent::NpuDown { .. } => None,
+        })
+        .collect();
+    let npus: Vec<(NodeId, Option<NodeId>)> = g
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            FaultEvent::NpuDown { npu, backup } => Some((*npu, backup.map(|(b, _)| b))),
+            _ => None,
+        })
+        .collect();
+    match g.class {
+        BlastClass::SingleLink => {
+            if links.len() != 1 || !npus.is_empty() {
+                r.fail("AUD031", sub, format!("SingleLink group has {} links, {} NPU events",
+                    links.len(), npus.len()));
+            }
+            for l in &links {
+                if !d.links().contains(l) {
+                    r.fail("AUD031", sub, format!("link {l} outside the link domain"));
+                }
+            }
+        }
+        BlastClass::SwitchDeath => {
+            let fits = d
+                .switches()
+                .iter()
+                .any(|(_, inc)| links.iter().all(|l| inc.contains(l)));
+            if links.is_empty() || !npus.is_empty() || !fits {
+                r.fail(
+                    "AUD031",
+                    sub,
+                    format!("SwitchDeath links {links:?} are not one switch's incident set"),
+                );
+            }
+        }
+        BlastClass::BackplanePartition => {
+            let fits = d
+                .partitions()
+                .iter()
+                .any(|part| !links.is_empty() && links.iter().all(|l| part.contains(l)));
+            if !fits {
+                r.fail(
+                    "AUD031",
+                    sub,
+                    format!("partition blast {links:?} matches no declared backplane partition"),
+                );
+            }
+        }
+        BlastClass::RackPower | BlastClass::NpuDeath => {
+            let fits = (0..d.rack_count()).any(|i| {
+                let (rack_npus, backup, switch_links) = d.rack_domain(i);
+                links.iter().all(|l| switch_links.contains(l))
+                    && npus.iter().all(|(n, b)| {
+                        (rack_npus.contains(n) || Some(*n) == backup)
+                            && b.map_or(true, |b| Some(b) == backup)
+                    })
+            });
+            if !fits || npus.is_empty() {
+                r.fail(
+                    "AUD031",
+                    sub,
+                    format!("{:?} blast ({} links, {} NPUs) fits no rack domain", g.class,
+                        links.len(), npus.len()),
+                );
+            }
+        }
+    }
+}
+
+/// AUD032: the replica map must partition the workload NPUs into `dp`
+/// equal replicas — every mapped NPU in exactly one replica, nothing
+/// missing, nothing extra.
+pub fn audit_replica_map(
+    r: &mut AuditReport,
+    sub: &str,
+    map: &ClusterMap,
+    p: &ParallelismConfig,
+    rm: &ReplicaMap,
+) {
+    r.mark("AUD032");
+    if rm.dp != p.dp {
+        r.fail("AUD032", sub, format!("replica map has dp={}, config says {}", rm.dp, p.dp));
+    }
+    if rm.len() != map.npu_count() {
+        r.fail(
+            "AUD032",
+            sub,
+            format!("replica map covers {} nodes, workload has {}", rm.len(), map.npu_count()),
+        );
+    }
+    let mut sizes = vec![0usize; rm.dp.max(1)];
+    for &n in map.npus() {
+        match rm.replica_of(n) {
+            None => r.fail("AUD032", sub, format!("workload NPU {n} has no replica")),
+            Some(k) if k >= rm.dp => {
+                r.fail("AUD032", sub, format!("NPU {n} in replica {k} ≥ dp {}", rm.dp))
+            }
+            Some(k) => sizes[k] += 1,
+        }
+    }
+    if rm.dp > 0 && map.npu_count() % rm.dp == 0 {
+        let each = map.npu_count() / rm.dp;
+        for (k, &s) in sizes.iter().enumerate() {
+            if s != each {
+                r.fail("AUD032", sub, format!("replica {k} has {s} ranks, expected {each}"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The bake-off seam
+// ---------------------------------------------------------------------
+
+/// Full static audit of one fabric: topology rules, sampled APR path
+/// rules, and the balanced-rotation lint on the shared
+/// [`hrs_plane_pair`] selector. This is the eligibility gate a
+/// candidate topology must pass before entering the ROADMAP item-3
+/// bake-off: wire it into a [`ClusterMap`], call `audit_fabric`, and a
+/// clean report admits it to the tournament.
+pub fn audit_fabric(t: &Topology, map: &ClusterMap, cfg: &AuditConfig) -> AuditReport {
+    let mut r = AuditReport::new();
+    audit_topology(&mut r, t);
+    audit_cluster_map(&mut r, t, map, cfg);
+    for planes in [2usize, 4, 8] {
+        audit_plane_selector(&mut r, &format!("hrs_plane_pair/{planes}"), planes, &|s| {
+            hrs_plane_pair(s, planes)
+        });
+    }
+    r
+}

@@ -1,0 +1,32 @@
+//! Static model verification: machine-checkable invariants over the
+//! *constructed* model — topologies, path sets, stage DAGs, fault
+//! plans — without simulating anything.
+//!
+//! Every PR so far validated its wiring with ad-hoc out-of-tree
+//! mirrors (per-hop link existence, lane budgets, byte-hop
+//! conservation, balanced rotations). [`audit`] moves those checks
+//! into the repo as a first-class static-analysis pass: a catalog of
+//! rules with stable `AUD0xx` diagnostic codes and a structured
+//! [`audit::AuditReport`], wired three ways —
+//!
+//! 1. `debug_assert!`-gated self-audits in the
+//!    [`crate::workload::ClusterMap`] / [`crate::sim::StageDag`]
+//!    constructors,
+//! 2. the `rust/tests/audit.rs` suite running the full catalog over
+//!    every built-in fabric,
+//! 3. the `audit_smoke` bench, which also **mutation-tests the auditor
+//!    itself** ([`mutate`]): seeded defects must each be caught by
+//!    their specific code, asserted in CI via `BENCH_audit.json`.
+//!
+//! The audit is also the eligibility gate for the ROADMAP item-3
+//! topology bake-off: a third-party fabric bolted onto `ClusterMap`
+//! enters the tournament only if [`audit::audit_fabric`] comes back
+//! clean. See `docs/AUDIT.md` for the rule catalog with paper
+//! provenance.
+
+pub mod audit;
+pub mod mutate;
+
+pub use audit::{
+    audit_fabric, AuditConfig, AuditReport, Finding, CATALOG,
+};

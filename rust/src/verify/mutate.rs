@@ -1,0 +1,349 @@
+//! The seeded-defect harness that mutation-tests the auditor itself.
+//!
+//! Each [`Mutation`] builds a model with exactly one planted defect and
+//! runs the relevant audit rules over it. The contract, asserted by
+//! `rust/tests/audit.rs` and the `audit_smoke` bench via
+//! `BENCH_audit.json`:
+//!
+//! * the report **contains** the mutation's expected `AUD0xx` code
+//!   (the defect class is caught), and
+//! * **every** finding in the report carries that code (no collateral
+//!   noise — a mutation that trips unrelated rules would mask false
+//!   positives).
+//!
+//! An auditor change that silently stops detecting a defect class
+//! breaks `mutations_caught == mutations_seeded` in CI.
+
+use std::collections::BTreeSet;
+
+use crate::reliability::faultgen::{BlastClass, FaultDomains, FaultGroup};
+use crate::reliability::montecarlo::ReplicaMap;
+use crate::routing::apr::{PathKind, PathSet, RoutedPath};
+use crate::sim::fault::{FaultEvent, FaultPlan};
+use crate::sim::flow::FlowSpec;
+use crate::sim::schedule::{Stage, StageDag};
+use crate::topology::rack::{ubmesh_rack, RackConfig};
+use crate::topology::variants::rack_clos;
+use crate::topology::{
+    CableClass, Link, LinkId, LinkRole, Location, NodeKind, Topology,
+};
+use crate::workload::models::by_name;
+use crate::workload::step::{checkpoint_flow_dag, iteration_dag, IterationSpec, RankOrder};
+use crate::workload::{ClusterMap, ParallelismConfig};
+
+use super::audit::{
+    audit_checkpoint_dag, audit_fault_group, audit_fault_plan, audit_iteration_bytes,
+    audit_path, audit_path_family, audit_path_set, audit_plane_selector,
+    audit_replica_map, audit_shrunk_dag, audit_stage_dag, audit_stage_dag_flows,
+    audit_topology, AuditReport,
+};
+
+/// One planted defect: `run()` builds the defective model and audits
+/// it; the resulting report must contain `expect` and nothing else.
+pub struct Mutation {
+    pub name: &'static str,
+    /// The diagnostic code this defect class must be caught by.
+    pub expect: &'static str,
+    pub run: fn() -> AuditReport,
+}
+
+fn rack_fixture() -> (Topology, ClusterMap) {
+    let (t, h) = ubmesh_rack(&RackConfig::default());
+    let map = ClusterMap::rack(&h);
+    (t, map)
+}
+
+fn rack_parallelism(dp: usize) -> ParallelismConfig {
+    // 64-NPU rack: tp·sp·pp·dp = 64 for every dp in {2, 4}.
+    ParallelismConfig {
+        tp: 16 / dp,
+        sp: 2,
+        ep: 1,
+        pp: 2,
+        dp,
+        microbatches: 2,
+        tokens_per_microbatch: 4096.0,
+    }
+}
+
+// Each mutation is a standalone fn so `Mutation::run` stays a plain
+// fn pointer (no captures, trivially Send + 'static for the bench).
+
+/// M1: a claimed path hops between two non-adjacent NPUs.
+fn m_path_dead_hop() -> AuditReport {
+    let (t, map) = rack_fixture();
+    // npus[0] = board 0 slot 0, npus[9] = board 1 slot 1: neither the
+    // board X-mesh nor the same-slot Y-mesh joins them.
+    let (a, b) = (map.npus()[0], map.npus()[9]);
+    let mut r = AuditReport::new();
+    audit_path(&mut r, &t, "m:path-dead-hop", &[a, b], a, b);
+    r
+}
+
+/// M2: a path revisits a node (every hop individually live).
+fn m_path_loop() -> AuditReport {
+    let (t, map) = rack_fixture();
+    let (n0, n1, n2) = (map.npus()[0], map.npus()[1], map.npus()[2]);
+    let mut r = AuditReport::new();
+    audit_path(&mut r, &t, "m:path-loop", &[n0, n1, n0, n2], n0, n2);
+    r
+}
+
+/// M3: a 40-lane cable on an x32-budget CPU port.
+fn m_lane_overrun() -> AuditReport {
+    let mut t = Topology::new("m:lane-overrun");
+    let a = t.add_node(NodeKind::Cpu, Location::default());
+    let b = t.add_node(NodeKind::Hrs, Location::default());
+    t.add_link(a, b, 40, CableClass::Backplane, LinkRole::Backplane, 0.1);
+    let mut r = AuditReport::new();
+    audit_topology(&mut r, &t);
+    r
+}
+
+/// M19: a link appended to the link table without adjacency entries
+/// (the multigraph views disagree).
+fn m_phantom_link() -> AuditReport {
+    let (mut t, map) = rack_fixture();
+    t.links.push(Link {
+        a: map.npus()[0],
+        b: map.npus()[9],
+        lanes: 2,
+        class: CableClass::PassiveElectrical,
+        role: LinkRole::BoardX,
+        length_m: 1.0,
+    });
+    let mut r = AuditReport::new();
+    audit_topology(&mut r, &t);
+    r
+}
+
+/// M4: a NaN cable length slipped into the link table.
+fn m_nan_length() -> AuditReport {
+    let (mut t, _) = rack_fixture();
+    t.links[0].length_m = f64::NAN;
+    let mut r = AuditReport::new();
+    audit_topology(&mut r, &t);
+    r
+}
+
+/// M5: path-set weights carrying a negative entry (and summing ≠ 1).
+fn m_skewed_weights() -> AuditReport {
+    let (t, map) = rack_fixture();
+    let (n0, n1, n2) = (map.npus()[0], map.npus()[1], map.npus()[2]);
+    let ps = PathSet {
+        paths: vec![
+            RoutedPath { nodes: vec![n0, n1], kind: PathKind::Direct, dims: vec![0] },
+            RoutedPath { nodes: vec![n0, n2], kind: PathKind::Direct, dims: vec![0] },
+        ],
+        weights: vec![1.3, -0.3],
+    };
+    let mut r = AuditReport::new();
+    audit_path_set(&mut r, &t, "m:skewed-weights", &ps);
+    r
+}
+
+/// M6: the PR 3 bug as a selector — a multiplicative hash whose two
+/// picks collide on the same plane for many seeds.
+fn m_hash_selector() -> AuditReport {
+    let mut r = AuditReport::new();
+    audit_plane_selector(&mut r, "m:hash-selector", 4, &|s| {
+        let h = s.wrapping_mul(2654435761);
+        ((h % 4) as usize, ((h >> 7) % 4) as usize)
+    });
+    r
+}
+
+/// M7: a "multi-path" family that is the same path twice.
+fn m_duplicate_paths() -> AuditReport {
+    let (t, map) = rack_fixture();
+    let (n0, n1) = (map.npus()[0], map.npus()[1]);
+    let p = vec![n0, n1];
+    let mut r = AuditReport::new();
+    audit_path_family(&mut r, &t, "m:duplicate-paths", &[p.clone(), p], n0, n1, false);
+    r
+}
+
+/// M8: a Clos-rack path relaying through another NPU instead of a
+/// switch.
+fn m_npu_relay_on_clos() -> AuditReport {
+    let (t, h) = rack_clos();
+    let path = vec![h.npus[0], h.hrs[0], h.npus[2], h.hrs[1], h.npus[1]];
+    let mut r = AuditReport::new();
+    audit_path_family(&mut r, &t, "m:npu-relay", &[path], h.npus[0], h.npus[1], true);
+    r
+}
+
+/// M9: a dependency cycle behind a legitimate root stage.
+fn m_dag_cycle() -> AuditReport {
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("root"));
+    dag.push(Stage::new("a"));
+    dag.push(Stage::new("b"));
+    dag.stages[1].deps = vec![2];
+    dag.stages[2].deps = vec![1];
+    let mut r = AuditReport::new();
+    audit_stage_dag(&mut r, "m:dag-cycle", &dag);
+    r
+}
+
+/// M10: a dependency on a stage index that does not exist.
+fn m_dep_out_of_range() -> AuditReport {
+    let mut dag = StageDag::default();
+    dag.push(Stage::new("root"));
+    dag.push(Stage::new("a"));
+    dag.stages[1].deps = vec![7];
+    let mut r = AuditReport::new();
+    audit_stage_dag(&mut r, "m:dep-out-of-range", &dag);
+    r
+}
+
+/// M11: a lazy stage declaring 5 flows / 5 kB whose builder produces 2.
+fn m_lazy_count_lie() -> AuditReport {
+    let (t, map) = rack_fixture();
+    let (n0, n1) = (map.npus()[0], map.npus()[1]);
+    let dag = StageDag::chain(vec![Stage::new("lying").with_lazy_flows(
+        5,
+        5_000.0,
+        move |t| {
+            vec![
+                FlowSpec::along(t, &[n0, n1], 500.0),
+                FlowSpec::along(t, &[n1, n0], 500.0),
+            ]
+        },
+    )]);
+    let mut r = AuditReport::new();
+    audit_stage_dag_flows(&mut r, &t, "m:lazy-count-lie", &dag);
+    r
+}
+
+/// M12: an extra TP stage smuggled into the iteration DAG, inflating
+/// the wire bytes past the Table 1 volume.
+fn m_byte_inflation() -> AuditReport {
+    let (t, map) = rack_fixture();
+    let m = by_name("llama-70b").unwrap();
+    let p = rack_parallelism(2);
+    let spec = IterationSpec::default();
+    let mut dag = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &spec);
+    let (n0, n1) = (map.npus()[0], map.npus()[1]);
+    dag.push(Stage::new("s0-f9-tp").with_flows(vec![FlowSpec::along(&t, &[n0, n1], 1e6)]));
+    let mut r = AuditReport::new();
+    audit_iteration_bytes(&mut r, "m:byte-inflation", &m, &p, &spec, &dag);
+    r
+}
+
+/// M13: a fault timeline with events out of order.
+fn m_unsorted_plan() -> AuditReport {
+    let (t, _) = rack_fixture();
+    let plan = FaultPlan {
+        events: vec![
+            (50.0, FaultEvent::LinkDown(LinkId(0))),
+            (10.0, FaultEvent::LinkUp(LinkId(0))),
+        ],
+        recovery: None,
+    };
+    let mut r = AuditReport::new();
+    audit_fault_plan(&mut r, &t, "m:unsorted-plan", &plan);
+    r
+}
+
+/// M14: a backplane-partition blast on a fabric whose domains declare
+/// no backplane partitions at all.
+fn m_blast_outside_domain() -> AuditReport {
+    let (t, h) = rack_clos();
+    let d = FaultDomains::flat(&t, &h.npus, &h.hrs);
+    let g = FaultGroup {
+        class: BlastClass::BackplanePartition,
+        events: vec![FaultEvent::LinkDown(LinkId(0))],
+        aborts: false,
+    };
+    let mut r = AuditReport::new();
+    audit_fault_group(&mut r, "m:blast-outside-domain", &d, &g);
+    r
+}
+
+/// M15: a replica map built for dp=4 audited against a dp=2 config.
+fn m_dp_mismatch() -> AuditReport {
+    let (_, map) = rack_fixture();
+    let rm = ReplicaMap::new(&map, &rack_parallelism(4), RankOrder::TopologyAware);
+    let mut r = AuditReport::new();
+    audit_replica_map(&mut r, "m:dp-mismatch", &map, &rack_parallelism(2), &rm);
+    r
+}
+
+/// M16: a routed path whose dimension order restarts twice — TFC needs
+/// 3 VLs, one more than the UB-Mesh budget.
+fn m_vl_overflow() -> AuditReport {
+    let mut t = Topology::new("m:vl-overflow");
+    let n: Vec<_> = (0..6)
+        .map(|i| t.add_node(NodeKind::Npu, Location::new(0, 0, 0, 0, i as u8)))
+        .collect();
+    for w in n.windows(2) {
+        t.add_link(w[0], w[1], 2, CableClass::PassiveElectrical, LinkRole::BoardX, 1.0);
+    }
+    let path = RoutedPath {
+        nodes: n,
+        kind: PathKind::Detour,
+        dims: vec![0, 1, 0, 1, 0],
+    };
+    let mut r = AuditReport::new();
+    super::audit::audit_tfc(&mut r, &t, "m:vl-overflow", &[path]);
+    r
+}
+
+/// M17: a checkpoint DAG that silently dropped one rank's flow.
+fn m_ckpt_flow_dropped() -> AuditReport {
+    let (mut t, map) = rack_fixture();
+    let storage = vec![t.add_node(NodeKind::Hrs, Location::default())];
+    // Attach storage behind the rack's inter-rack LRS layer so every
+    // rank has a switch path to it.
+    for lrs in t.nodes_of_kind(NodeKind::Lrs) {
+        t.add_link(lrs, storage[0], 2, CableClass::Optical, LinkRole::Dcn, 100.0);
+    }
+    let dag = checkpoint_flow_dag(&t, &map, &storage, 10e6, true);
+    let mut flows = dag.stages[0].eager_flows().unwrap().to_vec();
+    flows.pop();
+    let broken = StageDag::chain(vec![Stage::new("ckpt-write").with_flows(flows)]);
+    let mut r = AuditReport::new();
+    audit_checkpoint_dag(&mut r, &t, "m:ckpt-flow-dropped", &map, &storage, 10e6, true, &broken);
+    r
+}
+
+/// M18: a DAG claimed to be shrunk while a dead replica's rank still
+/// terminates flows.
+fn m_shrink_skipped() -> AuditReport {
+    let (t, map) = rack_fixture();
+    let m = by_name("llama-70b").unwrap();
+    let p = rack_parallelism(2);
+    let dag = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &IterationSpec::default());
+    let dead: BTreeSet<_> = [map.npus()[0]].into_iter().collect();
+    let mut r = AuditReport::new();
+    audit_shrunk_dag(&mut r, &t, "m:shrink-skipped", &dag, &dead);
+    r
+}
+
+/// The full seeded-defect matrix, one entry per defect class. Order is
+/// stable (sorted by expected code) so `BENCH_audit.json` diffs
+/// cleanly.
+pub fn seeded_mutations() -> Vec<Mutation> {
+    vec![
+        Mutation { name: "path-dead-hop", expect: "AUD001", run: m_path_dead_hop },
+        Mutation { name: "path-loop", expect: "AUD002", run: m_path_loop },
+        Mutation { name: "lane-overrun", expect: "AUD003", run: m_lane_overrun },
+        Mutation { name: "phantom-link", expect: "AUD004", run: m_phantom_link },
+        Mutation { name: "nan-length", expect: "AUD005", run: m_nan_length },
+        Mutation { name: "skewed-weights", expect: "AUD010", run: m_skewed_weights },
+        Mutation { name: "hash-selector", expect: "AUD011", run: m_hash_selector },
+        Mutation { name: "duplicate-paths", expect: "AUD012", run: m_duplicate_paths },
+        Mutation { name: "npu-relay-on-clos", expect: "AUD013", run: m_npu_relay_on_clos },
+        Mutation { name: "vl-overflow", expect: "AUD014", run: m_vl_overflow },
+        Mutation { name: "dag-cycle", expect: "AUD020", run: m_dag_cycle },
+        Mutation { name: "dep-out-of-range", expect: "AUD021", run: m_dep_out_of_range },
+        Mutation { name: "lazy-count-lie", expect: "AUD022", run: m_lazy_count_lie },
+        Mutation { name: "byte-inflation", expect: "AUD023", run: m_byte_inflation },
+        Mutation { name: "ckpt-flow-dropped", expect: "AUD024", run: m_ckpt_flow_dropped },
+        Mutation { name: "shrink-skipped", expect: "AUD025", run: m_shrink_skipped },
+        Mutation { name: "unsorted-plan", expect: "AUD030", run: m_unsorted_plan },
+        Mutation { name: "blast-outside-domain", expect: "AUD031", run: m_blast_outside_domain },
+        Mutation { name: "dp-mismatch", expect: "AUD032", run: m_dp_mismatch },
+    ]
+}

@@ -115,6 +115,7 @@ impl ClusterMap {
             npus: h.npus.clone(),
             fabric: Fabric::ClosRack { hrs: h.hrs.clone() },
         }
+        .checked()
     }
 
     /// The Fig 16-b 1D-FM-A variant
@@ -133,6 +134,7 @@ impl ClusterMap {
                 slots: 8,
             },
         }
+        .checked()
     }
 
     /// The Fig 16-c 1D-FM-B variant
@@ -147,6 +149,7 @@ impl ClusterMap {
                 slots: 8,
             },
         }
+        .checked()
     }
 
     fn from_racks(
@@ -176,6 +179,22 @@ impl ClusterMap {
                 planes,
             },
         }
+        .checked()
+    }
+
+    /// The constructor self-audit (debug builds only): the rank order
+    /// must be a duplicate-free, non-empty NPU list — the premise of
+    /// every `verify::audit` path and replica rule downstream.
+    fn checked(self) -> ClusterMap {
+        #[cfg(debug_assertions)]
+        {
+            debug_assert!(!self.npus.is_empty(), "cluster map with no NPUs");
+            let mut seen = std::collections::BTreeSet::new();
+            for n in &self.npus {
+                debug_assert!(seen.insert(*n), "NPU {n} appears twice in rank order");
+            }
+        }
+        self
     }
 
     /// NPUs in rank order.
@@ -691,7 +710,7 @@ mod tests {
             assert_paths_physical(&t, &map, a, b, 0);
             let paths = map.pair_paths(a, b, 0, &[]);
             assert_eq!(paths.len(), 4);
-            let mids: std::collections::HashSet<NodeId> =
+            let mids: std::collections::BTreeSet<NodeId> =
                 paths.iter().map(|p| p[1]).collect();
             assert_eq!(mids.len(), 4, "four distinct HRS");
         }
@@ -714,7 +733,7 @@ mod tests {
                 let paths = map.pair_paths(a, b, sel, &[]);
                 assert_eq!(paths.len(), 4);
                 assert_eq!(paths[0].len(), 4, "direct attach-LRS pair route");
-                let mids: std::collections::HashSet<NodeId> =
+                let mids: std::collections::BTreeSet<NodeId> =
                     paths[1..].iter().map(|p| p[2]).collect();
                 assert_eq!(mids.len(), 3, "three distinct relay LRS");
                 assert!(!mids.contains(&h.lrs[a / 2]));
@@ -734,7 +753,7 @@ mod tests {
                 assert_paths_physical(&t, &map, a, b, sel);
                 let paths = map.pair_paths(a, b, sel, &[]);
                 assert_eq!(paths.len(), 4);
-                let mids: std::collections::HashSet<NodeId> =
+                let mids: std::collections::BTreeSet<NodeId> =
                     paths.iter().map(|p| p[1]).collect();
                 assert_eq!(mids.len(), 4, "four distinct HRS");
                 assert!(mids.iter().all(|m| h.hrs.contains(m)));

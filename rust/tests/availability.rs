@@ -245,7 +245,7 @@ fn oracle_band_and_absorption_boundary() {
 /// still rescaled.
 #[test]
 fn mission_repair_plans_fully_restore_the_fabric() {
-    use std::collections::{HashMap, HashSet};
+    use std::collections::{BTreeMap, BTreeSet};
     use ubmesh::reliability::repair::RepairConfig;
     use ubmesh::sim::fault::FaultEvent;
     use ubmesh::topology::LinkId;
@@ -286,8 +286,8 @@ fn mission_repair_plans_fully_restore_the_fabric() {
     // …and replaying it through the link state machine ends healthy.
     let mut evs: Vec<(f64, FaultEvent)> = plan.events.clone();
     evs.sort_by(|a, b| a.0.total_cmp(&b.0));
-    let mut down: HashSet<u32> = HashSet::new();
-    let mut rescaled: HashMap<u32, f64> = HashMap::new();
+    let mut down: BTreeSet<u32> = BTreeSet::new();
+    let mut rescaled: BTreeMap<u32, f64> = BTreeMap::new();
     for (_, ev) in &evs {
         match ev {
             FaultEvent::LinkDown(l) => {
