@@ -279,6 +279,65 @@ pub fn dimwise_alltoall_dag(t: &Topology, dims: &[usize], bytes_per_peer: f64) -
     dag
 }
 
+/// The dim-0 all-to-all of one nD-mesh as **independent per-row DAGs**
+/// (PR 10): row `r` (the nodes sharing every coordinate except dim 0)
+/// exchanges `bytes_per_peer` with each of its `dims[0] − 1` row-mates
+/// over their direct links, `rounds` chained identical phases. Rows
+/// share no links — each row's flows ride its private dim-0 full mesh —
+/// so the returned DAGs are channel-disjoint by construction: the
+/// canonical fixture for [`crate::sim::run_components`]'s parallel ==
+/// serial property and the fault-storm-under-parallel-loop chaos case.
+pub fn row_alltoall_dags(
+    t: &Topology,
+    dims: &[usize],
+    bytes_per_peer: f64,
+    rounds: usize,
+) -> Vec<StageDag> {
+    use crate::topology::ndmesh::{coords_of, index_of};
+    let n: usize = dims.iter().product();
+    assert_eq!(t.npus.len(), n, "dims {dims:?} must cover every NPU");
+    assert!(rounds >= 1, "need at least one round");
+    let size = dims[0];
+    assert!(size >= 2, "dim 0 needs at least 2 nodes per row");
+    let mut dags = Vec::with_capacity(n / size);
+    for base in 0..n {
+        let cb = coords_of(base, dims);
+        if cb[0] != 0 {
+            continue; // one DAG per row, anchored at x = 0
+        }
+        let row: Vec<usize> = (0..size)
+            .map(|x| {
+                let mut c = cb.clone();
+                c[0] = x;
+                index_of(&c, dims)
+            })
+            .collect();
+        let mut dag = StageDag::default();
+        let mut prev: Option<usize> = None;
+        for round in 0..rounds {
+            let mut flows = Vec::with_capacity(size * (size - 1));
+            for &i in &row {
+                for &j in &row {
+                    if i != j {
+                        flows.push(FlowSpec::along(
+                            t,
+                            &[t.npus[i], t.npus[j]],
+                            bytes_per_peer,
+                        ));
+                    }
+                }
+            }
+            let mut s = Stage::new(format!("row{}-r{round}", row[0])).with_flows(flows);
+            if let Some(p) = prev {
+                s = s.after(vec![p]);
+            }
+            prev = Some(dag.push(s));
+        }
+        dags.push(dag);
+    }
+    dags
+}
+
 /// One dimension-wise phase: every node ↔ its `size_d − 1` dim-`d`
 /// neighbours, single-hop.
 fn dimwise_phase_flows(

@@ -259,6 +259,13 @@ pub struct SolverStats {
     pub absorb_restarts: u64,
     /// Bounded solves that gave up and ran a full component solve.
     pub fallbacks: u64,
+    /// Flow-rate assignments performed *by* those fallbacks. Kept out of
+    /// `rate_recomputes` (which counts only bounded-path work) but
+    /// included in the [`SolverStats::add_recompute_ratio`] /
+    /// [`SolverStats::cap_recompute_ratio`] denominators, so the ratio
+    /// stays honest — `Some`, not "no data" — on runs where every event
+    /// fell back.
+    pub fallback_recomputes: u64,
     /// Lazy union-find component rebuilds (split reclamation).
     pub uf_rebuilds: u64,
     /// Add-path slices of the aggregate counters above (each `add_*`
@@ -274,6 +281,7 @@ pub struct SolverStats {
     pub add_full_component_recomputes: u64,
     pub add_absorb_restarts: u64,
     pub add_fallbacks: u64,
+    pub add_fallback_recomputes: u64,
     /// Capacity-change-path slices (PR 4, mid-run fault injection): the
     /// same accounting for [`Rates::channels_changed`] /
     /// [`Rates::links_changed`] calls — re-solves after a link
@@ -284,36 +292,72 @@ pub struct SolverStats {
     pub cap_full_component_recomputes: u64,
     pub cap_absorb_restarts: u64,
     pub cap_fallbacks: u64,
+    pub cap_fallback_recomputes: u64,
 }
 
 impl SolverStats {
     /// Add-path narrowness: full-component-equivalent recomputes per
-    /// actually-performed recompute on the add path (≥ 1; `None` until
-    /// an add re-solved something).
+    /// recompute actually performed on the add path, bounded attempts
+    /// *and* fallback solves alike (≥ 1 when no event fell back; `None`
+    /// until an add re-solved something). Counting fallback work in the
+    /// denominator keeps the ratio honest under forced-fallback runs —
+    /// the old `add_rate_recomputes`-only denominator reported "no
+    /// data" for work that did happen whenever every add event fell
+    /// back before performing a bounded recompute.
     pub fn add_recompute_ratio(&self) -> Option<f64> {
-        (self.add_rate_recomputes > 0)
-            .then(|| self.add_full_component_recomputes as f64 / self.add_rate_recomputes as f64)
+        let denom = self.add_rate_recomputes + self.add_fallback_recomputes;
+        (denom > 0).then(|| self.add_full_component_recomputes as f64 / denom as f64)
     }
 
     /// Capacity-change-path narrowness, mirroring
-    /// [`SolverStats::add_recompute_ratio`] for mid-run fault events.
+    /// [`SolverStats::add_recompute_ratio`] for mid-run fault events
+    /// (same fallback-inclusive denominator).
     pub fn cap_recompute_ratio(&self) -> Option<f64> {
-        (self.cap_rate_recomputes > 0)
-            .then(|| self.cap_full_component_recomputes as f64 / self.cap_rate_recomputes as f64)
+        let denom = self.cap_rate_recomputes + self.cap_fallback_recomputes;
+        (denom > 0).then(|| self.cap_full_component_recomputes as f64 / denom as f64)
     }
 
-    /// Undo the double counts of a bounded-solve fallback: the fallback
-    /// runs `resolve_component_uf`, which counts its own resolve and
-    /// adds the member count to the full-component estimate that the
-    /// mutating entry point already pre-charged from the union-find
-    /// live counts. Saturating: the counters are adjusted, never
-    /// trusted to be large enough (a `reset_stats` between the
+    /// Sum `other` into `self`, field by field — merging the per-worker
+    /// solver counters of a component-parallel run back into one report.
+    pub fn merge(&mut self, other: &SolverStats) {
+        self.resolves += other.resolves;
+        self.rate_recomputes += other.rate_recomputes;
+        self.full_component_recomputes += other.full_component_recomputes;
+        self.absorb_restarts += other.absorb_restarts;
+        self.fallbacks += other.fallbacks;
+        self.fallback_recomputes += other.fallback_recomputes;
+        self.uf_rebuilds += other.uf_rebuilds;
+        self.add_resolves += other.add_resolves;
+        self.add_rate_recomputes += other.add_rate_recomputes;
+        self.add_full_component_recomputes += other.add_full_component_recomputes;
+        self.add_absorb_restarts += other.add_absorb_restarts;
+        self.add_fallbacks += other.add_fallbacks;
+        self.add_fallback_recomputes += other.add_fallback_recomputes;
+        self.cap_resolves += other.cap_resolves;
+        self.cap_rate_recomputes += other.cap_rate_recomputes;
+        self.cap_full_component_recomputes += other.cap_full_component_recomputes;
+        self.cap_absorb_restarts += other.cap_absorb_restarts;
+        self.cap_fallbacks += other.cap_fallbacks;
+        self.cap_fallback_recomputes += other.cap_fallback_recomputes;
+    }
+
+    /// Re-home the double counts of a bounded-solve fallback: the
+    /// fallback runs `resolve_component_uf`, which counts its own
+    /// resolve, adds the member count to the full-component estimate
+    /// that the mutating entry point already pre-charged from the
+    /// union-find live counts, and books its rate assignments as
+    /// bounded-path work. Undo the resolve and the estimate, and move
+    /// the rate assignments from `rate_recomputes` to
+    /// `fallback_recomputes`. Saturating: the counters are adjusted,
+    /// never trusted to be large enough (a `reset_stats` between the
     /// pre-charge and the fallback, or a conservative pre-charge
     /// undercount, must clamp to zero rather than wrap to `u64::MAX`
     /// and wreck every later ratio).
     fn discount_fallback(&mut self, members: u64) {
         self.resolves = self.resolves.saturating_sub(1);
         self.full_component_recomputes = self.full_component_recomputes.saturating_sub(members);
+        self.rate_recomputes = self.rate_recomputes.saturating_sub(members);
+        self.fallback_recomputes += members;
     }
 }
 
@@ -465,6 +509,10 @@ pub struct Rates {
     chan_old_cand: Vec<f64>,
     /// Heap-seeding dedup stamp (one entry per channel per fill).
     chan_seeded: Vec<u64>,
+    /// Override for [`MAX_RISE_ATTEMPTS`] (`None` = the default). Tests
+    /// set it to 0 to force every bounded solve straight into the
+    /// full-component fallback.
+    max_rise_attempts: Option<u32>,
 }
 
 /// Give up on a bounded re-solve (rise-only removal or fall-only add)
@@ -498,6 +546,16 @@ impl Rates {
 
     pub fn reset_stats(&mut self) {
         self.stats = SolverStats::default();
+    }
+
+    /// Cap the bounded solver's absorption restarts before it falls back
+    /// to the full component solve (default [`MAX_RISE_ATTEMPTS`]).
+    /// Setting 0 forces the fallback on every bounded solve — the
+    /// forced-fallback regime the counter tests pin down. Results are
+    /// identical at any setting (the fallback is exact); only the work
+    /// accounting moves.
+    pub fn set_max_rise_attempts(&mut self, attempts: u32) {
+        self.max_rise_attempts = Some(attempts);
     }
 
     /// Number of alive flows.
@@ -616,6 +674,9 @@ impl Rates {
             .saturating_sub(before.full_component_recomputes);
         s.add_absorb_restarts += s.absorb_restarts.saturating_sub(before.absorb_restarts);
         s.add_fallbacks += s.fallbacks.saturating_sub(before.fallbacks);
+        s.add_fallback_recomputes += s
+            .fallback_recomputes
+            .saturating_sub(before.fallback_recomputes);
         ids
     }
 
@@ -744,6 +805,9 @@ impl Rates {
             .saturating_sub(before.full_component_recomputes);
         s.cap_absorb_restarts += s.absorb_restarts.saturating_sub(before.absorb_restarts);
         s.cap_fallbacks += s.fallbacks.saturating_sub(before.fallbacks);
+        s.cap_fallback_recomputes += s
+            .fallback_recomputes
+            .saturating_sub(before.fallback_recomputes);
     }
 
     // ------------------------------------------------------------------
@@ -1109,9 +1173,10 @@ impl Rates {
         let mut involved: Vec<usize> = Vec::new();
         let mut absorb: Vec<usize> = Vec::new();
         let mut attempts = 0u32;
+        let max_attempts = self.max_rise_attempts.unwrap_or(MAX_RISE_ATTEMPTS);
         loop {
             attempts += 1;
-            if attempts > MAX_RISE_ATTEMPTS {
+            if attempts > max_attempts {
                 // Pathological absorption chain: solve the whole
                 // component instead (always correct).
                 self.stats.fallbacks += 1;
@@ -1963,11 +2028,93 @@ mod tests {
         s.discount_fallback(10);
         assert_eq!(s.resolves, 0, "resolves must clamp, not wrap");
         assert_eq!(s.full_component_recomputes, 0);
+        assert_eq!(s.rate_recomputes, 0, "rate recomputes must clamp too");
+        assert_eq!(s.fallback_recomputes, 10, "fallback work still booked");
         s.resolves = 2;
         s.full_component_recomputes = 7;
+        s.rate_recomputes = 5;
         s.discount_fallback(3);
         assert_eq!(s.resolves, 1);
         assert_eq!(s.full_component_recomputes, 4);
+        assert_eq!(s.rate_recomputes, 2);
+        assert_eq!(s.fallback_recomputes, 13);
+    }
+
+    /// Satellite fix: under a forced-fallback regime the bounded path
+    /// performs zero rate recomputes, yet full-component work happens on
+    /// every event — the recompute ratios must report it (`Some`, with
+    /// the fallback solves in the denominator) instead of "no data",
+    /// and the rates must still land on the exact max-min solution.
+    #[test]
+    fn recompute_ratios_stay_honest_under_forced_fallback() {
+        let t = k4();
+        let mut net = SimNet::new(&t);
+        let c0 = Channel::forward(LinkId(0));
+        let c1 = Channel::forward(LinkId(1));
+        let fb = [c0, c1];
+        let fc = [c1];
+        let mut r = Rates::new();
+        r.set_max_rise_attempts(0);
+        let ids = r.add_flows(&net, &[&fb, &fb, &fc]);
+        let fresh = max_min_rates(&net, &[&fb, &fb, &fc]);
+        for (id, want) in ids.iter().zip(&fresh) {
+            assert!((r.rate(*id) - want).abs() < 1e-9, "{} vs {want}", r.rate(*id));
+        }
+        let s = r.stats().clone();
+        assert!(s.add_fallbacks >= 1, "max_rise_attempts=0 must fall back");
+        assert_eq!(s.add_rate_recomputes, 0, "bounded add path did no work");
+        assert!(s.add_fallback_recomputes >= 3, "fallback solved the component");
+        let ratio = s.add_recompute_ratio().expect("ratio must report fallback work");
+        assert!(ratio > 0.0 && ratio.is_finite());
+
+        // Same honesty on the capacity-change path.
+        net.set_link_capacity(LinkId(1), 40.0);
+        r.links_changed(&net, &[LinkId(1)]);
+        let s = r.stats();
+        assert!(s.cap_fallbacks >= 1);
+        assert_eq!(s.cap_rate_recomputes, 0);
+        assert!(s.cap_fallback_recomputes >= 3);
+        assert!(s.cap_recompute_ratio().is_some(), "cap ratio must report fallback work");
+        let fresh = max_min_rates(&net, &[&fb, &fb, &fc]);
+        for (id, want) in ids.iter().zip(&fresh) {
+            assert!((r.rate(*id) - want).abs() < 1e-9, "{} vs {want}", r.rate(*id));
+        }
+    }
+
+    /// Per-worker counter merge: summing split stats reproduces the
+    /// aggregate a single solver would have recorded, field by field.
+    #[test]
+    fn solver_stats_merge_sums_every_field() {
+        let t = k4();
+        let net = SimNet::new(&t);
+        let a = [Channel::forward(LinkId(0))];
+        let b = [Channel::forward(LinkId(1))];
+        let run = |flows: &[&[Channel]]| -> SolverStats {
+            let mut r = Rates::new();
+            let ids = r.add_flows(&net, flows);
+            r.remove_flows(&net, &ids[..1]);
+            r.stats().clone()
+        };
+        let s1 = run(&[&a, &a]);
+        let s2 = run(&[&b, &b, &b]);
+        let mut merged = s1.clone();
+        merged.merge(&s2);
+        assert_eq!(merged.resolves, s1.resolves + s2.resolves);
+        assert_eq!(merged.rate_recomputes, s1.rate_recomputes + s2.rate_recomputes);
+        assert_eq!(
+            merged.full_component_recomputes,
+            s1.full_component_recomputes + s2.full_component_recomputes
+        );
+        assert_eq!(merged.add_resolves, s1.add_resolves + s2.add_resolves);
+        assert_eq!(
+            merged.add_rate_recomputes,
+            s1.add_rate_recomputes + s2.add_rate_recomputes
+        );
+        assert_eq!(merged.cap_resolves, s1.cap_resolves + s2.cap_resolves);
+        assert_eq!(
+            merged.fallback_recomputes,
+            s1.fallback_recomputes + s2.fallback_recomputes
+        );
     }
 
     /// Single-channel add/remove churn never triggers a split rebuild,

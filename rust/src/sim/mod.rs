@@ -55,6 +55,17 @@
 //!   O(stages × flows). [`schedule::run_with`] selects the solver
 //!   strategy; [`SimReport::solver`] reports the solver work counters.
 //!
+//! * [`schedule::run_components`] (PR 10) advances **channel-disjoint
+//!   components on worker threads**: each component DAG runs its own
+//!   event loop and solver, legitimate because max-min fairness factors
+//!   across connected components, and bit-identical to the serial loop
+//!   at any worker count because every component's run is a pure
+//!   function of `(net, dag, strategy)` — thread assignment never feeds
+//!   back into results. `workload::symmetric` builds the DP-replica
+//!   partition (translation-symmetric units below the HRS tier, one
+//!   representative solve reused across replicas) that makes the
+//!   64K-NPU fig22 grid tractable on top of it.
+//!
 //! * [`fault::FaultPlan`] (PR 4) scripts mid-run failures as first-class
 //!   events in that heap: link down/up/rescale and NPU death (with 64+1
 //!   backup substitution) mutate the runner's private [`SimNet`] clone,
@@ -91,7 +102,8 @@ pub use fault::{FaultEvent, FaultPlan, NotifyMode, RecoveryConfig, Reroute};
 pub use flow::FlowSpec;
 pub use network::SimNet;
 pub use schedule::{
-    run_faulted, run_with, SimConfig, SimReport, Stage, StageDag, StageFlows, StalledFlow,
+    run_components, run_components_faulted, run_components_timed, run_faulted, run_with,
+    ParallelConfig, SimConfig, SimReport, Stage, StageDag, StageFlows, StalledFlow,
 };
 pub use sweep::{
     scenario_seed, sweep as run_sweep, AggTable, GridBuilder, OnlineStats, SweepConfig,

@@ -456,6 +456,163 @@ pub fn run_with(net: &SimNet, dag: &StageDag, cfg: &SimConfig) -> SimReport {
     run_faulted(net, dag, cfg, &FaultPlan::default())
 }
 
+// ----------------------------------------------------------------------
+// Component-parallel advancement (PR 10)
+// ----------------------------------------------------------------------
+
+/// Worker configuration for [`run_components`] and friends.
+#[derive(Clone, Debug)]
+pub struct ParallelConfig {
+    /// Worker threads (≥ 1; clamped to the component count). Defaults
+    /// to the machine's parallelism.
+    pub workers: usize,
+    /// Re-solve strategy for every component's solver.
+    pub strategy: ResolveStrategy,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> ParallelConfig {
+        ParallelConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            strategy: ResolveStrategy::default(),
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// Single-worker loop (the determinism baseline).
+    pub fn serial() -> ParallelConfig {
+        ParallelConfig {
+            workers: 1,
+            ..ParallelConfig::default()
+        }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> ParallelConfig {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_strategy(mut self, strategy: ResolveStrategy) -> ParallelConfig {
+        self.strategy = strategy;
+        self
+    }
+}
+
+/// Work-distribution loop shared by the component runners: run `job(i)`
+/// for every `i < n` on `workers` threads, results in input order. The
+/// same shape as [`super::sweep::sweep`] minus the per-scenario RNG —
+/// determinism holds because each job is a pure function of its index,
+/// never of thread assignment.
+fn component_sweep<R, F>(workers: usize, n: usize, job: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(job).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = job(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("component produced no result")
+        })
+        .collect()
+}
+
+/// Advance independent components on worker threads: execute each DAG
+/// of `dags` as its own event loop with its own max-min solver,
+/// returning the per-component [`SimReport`]s in input order.
+///
+/// **Precondition**: the components must be *channel-disjoint* — no
+/// two DAGs route a flow over the same link. Max-min fairness factors
+/// across connected components (no shared channel → no shared
+/// constraint), and the event loops share no other state, so the union
+/// of the independent runs is exactly the allocation and timing the
+/// one big serial loop over the combined DAG would compute — and
+/// because each component's run is a pure function of
+/// `(net, dag, strategy)`, the result vector is **bit-identical at any
+/// worker count**: workers only decide *where* a component runs, never
+/// *what* it computes. The caller owns the merge semantics (e.g.
+/// `workload::symmetric` gates the DP tail on the max component
+/// makespan and sums byte-hops/events/solver counters in input order);
+/// the property tests in `rust/tests/properties.rs` pin the
+/// bit-equality across worker counts and solver strategies.
+pub fn run_components(net: &SimNet, dags: &[StageDag], cfg: &ParallelConfig) -> Vec<SimReport> {
+    let sim_cfg = SimConfig {
+        strategy: cfg.strategy,
+    };
+    component_sweep(cfg.workers, dags.len(), |i| {
+        run_with(net, &dags[i], &sim_cfg)
+    })
+}
+
+/// [`run_components`] under per-component [`FaultPlan`]s — `plans[i]`
+/// applies to `dags[i]` only. The channel-disjointness precondition
+/// extends to the plans: a fault event may touch any link, but if a
+/// faulted link carries flows of *another* component, the serial
+/// equivalence argument breaks and the caller has mis-partitioned.
+pub fn run_components_faulted(
+    net: &SimNet,
+    dags: &[StageDag],
+    cfg: &ParallelConfig,
+    plans: &[FaultPlan],
+) -> Vec<SimReport> {
+    assert_eq!(dags.len(), plans.len(), "one fault plan per component");
+    let sim_cfg = SimConfig {
+        strategy: cfg.strategy,
+    };
+    component_sweep(cfg.workers, dags.len(), |i| {
+        run_faulted(net, &dags[i], &sim_cfg, &plans[i])
+    })
+}
+
+/// [`run_components`] plus per-component wall-clock seconds — the
+/// telemetry behind the `fig22.par.*` speedup keys (serial-equivalent
+/// wall = Σ component walls). The clock reads never feed back into the
+/// simulation — the reports stay bit-identical to [`run_components`] —
+/// which is why this, uniquely in the sim core, carries a scoped
+/// exemption from the wall-clock determinism lint.
+pub fn run_components_timed(
+    net: &SimNet,
+    dags: &[StageDag],
+    cfg: &ParallelConfig,
+) -> Vec<(SimReport, f64)> {
+    let sim_cfg = SimConfig {
+        strategy: cfg.strategy,
+    };
+    component_sweep(cfg.workers, dags.len(), |i| {
+        #[allow(clippy::disallowed_methods)]
+        let t0 = std::time::Instant::now();
+        let report = run_with(net, &dags[i], &sim_cfg);
+        (report, t0.elapsed().as_secs_f64())
+    })
+}
+
 /// Earliest time flow `i` may be rerouted: every dead link on its path
 /// must have converged routing tables, and a backup substitution must
 /// wait for the backup NPU's activation.

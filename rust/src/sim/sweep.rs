@@ -22,10 +22,22 @@ use std::sync::Mutex;
 
 use crate::util::rng::{splitmix64, Rng};
 
-/// Deterministic per-scenario seed: mixes `base` with the scenario index
-/// through SplitMix64 so neighbouring indices get decorrelated streams.
+/// Deterministic per-scenario seed: avalanche `base` through SplitMix64
+/// *before* mixing in the index, then finalize with a second SplitMix64
+/// round, so both neighbouring indices and neighbouring base seeds get
+/// decorrelated streams.
+///
+/// The base must be hashed first: a single-round mix of
+/// `base ⊕ index·φ` (the old scheme) makes whole streams overlap for
+/// related bases — `seed(b, 1) == seed(b ⊕ φ, 0)` for every `b`, so two
+/// sweeps launched at XOR-adjacent seeds silently replay each other's
+/// scenarios shifted by one. Hashing the base turns any cross-stream
+/// collision into `splitmix64(b) − splitmix64(b′) ≡ (j−i)·φ (mod 2⁶⁴)`,
+/// which has no structured small-index solutions.
 pub fn scenario_seed(base: u64, index: usize) -> u64 {
-    let mut s = base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut h = base;
+    let hashed = splitmix64(&mut h);
+    let mut s = hashed.wrapping_add((index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     splitmix64(&mut s)
 }
 
@@ -243,9 +255,17 @@ impl<S: Sync> GridBuilder<S> {
     }
 }
 
-/// Streaming summary statistics: Welford mean/variance plus exact
-/// quantiles from retained samples (scenario counts are small — at most
-/// a few thousand per sweep — so exactness beats a sketch).
+/// Retained-sample cap for [`OnlineStats`]: quantiles are exact up to
+/// this many pushes, then the store degrades to Algorithm-R reservoir
+/// sampling behind the same API. Sized to cover every current sweep
+/// (the largest tables aggregate a few thousand scenarios per key)
+/// while bounding memory/sort cost at 64K-grid volumes.
+const SAMPLE_CAP: usize = 4096;
+
+/// Streaming summary statistics: Welford mean/variance (always exact),
+/// exact running sum/min/max, and quantiles from a bounded sample
+/// store — exact below [`SAMPLE_CAP`] samples, uniform reservoir
+/// estimates beyond it.
 #[derive(Clone, Debug, Default)]
 pub struct OnlineStats {
     n: u64,
@@ -255,6 +275,9 @@ pub struct OnlineStats {
     min: f64,
     max: f64,
     samples: Vec<f64>,
+    /// SplitMix64 state for reservoir replacement — deterministic in
+    /// push order, so aggregation stays bit-reproducible run-to-run.
+    rstate: u64,
 }
 
 impl OnlineStats {
@@ -271,7 +294,17 @@ impl OnlineStats {
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
-        self.samples.push(x);
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: the x-th arrival replaces a random slot with
+            // probability CAP/n, keeping the store a uniform sample of
+            // everything seen.
+            let j = splitmix64(&mut self.rstate) % self.n;
+            if (j as usize) < SAMPLE_CAP {
+                self.samples[j as usize] = x;
+            }
+        }
     }
 
     pub fn n(&self) -> u64 {
@@ -301,11 +334,20 @@ impl OnlineStats {
         self.var().sqrt()
     }
 
-    /// Exact quantile (nearest-rank on the sorted samples), q in [0, 1].
+    /// Nearest-rank quantile, q in [0, 1]. Exact while at most
+    /// [`SAMPLE_CAP`] samples were pushed; beyond that it is computed
+    /// over the uniform reservoir (extremes stay exact: q = 0 and q = 1
+    /// return the true running min/max).
     pub fn quantile(&self, q: f64) -> f64 {
         assert!((0.0..=1.0).contains(&q), "quantile {q} out of range");
         if self.samples.is_empty() {
             return f64::NAN;
+        }
+        if q == 0.0 {
+            return self.min;
+        }
+        if q == 1.0 {
+            return self.max;
         }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.total_cmp(b));
@@ -399,6 +441,33 @@ mod tests {
     }
 
     #[test]
+    fn adjacent_base_seeds_produce_disjoint_streams() {
+        use std::collections::BTreeSet;
+        // Sweeps launched at related base seeds must not share any
+        // per-scenario seed. The old single-round mix of
+        // `base ^ index·φ` failed exactly this: seed(b, 1) == seed(b ^ φ,
+        // 0) for every b, so the b ^ φ sweep replayed b's stream shifted
+        // by one scenario.
+        const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+        let b = 0x0B5E_5EED_0002_u64;
+        let bases = [b, b + 1, b ^ GOLDEN, b.wrapping_add(GOLDEN)];
+        let per_base = 4096_usize;
+        let mut seen = BTreeSet::new();
+        for &base in &bases {
+            for i in 0..per_base {
+                seen.insert(scenario_seed(base, i));
+            }
+        }
+        assert_eq!(
+            seen.len(),
+            bases.len() * per_base,
+            "adjacent-base sweeps share scenario seeds"
+        );
+        // The specific historical collision, pinned directly.
+        assert_ne!(scenario_seed(b, 1), scenario_seed(b ^ GOLDEN, 0));
+    }
+
+    #[test]
     fn empty_sweep_is_empty() {
         let out: Vec<u32> = sweep_default(&[] as &[u8], |_, _, _| 1);
         assert!(out.is_empty());
@@ -445,6 +514,61 @@ mod tests {
         assert_eq!(s.p50(), 3.0);
         assert_eq!(s.p99(), 5.0);
         assert!((s.var() - 2.5).abs() < 1e-12); // sample variance of 1..5
+    }
+
+    #[test]
+    fn bounded_store_is_exact_below_cap() {
+        // The reservoir must be invisible at small n: quantiles over ≤1k
+        // samples match the old keep-everything nearest-rank exactly.
+        let mut rng = Rng::new(0xE5A);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.f64() * 1e6 - 5e5).collect();
+        let mut s = OnlineStats::default();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.01, 0.25, 0.50, 0.75, 0.99, 1.0] {
+            let idx = ((sorted.len() as f64 * q).ceil() as usize)
+                .saturating_sub(1)
+                .min(sorted.len() - 1);
+            assert_eq!(s.quantile(q), sorted[idx], "q={q}");
+        }
+        assert_eq!(s.min(), sorted[0]);
+        assert_eq!(s.max(), sorted[sorted.len() - 1]);
+        assert!((s.sum() - xs.iter().sum::<f64>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounded_store_caps_memory_and_keeps_exact_moments() {
+        // 50k pushes: the store must stay at SAMPLE_CAP while the
+        // streaming moments/extremes remain exact and the reservoir p50
+        // lands near the true median.
+        let n = 50_000_usize;
+        let mut s = OnlineStats::default();
+        for i in 0..n {
+            // Deterministic scramble of 0..n so arrival order is not
+            // sorted (a sorted stream would hide replacement bugs).
+            let v = (i.wrapping_mul(7919) % n) as f64;
+            s.push(v);
+        }
+        assert_eq!(s.samples.len(), SAMPLE_CAP);
+        assert_eq!(s.n(), n as u64);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), (n - 1) as f64);
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), (n - 1) as f64);
+        let true_sum = (n * (n - 1) / 2) as f64;
+        assert!((s.sum() - true_sum).abs() / true_sum < 1e-12);
+        let true_mean = true_sum / n as f64;
+        assert!((s.mean() - true_mean).abs() / true_mean < 1e-12);
+        // Reservoir median of a uniform population: SE ≈ 0.5/√4096 of
+        // the range, so ±5% is a ~6σ band.
+        let p50 = s.p50();
+        assert!(
+            (p50 - true_mean).abs() < 0.05 * n as f64,
+            "reservoir p50 drifted: {p50}"
+        );
     }
 
     #[test]

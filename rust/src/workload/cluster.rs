@@ -206,6 +206,22 @@ impl ClusterMap {
         self.npus.len()
     }
 
+    /// NPUs per pod for the 2D mesh fabric
+    /// (`racks_per_pod × boards × slots`); `None` for the 1D-FM variant
+    /// fabrics. `workload::symmetric` uses this to check that a DP-unit
+    /// slice lands on whole-pod boundaries — the condition under which
+    /// [`Self::pair_paths`] maps translated pairs onto translated links
+    /// (intra-pod routing is pod-local, and cross-pod uplink selection
+    /// depends only on board-within-rack indices).
+    pub fn mesh_pod_npus(&self) -> Option<usize> {
+        match &self.fabric {
+            Fabric::Mesh { boards, slots, racks_per_pod, .. } => {
+                Some(racks_per_pod * boards * slots)
+            }
+            _ => None,
+        }
+    }
+
     /// Same-board path set shared by the 1D-FM variants: the direct X
     /// link striped with the board's out-of-group slot relays (the
     /// Mesh fabric's same-board rule). `None` when the pair crosses

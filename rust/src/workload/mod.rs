@@ -2,16 +2,25 @@
 //! traffic derivation (Table 1), rank placement, and the training-step
 //! stage DAGs — the analytic §5.2 cost model plus the full measured
 //! TP/SP/EP/PP/DP iteration ([`step::iteration_dag`]) on the concrete
-//! rank→NPU maps of [`cluster::ClusterMap`].
+//! rank→NPU maps of [`cluster::ClusterMap`]. [`symmetric`] (PR 10)
+//! factors that iteration into channel-disjoint, pairwise-translated
+//! DP-replica units plus the coupling DP tail — the representative-solve
+//! + component-parallel fast path that makes the 32K–64K-NPU fig22 grid
+//! measurable.
 
 pub mod cluster;
 pub mod models;
 pub mod placement;
 pub mod step;
+pub mod symmetric;
 pub mod traffic;
 
 pub use cluster::ClusterMap;
 pub use models::{ModelConfig, MODELS};
 pub use placement::{Placement, Tier, NTIERS};
 pub use step::{iteration_dag, IterationSpec, RankOrder};
+pub use symmetric::{
+    merge_symmetric, run_symmetric, symmetric_iteration, SymmetricConfig, SymmetricIteration,
+    SymmetricReport,
+};
 pub use traffic::{ParallelismConfig, TrafficTable};

@@ -246,12 +246,25 @@ enum GroupSpec {
     Dp,
 }
 
-/// Materialize the physical-NPU index groups of one family.
-fn groups_for(p: &ParallelismConfig, order: RankOrder, spec: GroupSpec) -> Vec<Vec<usize>> {
+/// Materialize the physical-NPU index groups of one family, restricted
+/// to the DP replicas in `dp_range` (pass `0..p.dp` for the whole
+/// iteration). The restriction is what makes a translation-symmetric
+/// unit buildable in isolation (PR 10): TP/SP groups filter on their dp
+/// coordinate, EP blocks are kept only when their whole dp span sits
+/// inside the slice (guaranteed when the slice length is a multiple of
+/// the `ep/sp` block span — `workload::symmetric` checks exactly that),
+/// and DP groups — which couple every replica by construction — ignore
+/// the range and always span all of `0..p.dp`.
+fn groups_for(
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: GroupSpec,
+    dp_range: &std::ops::Range<usize>,
+) -> Vec<Vec<usize>> {
     let mut groups = Vec::new();
     match spec {
         GroupSpec::Tp(s) => {
-            for dp_i in 0..p.dp {
+            for dp_i in dp_range.clone() {
                 for sp_i in 0..p.sp {
                     groups.push(
                         (0..p.tp).map(|t| order.phys(t, sp_i, s, dp_i, p)).collect(),
@@ -260,7 +273,7 @@ fn groups_for(p: &ParallelismConfig, order: RankOrder, spec: GroupSpec) -> Vec<V
             }
         }
         GroupSpec::Sp(s) => {
-            for dp_i in 0..p.dp {
+            for dp_i in dp_range.clone() {
                 for tp_i in 0..p.tp {
                     groups.push(
                         (0..p.sp).map(|y| order.phys(tp_i, y, s, dp_i, p)).collect(),
@@ -274,6 +287,16 @@ fn groups_for(p: &ParallelismConfig, order: RankOrder, spec: GroupSpec) -> Vec<V
             debug_assert!(ep >= 2 && ext % ep == 0);
             for tp_i in 0..p.tp {
                 for blk in 0..ext / ep {
+                    let dp_lo = blk * ep / p.sp;
+                    if dp_lo < dp_range.start || dp_lo >= dp_range.end {
+                        continue;
+                    }
+                    debug_assert!(
+                        ((blk + 1) * ep - 1) / p.sp < dp_range.end,
+                        "EP block straddles the dp slice — unit misaligned \
+                         (ep={ep}, sp={}, slice {dp_range:?})",
+                        p.sp
+                    );
                     groups.push(
                         (0..ep)
                             .map(|e| {
@@ -384,11 +407,12 @@ fn exchange_stage(
     p: ParallelismConfig,
     order: RankOrder,
     spec: GroupSpec,
+    dp_range: &std::ops::Range<usize>,
     dead: &[usize],
     per_rank_bytes: f64,
     extra_alpha_us: f64,
 ) -> Stage {
-    let mut groups = groups_for(&p, order, spec);
+    let mut groups = groups_for(&p, order, spec, dp_range);
     if !dead.is_empty() {
         for g in &mut groups {
             g.retain(|i| !dead.contains(i));
@@ -408,7 +432,11 @@ fn exchange_stage(
 
 /// Lazily-materialized PP boundary send: every (tp, sp, dp) rank of
 /// stage `s_from` sends its boundary-activation shard to its peer in
-/// `s_to`, split over the pair's APR paths.
+/// `s_to`, split over the pair's APR paths. The path-selection nonce is
+/// the **replica-local** rank index `sp_i·tp + tp_i` (not the global
+/// pair index), so every DP replica's sends pick the translated image of
+/// the same path set — the translation symmetry `workload::symmetric`
+/// relies on (PR 10).
 fn p2p_stage(
     name: String,
     map: &Arc<ClusterMap>,
@@ -416,16 +444,18 @@ fn p2p_stage(
     order: RankOrder,
     s_from: usize,
     s_to: usize,
+    dp_range: &std::ops::Range<usize>,
     dead: &[usize],
     bytes_per_pair: f64,
 ) -> Stage {
-    let mut pairs = Vec::with_capacity(p.tp * p.sp * p.dp);
-    for dp_i in 0..p.dp {
+    let mut pairs = Vec::with_capacity(p.tp * p.sp * dp_range.len());
+    for dp_i in dp_range.clone() {
         for sp_i in 0..p.sp {
             for tp_i in 0..p.tp {
                 pairs.push((
                     order.phys(tp_i, sp_i, s_from, dp_i, &p),
                     order.phys(tp_i, sp_i, s_to, dp_i, &p),
+                    sp_i * p.tp + tp_i,
                 ));
             }
         }
@@ -433,18 +463,18 @@ fn p2p_stage(
     if !dead.is_empty() {
         // Both endpoints share a dp index, so a dead replica drops the
         // whole pair.
-        pairs.retain(|&(a, b)| !dead.contains(&a) && !dead.contains(&b));
+        pairs.retain(|&(a, b, _)| !dead.contains(&a) && !dead.contains(&b));
     }
     let count: usize = pairs
         .iter()
-        .map(|&(a, b)| map.pair_path_count(a, b, &[]))
+        .map(|&(a, b, _)| map.pair_path_count(a, b, &[]))
         .sum();
     let bytes = pairs.len() as f64 * bytes_per_pair;
     let mapc = map.clone();
     Stage::new(name).with_lazy_flows(count, bytes, move |t| {
         let mut flows = Vec::new();
-        for (i, &(a, b)) in pairs.iter().enumerate() {
-            let paths = mapc.pair_paths(a, b, pair_sel(i, s_to), &[]);
+        for &(a, b, li) in pairs.iter() {
+            let paths = mapc.pair_paths(a, b, pair_sel(li, s_to), &[]);
             let w = vec![1.0; paths.len()];
             flows.extend(FlowSpec::split(t, &paths, &w, bytes_per_pair));
         }
@@ -510,7 +540,65 @@ pub fn iteration_dag(
     order: RankOrder,
     spec: &IterationSpec,
 ) -> StageDag {
-    build_iteration_dag(t, map, m, p, order, spec, None)
+    build_iteration_dag(t, map, m, p, order, spec, None, IterPart::Full)
+}
+
+/// Which slice of the iteration a builder call materializes (PR 10).
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum IterPart {
+    /// The whole iteration: every replica plus the DP gradient tail.
+    Full,
+    /// One translation-symmetric unit: the work units and PP sends of
+    /// the DP replicas in the range, no DP tail.
+    Unit(std::ops::Range<usize>),
+    /// Only the DP gradient tail, dependency-free — the caller gates it
+    /// on the units' makespan.
+    Tail,
+}
+
+/// One **translation-symmetric unit** of the iteration (PR 10): the
+/// compute → TP → SP → EP work-unit chains and PP boundary sends of the
+/// DP replicas in `dp_range`, with the DP gradient tail omitted. On a
+/// [`RankOrder::TopologyAware`] layout whose slice boundaries align with
+/// pods and EP blocks (checked by [`crate::workload::symmetric`]), the
+/// resulting DAG touches only links owned by the slice's pods, so units
+/// are channel-disjoint: they can run on worker threads via
+/// [`crate::sim::run_components`], and — because consecutive units are
+/// whole-pod translations of each other — one representative unit's
+/// [`crate::sim::SimReport`] stands in for all of them.
+pub fn unit_iteration_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+    dp_range: std::ops::Range<usize>,
+) -> StageDag {
+    assert!(
+        dp_range.start < dp_range.end && dp_range.end <= p.dp,
+        "unit slice {dp_range:?} must be a non-empty subrange of 0..{}",
+        p.dp
+    );
+    build_iteration_dag(t, map, m, p, order, spec, None, IterPart::Unit(dp_range))
+}
+
+/// The **DP gradient tail** of the iteration alone (PR 10): the
+/// hierarchical reduce-scatter + all-gather over the full DP groups,
+/// with no dependencies — the tail couples every replica through the
+/// HRS tier, so the symmetric runner executes it serially after gating
+/// it on the slowest unit's makespan (exact, because every unit stage
+/// is an ancestor of the tail in [`iteration_dag`]'s full DAG). Returns
+/// an empty DAG when the model/spec expose no DP traffic.
+pub fn dp_tail_dag(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+) -> StageDag {
+    build_iteration_dag(t, map, m, p, order, spec, None, IterPart::Tail)
 }
 
 /// The iteration after an **elastic DP shrink**: replica `dead_dp`'s
@@ -535,9 +623,10 @@ pub fn shrunk_iteration_dag(
         "shrink needs a surviving replica: dp={}, dead={dead_dp}",
         p.dp
     );
-    build_iteration_dag(t, map, m, p, order, spec, Some(dead_dp))
+    build_iteration_dag(t, map, m, p, order, spec, Some(dead_dp), IterPart::Full)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn build_iteration_dag(
     t: &Topology,
     map: &ClusterMap,
@@ -546,7 +635,12 @@ fn build_iteration_dag(
     order: RankOrder,
     spec: &IterationSpec,
     shrink: Option<usize>,
+    part: IterPart,
 ) -> StageDag {
+    debug_assert!(
+        shrink.is_none() || part == IterPart::Full,
+        "elastic shrink is only defined on the full iteration"
+    );
     assert_eq!(
         p.npus(),
         map.npu_count(),
@@ -620,6 +714,15 @@ fn build_iteration_dag(
 
     let map = Arc::new(map.clone());
     let mut dag = StageDag::default();
+    // Which dp replicas this call materializes work units for, and
+    // whether the DP tail is included. `full_range` always spans every
+    // replica — DP groups and the shrink geometry are defined on it.
+    let full_range = 0..p.dp;
+    let (dp_range, build_work, build_tail) = match &part {
+        IterPart::Full => (full_range.clone(), true, true),
+        IterPart::Unit(r) => (r.clone(), true, false),
+        IterPart::Tail => (full_range.clone(), false, true),
+    };
     const NONE: usize = usize::MAX;
     let mut f_first = vec![vec![NONE; mbn]; pp];
     let mut f_last = vec![vec![NONE; mbn]; pp];
@@ -630,129 +733,144 @@ fn build_iteration_dag(
 
     // Pass 1: create every work unit's serialized compute→TP→SP→EP
     // chain and its boundary send, in per-device 1F1B order.
-    for s in 0..pp {
-        for (fwd, j) in one_f_one_b(pp, s, mbn) {
-            let tag = if fwd { 'f' } else { 'b' };
-            let comp = dag.push(
-                Stage::new(format!("s{s}-{tag}{j}-comp"))
-                    .with_compute(if fwd { comp_f } else { comp_b }),
-            );
-            let mut last = comp;
-            for (gspec, v, ea, nm) in [
-                (GroupSpec::Tp(s), v_tp, a_tp, "tp"),
-                (GroupSpec::Sp(s), v_sp, a_sp, "sp"),
-                (GroupSpec::Ep(s), v_ep, a_ep, "ep"),
-            ] {
-                if v > 0.0 {
-                    let st = exchange_stage(
-                        format!("s{s}-{tag}{j}-{nm}"),
-                        &map,
-                        *p,
-                        order,
-                        gspec,
-                        &dead,
-                        v,
-                        ea,
-                    )
-                    .after(vec![last]);
-                    last = dag.push(st);
-                }
-            }
-            if fwd {
-                f_first[s][j] = comp;
-                f_last[s][j] = last;
-                if s + 1 < pp {
-                    p2p_f[s][j] = dag.push(
-                        p2p_stage(
-                            format!("s{s}-f{j}-send"),
+    if build_work {
+        for s in 0..pp {
+            for (fwd, j) in one_f_one_b(pp, s, mbn) {
+                let tag = if fwd { 'f' } else { 'b' };
+                let comp = dag.push(
+                    Stage::new(format!("s{s}-{tag}{j}-comp"))
+                        .with_compute(if fwd { comp_f } else { comp_b }),
+                );
+                let mut last = comp;
+                for (gspec, v, ea, nm) in [
+                    (GroupSpec::Tp(s), v_tp, a_tp, "tp"),
+                    (GroupSpec::Sp(s), v_sp, a_sp, "sp"),
+                    (GroupSpec::Ep(s), v_ep, a_ep, "ep"),
+                ] {
+                    if v > 0.0 {
+                        let st = exchange_stage(
+                            format!("s{s}-{tag}{j}-{nm}"),
                             &map,
                             *p,
                             order,
-                            s,
-                            s + 1,
+                            gspec,
+                            &dp_range,
                             &dead,
-                            p2p_bytes,
+                            v,
+                            ea,
                         )
-                        .after(vec![last]),
-                    );
+                        .after(vec![last]);
+                        last = dag.push(st);
+                    }
                 }
-            } else {
-                b_first[s][j] = comp;
-                b_last[s][j] = last;
-                if s > 0 {
-                    p2p_b[s][j] = dag.push(
-                        p2p_stage(
-                            format!("s{s}-b{j}-send"),
-                            &map,
-                            *p,
-                            order,
-                            s,
-                            s - 1,
-                            &dead,
-                            p2p_bytes,
-                        )
-                        .after(vec![last]),
-                    );
+                if fwd {
+                    f_first[s][j] = comp;
+                    f_last[s][j] = last;
+                    if s + 1 < pp {
+                        p2p_f[s][j] = dag.push(
+                            p2p_stage(
+                                format!("s{s}-f{j}-send"),
+                                &map,
+                                *p,
+                                order,
+                                s,
+                                s + 1,
+                                &dp_range,
+                                &dead,
+                                p2p_bytes,
+                            )
+                            .after(vec![last]),
+                        );
+                    }
+                } else {
+                    b_first[s][j] = comp;
+                    b_last[s][j] = last;
+                    if s > 0 {
+                        p2p_b[s][j] = dag.push(
+                            p2p_stage(
+                                format!("s{s}-b{j}-send"),
+                                &map,
+                                *p,
+                                order,
+                                s,
+                                s - 1,
+                                &dp_range,
+                                &dead,
+                                p2p_bytes,
+                            )
+                            .after(vec![last]),
+                        );
+                    }
                 }
             }
         }
-    }
 
-    // Pass 2: cross-stage data dependencies (a unit starts only once
-    // its boundary activation/gradient has *arrived*) and per-device
-    // in-order execution — together these make the 1F1B bubble an
-    // emergent property of the schedule.
-    for s in 0..pp {
-        let mut prev: Option<usize> = None;
-        for (fwd, j) in one_f_one_b(pp, s, mbn) {
-            let first = if fwd { f_first[s][j] } else { b_first[s][j] };
-            if let Some(pl) = prev {
-                dag.stages[first].deps.push(pl);
+        // Pass 2: cross-stage data dependencies (a unit starts only once
+        // its boundary activation/gradient has *arrived*) and per-device
+        // in-order execution — together these make the 1F1B bubble an
+        // emergent property of the schedule.
+        for s in 0..pp {
+            let mut prev: Option<usize> = None;
+            for (fwd, j) in one_f_one_b(pp, s, mbn) {
+                let first = if fwd { f_first[s][j] } else { b_first[s][j] };
+                if let Some(pl) = prev {
+                    dag.stages[first].deps.push(pl);
+                }
+                if fwd && s > 0 {
+                    dag.stages[first].deps.push(p2p_f[s - 1][j]);
+                }
+                if !fwd && s + 1 < pp {
+                    dag.stages[first].deps.push(p2p_b[s + 1][j]);
+                }
+                prev = Some(if fwd { f_last[s][j] } else { b_last[s][j] });
             }
-            if fwd && s > 0 {
-                dag.stages[first].deps.push(p2p_f[s - 1][j]);
-            }
-            if !fwd && s + 1 < pp {
-                dag.stages[first].deps.push(p2p_b[s + 1][j]);
-            }
-            prev = Some(if fwd { f_last[s][j] } else { b_last[s][j] });
         }
     }
 
     // DP gradient tail: reduce-scatter + all-gather over the DP groups
-    // once every device has drained its backward queue.
-    if let Some(r) = traffic.row("DP") {
-        let v_dp = r.total * spec.dp_exposed;
-        if v_dp > 0.0 {
-            let ea =
-                ((r.transfers * spec.dp_exposed / 2.0) - 1.0).max(0.0) * MESSAGE_ALPHA_US;
-            let tails: Vec<usize> = (0..pp).map(|s| b_last[s][mbn - 1]).collect();
-            let rs = dag.push(
-                exchange_stage(
-                    "dp-rs".into(),
-                    &map,
-                    *p,
-                    order,
-                    GroupSpec::Dp,
-                    &dead,
-                    v_dp / 2.0,
-                    ea,
-                )
-                .after(tails),
-            );
-            dag.push(
-                exchange_stage(
-                    "dp-ag".into(),
-                    &map,
-                    *p,
-                    order,
-                    GroupSpec::Dp,
-                    &dead,
-                    v_dp / 2.0,
-                    ea,
-                )
-                .after(vec![rs]),
-            );
+    // once every device has drained its backward queue. A tail-only
+    // build has no work units to depend on — the symmetric runner gates
+    // it on the units' merged makespan instead.
+    if build_tail {
+        if let Some(r) = traffic.row("DP") {
+            let v_dp = r.total * spec.dp_exposed;
+            if v_dp > 0.0 {
+                let ea = ((r.transfers * spec.dp_exposed / 2.0) - 1.0).max(0.0)
+                    * MESSAGE_ALPHA_US;
+                let tails: Vec<usize> = if build_work {
+                    (0..pp).map(|s| b_last[s][mbn - 1]).collect()
+                } else {
+                    Vec::new()
+                };
+                let rs = dag.push(
+                    exchange_stage(
+                        "dp-rs".into(),
+                        &map,
+                        *p,
+                        order,
+                        GroupSpec::Dp,
+                        &full_range,
+                        &dead,
+                        v_dp / 2.0,
+                        ea,
+                    )
+                    .after(tails),
+                );
+                dag.push(
+                    exchange_stage(
+                        "dp-ag".into(),
+                        &map,
+                        *p,
+                        order,
+                        GroupSpec::Dp,
+                        &full_range,
+                        &dead,
+                        v_dp / 2.0,
+                        ea,
+                    )
+                    .after(vec![rs]),
+                );
+            }
         }
     }
     dag
@@ -886,7 +1004,7 @@ pub fn elastic_reshard_dag(
         }
     }
     let dead = replica_members(p, order, dead_dp);
-    let mut groups = groups_for(p, order, GroupSpec::Dp);
+    let mut groups = groups_for(p, order, GroupSpec::Dp, &(0..p.dp));
     for g in &mut groups {
         g.retain(|i| !dead.contains(i));
     }

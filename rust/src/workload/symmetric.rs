@@ -1,0 +1,339 @@
+//! DP-replica translation symmetry (PR 10): partition the measured
+//! training iteration into **channel-disjoint, pairwise-translated
+//! units** so the fig22 grid stays tractable at 32K–64K NPUs.
+//!
+//! On a [`RankOrder::TopologyAware`] layout the physical index of rank
+//! `(tp, sp, pp, dp)` is `tp + TP·(sp + SP·(pp + PP·dp))` — DP is the
+//! outermost stride, so consecutive DP replicas occupy consecutive
+//! blocks of NPUs, and whole groups of replicas occupy whole **pods**
+//! when the block size divides the pod size. Inside such a block, every
+//! TP/SP exchange, EP all-to-all and PP boundary send of the iteration
+//! touches only links owned by the block's pods:
+//!
+//! * intra-pod routing ([`ClusterMap::pair_paths`]) is pod-local — rack
+//!   coordinates enter it modulo `racks_per_pod`;
+//! * cross-pod paths climb the rack's **own** LRS→HRS uplinks; distinct
+//!   pods share HRS switch *nodes* but never *links*, and links are the
+//!   only capacitated resource in the fluid model;
+//! * the per-pair path-selection nonces are replica-local by
+//!   construction (`pair_sel` over within-group indices in exchanges,
+//!   `sp_i·tp + tp_i` in PP sends).
+//!
+//! Two consequences, which this module packages:
+//!
+//! 1. **Component parallelism** — the unit DAGs are channel-disjoint,
+//!    so [`crate::sim::run_components`] may advance them on worker
+//!    threads, bit-identical to the one big serial event loop.
+//! 2. **Representative solve** — consecutive units are whole-pod
+//!    *translations* of each other: same capacities in the same relative
+//!    link order, same flow structure, same event sequence. One unit's
+//!    [`SimReport`] is bit-for-bit the report of every other unit, so
+//!    the symmetric runner can solve one representative and reuse it
+//!    `units − 1` times ([`SymmetricConfig::replica_cache`]).
+//!
+//! What breaks the symmetry — and is therefore excluded from the units —
+//! is the **DP gradient tail**: DP groups couple every replica through
+//! the HRS tier. The tail runs as its own DAG, gated on the slowest
+//! unit's makespan. The gating is *exact*, not an approximation: in the
+//! full iteration DAG every unit stage is an ancestor of `dp-rs`, the
+//! tail has no other dependencies, and the tail's flows touch the units'
+//! links only after every unit has drained — so `full makespan =
+//! max(unit makespans) + tail makespan`, reproduced bitwise by
+//! [`merge_symmetric`]. The `replica_cache == full solve` differential
+//! and the `parallel == serial` property are pinned by
+//! `rust/tests/symmetric.rs` and `rust/tests/properties.rs`; HRS-tier
+//! coupling that *would* invalidate the cache (an EP extent straddling
+//! unit boundaries, a slice cutting a pod in half) is rejected by
+//! [`symmetric_iteration`] up front — the caller is automatically
+//! demoted to [`iteration_dag`](super::step::iteration_dag)'s full
+//! solve.
+
+use crate::sim::{
+    run_components_timed, run_with, ParallelConfig, ResolveStrategy, SimConfig, SimNet,
+    SimReport, StageDag,
+};
+use crate::topology::Topology;
+use crate::workload::cluster::ClusterMap;
+use crate::workload::step::{dp_tail_dag, unit_iteration_dag, IterationSpec, RankOrder};
+use crate::workload::{ModelConfig, ParallelismConfig};
+
+/// The iteration, factored into translated units plus the coupling tail.
+pub struct SymmetricIteration {
+    /// DP replicas per unit.
+    pub unit_dp: usize,
+    /// Number of units (`p.dp / unit_dp`).
+    pub units: usize,
+    /// One DAG per unit, channel-disjoint and pairwise translated, in
+    /// dp order (`unit u` covers replicas `u·unit_dp .. (u+1)·unit_dp`).
+    pub unit_dags: Vec<StageDag>,
+    /// The DP gradient tail (dependency-free); `None` when the model
+    /// exposes no DP traffic.
+    pub tail: Option<StageDag>,
+}
+
+/// Smallest dp-slice width that closes every coupling group: EP blocks
+/// span `ep/sp` consecutive replicas when `ep > sp` (and a fraction of
+/// one otherwise), and the slice must cover whole pods so its links are
+/// private. `Err` explains which precondition failed — the caller then
+/// falls back to the full (coupled) solve.
+fn unit_width(
+    map: &ClusterMap,
+    p: &ParallelismConfig,
+) -> Result<usize, &'static str> {
+    let base = if p.ep > p.sp {
+        if p.ep % p.sp != 0 {
+            return Err("EP blocks straddle replicas: sp does not divide ep");
+        }
+        p.ep / p.sp
+    } else {
+        if p.ep > 1 && p.sp % p.ep != 0 {
+            return Err("EP blocks straddle replicas: ep does not divide sp");
+        }
+        1
+    };
+    let pod = map
+        .mesh_pod_npus()
+        .ok_or("replica symmetry needs the 2D mesh fabric")?;
+    let replica = p.tp * p.sp * p.pp;
+    // Grow in multiples of the EP span until the slice covers whole
+    // pods and divides dp evenly.
+    let mut w = base;
+    while w < p.dp {
+        if p.dp % w == 0 && (replica * w) % pod == 0 {
+            return Ok(w);
+        }
+        w += base;
+    }
+    if p.dp % base == 0 && w == p.dp && (replica * w) % pod == 0 {
+        // One unit covering everything is formally valid but useless —
+        // the caller should run the plain full DAG instead.
+        return Err("no proper unit width: the only aligned slice is all of dp");
+    }
+    Err("no unit width aligns with both EP blocks and pod boundaries")
+}
+
+/// Factor the measured iteration of [`super::step::iteration_dag`] into
+/// translation-symmetric units plus the DP tail. `Err` names the
+/// precondition that failed (naive rank order, non-mesh fabric, EP or
+/// pod misalignment, dp too small to split) — the demotion path back to
+/// the full coupled solve.
+pub fn symmetric_iteration(
+    t: &Topology,
+    map: &ClusterMap,
+    m: &ModelConfig,
+    p: &ParallelismConfig,
+    order: RankOrder,
+    spec: &IterationSpec,
+) -> Result<SymmetricIteration, &'static str> {
+    if order != RankOrder::TopologyAware {
+        return Err("replica symmetry needs the topology-aware rank order");
+    }
+    if p.npus() != map.npu_count() {
+        return Err("parallelism does not fill the mapped cluster");
+    }
+    if p.dp < 2 {
+        return Err("dp < 2: nothing to factor");
+    }
+    let unit_dp = unit_width(map, p)?;
+    let units = p.dp / unit_dp;
+    let unit_dags = (0..units)
+        .map(|u| {
+            unit_iteration_dag(t, map, m, p, order, spec, u * unit_dp..(u + 1) * unit_dp)
+        })
+        .collect();
+    let tail_dag = dp_tail_dag(t, map, m, p, order, spec);
+    Ok(SymmetricIteration {
+        unit_dp,
+        units,
+        unit_dags,
+        tail: (!tail_dag.stages.is_empty()).then_some(tail_dag),
+    })
+}
+
+/// How to execute a [`SymmetricIteration`].
+#[derive(Clone, Debug)]
+pub struct SymmetricConfig {
+    /// Worker threads for the unit components (the tail always runs
+    /// serially — it is one coupled component).
+    pub workers: usize,
+    /// Solve one representative unit and reuse its report for the
+    /// translated others, instead of solving every unit.
+    pub replica_cache: bool,
+    /// Solver strategy for every event loop.
+    pub strategy: ResolveStrategy,
+}
+
+impl Default for SymmetricConfig {
+    fn default() -> SymmetricConfig {
+        SymmetricConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            replica_cache: true,
+            strategy: ResolveStrategy::default(),
+        }
+    }
+}
+
+/// Result of a symmetric run: the merged whole-iteration report plus
+/// the wall-clock telemetry the fig22 bench publishes.
+pub struct SymmetricReport {
+    /// The whole-iteration report, bit-identical to what the serial
+    /// event loop over [`super::step::iteration_dag`]'s full DAG
+    /// produces for makespan/byte-hops and to the in-order sum of the
+    /// per-component counters.
+    pub report: SimReport,
+    /// Wall seconds per *executed* unit run (length 1 with the replica
+    /// cache, `units` without).
+    pub unit_walls_s: Vec<f64>,
+    /// Wall seconds of the tail run (0.0 when there is no tail).
+    pub tail_wall_s: f64,
+    /// Units whose report came from the representative instead of a
+    /// solve of their own.
+    pub cached_units: usize,
+}
+
+impl SymmetricReport {
+    /// Wall seconds a single-worker, no-cache run would have spent:
+    /// executed walls, with the representative's wall standing in for
+    /// each cached unit. The `fig22.par.speedup` numerator.
+    pub fn serial_equivalent_wall_s(&self) -> f64 {
+        let unit_sum: f64 = self.unit_walls_s.iter().sum();
+        let rep = self.unit_walls_s.first().copied().unwrap_or(0.0);
+        unit_sum + rep * self.cached_units as f64 + self.tail_wall_s
+    }
+
+    /// Wall seconds actually spent (max over concurrent workers is not
+    /// observable from here; this is the sum of what this thread paid:
+    /// the component sweep returns per-unit walls, so the *caller*
+    /// wraps the whole run in its own clock for the denominator).
+    pub fn executed_wall_s(&self) -> f64 {
+        self.unit_walls_s.iter().sum::<f64>() + self.tail_wall_s
+    }
+}
+
+/// Merge per-unit reports and the (optional, already gate-shifted-free)
+/// tail report into the whole-iteration [`SimReport`].
+///
+/// The merge is the factored image of the serial loop: makespan is
+/// `max(unit makespans) + tail makespan` (the tail starts when the last
+/// backward queue drains), stage completion times concatenate in unit
+/// order with the tail's shifted by the gate, and the additive counters
+/// (byte-hops, events, reroutes, fault events, solver work) sum in the
+/// same order on every path — cache or no cache — so the two modes are
+/// comparable bitwise.
+pub fn merge_symmetric(units: &[SimReport], tail: Option<&SimReport>) -> SimReport {
+    assert!(!units.is_empty(), "merge needs at least one unit report");
+    let gate = units
+        .iter()
+        .map(|r| r.makespan_us)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut merged = SimReport {
+        makespan_us: gate,
+        stage_done_us: Vec::new(),
+        byte_hops: 0.0,
+        events: 0,
+        peak_flows: 0,
+        stalled: Vec::new(),
+        stalled_at_us: 0.0,
+        reroutes: 0,
+        fault_events: 0,
+        solver: Default::default(),
+    };
+    // The units run concurrently in simulated time, so their active
+    // flow sets coexist: the serial loop's peak is the sum, not the max.
+    let mut unit_peak_sum = 0usize;
+    let mut stage_base = 0usize;
+    let mut stall_time = f64::NEG_INFINITY;
+    for r in units {
+        merged.stage_done_us.extend_from_slice(&r.stage_done_us);
+        merged.byte_hops += r.byte_hops;
+        merged.events += r.events;
+        unit_peak_sum += r.peak_flows;
+        for s in &r.stalled {
+            let mut s = s.clone();
+            s.stage += stage_base;
+            merged.stalled.push(s);
+        }
+        if r.is_stalled() {
+            stall_time = stall_time.max(r.stalled_at_us);
+        }
+        merged.reroutes += r.reroutes;
+        merged.fault_events += r.fault_events;
+        merged.solver.merge(&r.solver);
+        stage_base += r.stage_done_us.len();
+    }
+    merged.peak_flows = unit_peak_sum;
+    if let Some(tr) = tail {
+        merged.makespan_us = gate + tr.makespan_us;
+        merged
+            .stage_done_us
+            .extend(tr.stage_done_us.iter().map(|&d| gate + d));
+        merged.byte_hops += tr.byte_hops;
+        merged.events += tr.events;
+        merged.peak_flows = merged.peak_flows.max(tr.peak_flows);
+        for s in &tr.stalled {
+            let mut s = s.clone();
+            s.stage += stage_base;
+            merged.stalled.push(s);
+        }
+        if tr.is_stalled() {
+            stall_time = stall_time.max(gate + tr.stalled_at_us);
+        }
+        merged.reroutes += tr.reroutes;
+        merged.fault_events += tr.fault_events;
+        merged.solver.merge(&tr.solver);
+    }
+    merged.stalled_at_us = if merged.stalled.is_empty() {
+        merged.makespan_us
+    } else {
+        stall_time
+    };
+    merged
+}
+
+/// Execute a [`SymmetricIteration`]: units as parallel components
+/// (solving one representative when the cache is on), then the tail,
+/// serially, gated on the slowest unit.
+pub fn run_symmetric(
+    net: &SimNet,
+    sym: &SymmetricIteration,
+    cfg: &SymmetricConfig,
+) -> SymmetricReport {
+    let pcfg = ParallelConfig::serial()
+        .with_workers(cfg.workers)
+        .with_strategy(cfg.strategy);
+    let (unit_reports, unit_walls_s, cached_units) = if cfg.replica_cache {
+        let timed = run_components_timed(net, &sym.unit_dags[..1], &pcfg);
+        let (rep, wall) = timed.into_iter().next().expect("representative unit");
+        let reports: Vec<SimReport> = (0..sym.units).map(|_| rep.clone()).collect();
+        (reports, vec![wall], sym.units - 1)
+    } else {
+        let timed = run_components_timed(net, &sym.unit_dags, &pcfg);
+        let mut reports = Vec::with_capacity(timed.len());
+        let mut walls = Vec::with_capacity(timed.len());
+        for (r, w) in timed {
+            reports.push(r);
+            walls.push(w);
+        }
+        (reports, walls, 0)
+    };
+    let sim_cfg = SimConfig {
+        strategy: cfg.strategy,
+    };
+    let (tail_report, tail_wall_s) = match &sym.tail {
+        Some(tdag) => {
+            #[allow(clippy::disallowed_methods)]
+            let t0 = std::time::Instant::now();
+            let tr = run_with(net, tdag, &sim_cfg);
+            (Some(tr), t0.elapsed().as_secs_f64())
+        }
+        None => (None, 0.0),
+    };
+    SymmetricReport {
+        report: merge_symmetric(&unit_reports, tail_report.as_ref()),
+        unit_walls_s,
+        tail_wall_s,
+        cached_units,
+    }
+}

@@ -231,3 +231,82 @@ fn same_instant_groups_match_sequential_scripting() {
     assert_eq!(rg.makespan_us.to_bits(), rs.makespan_us.to_bits());
     assert_eq!(rg.reroutes, rs.reroutes);
 }
+
+/// PR 10: fault storms replayed **under the component-parallel loop**.
+/// Each row of the mesh runs its own all-to-all component with its own
+/// scripted flap train on one of its private dim-0 links; the parallel
+/// runner must reproduce the single-worker runs bit-for-bit — reroutes,
+/// fault-event counts, makespans — at every worker count, because a
+/// component's faults touch only its own links.
+#[test]
+fn fault_storm_under_parallel_loop_matches_serial() {
+    use ubmesh::collectives::alltoall::row_alltoall_dags;
+    use ubmesh::sim::{run_components_faulted, ParallelConfig};
+    use ubmesh::topology::ndmesh::index_of;
+
+    let t = mesh();
+    let net = SimNet::new(&t);
+    let dags = row_alltoall_dags(&t, &[4, 4], 4e6, 2);
+    assert_eq!(dags.len(), 4);
+
+    // One plan per row: flap a link interior to the row (its first
+    // dim-0 edge), restored before the end, with direct-notification
+    // recovery so cut-off flows reroute mid-run. Fault times scale off
+    // the row's healthy makespan so every flap lands while the DAG is
+    // live: two cycles of a long outage starting at 0.15·h stay inside
+    // ~0.85·h.
+    let healthy = ubmesh::sim::run_components(&net, &dags, &ParallelConfig::serial());
+    let plans: Vec<FaultPlan> = (0..4usize)
+        .map(|row| {
+            let h = healthy[row].makespan_us;
+            assert!(h.is_finite() && h > 0.0);
+            let a = t.npus[index_of(&[0, row], &[4, 4])];
+            let b = t.npus[index_of(&[1, row], &[4, 4])];
+            let l = t.link_between(a, b).expect("dim-0 row link");
+            let mut plan = FaultPlan::new().flap_train(
+                l,
+                (0.15 + 0.02 * row as f64) * h,
+                2,
+                0.25 * h,
+                0.05 * h,
+            );
+            plan.recovery = Some(RecoveryConfig::direct());
+            plan
+        })
+        .collect();
+
+    for &strategy in &STRATEGIES {
+        let serial = run_components_faulted(
+            &net,
+            &dags,
+            &ParallelConfig::serial().with_strategy(strategy),
+            &plans,
+        );
+        for r in &serial {
+            assert!(!r.is_stalled(), "flap train restores every link");
+            assert!(r.fault_events > 0, "the storm must actually fire");
+        }
+        assert!(
+            serial.iter().any(|r| r.reroutes > 0),
+            "at least one row must reroute mid-flap"
+        );
+        for workers in [2usize, 8] {
+            let par = run_components_faulted(
+                &net,
+                &dags,
+                &ParallelConfig::serial()
+                    .with_workers(workers)
+                    .with_strategy(strategy),
+                &plans,
+            );
+            for (a, b) in par.iter().zip(&serial) {
+                assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+                assert_eq!(a.byte_hops.to_bits(), b.byte_hops.to_bits());
+                assert_eq!(a.events, b.events);
+                assert_eq!(a.reroutes, b.reroutes);
+                assert_eq!(a.fault_events, b.fault_events);
+                assert_eq!(a.stalled.len(), b.stalled.len());
+            }
+        }
+    }
+}

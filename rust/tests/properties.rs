@@ -552,3 +552,70 @@ fn traffic_analysis_totals_are_consistent() {
         }
     });
 }
+
+/// PR 10: advancing channel-disjoint components on worker threads is
+/// **bit-identical** to the single-worker loop — every [`SimReport`]
+/// field (makespan, stage completions, byte-hops, event and peak-flow
+/// counts, solver counters) matches exactly across worker counts and
+/// under every solver strategy, and each component's report equals what
+/// a standalone `run_with` of that DAG produces. Worker threads decide
+/// only *where* a component runs, never *what* it computes.
+#[test]
+fn component_parallel_is_bit_identical_to_serial() {
+    use ubmesh::collectives::alltoall::row_alltoall_dags;
+    use ubmesh::sim::fair::ResolveStrategy;
+    use ubmesh::sim::{run_components, run_with, ParallelConfig, SimConfig};
+    const STRATEGIES: [ResolveStrategy; 3] = [
+        ResolveStrategy::Bounded,
+        ResolveStrategy::RiseOnly,
+        ResolveStrategy::FullComponentBfs,
+    ];
+    forall("parallel == serial component advancement", 6, |rng| {
+        let (t, n0, n1) = random_mesh(rng);
+        let net = SimNet::new(&t);
+        let bytes = 1e6 * (1.0 + rng.f64() * 4.0);
+        let rounds = 1 + rng.range(0, 2);
+        let dims = [n0, n1];
+        let dags = row_alltoall_dags(&t, &dims, bytes, rounds);
+        assert_eq!(dags.len(), n1, "one component per row");
+        for &strategy in &STRATEGIES {
+            let serial = run_components(
+                &net,
+                &dags,
+                &ParallelConfig::serial().with_strategy(strategy),
+            );
+            // Ground truth: each component standalone.
+            for (dag, r) in dags.iter().zip(&serial) {
+                let solo = run_with(&net, dag, &SimConfig { strategy });
+                assert_eq!(r.makespan_us.to_bits(), solo.makespan_us.to_bits());
+                assert_eq!(r.byte_hops.to_bits(), solo.byte_hops.to_bits());
+                assert_eq!(r.events, solo.events);
+            }
+            for workers in [2usize, 8] {
+                let par = run_components(
+                    &net,
+                    &dags,
+                    &ParallelConfig::serial()
+                        .with_workers(workers)
+                        .with_strategy(strategy),
+                );
+                assert_eq!(par.len(), serial.len());
+                for (a, b) in par.iter().zip(&serial) {
+                    assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+                    assert_eq!(a.byte_hops.to_bits(), b.byte_hops.to_bits());
+                    assert_eq!(a.events, b.events);
+                    assert_eq!(a.peak_flows, b.peak_flows);
+                    assert_eq!(a.reroutes, b.reroutes);
+                    assert_eq!(a.stalled.len(), b.stalled.len());
+                    assert_eq!(
+                        a.stage_done_us.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                        b.stage_done_us.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                    );
+                    assert_eq!(a.solver.resolves, b.solver.resolves);
+                    assert_eq!(a.solver.rate_recomputes, b.solver.rate_recomputes);
+                    assert_eq!(a.solver.fallbacks, b.solver.fallbacks);
+                }
+            }
+        }
+    });
+}

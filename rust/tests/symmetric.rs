@@ -1,0 +1,282 @@
+//! PR 10 differentials for `workload::symmetric`: the DP-replica
+//! translation-symmetry fast path against the full coupled solve.
+//!
+//! Fixture: a 4-pod SuperPod (2×2-rack pods, 1024 NPUs) running the
+//! gpt4-2t MoE iteration at TP8·SP8·EP16·PP2·DP8 — EP blocks span two
+//! DP replicas, so a unit is exactly one pod (unit_dp = 2, 4 units),
+//! and the DP tail couples all four pods through the HRS tier.
+//!
+//! Pinned properties:
+//! * the unit DAGs are **channel-disjoint** (no two units route a flow
+//!   over the same link) — the precondition of the parallel loop;
+//! * the units are **translations**: every unit's standalone report is
+//!   bit-identical to unit 0's;
+//! * `replica_cache` on == off, bitwise, at every worker count — the
+//!   representative solve loses nothing;
+//! * the factored run reproduces the full `iteration_dag` solve's
+//!   makespan and byte-hops (tolerance-level: the factoring is exact in
+//!   exact arithmetic; only f64 association order differs);
+//! * misuse demotes instead of mis-solving: naive rank order and
+//!   non-mesh fabrics are rejected up front.
+
+use std::collections::BTreeSet;
+
+use ubmesh::sim::{self, run_components, ParallelConfig, SimNet};
+use ubmesh::topology::superpod::{ubmesh_superpod, SuperPodConfig};
+use ubmesh::workload::models::by_name;
+use ubmesh::workload::step::{iteration_dag, IterationSpec, RankOrder};
+use ubmesh::workload::symmetric::{run_symmetric, symmetric_iteration, SymmetricConfig};
+use ubmesh::workload::{ClusterMap, ParallelismConfig};
+
+fn fixture() -> (ubmesh::topology::Topology, ClusterMap, ParallelismConfig) {
+    let mut cfg = SuperPodConfig::default();
+    cfg.pods = 4;
+    cfg.pod.rows = 2;
+    cfg.pod.cols = 2;
+    let (t, h) = ubmesh_superpod(&cfg);
+    let map = ClusterMap::superpod(&h);
+    let p = ParallelismConfig {
+        tp: 8,
+        sp: 8,
+        ep: 16,
+        pp: 2,
+        dp: 8,
+        microbatches: 2,
+        tokens_per_microbatch: 2048.0,
+    };
+    assert_eq!(p.npus(), map.npu_count());
+    (t, map, p)
+}
+
+#[test]
+fn units_are_channel_disjoint_and_translated() {
+    let (t, map, p) = fixture();
+    let m = by_name("gpt4-2t").unwrap();
+    let spec = IterationSpec::default();
+    let sym =
+        symmetric_iteration(&t, &map, &m, &p, RankOrder::TopologyAware, &spec).unwrap();
+    assert_eq!(sym.unit_dp, 2, "EP16 over SP8 spans two replicas");
+    assert_eq!(sym.units, 4, "one unit per pod");
+    assert!(sym.tail.is_some(), "gpt4-2t exposes DP traffic");
+
+    // Channel-disjointness: the union of each unit's materialized flow
+    // links must not intersect any other unit's.
+    let link_sets: Vec<BTreeSet<u32>> = sym
+        .unit_dags
+        .iter()
+        .map(|dag| {
+            let mut s = BTreeSet::new();
+            for stage in &dag.stages {
+                for f in stage.materialize_flows(&t) {
+                    for c in &f.channels {
+                        s.insert(c.link.0);
+                    }
+                }
+            }
+            assert!(!s.is_empty(), "a unit must carry traffic");
+            s
+        })
+        .collect();
+    for i in 0..link_sets.len() {
+        for j in i + 1..link_sets.len() {
+            assert!(
+                link_sets[i].is_disjoint(&link_sets[j]),
+                "units {i} and {j} share links: {:?}",
+                link_sets[i].intersection(&link_sets[j]).take(5).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    // Translation symmetry: every unit's standalone run is bit-identical
+    // to unit 0's — the fact the replica cache banks on.
+    let net = SimNet::new(&t);
+    let reports = run_components(&net, &sym.unit_dags, &ParallelConfig::serial());
+    let r0 = &reports[0];
+    assert!(!r0.is_stalled());
+    for (u, r) in reports.iter().enumerate().skip(1) {
+        assert_eq!(
+            r.makespan_us.to_bits(),
+            r0.makespan_us.to_bits(),
+            "unit {u} makespan diverged from the representative"
+        );
+        assert_eq!(r.byte_hops.to_bits(), r0.byte_hops.to_bits(), "unit {u}");
+        assert_eq!(r.events, r0.events, "unit {u}");
+        assert_eq!(r.peak_flows, r0.peak_flows, "unit {u}");
+        assert_eq!(
+            r.stage_done_us.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            r0.stage_done_us.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            "unit {u} stage completions"
+        );
+        assert_eq!(r.solver.resolves, r0.solver.resolves, "unit {u}");
+        assert_eq!(r.solver.rate_recomputes, r0.solver.rate_recomputes, "unit {u}");
+    }
+}
+
+#[test]
+fn replica_cache_matches_full_solve_bitwise_and_full_dag_numerically() {
+    let (t, map, p) = fixture();
+    let m = by_name("gpt4-2t").unwrap();
+    let spec = IterationSpec::default();
+    let sym =
+        symmetric_iteration(&t, &map, &m, &p, RankOrder::TopologyAware, &spec).unwrap();
+    let net = SimNet::new(&t);
+
+    let base = SymmetricConfig {
+        workers: 1,
+        replica_cache: false,
+        strategy: Default::default(),
+    };
+    let full = run_symmetric(&net, &sym, &base);
+    assert!(!full.report.is_stalled());
+    assert_eq!(full.cached_units, 0);
+    assert_eq!(full.unit_walls_s.len(), sym.units);
+
+    for workers in [1usize, 2, 8] {
+        for replica_cache in [false, true] {
+            let r = run_symmetric(
+                &net,
+                &sym,
+                &SymmetricConfig {
+                    workers,
+                    replica_cache,
+                    strategy: Default::default(),
+                },
+            );
+            assert_eq!(
+                r.report.makespan_us.to_bits(),
+                full.report.makespan_us.to_bits(),
+                "workers={workers} cache={replica_cache}"
+            );
+            assert_eq!(
+                r.report.byte_hops.to_bits(),
+                full.report.byte_hops.to_bits(),
+                "workers={workers} cache={replica_cache}"
+            );
+            assert_eq!(r.report.events, full.report.events);
+            assert_eq!(r.report.peak_flows, full.report.peak_flows);
+            assert_eq!(
+                r.report.stage_done_us.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+                full.report.stage_done_us.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            );
+            assert_eq!(r.report.solver.resolves, full.report.solver.resolves);
+            assert_eq!(
+                r.report.solver.rate_recomputes,
+                full.report.solver.rate_recomputes
+            );
+            assert_eq!(r.report.solver.fallbacks, full.report.solver.fallbacks);
+            if replica_cache {
+                assert_eq!(r.cached_units, sym.units - 1);
+                assert_eq!(r.unit_walls_s.len(), 1);
+            }
+        }
+    }
+
+    // Against the one big coupled DAG: the factoring is exact in exact
+    // arithmetic (every unit stage is an ancestor of the tail; units
+    // share no channels), so only f64 association order separates the
+    // two paths.
+    let whole = iteration_dag(&t, &map, &m, &p, RankOrder::TopologyAware, &spec);
+    let rw = sim::schedule::run(&net, &whole);
+    assert!(!rw.is_stalled());
+    let rel = (full.report.makespan_us - rw.makespan_us).abs() / rw.makespan_us;
+    assert!(
+        rel < 1e-9,
+        "factored {:.6} vs full {:.6} (rel {rel:.3e})",
+        full.report.makespan_us,
+        rw.makespan_us
+    );
+    let relb = (full.report.byte_hops - rw.byte_hops).abs() / rw.byte_hops;
+    assert!(relb < 1e-9, "byte-hops rel {relb:.3e}");
+}
+
+#[test]
+fn misaligned_workloads_are_demoted_not_mis_solved() {
+    let (t, map, p) = fixture();
+    let m = by_name("gpt4-2t").unwrap();
+    let spec = IterationSpec::default();
+    // Naive rank order smears replicas across pods: rejected.
+    assert!(symmetric_iteration(&t, &map, &m, &p, RankOrder::Naive, &spec).is_err());
+    // dp = 1 leaves nothing to factor.
+    let mut p1 = p;
+    p1.dp = 1;
+    p1.pp = 16;
+    assert_eq!(p1.npus(), map.npu_count());
+    assert!(
+        symmetric_iteration(&t, &map, &m, &p1, RankOrder::TopologyAware, &spec).is_err()
+    );
+}
+
+/// Units that *span* pods (EP32 over SP8 → unit_dp = 4 = two pods):
+/// intra-unit EP traffic now rides the LRS→HRS uplinks, and the two
+/// units share HRS switch *nodes* — but never links, because each rack
+/// owns its uplinks. Disjointness, translation bit-equality and the
+/// cache differential must all survive the cross-pod regime; this is
+/// the small-scale image of the 32K/64K fig22 configurations.
+#[test]
+fn cross_pod_units_stay_disjoint_and_translated() {
+    let (t, map, mut p) = fixture();
+    p.ep = 32;
+    let m = by_name("gpt4-2t").unwrap();
+    let spec = IterationSpec::default();
+    let sym =
+        symmetric_iteration(&t, &map, &m, &p, RankOrder::TopologyAware, &spec).unwrap();
+    assert_eq!(sym.unit_dp, 4, "EP32 over SP8 spans four replicas");
+    assert_eq!(sym.units, 2, "two two-pod units");
+
+    let link_sets: Vec<BTreeSet<u32>> = sym
+        .unit_dags
+        .iter()
+        .map(|dag| {
+            let mut s = BTreeSet::new();
+            for stage in &dag.stages {
+                for f in stage.materialize_flows(&t) {
+                    for c in &f.channels {
+                        s.insert(c.link.0);
+                    }
+                }
+            }
+            s
+        })
+        .collect();
+    assert!(
+        link_sets[0].is_disjoint(&link_sets[1]),
+        "cross-pod units share links: {:?}",
+        link_sets[0].intersection(&link_sets[1]).take(5).collect::<Vec<_>>()
+    );
+
+    let net = SimNet::new(&t);
+    let reports = run_components(&net, &sym.unit_dags, &ParallelConfig::serial());
+    assert!(!reports[0].is_stalled());
+    assert_eq!(
+        reports[1].makespan_us.to_bits(),
+        reports[0].makespan_us.to_bits(),
+        "pod translation must preserve the solve bit-for-bit across the HRS uplinks"
+    );
+    assert_eq!(reports[1].byte_hops.to_bits(), reports[0].byte_hops.to_bits());
+    assert_eq!(reports[1].events, reports[0].events);
+
+    let cached = run_symmetric(
+        &net,
+        &sym,
+        &SymmetricConfig {
+            workers: 2,
+            replica_cache: true,
+            strategy: Default::default(),
+        },
+    );
+    let solved = run_symmetric(
+        &net,
+        &sym,
+        &SymmetricConfig {
+            workers: 1,
+            replica_cache: false,
+            strategy: Default::default(),
+        },
+    );
+    assert_eq!(
+        cached.report.makespan_us.to_bits(),
+        solved.report.makespan_us.to_bits()
+    );
+    assert_eq!(cached.report.byte_hops.to_bits(), solved.report.byte_hops.to_bits());
+    assert_eq!(cached.report.events, solved.report.events);
+}
